@@ -1,0 +1,94 @@
+//! KDE query service under synthetic open-loop load.
+//!
+//!     make artifacts && cargo run --release --example kde_server
+//!
+//! Starts the coordinator (router + dynamic batcher + worker pool) over
+//! two dataset shards, fires concurrent client threads at it, and reports
+//! throughput, latency percentiles and batch occupancy — demonstrating
+//! the serving path where the AOT artifact's native batch shape (B = 64)
+//! is filled by the batcher rather than padded per query.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kde_matrix::coordinator::{BatcherConfig, KdeService};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let backend: Arc<dyn KernelBackend> = match PjrtBackend::new("artifacts") {
+        Ok(b) => {
+            println!("backend: PJRT (AOT artifacts)");
+            b
+        }
+        Err(e) => {
+            println!("backend: CPU ({e})");
+            CpuBackend::new()
+        }
+    };
+
+    let shard0 = Arc::new(dataset::gaussian_mixture(4096, 32, 8, 1.5, 0.5, &mut rng));
+    let shard1 = Arc::new(dataset::heavy_tailed_mixture(2048, 32, 6, &mut rng));
+    let svc = Arc::new(KdeService::start(
+        vec![
+            (Kernel::Laplacian, shard0.clone()),
+            (Kernel::Gaussian, shard1.clone()),
+        ],
+        backend,
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(800),
+            workers: 4,
+        },
+    ));
+
+    let clients = 8usize;
+    let per_client = 400usize;
+    let done = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        let s0 = shard0.clone();
+        let s1 = shard1.clone();
+        let done = done.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(9000 + c as u64);
+            // Pipelined client: keep a window of requests outstanding
+            // (batched serving only pays off when clients overlap their
+            // requests — a strict request/response ping-pong can never
+            // fill a batch).
+            let window = 32usize;
+            let mut outstanding = std::collections::VecDeque::new();
+            for r in 0..per_client {
+                let shard = rng.below(2);
+                let ds = if shard == 0 { &s0 } else { &s1 };
+                let i = rng.below(ds.n);
+                outstanding.push_back(svc.submit(shard, ds.point(i).to_vec()));
+                if outstanding.len() >= window || r + 1 == per_client {
+                    while let Some(rx) = outstanding.pop_front() {
+                        let ans = rx.recv().expect("dropped");
+                        assert!(ans.is_finite() && ans >= 0.0);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = done.load(Ordering::Relaxed);
+    println!("served {total} queries in {wall:.2}s = {:.0} q/s", total as f64 / wall);
+    println!("metrics: {}", svc.metrics.summary());
+    let occ = svc.metrics.mean_batch_occupancy();
+    println!(
+        "batch occupancy {occ:.1}/64 — {}",
+        if occ > 4.0 { "batching effective" } else { "low concurrency" }
+    );
+}

@@ -1,0 +1,168 @@
+//! Low-rank approximation pipeline (Fig. 3 of the paper).
+//!
+//!     cargo run --release --example lra_pipeline
+//!
+//! Regenerates, on the MNIST/GloVe synthetic substitutes (DESIGN.md §3):
+//!   * Fig. 3a / 3c — rank vs Frobenius error for KDE / IS / SVD,
+//!   * Fig. 3b / 3d — true vs estimated squared row norms (CSV scatter),
+//!   * the §7.1 cost table — kernel evaluations, space, wall time.
+//!
+//! CSVs land in `target/figures/`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use kde_matrix::apps::lra;
+use kde_matrix::kde::{EstimatorKind, KdeConfig, KdeCounters};
+use kde_matrix::kernel::{dataset, Dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::rownorm::RowNormSampler;
+use kde_matrix::util::rng::Rng;
+
+fn run_suite(name: &str, ds: Arc<Dataset>, ranks: &[usize], rng: &mut Rng) {
+    let kernel = Kernel::Laplacian; // the paper's §7 kernel
+    let n = ds.n;
+    println!("=== {name}: n={n} d={} kernel={} ===", ds.d, kernel.name());
+    let kmat = lra::materialize_kernel_matrix(&ds, kernel);
+    let frob = kmat.frob_norm_sq();
+
+    // Estimator sized for the FKV contract: row-norm sampling only needs
+    // constant-factor accuracy (Thm 5.12 tolerates O(1) oversampling), so
+    // an eps=0.5 / tau=0.2 sampling oracle (80 kernel evals per query)
+    // suffices — this is where the sub-quadratic eval count comes from.
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.5, tau: 0.2 },
+        leaf_cutoff: 32,
+        seed: 0xF3A,
+    };
+
+    // Fig. 3b/3d: row-norm scatter (true vs estimated).
+    let rn = RowNormSampler::build(&ds, kernel, &cfg, CpuBackend::new(), KdeCounters::new());
+    let mut scatter = Vec::with_capacity(n);
+    for i in 0..n {
+        let truth: f64 = (0..n)
+            .map(|j| {
+                let v = kmat[(i, j)];
+                v * v
+            })
+            .sum();
+        scatter.push(vec![truth, rn.row_norms_sq[i]]);
+    }
+    std::fs::create_dir_all("target/figures").ok();
+    let scatter_path = format!("target/figures/rownorm_scatter_{name}.csv");
+    kde_matrix::util::write_csv(&scatter_path, &["true_sq", "estimated_sq"], &scatter).unwrap();
+    let worst = scatter
+        .iter()
+        .map(|r| (r[1] - r[0]).abs() / r[0])
+        .fold(0.0f64, f64::max);
+    println!("row-norm scatter -> {scatter_path} (worst rel dev {worst:.3})");
+
+    // Fig. 3a/3c: rank vs error for the three methods.
+    println!(
+        "{:<6} {:>12} {:>12} {:>12} {:>14} {:>12}",
+        "rank", "KDE_err", "IS_err", "SVD_err", "KDE_evals", "KDE_floats"
+    );
+    let mut rows = Vec::new();
+    let mut last = (0.0, 0.0, 0.0, 0u64, 0u64, 0.0, 0.0, 0.0);
+    for &rank in ranks {
+        let be = CpuBackend::new();
+        let t0 = Instant::now();
+        // rows_factor 10 (paper: 25): our n is 4-10x smaller than the
+        // paper's 10^4, so 25x would clamp to the whole matrix at rank 50.
+        let r = lra::lra_kde(&ds, kernel, rank, 10, &cfg, be, rng);
+        let kde_time = t0.elapsed().as_secs_f64();
+        let kde_err = (lra::lra_error(&kmat, &r.v) / frob).sqrt();
+
+        let t1 = Instant::now();
+        let v_is = lra::lra_countsketch(&kmat, rank, 4 * rank + 10, rng);
+        let is_time = t1.elapsed().as_secs_f64();
+        let is_err = (lra::lra_error(&kmat, &v_is) / frob).sqrt();
+
+        let t2 = Instant::now();
+        let v_svd = lra::lra_svd(&kmat, rank, 120, rng);
+        let svd_time = t2.elapsed().as_secs_f64();
+        let svd_err = (lra::lra_error(&kmat, &v_svd) / frob).sqrt();
+
+        println!(
+            "{:<6} {:>12.5} {:>12.5} {:>12.5} {:>14} {:>12}",
+            rank, kde_err, is_err, svd_err, r.kernel_evals, r.floats_stored
+        );
+        rows.push(vec![
+            rank as f64,
+            kde_err,
+            is_err,
+            svd_err,
+            r.kernel_evals as f64,
+        ]);
+        last = (
+            kde_err,
+            is_err,
+            svd_err,
+            r.kernel_evals,
+            r.floats_stored,
+            kde_time,
+            is_time,
+            svd_time,
+        );
+    }
+    let curve_path = format!("target/figures/lra_rank_error_{name}.csv");
+    kde_matrix::util::write_csv(
+        &curve_path,
+        &["rank", "kde_err", "is_err", "svd_err", "kde_evals"],
+        &rows,
+    )
+    .unwrap();
+    println!("rank-error curve -> {curve_path}");
+
+    // §7.1 cost narrative at the largest rank. (The savings factor grows
+    // linearly in n — at the paper's n = 10^4 the same per-rank cost is a
+    // 9x+ reduction; print the extrapolation too.)
+    let (kde_err, is_err, svd_err, evals, floats, kde_t, is_t, svd_t) = last;
+    let full_evals = (n * n) as u64;
+    let full_floats = (n * n) as u64;
+    let evals_at_10k = evals as f64 / n as f64 * 10_000.0;
+    println!("§7.1 costs at rank {}:", ranks.last().unwrap());
+    println!(
+        "  extrapolated to the paper's n = 10^4: {:.1e} evals vs 10^8 -> {:.0}x fewer",
+        evals_at_10k,
+        1e8 / evals_at_10k
+    );
+    println!(
+        "  kernel evals : KDE {} vs full {} -> {:.1}x fewer",
+        evals,
+        full_evals,
+        full_evals as f64 / evals as f64
+    );
+    println!(
+        "  space (f32s) : KDE {} vs full {} -> {:.1}x less",
+        floats,
+        full_floats,
+        full_floats as f64 / floats as f64
+    );
+    println!(
+        "  wall time    : KDE {kde_t:.2}s, IS {is_t:.2}s (+materialize), SVD {svd_t:.2}s (+materialize)"
+    );
+    println!(
+        "  errors       : KDE {kde_err:.4} vs IS {is_err:.4} vs SVD {svd_err:.4} (relative Frobenius)"
+    );
+}
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let full_scale = std::env::args().any(|a| a == "--full");
+    let n = if full_scale { 4000 } else { 1024 };
+
+    // MNIST substitute: 10-cluster mixture, 64-d (matches AOT tile D).
+    let mnist_sub = Arc::new(
+        dataset::gaussian_mixture(n, 64, 10, 2.0, 0.6, &mut rng)
+            .with_median_bandwidth(Kernel::Laplacian, &mut rng),
+    );
+    run_suite("mnist_sub", mnist_sub, &[1, 2, 5, 10, 20, 35, 50], &mut rng);
+
+    // GloVe substitute: heavy-tailed embeddings.
+    let glove_sub = Arc::new(
+        dataset::heavy_tailed_mixture(n, 64, 20, &mut rng)
+            .with_median_bandwidth(Kernel::Laplacian, &mut rng),
+    );
+    run_suite("glove_sub", glove_sub, &[1, 2, 4, 6, 8, 10], &mut rng);
+}

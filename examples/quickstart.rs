@@ -1,0 +1,72 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds a kernel graph over a synthetic dataset, constructs the KDE
+//! primitives (Def. 1.1 / §4), and exercises each building block plus one
+//! application (spectral sparsification) with cost accounting.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::sparsify;
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(42);
+
+    // 1. A dataset: 2048 points, 16-d, 10 clusters, bandwidth by the
+    //    median rule (§3.1) folded into the coordinates.
+    let kernel = Kernel::Laplacian;
+    let ds = Arc::new(
+        dataset::gaussian_mixture(2048, 16, 10, 2.0, 0.5, &mut rng)
+            .with_median_bandwidth(kernel, &mut rng),
+    );
+    println!("dataset: n={} d={} kernel={}", ds.n, ds.d, kernel.name());
+
+    // 2. KDE oracle + §4 primitives. The sampling estimator realizes the
+    //    paper's Definition 1.1 contract with eps=0.25 at tau=0.05.
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.25, tau: 0.05 },
+        leaf_cutoff: 16,
+        seed: 7,
+    };
+    let prims = Primitives::build(ds.clone(), kernel, &cfg, CpuBackend::new());
+    println!(
+        "primitives built: {} KDE queries (degree array = n queries, once)",
+        prims.kde_queries()
+    );
+
+    // 3. Weighted vertex sampling (Alg 4.6).
+    let (v, p) = prims.degrees.sample(&mut rng);
+    println!("degree-sampled vertex {v} (prob {p:.2e}, deg~{:.2})", prims.degrees.degrees[v]);
+
+    // 4. Weighted neighbor sampling (Alg 4.11) + edge sampling (Alg 4.13).
+    let nb = prims.neighbors.sample(v, &mut rng).unwrap();
+    println!("neighbor of {v}: {} (descent prob {:.2e})", nb.neighbor, nb.prob);
+    let e = prims.edges.sample(&mut rng).unwrap();
+    println!("weighted edge: ({}, {}) prob {:.2e}", e.u, e.v, e.prob);
+
+    // 5. Random walk (Alg 4.16).
+    let path = prims.walker.trajectory(v, 8, &mut rng);
+    println!("8-step walk from {v}: {path:?}");
+
+    // 6. Application: spectral sparsification (Thm 5.3).
+    let t = 20 * ds.n;
+    let sp = sparsify::sparsify(&prims, t, &mut rng);
+    let complete = ds.n * (ds.n - 1) / 2;
+    println!(
+        "sparsifier: {} distinct edges vs {} complete ({:.0}x smaller), \
+         {} KDE queries, {} kernel evals",
+        sp.distinct_edges,
+        complete,
+        complete as f64 / sp.distinct_edges as f64,
+        sp.kde_queries,
+        sp.kernel_evals
+    );
+    println!("total KDE queries this session: {}", prims.kde_queries());
+    println!("ok");
+}

@@ -1,0 +1,73 @@
+"""AOT compile path: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``).  The text parser on the Rust side reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Run once per build:  ``make artifacts``  (no-op when inputs unchanged).
+
+Artifacts written:
+  artifacts/kde_sums_<kind>.hlo.txt      (B,D),(M,D) -> ((B,),)
+  artifacts/kernel_block_<kind>.hlo.txt  (B,D),(M,D) -> ((B,M),)
+  artifacts/manifest.json                shapes + kernel list for Rust
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import KERNELS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn) -> str:
+    lowered = jax.jit(fn).lower(*model.example_args())
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "b": model.AOT_B,
+        "m": model.AOT_M,
+        "d": model.AOT_D,
+        "kernels": list(KERNELS),
+        "entries": [],
+    }
+    for kind in KERNELS:
+        for name, builder in (
+            ("kde_sums", model.kde_sums_fn),
+            ("kernel_block", model.kernel_block_fn),
+        ):
+            text = lower_entry(builder(kind))
+            path = os.path.join(args.out_dir, f"{name}_{kind}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(f"{name}_{kind}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

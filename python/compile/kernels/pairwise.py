@@ -1,0 +1,118 @@
+"""Layer-1 Pallas kernels: tiled pairwise kernel evaluation + reduction.
+
+The compute hot-spot of every KDE query in the paper is "scan the dataset,
+accumulate k(x, y)".  We express it as a Pallas kernel that tiles the data
+into (TM, D) VMEM blocks, keeps the (B, D) query block resident, computes a
+(B, TM) kernel block per grid step and either
+
+  * reduces it into a (B,) accumulator          -> ``make_kde_sums``
+  * writes it out as a block of the kernel row  -> ``make_kernel_block``
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO (see DESIGN.md
+§Hardware-Adaptation for the TPU tiling rationale; VMEM per grid step is
+TB*D + TM*D + TB*TM floats ~ 135 KiB at the AOT shapes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import KERNELS
+
+
+def _kernel_values(kind, q, d):
+    """(B, TM) kernel block from q (B, D) and d (TM, D), inside the kernel."""
+    diff = q[:, None, :] - d[None, :, :]
+    if kind == "laplacian":
+        return jnp.exp(-jnp.sum(jnp.abs(diff), axis=-1))
+    sq = jnp.sum(diff * diff, axis=-1)
+    if kind == "gaussian":
+        return jnp.exp(-sq)
+    if kind == "exponential":
+        return jnp.exp(-jnp.sqrt(jnp.maximum(sq, 1e-30)))
+    if kind == "rational_quadratic":
+        return 1.0 / (1.0 + sq)
+    raise ValueError(f"unknown kernel kind: {kind}")
+
+
+def _pick_tile(m):
+    """Largest power-of-two tile <= 256 that divides m."""
+    for t in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if m % t == 0:
+            return t
+    return 1
+
+
+def make_kde_sums(kind, b, m, d, dtype=jnp.float32):
+    """Build the tiled KDE-sum function for fixed shapes.
+
+    Returns f(queries (b, d), data (m, d)) -> sums (b,).
+    """
+    if kind not in KERNELS:
+        raise ValueError(f"unknown kernel kind: {kind}")
+    tm = _pick_tile(m)
+    grid = (m // tm,)
+
+    def kernel(q_ref, d_ref, o_ref):
+        j = pl.program_id(0)
+        vals = _kernel_values(kind, q_ref[...], d_ref[...])
+        part = jnp.sum(vals, axis=1)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += part
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((tm, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), dtype),
+        interpret=True,
+    )
+
+
+def make_kernel_block(kind, b, m, d, dtype=jnp.float32):
+    """Build the tiled kernel-block function for fixed shapes.
+
+    Returns f(queries (b, d), data (m, d)) -> K (b, m), the dense block of
+    kernel values (used for explicit row construction in LRA and for exact
+    neighbor weights).
+    """
+    if kind not in KERNELS:
+        raise ValueError(f"unknown kernel kind: {kind}")
+    tm = _pick_tile(m)
+    grid = (m // tm,)
+
+    def kernel(q_ref, d_ref, o_ref):
+        o_ref[...] = _kernel_values(kind, q_ref[...], d_ref[...])
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((tm, d), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, tm), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), dtype),
+        interpret=True,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def cached_kde_sums(kind, b, m, d):
+    return make_kde_sums(kind, b, m, d)
+
+
+@functools.lru_cache(maxsize=None)
+def cached_kernel_block(kind, b, m, d):
+    return make_kernel_block(kind, b, m, d)

@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracle for the pairwise kernel computations.
+
+This is the correctness ground truth for the Pallas kernels in
+``pairwise.py``: pytest asserts ``allclose`` between the two across shape /
+kernel / bandwidth sweeps.  Everything here is deliberately naive —
+materialize the full (B, M) pairwise computation with broadcasting.
+
+Kernels (Table 1 of the paper), all with values in (0, 1]:
+
+    laplacian           k(x, y) = exp(-||x - y||_1)
+    gaussian            k(x, y) = exp(-||x - y||_2^2)
+    exponential         k(x, y) = exp(-||x - y||_2)
+    rational_quadratic  k(x, y) = 1 / (1 + ||x - y||_2^2)        (beta = 1)
+
+Bandwidth is folded in by pre-scaling coordinates (x -> x / sigma), which is
+exactly what the Rust coordinator does before dispatching to the artifact.
+"""
+
+import jax.numpy as jnp
+
+KERNELS = ("laplacian", "gaussian", "exponential", "rational_quadratic")
+
+
+def pairwise_kernel(kind, queries, data):
+    """Full (B, M) kernel block between queries (B, D) and data (M, D)."""
+    diff = queries[:, None, :] - data[None, :, :]
+    if kind == "laplacian":
+        return jnp.exp(-jnp.sum(jnp.abs(diff), axis=-1))
+    sq = jnp.sum(diff * diff, axis=-1)
+    if kind == "gaussian":
+        return jnp.exp(-sq)
+    if kind == "exponential":
+        return jnp.exp(-jnp.sqrt(jnp.maximum(sq, 0.0)))
+    if kind == "rational_quadratic":
+        return 1.0 / (1.0 + sq)
+    raise ValueError(f"unknown kernel kind: {kind}")
+
+
+def kde_sums(kind, queries, data):
+    """Reference KDE sums: out[b] = sum_m k(queries[b], data[m])."""
+    return jnp.sum(pairwise_kernel(kind, queries, data), axis=1)

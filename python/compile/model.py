@@ -1,0 +1,56 @@
+"""Layer-2 JAX compute graphs for the KDE query engine.
+
+These are the functions that get AOT-lowered (once, at build time) to HLO
+text and executed from the Rust request path via PJRT.  Each graph wraps the
+Layer-1 Pallas kernel from ``kernels.pairwise`` so that the kernel lowers
+into the same HLO module.
+
+Two entry points per kernel type:
+
+  * ``kde_sums``     (B, D), (M, D) -> (B,)     batched KDE queries
+  * ``kernel_block`` (B, D), (M, D) -> (B, M)   explicit kernel rows
+
+AOT shapes (must match ``rust/src/runtime``):  B = 64, M = 1024, D = 64.
+The Rust side pads queries/data to these shapes; padding *data* rows are
+placed at a far coordinate (1e6 on every axis) so their kernel mass
+underflows to exactly 0.0 in f32 and never perturbs the sums.
+"""
+
+import jax
+
+from .kernels import pairwise
+
+# The fixed AOT interface shapes.  Keep in sync with rust/src/runtime/shapes.
+AOT_B = 64
+AOT_M = 1024
+AOT_D = 64
+
+
+def kde_sums_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
+    """Batched KDE sums graph for a fixed kernel kind and shapes."""
+    inner = pairwise.make_kde_sums(kind, b, m, d)
+
+    def f(queries, data):
+        return (inner(queries, data),)
+
+    return f
+
+
+def kernel_block_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
+    """Dense kernel block graph for a fixed kernel kind and shapes."""
+    inner = pairwise.make_kernel_block(kind, b, m, d)
+
+    def f(queries, data):
+        return (inner(queries, data),)
+
+    return f
+
+
+def example_args(b=AOT_B, m=AOT_M, d=AOT_D):
+    """ShapeDtypeStructs for lowering."""
+    import jax.numpy as jnp
+
+    return (
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((m, d), jnp.float32),
+    )

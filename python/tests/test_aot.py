@@ -1,0 +1,58 @@
+"""AOT artifact tests: the lowered HLO text is well-formed and has the
+shapes the Rust runtime expects."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("kind", ref.KERNELS)
+def test_lowered_hlo_text_parses(kind):
+    text = aot.lower_entry(model.kde_sums_fn(kind, b=8, m=64, d=4))
+    assert "HloModule" in text
+    assert "f32[8,4]" in text and "f32[64,4]" in text
+
+
+def test_lowered_entry_computes_correctly():
+    """Round-trip the lowered module through XLA's own compile+run."""
+    from jax._src.lib import xla_client as xc
+
+    b, m, d = 8, 64, 4
+    fn = model.kde_sums_fn("laplacian", b=b, m=m, d=d)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b, d), jnp.float32),
+        jax.ShapeDtypeStruct((m, d), jnp.float32),
+    )
+    r = np.random.default_rng(0)
+    q = r.normal(size=(b, d)).astype(np.float32)
+    x = r.normal(size=(m, d)).astype(np.float32)
+    got = lowered.compile()(q, x)[0]
+    want = ref.kde_sums("laplacian", q, x)
+    np.testing.assert_allclose(got, want, rtol=2e-5)
+
+
+def test_manifest_matches_artifacts_if_built():
+    """If `make artifacts` has run, the manifest and files must agree."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    assert man["b"] == model.AOT_B
+    assert man["m"] == model.AOT_M
+    assert man["d"] == model.AOT_D
+    for entry in man["entries"]:
+        p = os.path.join(art, f"{entry}.hlo.txt")
+        assert os.path.exists(p), p
+        with open(p) as f:
+            head = f.read(4096)
+        assert "HloModule" in head

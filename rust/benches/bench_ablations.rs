@@ -1,0 +1,142 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//!  A1. KDE estimator family (naive / sampling / HBE / partition tree)
+//!      behind the SAME sparsification pipeline — quality + query cost.
+//!  A2. Multi-level tree `leaf_cutoff` — exact-leaf threshold vs the
+//!      accuracy/cost trade of neighbor sampling.
+//!  A3. Per-(node, query) answer memoization on/off — the §2 consistency
+//!      cache (off is emulated by clearing between samples).
+//!  A4. One-sided vs two-sided edge sampling probability in Alg 5.1.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::sparsify;
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_ablations");
+    let mut rng = Rng::new(1401);
+    let n = 512usize;
+    let ds = Arc::new(dataset::gaussian_mixture(n, 8, 3, 1.0, 0.5, &mut rng));
+
+    // ---- A1: estimator family ----
+    let kinds: Vec<(&str, EstimatorKind)> = vec![
+        ("naive", EstimatorKind::Naive),
+        ("sampling eps=.25", EstimatorKind::Sampling { eps: 0.25, tau: 0.1 }),
+        ("sampling eps=.5", EstimatorKind::Sampling { eps: 0.5, tau: 0.2 }),
+        ("hbe 32tables", EstimatorKind::Hbe { tables: 32, width: 5.0 }),
+        ("ptree eps=.1", EstimatorKind::PartitionTree { eps: 0.1 }),
+    ];
+    for (name, kind) in kinds {
+        let cfg = KdeConfig { kind, leaf_cutoff: 16, seed: 0xA1 };
+        let t0 = std::time::Instant::now();
+        let prims = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, CpuBackend::new());
+        let build_s = t0.elapsed().as_secs_f64();
+        let sp = sparsify::sparsify(&prims, 4 * n, &mut rng);
+        let err = sparsify::spectral_error(&ds, Kernel::Laplacian, &sp.graph, 10, &mut rng);
+        suite.note(&format!(
+            "A1 {name:<18}: build {build_s:.2}s, sparsify queries {}, spectral err {err:.3}",
+            sp.kde_queries
+        ));
+    }
+
+    // ---- A2: leaf cutoff ----
+    for &cutoff in &[1usize, 8, 32, 128] {
+        let cfg = KdeConfig {
+            kind: EstimatorKind::Sampling { eps: 0.3, tau: 0.1 },
+            leaf_cutoff: cutoff,
+            seed: 0xA2,
+        };
+        let prims = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, CpuBackend::new());
+        let mut tv_samples = Vec::new();
+        // neighbor distribution quality for a probe vertex
+        let i = 7usize;
+        let trials = 6_000;
+        let mut counts = vec![1e-300f64; n];
+        let t0 = std::time::Instant::now();
+        for _ in 0..trials {
+            if let Some(s) = prims.neighbors.sample(i, &mut rng) {
+                counts[s.neighbor] += 1.0;
+            }
+        }
+        let sample_s = t0.elapsed().as_secs_f64();
+        let mut want: Vec<f64> = (0..n)
+            .map(|j| {
+                if j == i {
+                    1e-300
+                } else {
+                    Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64
+                }
+            })
+            .collect();
+        let tv = kde_matrix::util::stats::tv_distance(&counts, &want);
+        want.clear();
+        tv_samples.push(tv);
+        suite.note(&format!(
+            "A2 leaf_cutoff={cutoff:<4}: neighbor TV {tv:.3}, {:.1}us/sample",
+            sample_s * 1e6 / trials as f64
+        ));
+    }
+
+    // ---- A3: memoization ----
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.3, tau: 0.1 },
+        leaf_cutoff: 16,
+        seed: 0xA3,
+    };
+    let prims = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, CpuBackend::new());
+    let q0 = prims.kde_queries();
+    for _ in 0..2_000 {
+        let i = rng.below(n);
+        let _ = prims.neighbors.sample(i, &mut rng);
+    }
+    let warm = prims.kde_queries() - q0;
+    let q1 = prims.kde_queries();
+    for _ in 0..2_000 {
+        prims.tree.clear_cache(); // emulate no memoization
+        let i = rng.below(n);
+        let _ = prims.neighbors.sample(i, &mut rng);
+    }
+    let cold = prims.kde_queries() - q1;
+    suite.note(&format!(
+        "A3 memoization: {warm} fresh queries warm vs {cold} cold over 2000 samples ({:.1}x saved)",
+        cold as f64 / warm.max(1) as f64
+    ));
+
+    // ---- A4: one-sided vs two-sided edge probability ----
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        CpuBackend::new(),
+    );
+    let mut two_sided_err = 0.0;
+    let mut one_sided_err = 0.0;
+    {
+        let t = 4 * n;
+        let r = sparsify::sparsify(&prims, t, &mut rng);
+        two_sided_err =
+            sparsify::spectral_error(&ds, Kernel::Laplacian, &r.graph, 10, &mut rng);
+        // one-sided variant inline
+        let mut raw = Vec::new();
+        for _ in 0..t {
+            if let Some(e) = prims.edges.sample_one_sided(&mut rng) {
+                let k_uv = Kernel::Laplacian.eval(ds.point(e.u), ds.point(e.v)) as f64;
+                // one-sided prob underestimates by ~2x; the weight formula
+                // must use 2*prob to stay unbiased
+                raw.push((e.u, e.v, k_uv / (t as f64 * 2.0 * e.prob)));
+            }
+        }
+        let g1 = kde_matrix::graph::WGraph::from_edges(n, raw);
+        one_sided_err = sparsify::spectral_error(&ds, Kernel::Laplacian, &g1, 10, &mut rng);
+    }
+    suite.note(&format!(
+        "A4 edge prob: two-sided spectral err {two_sided_err:.3} vs one-sided(2x approx) {one_sided_err:.3}"
+    ));
+    suite.finish();
+}

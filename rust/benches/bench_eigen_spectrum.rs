@@ -1,0 +1,83 @@
+//! Theorem 5.17 (EMD spectrum) and Theorem 5.22 (top eigenvalue) benches:
+//! estimate-vs-exact rows with cost accounting, plus the submatrix-size
+//! sweep showing n-independence of the eigenvalue estimator.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::{eigen_top, spectrum};
+use kde_matrix::kde::KdeConfig;
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+use kde_matrix::util::stats::emd_1d;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_eigen_spectrum (Thm 5.17 + 5.22)");
+    let mut rng = Rng::new(1101);
+
+    // --- Thm 5.22: top eigenvalue, submatrix sweep ---
+    let n = 2_048usize;
+    let ds = Arc::new(dataset::gaussian_mixture(n, 8, 2, 0.5, 0.5, &mut rng));
+    for &t in &[64usize, 256, 512] {
+        let mut lam = 0.0;
+        suite.bench(&format!("eigen_top direct t={t} n={n}"), || {
+            lam = eigen_top::eigen_top_direct(&ds, Kernel::Laplacian, t, 200, &mut rng).lambda;
+        });
+        suite.note(&format!("t={t}: lambda_est {lam:.2}"));
+    }
+    let mut lam_noisy = 0.0;
+    suite.bench("eigen_top noisy (KDE matvec) t=256", || {
+        lam_noisy = eigen_top::eigen_top_noisy(
+            &ds,
+            Kernel::Laplacian,
+            256,
+            20,
+            16,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            &mut rng,
+        )
+        .lambda;
+    });
+    // Exact baseline on a subsample of 512 (full n is the quadratic cost
+    // the paper avoids; we report it once for the error row).
+    let sub = Arc::new(ds.subset(&(0..512).collect::<Vec<_>>()));
+    let exact_sub = eigen_top::exact_top_eigenvalue(&sub, Kernel::Laplacian, &mut rng) * n as f64
+        / 512.0;
+    suite.note(&format!(
+        "noisy lambda {lam_noisy:.2}; exact-on-512-scaled {exact_sub:.2}"
+    ));
+
+    // --- Thm 5.17: EMD spectrum ---
+    let n2 = 384usize;
+    let ds2 = Arc::new(dataset::gaussian_mixture(n2, 6, 3, 1.2, 0.5, &mut rng));
+    let prims = Primitives::build(
+        ds2.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        CpuBackend::new(),
+    );
+    let params = spectrum::SpectrumParams {
+        vertices: 24,
+        reps: 150,
+        ..Default::default()
+    };
+    let mut walks = 0u64;
+    suite.bench(&format!("spectrum approx n={n2}"), || {
+        let r = spectrum::approximate_spectrum(&prims, &params, &mut rng);
+        walks = r.walks;
+        std::hint::black_box(r.eigenvalues.len());
+    });
+    let approx = spectrum::approximate_spectrum(&prims, &params, &mut rng);
+    let mut exact = Vec::new();
+    suite.bench(&format!("spectrum exact jacobi n={n2}"), || {
+        exact = spectrum::exact_spectrum(&ds2, Kernel::Laplacian);
+    });
+    suite.note(&format!(
+        "EMD(approx, exact) = {:.4} using {walks} walks (exact needs the full n^2 graph)",
+        emd_1d(&approx.eigenvalues, &exact)
+    ));
+    suite.finish();
+}

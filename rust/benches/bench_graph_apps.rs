@@ -1,0 +1,89 @@
+//! Graph-application benches: Theorems 6.9 (local clustering), 6.15
+//! (arboricity), 6.17 (triangles) — estimate-vs-exact rows plus timing,
+//! matching Table 2's graph rows.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::{arboricity, cluster_local, triangles};
+use kde_matrix::graph::WGraph;
+use kde_matrix::kde::KdeConfig;
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_graph_apps (Thm 6.9 / 6.15 / 6.17)");
+    let mut rng = Rng::new(1001);
+    let n = 512usize;
+    let ds = Arc::new(dataset::gaussian_mixture(n, 8, 3, 1.5, 0.4, &mut rng));
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        CpuBackend::new(),
+    );
+    let full = WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+
+    // --- triangles ---
+    let tri_exact = full.exact_triangle_weight();
+    let params = triangles::TriangleParams { edge_pool: 512, reps: 16 };
+    let mut est = 0.0;
+    suite.bench("triangles estimate pool=512", || {
+        est = triangles::triangle_weight_estimate(&prims, &params, &mut rng).estimate;
+    });
+    suite.bench("triangles exact O(nm)", || {
+        std::hint::black_box(full.exact_triangle_weight());
+    });
+    suite.note(&format!(
+        "triangles: est {est:.4e} vs exact {tri_exact:.4e} (rel {:.3})",
+        (est - tri_exact).abs() / tri_exact
+    ));
+
+    // --- arboricity ---
+    let mut arb_est = 0.0;
+    suite.bench("arboricity estimate m=4n (greedy offline)", || {
+        arb_est = arboricity::arboricity_estimate(&prims, 4 * n, false, &mut rng).density;
+    });
+    let arb_exact = arboricity::arboricity_exact(&full);
+    suite.note(&format!(
+        "arboricity: est {arb_est:.4} vs exact {arb_exact:.4} (rel {:.3})",
+        (arb_est - arb_exact).abs() / arb_exact
+    ));
+    let mut arb_flow = 0.0;
+    suite.bench("arboricity estimate m=4n (flow offline)", || {
+        arb_flow = arboricity::arboricity_estimate(&prims, 4 * n, true, &mut rng).density;
+    });
+    suite.note(&format!("arboricity flow-offline est {arb_flow:.4}"));
+
+    // --- local clustering ---
+    let ds_c = Arc::new(dataset::clusterable(n, 6, 2, &mut rng));
+    let labels = ds_c.labels.clone().unwrap();
+    let prims_c = Primitives::build(
+        ds_c,
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        CpuBackend::new(),
+    );
+    let lc = cluster_local::LocalClusterParams::for_n(n);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    suite.bench("local_cluster same/diff test", || {
+        let u = rng.below(n);
+        let mut w = rng.below(n);
+        while w == u {
+            w = rng.below(n);
+        }
+        let out = cluster_local::same_cluster(&prims_c, u, w, &lc, &mut rng);
+        if out.same_cluster == (labels[u] == labels[w]) {
+            correct += 1;
+        }
+        total += 1;
+    });
+    suite.note(&format!(
+        "local clustering accuracy: {correct}/{total} (walks of len {}, {} samples/dist)",
+        lc.walk_len, lc.samples
+    ));
+    suite.finish();
+}

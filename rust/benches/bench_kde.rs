@@ -1,0 +1,86 @@
+//! Table 1 regeneration: KDE query cost per estimator / kernel / tau.
+//!
+//! The paper's Table 1 rows are preprocessing + query complexities; here
+//! we measure the realized query time and per-query kernel-evaluation
+//! counts of each estimator as n and tau vary. The *shape* to reproduce:
+//! naive scales linearly with n; sampling is flat in n with cost
+//! ~ 1/(tau eps^2); HBE is flat with cost ~ #tables.
+
+use std::sync::Arc;
+
+use kde_matrix::kde::estimators::{NaiveKde, SamplingKde};
+use kde_matrix::kde::hbe::HbeKde;
+use kde_matrix::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_kde (Table 1)");
+    let mut rng = Rng::new(601);
+
+    for &n in &[2_048usize, 8_192, 16_384] {
+        let ds = Arc::new(dataset::gaussian_mixture(n, 16, 4, 0.6, 0.5, &mut rng));
+        let be = CpuBackend::new();
+        let ctr = KdeCounters::new();
+        let naive = NaiveKde::new(ds.clone(), Kernel::Laplacian, 0, n, be.clone(), ctr.clone());
+        let q = ds.point(0).to_vec();
+        suite.bench(&format!("naive/query n={n}"), || {
+            std::hint::black_box(naive.query(&q));
+        });
+
+        for &tau in &[0.1f64, 0.01, 0.001] {
+            let cfg = KdeConfig {
+                kind: EstimatorKind::Sampling { eps: 0.25, tau },
+                leaf_cutoff: 16,
+                seed: 1,
+            };
+            let s = SamplingKde::new(
+                ds.clone(),
+                Kernel::Laplacian,
+                0,
+                n,
+                &cfg,
+                be.clone(),
+                ctr.clone(),
+                &mut rng,
+            );
+            suite.bench(&format!("sampling/query n={n} tau={tau}"), || {
+                std::hint::black_box(s.query(&q));
+            });
+            suite.note(&format!(
+                "sampling n={n} tau={tau}: sample size {} (theory 4/(tau*eps^2) = {:.0})",
+                cfg.sample_size(n),
+                4.0 / (tau * 0.25f64 * 0.25)
+            ));
+        }
+
+        let hbe = HbeKde::new(
+            ds.clone(),
+            Kernel::Laplacian,
+            0,
+            n,
+            32,
+            4.0,
+            ctr.clone(),
+            &mut rng,
+        );
+        suite.bench(&format!("hbe/query n={n} tables=32"), || {
+            std::hint::black_box(hbe.query(&q));
+        });
+    }
+
+    // Per-kernel query cost at fixed n (Table 1 kernel column).
+    let n = 8_192;
+    let ds = Arc::new(dataset::gaussian_mixture(n, 16, 4, 0.6, 0.5, &mut rng));
+    let q = ds.point(1).to_vec();
+    for k in kde_matrix::kernel::ALL_KERNELS {
+        let be = CpuBackend::new();
+        let naive = NaiveKde::new(ds.clone(), k, 0, n, be, KdeCounters::new());
+        suite.bench(&format!("naive/query kernel={} n={n}", k.name()), || {
+            std::hint::black_box(naive.query(&q));
+        });
+    }
+    suite.finish();
+}

@@ -1,0 +1,60 @@
+//! Fig. 3a/3c regeneration (bench form): rank-vs-error rows and wall time
+//! for KDE-LRA vs IS (CountSketch) vs SVD (block power), on the MNIST
+//! substitute. The `lra_pipeline` example emits the CSV figures; this
+//! target provides the timed comparison rows.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::lra;
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_lra (Fig. 3)");
+    let mut rng = Rng::new(801);
+    let n = 768usize;
+    let ds = Arc::new(
+        dataset::gaussian_mixture(n, 32, 10, 2.0, 0.6, &mut rng)
+            .with_median_bandwidth(Kernel::Laplacian, &mut rng),
+    );
+    let kmat = lra::materialize_kernel_matrix(&ds, Kernel::Laplacian);
+    let frob = kmat.frob_norm_sq();
+    // FKV tolerates O(1)-factor row-norm accuracy: size the oracle for
+    // cost, not precision (see lra_pipeline).
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.5, tau: 0.2 },
+        leaf_cutoff: 32,
+        seed: 5,
+    };
+
+    for &rank in &[5usize, 20] {
+        let mut kde_err = 0.0;
+        let mut evals = 0;
+        suite.bench(&format!("kde_lra rank={rank} n={n}"), || {
+            let be = CpuBackend::new();
+            let r = lra::lra_kde(&ds, Kernel::Laplacian, rank, 10, &cfg, be, &mut rng);
+            kde_err = (lra::lra_error(&kmat, &r.v) / frob).sqrt();
+            evals = r.kernel_evals;
+        });
+        let mut is_err = 0.0;
+        suite.bench(&format!("is_lra rank={rank} n={n}"), || {
+            let v = lra::lra_countsketch(&kmat, rank, 4 * rank + 10, &mut rng);
+            is_err = (lra::lra_error(&kmat, &v) / frob).sqrt();
+        });
+        let mut svd_err = 0.0;
+        suite.bench(&format!("svd_lra rank={rank} n={n}"), || {
+            let v = lra::lra_svd(&kmat, rank, 200, &mut rng);
+            svd_err = (lra::lra_error(&kmat, &v) / frob).sqrt();
+        });
+        suite.note(&format!(
+            "rank {rank}: rel errs KDE {kde_err:.4} / IS {is_err:.4} / SVD {svd_err:.4}; \
+             KDE kernel evals {evals} vs n^2 = {} ({:.1}x fewer)",
+            n * n,
+            (n * n) as f64 / evals as f64
+        ));
+    }
+    suite.finish();
+}

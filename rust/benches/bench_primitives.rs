@@ -1,0 +1,98 @@
+//! Table 2 regeneration: KDE queries + post-processing cost per
+//! application primitive, at fixed n and tau.
+//!
+//! Prints the measured query counts next to the paper's asymptotic rows so
+//! the scaling story can be read off directly.
+
+use std::sync::Arc;
+
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_primitives (Table 2 + §4 blocks)");
+    let mut rng = Rng::new(701);
+    let n = 2_048usize;
+    let ds = Arc::new(dataset::gaussian_mixture(n, 16, 6, 1.2, 0.5, &mut rng));
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.25, tau: 0.05 },
+        leaf_cutoff: 16,
+        seed: 3,
+    };
+
+    // Primitive build (Alg 4.1 + 4.3): n queries.
+    let t0 = std::time::Instant::now();
+    let prims = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, CpuBackend::new());
+    suite.note(&format!(
+        "build: {} KDE queries in {:.2}s (theory: n = {n})",
+        prims.kde_queries(),
+        t0.elapsed().as_secs_f64()
+    ));
+
+    suite.bench("vertex_sample (Alg 4.6)", || {
+        std::hint::black_box(prims.degrees.sample(&mut rng));
+    });
+
+    let q_before = prims.kde_queries();
+    let mut neighbor_calls = 0u64;
+    suite.bench("neighbor_sample (Alg 4.11)", || {
+        let i = rng.below(n);
+        std::hint::black_box(prims.neighbors.sample(i, &mut rng));
+        neighbor_calls += 1;
+    });
+    suite.note(&format!(
+        "neighbor sampling: {:.1} fresh KDE queries/call (theory O(log n) = {:.0}, decaying as cache warms)",
+        (prims.kde_queries() - q_before) as f64 / neighbor_calls.max(1) as f64,
+        2.0 * (n as f64).log2()
+    ));
+
+    suite.bench("edge_sample (Alg 4.13)", || {
+        std::hint::black_box(prims.edges.sample(&mut rng));
+    });
+
+    suite.bench("random_walk T=16 (Alg 4.16)", || {
+        let i = rng.below(n);
+        std::hint::black_box(prims.walker.walk(i, 16, &mut rng));
+    });
+
+    // Application-level query counts (Table 2 rows).
+    let apps: Vec<(&str, Box<dyn FnMut(&mut Rng) -> u64>)> = vec![
+        (
+            "sparsify t=4n (Thm 5.3)",
+            Box::new(|rng: &mut Rng| {
+                kde_matrix::apps::sparsify::sparsify(&prims, 4 * n, rng).kde_queries
+            }),
+        ),
+        (
+            "arboricity m=2n (Thm 6.15)",
+            Box::new(|rng: &mut Rng| {
+                kde_matrix::apps::arboricity::arboricity_estimate(&prims, 2 * n, false, rng)
+                    .kde_queries
+            }),
+        ),
+        (
+            "triangles pool=512 (Thm 6.17)",
+            Box::new(|rng: &mut Rng| {
+                kde_matrix::apps::triangles::triangle_weight_estimate(
+                    &prims,
+                    &kde_matrix::apps::triangles::TriangleParams { edge_pool: 512, reps: 8 },
+                    rng,
+                )
+                .kde_queries
+            }),
+        ),
+    ];
+    for (name, mut f) in apps {
+        let t = std::time::Instant::now();
+        let queries = f(&mut rng);
+        suite.note(&format!(
+            "{name}: {queries} fresh KDE queries, {:.2}s wall",
+            t.elapsed().as_secs_f64()
+        ));
+    }
+    suite.finish();
+}

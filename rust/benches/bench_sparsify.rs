@@ -1,0 +1,83 @@
+//! Theorem 5.3 / §5.1.1 / §7 sparsification benches:
+//!   * sparsifier build cost vs sample budget t,
+//!   * spectral error vs t (the eps <-> t trade of Thm 5.3),
+//!   * Laplacian solve on sparse vs dense graph (Thm 5.10/5.11),
+//!   * the §7.1 edge-reduction numbers.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::{solver, sparsify};
+use kde_matrix::graph::WGraph;
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_sparsify (Thm 5.3 + §5.1.1 + §7)");
+    let mut rng = Rng::new(901);
+    let n = 1_024usize;
+    let ds = Arc::new(dataset::nested(n, &mut rng).scaled(3.0));
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.3, tau: 0.05 },
+        leaf_cutoff: 32,
+        seed: 9,
+    };
+    let prims = Primitives::build(ds.clone(), Kernel::Gaussian, &cfg, CpuBackend::new());
+
+    // Error vs sample budget (the eps sweep of Thm 5.3).
+    for &t in &[2 * n, 8 * n, 32 * n] {
+        let mut edges = 0usize;
+        let mut queries = 0u64;
+        suite.bench(&format!("sparsify t={t} n={n}"), || {
+            let r = sparsify::sparsify(&prims, t, &mut rng);
+            edges = r.distinct_edges;
+            queries = r.kde_queries;
+        });
+        let r = sparsify::sparsify(&prims, t, &mut rng);
+        let err = sparsify::spectral_error(&ds, Kernel::Gaussian, &r.graph, 12, &mut rng);
+        suite.note(&format!(
+            "t={t}: {} distinct edges ({:.0}x reduction), spectral err {:.3}, {} fresh queries",
+            edges,
+            (n * (n - 1) / 2) as f64 / edges.max(1) as f64,
+            err,
+            queries
+        ));
+    }
+
+    // Laplacian solve: sparse vs dense (Thm 5.10 role). NOTE: the Nested
+    // dataset's minimum kernel value is ~e^-36 — far below any sensible
+    // tau floor — so its Laplacian is numerically disconnected and
+    // Theorem 5.11's conditioning assumptions (Parameterization 1.2) do
+    // not hold there. The solve experiment therefore runs on a mixture
+    // with a genuine tau floor.
+    let ds_solve = Arc::new(dataset::gaussian_mixture(n, 8, 3, 0.8, 0.5, &mut rng));
+    let prims_solve =
+        Primitives::build(ds_solve.clone(), Kernel::Laplacian, &cfg, CpuBackend::new());
+    let sp = sparsify::sparsify(&prims_solve, 24 * n, &mut rng);
+    let full = WGraph::complete_kernel_graph(&ds_solve, Kernel::Laplacian);
+    let mut b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mean = b.iter().sum::<f64>() / n as f64;
+    for v in b.iter_mut() {
+        *v -= mean;
+    }
+    suite.bench("laplacian_solve sparse", || {
+        std::hint::black_box(solver::solve_laplacian(&sp.graph, &b, 1e-8, 4_000));
+    });
+    suite.bench("laplacian_solve dense", || {
+        std::hint::black_box(solver::solve_laplacian(&full, &b, 1e-8, 4_000));
+    });
+    let err = solver::solve_error_vs_exact(&full, &sp.graph, &b);
+    suite.note(&format!(
+        "solve on sparsifier vs exact: relative L_G-norm error {err:.4} (Thm 5.11: O(sqrt(eps)))"
+    ));
+    suite.note(&format!(
+        "edges: sparse {} vs dense {} ({:.0}x)",
+        sp.graph.num_edges(),
+        full.num_edges(),
+        full.num_edges() as f64 / sp.graph.num_edges() as f64
+    ));
+    suite.finish();
+}

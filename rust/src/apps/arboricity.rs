@@ -1,0 +1,131 @@
+//! Arboricity (weighted densest-subgraph density) estimation:
+//! Algorithm 6.14 / Theorem 6.15.
+//!
+//! Sample `m` edges with probability proportional to (an upper bound on)
+//! their weight via the §4 weighted-edge-sampling primitive, reweight each
+//! sampled edge by `w_e / (m p_e)` so the subsampled graph preserves
+//! subgraph weights in expectation, then compute the arboricity of the
+//! subsample *exactly* (Goldberg flow; [Cha00]'s LP role).
+
+use crate::graph::flow::{densest_subgraph, densest_subgraph_greedy};
+use crate::graph::WGraph;
+use crate::sampling::Primitives;
+use crate::util::rng::Rng;
+
+pub struct ArboricityResult {
+    pub density: f64,
+    pub subsampled_graph_edges: usize,
+    pub kde_queries: u64,
+    /// Members of the recovered densest set.
+    pub densest_set: Vec<bool>,
+}
+
+/// Algorithm 6.14 over prebuilt primitives. `m` = number of edge samples.
+/// `exact_offline`: use the flow-based exact solver on the subsample
+/// (Theorem 6.15); otherwise Charikar greedy (2-approx, much faster).
+pub fn arboricity_estimate(
+    prims: &Primitives,
+    m: usize,
+    exact_offline: bool,
+    rng: &mut Rng,
+) -> ArboricityResult {
+    let ds = &prims.tree.ds;
+    let kernel = prims.tree.kernel;
+    let before = prims.counters.queries();
+    let mut raw = Vec::with_capacity(m);
+    for _ in 0..m {
+        let Some(e) = prims.edges.sample(rng) else { continue };
+        if e.prob <= 0.0 {
+            continue;
+        }
+        let w = kernel.eval(ds.point(e.u), ds.point(e.v)) as f64;
+        raw.push((e.u, e.v, w / (m as f64 * e.prob)));
+    }
+    let g = WGraph::from_edges(ds.n, raw);
+    let (density, densest_set) = if exact_offline {
+        densest_subgraph(g.n, &g.edges, 1e-6)
+    } else {
+        densest_subgraph_greedy(g.n, &g.edges)
+    };
+    ArboricityResult {
+        density,
+        subsampled_graph_edges: g.num_edges(),
+        kde_queries: prims.counters.queries() - before,
+        densest_set,
+    }
+}
+
+/// Exact arboricity of the full kernel graph (O(n^2) edges + flow solve;
+/// baseline for Theorem 6.15, the paper's `O(n^3) + O(n^2 d)` row).
+pub fn arboricity_exact(g: &WGraph) -> f64 {
+    densest_subgraph(g.n, &g.edges, 1e-7).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kde::KdeConfig;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+    use std::sync::Arc;
+
+    fn setup(n: usize, seed: u64) -> (Arc<crate::kernel::Dataset>, Primitives, Rng) {
+        let mut rng = Rng::new(seed);
+        // Mixture with a tight blob -> a genuinely denser subgraph.
+        let ds = Arc::new(gaussian_mixture(n, 3, 2, 2.0, 0.4, &mut rng));
+        let prims = Primitives::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        (ds, prims, rng)
+    }
+
+    #[test]
+    fn estimate_close_to_exact() {
+        let (ds, prims, mut rng) = setup(40, 241);
+        let g = WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+        let exact = arboricity_exact(&g);
+        let est = arboricity_estimate(&prims, 8_000, true, &mut rng);
+        let rel = (est.density - exact).abs() / exact;
+        assert!(
+            rel < 0.15,
+            "arboricity est {} vs exact {exact} (rel {rel})",
+            est.density
+        );
+    }
+
+    #[test]
+    fn greedy_variant_lower_bounds_exact_estimate() {
+        let (_, prims, mut rng) = setup(32, 243);
+        let exact = arboricity_estimate(&prims, 5_000, true, &mut rng);
+        let greedy = arboricity_estimate(&prims, 5_000, false, &mut rng);
+        assert!(greedy.density <= exact.density * 1.1 + 1e-9);
+        assert!(greedy.density >= 0.4 * exact.density, "2-approx guarantee");
+    }
+
+    #[test]
+    fn subsample_much_smaller_than_complete_graph() {
+        let (_, prims, mut rng) = setup(48, 245);
+        let est = arboricity_estimate(&prims, 2_000, false, &mut rng);
+        assert!(est.subsampled_graph_edges < 48 * 47 / 2);
+        assert!(est.kde_queries > 0);
+    }
+
+    #[test]
+    fn more_samples_tighter_estimate() {
+        let (ds, prims, mut rng) = setup(32, 247);
+        let g = WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+        let exact = arboricity_exact(&g);
+        let coarse = arboricity_estimate(&prims, 400, true, &mut rng);
+        let fine = arboricity_estimate(&prims, 12_000, true, &mut rng);
+        let e_coarse = (coarse.density - exact).abs() / exact;
+        let e_fine = (fine.density - exact).abs() / exact;
+        assert!(
+            e_fine <= e_coarse + 0.05,
+            "fine {e_fine} should not exceed coarse {e_coarse}"
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Local clustering: Algorithm 6.1 / Theorem 6.9.
+//!
+//! Decide whether two vertices of a k-clusterable kernel graph lie in the
+//! same cluster by comparing the endpoint distributions of length-t random
+//! walks, using the CDVV14 collision-based l2 tester:
+//!
+//!   ||p||^2 is estimated by within-sample collisions,
+//!   <p, q>  by cross-sample collisions,
+//!   ||p - q||^2 = ||p||^2 + ||q||^2 - 2 <p, q>.
+//!
+//! Same-cluster pairs give `||p_u^t - p_w^t||^2 <= 1/(8n)` (Lemma 6.7);
+//! different clusters give `>= 2/n` (disjoint support, Lemma 6.8) — the
+//! tester thresholds in between.
+
+use crate::sampling::Primitives;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LocalClusterParams {
+    /// Walk length t (paper: c log n / phi_in^2).
+    pub walk_len: usize,
+    /// Samples per distribution r (paper: O(sqrt(n k / eps) / tau^{1.5})).
+    pub samples: usize,
+    /// Decision threshold on the estimated ||p - q||^2 (default 0.5/n set
+    /// between 1/(8n) and 2/n).
+    pub threshold_scale: f64,
+}
+
+impl LocalClusterParams {
+    pub fn for_n(n: usize) -> Self {
+        let walk_len = (3.0 * (n as f64).ln()).ceil() as usize;
+        let samples = (20.0 * (n as f64).sqrt()).ceil() as usize;
+        LocalClusterParams { walk_len, samples, threshold_scale: 1.0 }
+    }
+}
+
+pub struct LocalClusterOutcome {
+    pub same_cluster: bool,
+    /// The collision-estimated squared l2 distance.
+    pub distance_sq: f64,
+    pub kde_queries: u64,
+}
+
+/// Unbiased collision estimator of `||p||^2` from `r` iid samples.
+pub fn l2_norm_sq_estimate(samples: &[usize], n: usize) -> f64 {
+    let r = samples.len();
+    assert!(r >= 2);
+    let mut counts = vec![0u32; n];
+    for &s in samples {
+        counts[s] += 1;
+    }
+    let pairs: f64 = counts
+        .iter()
+        .map(|&c| c as f64 * (c as f64 - 1.0))
+        .sum();
+    pairs / (r as f64 * (r as f64 - 1.0))
+}
+
+/// Unbiased estimator of `<p, q>` from r samples of each.
+pub fn inner_product_estimate(a: &[usize], b: &[usize], n: usize) -> f64 {
+    let mut ca = vec![0u32; n];
+    let mut cb = vec![0u32; n];
+    for &s in a {
+        ca[s] += 1;
+    }
+    for &s in b {
+        cb[s] += 1;
+    }
+    let cross: f64 = ca.iter().zip(&cb).map(|(&x, &y)| x as f64 * y as f64).sum();
+    cross / (a.len() as f64 * b.len() as f64)
+}
+
+/// Algorithm 6.1: decide whether u and w share a cluster.
+pub fn same_cluster(
+    prims: &Primitives,
+    u: usize,
+    w: usize,
+    params: &LocalClusterParams,
+    rng: &mut Rng,
+) -> LocalClusterOutcome {
+    let n = prims.n();
+    let before = prims.counters.queries();
+    let mut ends_u = Vec::with_capacity(params.samples);
+    let mut ends_w = Vec::with_capacity(params.samples);
+    for _ in 0..params.samples {
+        ends_u.push(prims.walker.walk(u, params.walk_len, rng));
+        ends_w.push(prims.walker.walk(w, params.walk_len, rng));
+    }
+    let pp = l2_norm_sq_estimate(&ends_u, n);
+    let qq = l2_norm_sq_estimate(&ends_w, n);
+    let pq = inner_product_estimate(&ends_u, &ends_w, n);
+    let dist_sq = (pp + qq - 2.0 * pq).max(0.0);
+    LocalClusterOutcome {
+        same_cluster: dist_sq <= params.threshold_scale / n as f64,
+        distance_sq: dist_sq,
+        kde_queries: prims.counters.queries() - before,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kde::KdeConfig;
+    use crate::kernel::dataset::clusterable;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+    use std::sync::Arc;
+
+    #[test]
+    fn l2_estimators_unbiased_on_known_distribution() {
+        // p uniform over {0,1}: ||p||^2 = 0.5.
+        let mut rng = Rng::new(221);
+        let trials = 300;
+        let r = 50;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let samples: Vec<usize> = (0..r).map(|_| rng.below(2)).collect();
+            acc += l2_norm_sq_estimate(&samples, 2);
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 0.5).abs() < 0.02, "E||p||^2 = {mean}");
+        // <p, q> with p = delta_0, q = uniform over {0,1}: 0.5.
+        let mut acc2 = 0.0;
+        for _ in 0..trials {
+            let a: Vec<usize> = vec![0; r];
+            let b: Vec<usize> = (0..r).map(|_| rng.below(2)).collect();
+            acc2 += inner_product_estimate(&a, &b, 2);
+        }
+        let mean2 = acc2 / trials as f64;
+        assert!((mean2 - 0.5).abs() < 0.02, "E<p,q> = {mean2}");
+    }
+
+    #[test]
+    fn detects_same_and_different_clusters() {
+        let mut rng = Rng::new(223);
+        // Two far blobs: a (2, phi_in, phi_out)-clusterable kernel graph.
+        let ds = Arc::new(clusterable(64, 4, 2, &mut rng));
+        let labels = ds.labels.clone().unwrap();
+        let prims = Primitives::build(
+            ds,
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        let params = LocalClusterParams::for_n(64);
+        // same cluster: vertices 0 and 2 (labels alternate: i % 2)
+        assert_eq!(labels[0], labels[2]);
+        let same = same_cluster(&prims, 0, 2, &params, &mut rng);
+        assert!(
+            same.same_cluster,
+            "same-cluster pair rejected (d^2 = {})",
+            same.distance_sq
+        );
+        // different clusters: vertices 0 and 1
+        assert_ne!(labels[0], labels[1]);
+        let diff = same_cluster(&prims, 0, 1, &params, &mut rng);
+        assert!(
+            !diff.same_cluster,
+            "different-cluster pair accepted (d^2 = {})",
+            diff.distance_sq
+        );
+        // The distances should be separated by an order of magnitude.
+        assert!(diff.distance_sq > 4.0 * same.distance_sq);
+    }
+
+    #[test]
+    fn accuracy_over_random_pairs() {
+        let mut rng = Rng::new(225);
+        let ds = Arc::new(clusterable(96, 4, 3, &mut rng));
+        let labels = ds.labels.clone().unwrap();
+        let prims = Primitives::build(
+            ds,
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        let params = LocalClusterParams::for_n(96);
+        let mut correct = 0;
+        let trials = 20;
+        for _ in 0..trials {
+            let u = rng.below(96);
+            let w = rng.below(96);
+            if u == w {
+                correct += 1;
+                continue;
+            }
+            let out = same_cluster(&prims, u, w, &params, &mut rng);
+            if out.same_cluster == (labels[u] == labels[w]) {
+                correct += 1;
+            }
+        }
+        assert!(
+            correct >= trials - 2,
+            "local clustering accuracy {correct}/{trials}"
+        );
+    }
+}

@@ -1,0 +1,294 @@
+//! Spectral clustering on the sparsified kernel graph: §6.2 /
+//! Theorems 6.12-6.13 and the §7 Nested/Rings experiments.
+//!
+//! Pipeline: sparsifier (Alg 5.1) -> bottom-k eigenvectors of the
+//! normalized Laplacian (block power iteration on `2I - L_norm`, the
+//! MM15 role) -> row-normalized spectral embedding -> k-means++ / Lloyd.
+
+use crate::graph::{ShiftedNormLaplacianOp, WGraph};
+use crate::linalg::cg::cg;
+use crate::linalg::eigen::{mgs, SymOp};
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+/// `(L_norm + eps I) x` operator for inverse iteration.
+struct RegNormLap<'a> {
+    shifted: ShiftedNormLaplacianOp<'a>,
+    eps: f64,
+}
+
+impl SymOp for RegNormLap<'_> {
+    fn dim(&self) -> usize {
+        self.shifted.dim()
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        // shifted(x) = 2x - L x  =>  L x = 2x - shifted(x)
+        self.shifted.apply(x, out);
+        for i in 0..x.len() {
+            out[i] = (2.0 + self.eps) * x[i] - out[i];
+        }
+    }
+}
+
+/// Bottom-k eigenvectors of the normalized Laplacian of `g` (including the
+/// trivial one), as an `n x k` embedding matrix.
+///
+/// Implementation: inverse subspace iteration on `(L_norm + eps I)` with CG
+/// inner solves. Plain (shifted) power iteration stalls here because the
+/// bottom of the Laplacian spectrum of near-disconnected cluster graphs is
+/// extremely clustered; inversion blows the relevant gaps wide open.
+pub fn spectral_embedding(g: &WGraph, k: usize, iters: usize, rng: &mut Rng) -> Mat {
+    let n = g.n;
+    let k = k.min(n);
+    let op = RegNormLap {
+        shifted: ShiftedNormLaplacianOp::new(g, 2.0),
+        eps: 1e-3,
+    };
+    let mut q: Vec<Vec<f64>> = (0..(k + 1).min(n))
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect();
+    mgs(&mut q);
+    let outer = iters.clamp(4, 40);
+    for _ in 0..outer {
+        for col in q.iter_mut() {
+            let res = cg(&op, col, None, false, 1e-8, 400);
+            col.copy_from_slice(&res.x);
+        }
+        mgs(&mut q);
+    }
+    // Rayleigh-Ritz on L_norm within the subspace; sort ascending.
+    let p = q.len();
+    let mut buf = vec![0.0; n];
+    let mut t = Mat::zeros(p, p);
+    for i in 0..p {
+        // L q_i = (op - eps I) q_i
+        op.apply(&q[i], &mut buf);
+        for (b, x) in buf.iter_mut().zip(q[i].iter()) {
+            *b -= 1e-3 * x;
+        }
+        for j in 0..p {
+            t[(j, i)] = crate::linalg::dot(&q[j], &buf);
+        }
+    }
+    let (tvals, tvecs) = crate::linalg::jacobi_eigen(&t, 60);
+    // jacobi sorts descending; bottom eigenvectors are the LAST k columns.
+    let mut order: Vec<usize> = (0..p).collect();
+    order.sort_by(|&a, &b| tvals[a].partial_cmp(&tvals[b]).unwrap());
+    let n_keep = k;
+    let mut emb = Mat::zeros(n, n_keep);
+    for (out_col, &c) in order.iter().take(n_keep).enumerate() {
+        for i in 0..n {
+            let mut v = 0.0;
+            for j in 0..p {
+                v += tvecs[(j, c)] * q[j][i];
+            }
+            emb[(i, out_col)] = v;
+        }
+    }
+    emb
+}
+
+/// k-means++ initialization followed by Lloyd's iterations on the rows of
+/// `points`. Returns cluster labels.
+pub fn kmeans(points: &Mat, k: usize, iters: usize, rng: &mut Rng) -> Vec<usize> {
+    let n = points.rows;
+    let d = points.cols;
+    assert!(k >= 1 && n >= k);
+    // k-means++ seeding
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(points.row(rng.below(n)).to_vec());
+    let mut dist_sq = vec![f64::INFINITY; n];
+    while centers.len() < k {
+        let last = centers.last().unwrap();
+        for i in 0..n {
+            let mut s = 0.0;
+            let r = points.row(i);
+            for j in 0..d {
+                let df = r[j] - last[j];
+                s += df * df;
+            }
+            dist_sq[i] = dist_sq[i].min(s);
+        }
+        let total: f64 = dist_sq.iter().sum();
+        if total <= 0.0 {
+            centers.push(points.row(rng.below(n)).to_vec());
+            continue;
+        }
+        let mut target = rng.f64() * total;
+        let mut pick = n - 1;
+        for i in 0..n {
+            target -= dist_sq[i];
+            if target <= 0.0 {
+                pick = i;
+                break;
+            }
+        }
+        centers.push(points.row(pick).to_vec());
+    }
+    // Lloyd iterations
+    let mut labels = vec![0usize; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        for i in 0..n {
+            let r = points.row(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for (c, center) in centers.iter().enumerate() {
+                let mut s = 0.0;
+                for j in 0..d {
+                    let df = r[j] - center[j];
+                    s += df * df;
+                }
+                if s < best.0 {
+                    best = (s, c);
+                }
+            }
+            if labels[i] != best.1 {
+                labels[i] = best.1;
+                changed = true;
+            }
+        }
+        // recompute centers
+        let mut sums = vec![vec![0.0f64; d]; k];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            let r = points.row(i);
+            for j in 0..d {
+                sums[labels[i]][j] += r[j];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for j in 0..d {
+                    centers[c][j] = sums[c][j] / counts[c] as f64;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    labels
+}
+
+/// Full spectral clustering of a (sparse or dense) weighted graph.
+pub fn spectral_cluster(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<usize> {
+    let mut emb = spectral_embedding(g, k, 400, rng);
+    // Row-normalize the embedding (standard Ng-Jordan-Weiss step).
+    for i in 0..emb.rows {
+        let r = emb.row_mut(i);
+        let norm: f64 = r.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            for x in r.iter_mut() {
+                *x /= norm;
+            }
+        }
+    }
+    kmeans(&emb, k, 100, rng)
+}
+
+/// Permutation-maximized clustering accuracy against ground truth
+/// (exhaustive over label permutations; fine for k <= 6).
+pub fn clustering_accuracy(labels: &[usize], truth: &[usize], k: usize) -> f64 {
+    assert_eq!(labels.len(), truth.len());
+    assert!(k <= 6, "permutation search limited to k <= 6");
+    let mut perm: Vec<usize> = (0..k).collect();
+    let mut best = 0usize;
+    permute(&mut perm, 0, &mut |p| {
+        let correct = labels
+            .iter()
+            .zip(truth)
+            .filter(|&(&l, &t)| l < k && p[l] == t)
+            .count();
+        best = best.max(correct);
+    });
+    best as f64 / labels.len() as f64
+}
+
+fn permute(arr: &mut Vec<usize>, i: usize, f: &mut impl FnMut(&[usize])) {
+    if i == arr.len() {
+        f(arr);
+        return;
+    }
+    for j in i..arr.len() {
+        arr.swap(i, j);
+        permute(arr, i + 1, f);
+        arr.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::{nested, rings};
+    use crate::kernel::Kernel;
+
+    #[test]
+    fn kmeans_separates_obvious_blobs() {
+        let mut rng = Rng::new(231);
+        let mut pts = Mat::zeros(40, 2);
+        for i in 0..40 {
+            let c = if i < 20 { 0.0 } else { 10.0 };
+            pts[(i, 0)] = c + rng.normal() * 0.1;
+            pts[(i, 1)] = c + rng.normal() * 0.1;
+        }
+        let labels = kmeans(&pts, 2, 50, &mut rng);
+        let truth: Vec<usize> = (0..40).map(|i| usize::from(i >= 20)).collect();
+        assert_eq!(clustering_accuracy(&labels, &truth, 2), 1.0);
+    }
+
+    #[test]
+    fn accuracy_is_permutation_invariant() {
+        let labels = vec![1, 1, 0, 0];
+        let truth = vec![0, 0, 1, 1];
+        assert_eq!(clustering_accuracy(&labels, &truth, 2), 1.0);
+    }
+
+    #[test]
+    fn spectral_clustering_solves_nested_on_full_graph() {
+        let mut rng = Rng::new(233);
+        let ds = nested(160, &mut rng);
+        // Bandwidth: nested needs a scale where same-cluster kernel >>
+        // cross-cluster kernel; circle radius 1, use sigma ~ 0.3 => scale 3.
+        let scaled = ds.scaled(3.0);
+        let g = WGraph::complete_kernel_graph(&scaled, Kernel::Gaussian);
+        let labels = spectral_cluster(&g, 2, &mut rng);
+        let acc = clustering_accuracy(&labels, ds.labels.as_ref().unwrap(), 2);
+        assert!(acc > 0.97, "nested accuracy {acc}");
+    }
+
+    #[test]
+    fn spectral_clustering_solves_rings_on_full_graph() {
+        let mut rng = Rng::new(235);
+        let ds = rings(200, &mut rng);
+        let scaled = ds.scaled(6.0);
+        let g = WGraph::complete_kernel_graph(&scaled, Kernel::Gaussian);
+        let labels = spectral_cluster(&g, 2, &mut rng);
+        let acc = clustering_accuracy(&labels, ds.labels.as_ref().unwrap(), 2);
+        assert!(acc > 0.95, "rings accuracy {acc}");
+    }
+
+    #[test]
+    fn theorem_6_12_sparsifier_preserves_conductance() {
+        // Cut sparsifiers preserve (k, phi_out)-clusterability.
+        let mut rng = Rng::new(237);
+        let ds = nested(96, &mut rng).scaled(3.0);
+        let full = WGraph::complete_kernel_graph(&ds, Kernel::Gaussian);
+        let prims = crate::sampling::Primitives::build(
+            std::sync::Arc::new(ds.clone()),
+            Kernel::Gaussian,
+            &crate::kde::KdeConfig::exact(),
+            crate::runtime::backend::CpuBackend::new(),
+        );
+        let sp = crate::apps::sparsify::sparsify(&prims, 25_000, &mut rng);
+        // Conductance of the true partition is preserved within ~2x.
+        let labels = ds.labels.as_ref().unwrap();
+        let in_set: Vec<bool> = labels.iter().map(|&l| l == 0).collect();
+        let phi_full = full.conductance(&in_set);
+        let phi_sparse = sp.graph.conductance(&in_set);
+        assert!(
+            phi_sparse < 3.0 * phi_full + 0.05,
+            "phi preserved: sparse {phi_sparse} vs full {phi_full}"
+        );
+    }
+}

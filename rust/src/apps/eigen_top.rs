@@ -1,0 +1,213 @@
+//! Top eigenvalue / eigenvector approximation: Algorithm 5.18 /
+//! Theorem 5.22.
+//!
+//! Step 1 subsamples a `t x t` principal submatrix (BMR21: eigenvalues are
+//! preserved to additive `n/sqrt(t)`, and Lemma 5.19 gives
+//! `lambda_1 >= n tau`, so `t = O(1/(eps^2 tau^2))` suffices).
+//! Step 2 runs a power method on the sampled submatrix — either the
+//! Remark 5.23 direct variant (materialize `K_S`, standard power method)
+//! or the BIMW21-style *noisy* variant whose matvec is estimated from KDE
+//! degree estimates + weighted neighbor samples, never materializing the
+//! matrix.
+//!
+//! The returned eigenvector is sparse: supported on the `t` sampled
+//! coordinates (Remark 5.23).
+
+use std::sync::Arc;
+
+use crate::kde::KdeConfig;
+use crate::kernel::{Dataset, Kernel};
+use crate::linalg::mat::{dot, normalize, Mat};
+use crate::runtime::backend::KernelBackend;
+use crate::sampling::Primitives;
+use crate::util::rng::Rng;
+
+pub struct EigenTopResult {
+    /// Estimated top eigenvalue of the FULL n x n kernel matrix.
+    pub lambda: f64,
+    /// Sampled coordinate indices (support of the eigenvector).
+    pub support: Vec<usize>,
+    /// Eigenvector values on the support (unit norm).
+    pub vector: Vec<f64>,
+    pub submatrix_size: usize,
+    pub kde_queries: u64,
+}
+
+/// Submatrix size Theorem 5.22 prescribes, with a practical constant.
+pub fn theorem_submatrix_size(eps: f64, tau: f64, n: usize) -> usize {
+    ((4.0 / (eps * eps * tau * tau)).ceil() as usize).clamp(4, n)
+}
+
+/// Remark 5.23 direct variant: materialize the t x t sampled submatrix and
+/// run the standard power method. O(t^2 d) kernel work.
+pub fn eigen_top_direct(
+    ds: &Arc<Dataset>,
+    kernel: Kernel,
+    t: usize,
+    iters: usize,
+    rng: &mut Rng,
+) -> EigenTopResult {
+    let n = ds.n;
+    let t = t.min(n);
+    let support = rng.sample_indices(n, t);
+    let sub = ds.subset(&support);
+    let mut kmat = Mat::zeros(t, t);
+    for i in 0..t {
+        kmat[(i, i)] = 1.0;
+        for j in (i + 1)..t {
+            let v = sub.kernel(kernel, i, j) as f64;
+            kmat[(i, j)] = v;
+            kmat[(j, i)] = v;
+        }
+    }
+    // Power method (K is PSD so no shifting needed).
+    let mut v: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let w = kmat.matvec(&v);
+        lam = dot(&v, &w);
+        v = w;
+        if normalize(&mut v) == 0.0 {
+            break;
+        }
+    }
+    EigenTopResult {
+        lambda: lam * n as f64 / t as f64, // BMR21 scaling
+        support,
+        vector: v,
+        submatrix_size: t,
+        kde_queries: 0,
+    }
+}
+
+/// BIMW21-style noisy power method on the sampled submatrix: the matvec
+/// `(K_S v)_i = v_i + sum_{j != i} k(i,j) v_j` is estimated as
+/// `v_i + deg_i * mean_{r}( v_{j_r} )` with `j_r` drawn by weighted
+/// neighbor sampling — KDE queries only, the submatrix is never formed.
+pub fn eigen_top_noisy(
+    ds: &Arc<Dataset>,
+    kernel: Kernel,
+    t: usize,
+    iters: usize,
+    matvec_samples: usize,
+    cfg: &KdeConfig,
+    backend: Arc<dyn KernelBackend>,
+    rng: &mut Rng,
+) -> EigenTopResult {
+    let n = ds.n;
+    let t = t.min(n);
+    let support = rng.sample_indices(n, t);
+    let sub = Arc::new(ds.subset(&support));
+    let prims = Primitives::build(sub, kernel, cfg, backend);
+    let mut v: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
+    normalize(&mut v);
+    let mut lam = 0.0;
+    for _ in 0..iters {
+        let mut w = vec![0.0; t];
+        for i in 0..t {
+            let deg = prims.degrees.degrees[i];
+            let mut acc = 0.0;
+            for _ in 0..matvec_samples {
+                if let Some(s) = prims.neighbors.sample(i, rng) {
+                    acc += v[s.neighbor];
+                }
+            }
+            w[i] = v[i] + deg * acc / matvec_samples as f64;
+        }
+        lam = dot(&v, &w); // Rayleigh-style estimate with the noisy matvec
+        v = w;
+        if normalize(&mut v) == 0.0 {
+            break;
+        }
+    }
+    EigenTopResult {
+        lambda: lam * n as f64 / t as f64,
+        support,
+        vector: v,
+        submatrix_size: t,
+        kde_queries: prims.kde_queries(),
+    }
+}
+
+/// Exact top eigenvalue of the full kernel matrix (baseline, O(n^2 d)).
+pub fn exact_top_eigenvalue(ds: &Dataset, kernel: Kernel, rng: &mut Rng) -> f64 {
+    let kmat = crate::apps::lra::materialize_kernel_matrix(ds, kernel);
+    let (vals, _) = crate::linalg::eigen::block_power(&kmat, 1, 600, rng);
+    vals[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Rng) {
+        let mut rng = Rng::new(seed);
+        // Tight-ish data: high tau, so lambda_1 ~ n * avg kernel value.
+        let ds = Arc::new(gaussian_mixture(n, 3, 1, 0.0, 0.5, &mut rng));
+        (ds, rng)
+    }
+
+    #[test]
+    fn direct_full_sample_matches_exact() {
+        let (ds, mut rng) = setup(40, 201);
+        let exact = exact_top_eigenvalue(&ds, Kernel::Laplacian, &mut rng);
+        let got = eigen_top_direct(&ds, Kernel::Laplacian, 40, 300, &mut rng);
+        assert!(
+            (got.lambda - exact).abs() < 1e-6 * exact,
+            "t=n must be exact: {} vs {exact}",
+            got.lambda
+        );
+    }
+
+    #[test]
+    fn direct_subsample_approximates() {
+        let (ds, mut rng) = setup(128, 203);
+        let exact = exact_top_eigenvalue(&ds, Kernel::Laplacian, &mut rng);
+        let got = eigen_top_direct(&ds, Kernel::Laplacian, 48, 300, &mut rng);
+        let rel = (got.lambda - exact).abs() / exact;
+        assert!(rel < 0.2, "rel err {rel} (λ {}, exact {exact})", got.lambda);
+        assert_eq!(got.support.len(), 48);
+    }
+
+    #[test]
+    fn noisy_variant_approximates() {
+        let (ds, mut rng) = setup(128, 205);
+        let exact = exact_top_eigenvalue(&ds, Kernel::Laplacian, &mut rng);
+        let got = eigen_top_noisy(
+            &ds,
+            Kernel::Laplacian,
+            48,
+            30,
+            24,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            &mut rng,
+        );
+        let rel = (got.lambda - exact).abs() / exact;
+        assert!(rel < 0.3, "rel err {rel} (λ {}, exact {exact})", got.lambda);
+        assert!(got.kde_queries > 0, "noisy variant must use KDE queries");
+    }
+
+    #[test]
+    fn lower_bound_lemma_5_19() {
+        // lambda_1 >= n * tau when every row sums to >= n tau.
+        let (ds, mut rng) = setup(64, 207);
+        let tau = ds.tau(Kernel::Laplacian);
+        let exact = exact_top_eigenvalue(&ds, Kernel::Laplacian, &mut rng);
+        assert!(
+            exact >= 64.0 * tau * 0.999,
+            "λ1 {exact} < n*tau {}",
+            64.0 * tau
+        );
+    }
+
+    #[test]
+    fn submatrix_size_formula() {
+        assert_eq!(theorem_submatrix_size(1.0, 1.0, 1000), 4);
+        assert!(theorem_submatrix_size(0.1, 0.5, 10_000) > 100);
+        assert_eq!(theorem_submatrix_size(0.001, 0.001, 50), 50, "clamped to n");
+    }
+}

@@ -1,0 +1,311 @@
+//! Additive-error low-rank approximation of the kernel matrix:
+//! Algorithm 5.15 / Corollary 5.14 (FKV over squared-row-norm samples),
+//! plus the two §7 baselines — input-sparsity CountSketch (CW13, "IS")
+//! and iterative SVD (block power iteration).
+//!
+//! The KDE algorithm touches only `n` KDE queries + `s x n` explicit kernel
+//! entries for the sampled rows (`s = rows_factor * rank`, paper uses 25k);
+//! both baselines must materialize all `n^2` entries — that gap is the
+//! paper's Fig. 3 headline (9x fewer kernel evaluations).
+
+use std::sync::Arc;
+
+use crate::kde::{KdeConfig, KdeCounters};
+use crate::kernel::{Dataset, Kernel};
+use crate::linalg::eigen::{block_power, jacobi_eigen};
+use crate::linalg::mat::Mat;
+use crate::linalg::sketch::CountSketch;
+use crate::runtime::backend::KernelBackend;
+use crate::sampling::rownorm::RowNormSampler;
+use crate::util::rng::Rng;
+
+/// A rank-k factor `V` (k x n, approximately orthonormal rows): the
+/// approximation is `B = K V^T V`.
+pub struct LraResult {
+    pub v: Mat,
+    pub rank: usize,
+    pub sampled_rows: usize,
+    pub kde_queries: u64,
+    /// Kernel evaluations performed BY THE ALGORITHM (row construction +
+    /// estimator samples), not by any evaluation harness.
+    pub kernel_evals: u64,
+    /// f32 values the algorithm must hold at once (space accounting, §7.1).
+    pub floats_stored: u64,
+}
+
+/// FKV top-k right factors from sampled, rescaled rows.
+fn fkv_factors(r: &Mat, k: usize) -> Mat {
+    // W = R R^T (s x s), exact eigendecomposition, top-k.
+    let w = r.gram_rows();
+    let (vals, vecs) = jacobi_eigen(&w, 100);
+    let n = r.cols;
+    let mut v = Mat::zeros(k.min(r.rows), n);
+    for j in 0..v.rows {
+        let lam = vals[j].max(0.0);
+        if lam <= 1e-12 {
+            break;
+        }
+        let scale = 1.0 / lam.sqrt();
+        // v_j = R^T q_j / sqrt(lambda_j)
+        for i in 0..r.rows {
+            let q = vecs[(i, j)] * scale;
+            if q == 0.0 {
+                continue;
+            }
+            let row = r.row(i);
+            let dst = v.row_mut(j);
+            for c in 0..n {
+                dst[c] += q * row[c];
+            }
+        }
+    }
+    v
+}
+
+/// Algorithm 5.15: KDE row-norm sampling + FKV.
+///
+/// `rows_factor`: rows sampled per unit of rank (paper: 25).
+pub fn lra_kde(
+    ds: &Arc<Dataset>,
+    kernel: Kernel,
+    rank: usize,
+    rows_factor: usize,
+    cfg: &KdeConfig,
+    backend: Arc<dyn KernelBackend>,
+    rng: &mut Rng,
+) -> LraResult {
+    let n = ds.n;
+    let counters = KdeCounters::new();
+    let evals_before = backend.kernel_evals();
+    let rn = RowNormSampler::build(ds, kernel, cfg, backend.clone(), counters.clone());
+    let s = (rows_factor * rank).clamp(1, n);
+    // Sample s row indices (with replacement) by squared row norm.
+    let mut picks: Vec<(usize, f64)> = Vec::with_capacity(s);
+    for _ in 0..s {
+        picks.push(rn.sample(rng));
+    }
+    // Construct the sampled rows explicitly (s x n kernel evaluations)
+    // through the backend block primitive, one query-batch per chunk.
+    let d = ds.d;
+    let mut queries: Vec<f32> = Vec::with_capacity(s * d);
+    for &(i, _) in &picks {
+        queries.extend_from_slice(ds.point(i));
+    }
+    let block = backend.block(kernel, &queries, ds.flat(), d);
+    // Rescale rows: row / sqrt(s * p_i).
+    let mut r = Mat::zeros(s, n);
+    for (si, &(_, p)) in picks.iter().enumerate() {
+        let scale = 1.0 / (s as f64 * p).sqrt();
+        let src = &block[si * n..(si + 1) * n];
+        let dst = r.row_mut(si);
+        for c in 0..n {
+            dst[c] = src[c] as f64 * scale;
+        }
+    }
+    let v = fkv_factors(&r, rank);
+    LraResult {
+        rank,
+        sampled_rows: s,
+        kde_queries: counters.queries(),
+        kernel_evals: backend.kernel_evals() - evals_before,
+        floats_stored: (s * n) as u64,
+        v,
+    }
+}
+
+/// Materialize the dense kernel matrix (baselines + error evaluation).
+/// NOT part of the KDE algorithm's cost.
+pub fn materialize_kernel_matrix(ds: &Dataset, kernel: Kernel) -> Mat {
+    let n = ds.n;
+    let mut k = Mat::zeros(n, n);
+    for i in 0..n {
+        k[(i, i)] = 1.0;
+        for j in (i + 1)..n {
+            let v = ds.kernel(kernel, i, j) as f64;
+            k[(i, j)] = v;
+            k[(j, i)] = v;
+        }
+    }
+    k
+}
+
+/// §7 "IS" baseline: CountSketch the rows of K (s buckets), take the top-k
+/// right singular directions of the sketch. Requires the full matrix.
+pub fn lra_countsketch(kmat: &Mat, rank: usize, sketch_rows: usize, rng: &mut Rng) -> Mat {
+    let cs = CountSketch::new(sketch_rows, kmat.rows, rng);
+    let sk = cs.sketch(kmat);
+    fkv_factors_from_sketch(&sk, rank)
+}
+
+fn fkv_factors_from_sketch(sk: &Mat, rank: usize) -> Mat {
+    let w = sk.gram_rows();
+    let (vals, vecs) = jacobi_eigen(&w, 100);
+    let n = sk.cols;
+    let k = rank.min(sk.rows);
+    let mut v = Mat::zeros(k, n);
+    for j in 0..k {
+        let lam = vals[j].max(0.0);
+        if lam <= 1e-12 {
+            break;
+        }
+        let scale = 1.0 / lam.sqrt();
+        for i in 0..sk.rows {
+            let q = vecs[(i, j)] * scale;
+            if q == 0.0 {
+                continue;
+            }
+            let row = sk.row(i);
+            let dst = v.row_mut(j);
+            for c in 0..n {
+                dst[c] += q * row[c];
+            }
+        }
+    }
+    v
+}
+
+/// §7 "SVD" baseline: block power iteration directly on K (symmetric), so
+/// the top-k eigenvectors are the optimal rank-k row space.
+pub fn lra_svd(kmat: &Mat, rank: usize, iters: usize, rng: &mut Rng) -> Mat {
+    let (_, vecs) = block_power(kmat, rank, iters, rng);
+    let mut v = Mat::zeros(vecs.len(), kmat.cols);
+    for (j, col) in vecs.iter().enumerate() {
+        v.row_mut(j).copy_from_slice(col);
+    }
+    v
+}
+
+/// `||K - K V^T V||_F^2` evaluated exactly against the dense matrix.
+pub fn lra_error(kmat: &Mat, v: &Mat) -> f64 {
+    // P = K V^T  (n x k), B = P V (n x n) — compute the error without
+    // materializing B: ||K - P V||_F^2 = ||K||_F^2 - 2<K, PV> + ||PV||_F^2.
+    let p = kmat.matmul(&v.transpose()); // n x k
+    // <K, PV> = sum_ij K_ij (PV)_ij = trace(K^T P V) = <K V^T, P>
+    let kv = kmat.matmul(&v.transpose()); // n x k (same as p since K sym)
+    let inner: f64 = kv.data.iter().zip(&p.data).map(|(a, b)| a * b).sum();
+    // ||PV||_F^2 = trace(V^T P^T P V) = ||P (V V^T)^{1/2}||... compute via
+    // G = V V^T (k x k): ||PV||_F^2 = trace(P^T P G)
+    let g = v.gram_rows(); // k x k
+    let ptp = p.transpose().matmul(&p); // k x k
+    let mut pv_norm = 0.0;
+    for i in 0..g.rows {
+        for j in 0..g.cols {
+            pv_norm += ptp[(i, j)] * g[(j, i)];
+        }
+    }
+    (kmat.frob_norm_sq() - 2.0 * inner + pv_norm).max(0.0)
+}
+
+/// Exact best-rank-k error `||K - K_k||_F^2` via full eigendecomposition
+/// (K symmetric PSD): sum of squared eigenvalues below the top k.
+pub fn optimal_error(kmat: &Mat, rank: usize) -> f64 {
+    let (vals, _) = jacobi_eigen(kmat, 100);
+    vals.iter().skip(rank).map(|v| v * v).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Mat, Rng) {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 4, 3, 2.0, 0.4, &mut rng));
+        let kmat = materialize_kernel_matrix(&ds, Kernel::Laplacian);
+        (ds, kmat, rng)
+    }
+
+    #[test]
+    fn lra_error_of_exact_eigenvectors_is_optimal() {
+        let (_, kmat, mut rng) = setup(24, 191);
+        let rank = 3;
+        let v = lra_svd(&kmat, rank, 600, &mut rng);
+        let got = lra_error(&kmat, &v);
+        let opt = optimal_error(&kmat, rank);
+        assert!(
+            got <= opt * 1.05 + 1e-9,
+            "block-power error {got} vs optimal {opt}"
+        );
+    }
+
+    #[test]
+    fn kde_lra_additive_error_bound() {
+        // Corollary 5.14: err <= opt + eps ||K||_F^2 for modest eps.
+        let (ds, kmat, mut rng) = setup(48, 193);
+        let rank = 4;
+        let r = lra_kde(
+            &ds,
+            Kernel::Laplacian,
+            rank,
+            12,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            &mut rng,
+        );
+        let err = lra_error(&kmat, &r.v);
+        let opt = optimal_error(&kmat, rank);
+        let frob = kmat.frob_norm_sq();
+        assert!(
+            err <= opt + 0.15 * frob,
+            "err {err} > opt {opt} + 0.15 * {frob}"
+        );
+        assert_eq!(r.kde_queries, 48, "n KDE queries (Cor 5.14)");
+        assert_eq!(r.sampled_rows, 48.min(12 * rank));
+    }
+
+    #[test]
+    fn kde_lra_uses_fewer_evals_than_materialization() {
+        // With the sampling oracle, algorithm kernel evals are
+        // n * sample_size + s * n = o(n^2) once n >> 1/(tau eps^2).
+        let mut rng = Rng::new(195);
+        let ds = Arc::new(gaussian_mixture(256, 4, 3, 2.0, 0.4, &mut rng));
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.5, tau: 0.3 },
+            leaf_cutoff: 8,
+            seed: 7,
+        };
+        let be = CpuBackend::new();
+        let r = lra_kde(&ds, Kernel::Laplacian, 2, 8, &cfg, be, &mut rng);
+        assert!(
+            r.kernel_evals < (256 * 256 / 2) as u64,
+            "sampled-oracle evals {} should be sub-quadratic (n^2 = {})",
+            r.kernel_evals,
+            256 * 256
+        );
+    }
+
+    #[test]
+    fn countsketch_baseline_reasonable() {
+        let (_, kmat, mut rng) = setup(32, 197);
+        let rank = 3;
+        let v = lra_countsketch(&kmat, rank, 4 * rank + 8, &mut rng);
+        let err = lra_error(&kmat, &v);
+        let opt = optimal_error(&kmat, rank);
+        let frob = kmat.frob_norm_sq();
+        assert!(err <= opt + 0.3 * frob, "IS err {err}, opt {opt}, frob {frob}");
+    }
+
+    #[test]
+    fn lra_error_decreases_with_rank() {
+        let (ds, kmat, mut rng) = setup(40, 199);
+        let mut last = f64::INFINITY;
+        for rank in [1usize, 3, 6] {
+            let r = lra_kde(
+                &ds,
+                Kernel::Laplacian,
+                rank,
+                15,
+                &KdeConfig::exact(),
+                CpuBackend::new(),
+                &mut rng,
+            );
+            let err = lra_error(&kmat, &r.v);
+            assert!(
+                err <= last * 1.05 + 1e-9,
+                "rank {rank}: error {err} should not exceed previous {last}"
+            );
+            last = err;
+        }
+    }
+}

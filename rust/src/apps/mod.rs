@@ -1,0 +1,14 @@
+//! The paper's applications (§5 linear algebra, §6 graphs), each built
+//! strictly on the §4 primitives + KDE black box, with exact baselines for
+//! every experiment.
+
+pub mod arboricity;
+pub mod cluster_local;
+pub mod cluster_spectral;
+pub mod eigen_top;
+pub mod lra;
+pub mod resparsify;
+pub mod solver;
+pub mod sparsify;
+pub mod spectrum;
+pub mod triangles;

@@ -1,0 +1,202 @@
+//! Second-stage resparsification (§5.1, final step): reduce the Alg 5.1
+//! sparsifier from O(n log n / (eps^2 tau^3)) edges to O(n log n / eps^2)
+//! edges by *effective-resistance* sampling on the already-sparse graph.
+//!
+//! The paper invokes Lee-Sun [LS18] here; we implement the classical
+//! Spielman-Srivastava scheme (the same contract, simpler machinery —
+//! DESIGN.md §3): approximate all effective resistances at once via
+//! Johnson-Lindenstrauss sketches of `W^{1/2} B L^+`, each sketch row
+//! obtained from one Laplacian CG solve, then sample edges proportional
+//! to `w_e * R_e` (their leverage scores).
+
+use crate::graph::{LaplacianOp, WGraph};
+use crate::linalg::cg::cg;
+use crate::sampling::vertex::PrefixSampler;
+use crate::util::rng::Rng;
+
+/// Approximate effective resistances of every edge of `g` via `k`
+/// JL projections (k ~ O(log n) for (1±eps) estimates w.h.p.).
+pub fn effective_resistances(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<f64> {
+    let n = g.n;
+    let m = g.edges.len();
+    // Z has k rows; row i = L^+ (B^T W^{1/2} q_i) with q_i in {±1/sqrt(k)}^m.
+    let mut z_rows: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let scale = 1.0 / (k as f64).sqrt();
+    for _ in 0..k {
+        // y = B^T W^{1/2} q: accumulate ±sqrt(w_e)/sqrt(k) at the endpoints.
+        let mut y = vec![0.0f64; n];
+        for &(u, v, w) in &g.edges {
+            let s = if rng.bernoulli(0.5) { scale } else { -scale } * w.sqrt();
+            y[u as usize] += s;
+            y[v as usize] -= s;
+        }
+        // project out the ones component (consistency) and solve L z = y.
+        let mean = y.iter().sum::<f64>() / n as f64;
+        for t in y.iter_mut() {
+            *t -= mean;
+        }
+        let diag = g.degrees();
+        let res = cg(&LaplacianOp(g), &y, Some(&diag), true, 1e-8, 4 * n);
+        z_rows.push(res.x);
+    }
+    // R_e ~ sum_i (z_i[u] - z_i[v])^2
+    let mut r = Vec::with_capacity(m);
+    for &(u, v, _) in &g.edges {
+        let mut acc = 0.0;
+        for zi in &z_rows {
+            let d = zi[u as usize] - zi[v as usize];
+            acc += d * d;
+        }
+        r.push(acc);
+    }
+    r
+}
+
+/// Exact effective resistance between two nodes (single CG solve; test
+/// oracle).
+pub fn exact_effective_resistance(g: &WGraph, u: usize, v: usize) -> f64 {
+    let n = g.n;
+    let mut b = vec![0.0f64; n];
+    b[u] = 1.0;
+    b[v] -= 1.0;
+    let diag = g.degrees();
+    let res = cg(&LaplacianOp(g), &b, Some(&diag), true, 1e-10, 8 * n);
+    res.x[u] - res.x[v]
+}
+
+/// Spielman-Srivastava resparsification: sample `t` edges proportional to
+/// `w_e R_e`, reweighted `w_e / (t p_e)`.
+pub fn resparsify(g: &WGraph, t: usize, jl_dims: usize, rng: &mut Rng) -> WGraph {
+    if g.edges.is_empty() {
+        return g.clone();
+    }
+    let r = effective_resistances(g, jl_dims, rng);
+    let scores: Vec<f64> = g
+        .edges
+        .iter()
+        .zip(&r)
+        .map(|(&(_, _, w), &re)| (w * re).max(1e-15))
+        .collect();
+    let sampler = PrefixSampler::new(&scores);
+    let mut raw = Vec::with_capacity(t);
+    for _ in 0..t {
+        let e = sampler.sample(rng);
+        let p = sampler.prob(e);
+        let (u, v, w) = g.edges[e];
+        raw.push((u as usize, v as usize, w / (t as f64 * p)));
+    }
+    WGraph::from_edges(g.n, raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> WGraph {
+        WGraph::from_edges(n, (0..n - 1).map(|i| (i, i + 1, 1.0)))
+    }
+
+    #[test]
+    fn exact_resistance_on_path() {
+        // Unit path: R(0, k) = k.
+        let g = path_graph(6);
+        for k in 1..6 {
+            let r = exact_effective_resistance(&g, 0, k);
+            assert!((r - k as f64).abs() < 1e-6, "R(0,{k}) = {r}");
+        }
+    }
+
+    #[test]
+    fn exact_resistance_parallel_edges() {
+        // Two nodes joined by weight-2 edge: R = 1/2.
+        let g = WGraph::from_edges(2, vec![(0, 1, 2.0)]);
+        let r = exact_effective_resistance(&g, 0, 1);
+        assert!((r - 0.5).abs() < 1e-8, "R = {r}");
+    }
+
+    #[test]
+    fn jl_resistances_match_exact() {
+        let mut rng = Rng::new(1201);
+        // Random-ish connected graph.
+        let mut edges = vec![];
+        for i in 0..19usize {
+            edges.push((i, i + 1, 0.5 + rng.f64()));
+        }
+        for _ in 0..30 {
+            let u = rng.below(20);
+            let v = rng.below(20);
+            if u != v {
+                edges.push((u, v, 0.2 + rng.f64()));
+            }
+        }
+        let g = WGraph::from_edges(20, edges);
+        let approx = effective_resistances(&g, 60, &mut rng);
+        for (idx, &(u, v, _)) in g.edges.iter().enumerate() {
+            let want = exact_effective_resistance(&g, u as usize, v as usize);
+            let got = approx[idx];
+            assert!(
+                (got - want).abs() < 0.45 * want + 1e-6,
+                "edge ({u},{v}): JL {got} vs exact {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn resparsify_preserves_quadratic_forms() {
+        let mut rng = Rng::new(1203);
+        // Dense-ish weighted graph -> resparsify to ~40% of edges.
+        let mut edges = vec![];
+        let n = 48usize;
+        for u in 0..n {
+            for v in (u + 1)..n {
+                if rng.bernoulli(0.5) {
+                    edges.push((u, v, 0.3 + rng.f64()));
+                }
+            }
+        }
+        let g = WGraph::from_edges(n, edges);
+        let m0 = g.num_edges();
+        let h = resparsify(&g, 4 * n * (n as f64).ln() as usize / 2, 24, &mut rng);
+        // spot-check Laplacian quadratic forms
+        let mut worst = 0.0f64;
+        for _ in 0..15 {
+            let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let mean = x.iter().sum::<f64>() / n as f64;
+            for v in x.iter_mut() {
+                *v -= mean;
+            }
+            let a = g.laplacian_quadratic(&x);
+            let b = h.laplacian_quadratic(&x);
+            worst = worst.max((b / a - 1.0).abs());
+        }
+        assert!(worst < 0.5, "resparsified quadratic-form error {worst}");
+        assert!(h.num_edges() <= m0, "must not densify");
+    }
+
+    #[test]
+    fn two_stage_pipeline_from_kernel_graph() {
+        // Alg 5.1 sparsifier -> SS resparsifier, checking the §5.1 claim
+        // that the second stage reduces edges further at small extra error.
+        let mut rng = Rng::new(1205);
+        let ds = std::sync::Arc::new(crate::kernel::dataset::gaussian_mixture(
+            40, 3, 2, 0.8, 0.5, &mut rng,
+        ));
+        let prims = crate::sampling::Primitives::build(
+            ds.clone(),
+            crate::kernel::Kernel::Laplacian,
+            &crate::kde::KdeConfig::exact(),
+            crate::runtime::backend::CpuBackend::new(),
+        );
+        let stage1 = crate::apps::sparsify::sparsify(&prims, 8_000, &mut rng);
+        let stage2 = resparsify(&stage1.graph, 1_200, 24, &mut rng);
+        assert!(stage2.num_edges() < stage1.graph.num_edges());
+        let err = crate::apps::sparsify::spectral_error(
+            &ds,
+            crate::kernel::Kernel::Laplacian,
+            &stage2,
+            15,
+            &mut rng,
+        );
+        assert!(err < 0.6, "two-stage spectral error {err}");
+    }
+}

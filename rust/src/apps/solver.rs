@@ -1,0 +1,97 @@
+//! Approximate Laplacian system solving on the sparsifier: §5.1.1.
+//!
+//! Theorem 5.11: if `G'` is an eps-sparsifier of `G`, then solving
+//! `L_{G'} x = b` (to machine precision, here via preconditioned CG —
+//! the Theorem 5.10 solver role) gives `||x - L_G^+ b||_{L_G} <=
+//! O(sqrt(eps)) ||L_G^+ b||_{L_G}`.
+
+use crate::graph::{LaplacianOp, WGraph};
+use crate::linalg::cg::{cg, CgResult};
+
+/// Solve `L_G' x = b` on the (sparse) graph via Jacobi-preconditioned CG,
+/// projecting against the all-ones null space. `b` must satisfy
+/// `1^T b = 0` for consistency; we project it defensively.
+pub fn solve_laplacian(g: &WGraph, b: &[f64], tol: f64, max_iters: usize) -> CgResult {
+    assert_eq!(b.len(), g.n);
+    let mut rhs = b.to_vec();
+    let mean = rhs.iter().sum::<f64>() / g.n as f64;
+    for v in rhs.iter_mut() {
+        *v -= mean;
+    }
+    let diag = g.degrees();
+    cg(&LaplacianOp(g), &rhs, Some(&diag), true, tol, max_iters)
+}
+
+/// `||x||_L = sqrt(x^T L x)` — the error norm of Theorems 5.10/5.11.
+pub fn l_norm(g: &WGraph, x: &[f64]) -> f64 {
+    g.laplacian_quadratic(x).max(0.0).sqrt()
+}
+
+/// End-to-end §5.1.1 quality metric: relative `L_G`-norm error of the
+/// sparsifier solve against the exact solve on `G`.
+pub fn solve_error_vs_exact(g_exact: &WGraph, g_sparse: &WGraph, b: &[f64]) -> f64 {
+    let x_exact = solve_laplacian(g_exact, b, 1e-10, 10_000).x;
+    let x_sparse = solve_laplacian(g_sparse, b, 1e-10, 10_000).x;
+    let diff: Vec<f64> = x_exact
+        .iter()
+        .zip(&x_sparse)
+        .map(|(a, b)| a - b)
+        .collect();
+    l_norm(g_exact, &diff) / l_norm(g_exact, &x_exact).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::util::rng::Rng;
+
+    fn mean_zero_vec(n: usize, rng: &mut Rng) -> Vec<f64> {
+        let mut b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let m = b.iter().sum::<f64>() / n as f64;
+        for v in b.iter_mut() {
+            *v -= m;
+        }
+        b
+    }
+
+    #[test]
+    fn solve_exact_laplacian_residual() {
+        let mut rng = Rng::new(181);
+        let ds = gaussian_mixture(24, 3, 2, 1.0, 0.5, &mut rng);
+        let g = crate::graph::WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+        let b = mean_zero_vec(24, &mut rng);
+        let res = solve_laplacian(&g, &b, 1e-10, 2_000);
+        assert!(res.converged, "CG residual {}", res.residual);
+        let mut lx = vec![0.0; 24];
+        g.laplacian_matvec(&res.x, &mut lx);
+        for i in 0..24 {
+            assert!((lx[i] - b[i]).abs() < 1e-6, "L x != b at {i}");
+        }
+    }
+
+    #[test]
+    fn sparsifier_solve_close_to_exact_solve() {
+        // Theorem 5.11 behaviour: error decays with sparsifier quality.
+        let mut rng = Rng::new(183);
+        let ds = std::sync::Arc::new(gaussian_mixture(32, 3, 2, 0.8, 0.5, &mut rng));
+        let g = crate::graph::WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+        let prims = crate::sampling::Primitives::build(
+            ds,
+            Kernel::Laplacian,
+            &crate::kde::KdeConfig::exact(),
+            crate::runtime::backend::CpuBackend::new(),
+        );
+        let b = mean_zero_vec(32, &mut rng);
+        let coarse = crate::apps::sparsify::sparsify(&prims, 800, &mut rng);
+        let fine = crate::apps::sparsify::sparsify(&prims, 12_000, &mut rng);
+        let e_coarse = solve_error_vs_exact(&g, &coarse.graph, &b);
+        let e_fine = solve_error_vs_exact(&g, &fine.graph, &b);
+        assert!(e_fine < 0.25, "fine sparsifier solve error {e_fine}");
+        assert!(
+            e_fine < e_coarse + 0.05,
+            "error should not grow with more samples: {e_fine} vs {e_coarse}"
+        );
+    }
+}

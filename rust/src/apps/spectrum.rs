@@ -1,0 +1,300 @@
+//! Approximating the normalized-Laplacian spectrum in earth-mover
+//! distance: Theorem 5.17, via the CKSV18 ApproxSpectralMoment scheme on
+//! top of the random-walk primitive (Theorem 4.15).
+//!
+//! Pipeline:
+//! 1. Spectral moments `m_l = tr(M^l)/n` of the random-walk matrix
+//!    `M = A D^{-1}` are estimated by **walk collisions**: two independent
+//!    walks of lengths `floor(l/2)` and `ceil(l/2)` from a uniform vertex
+//!    `u` collide at `v` with probability `sum_v p_a(u,v) p_b(u,v)`;
+//!    weighting a collision by `d_u/d_v` (reversibility) makes the
+//!    estimator unbiased for `p_l(u, u)`.
+//! 2. The eigenvalue distribution of M (support [-1, 1]) is recovered by
+//!    moment matching on a grid: projected-gradient descent over the
+//!    probability simplex minimizing the squared moment residuals.
+//! 3. Normalized-Laplacian eigenvalues are `lambda = 1 - mu`.
+
+use crate::sampling::Primitives;
+use crate::util::rng::Rng;
+
+pub struct SpectrumResult {
+    /// n recovered eigenvalues of the normalized Laplacian, in [0, 2].
+    pub eigenvalues: Vec<f64>,
+    /// Estimated moments of the walk-matrix spectrum (index = length l).
+    pub moments: Vec<f64>,
+    pub kde_queries: u64,
+    pub walks: u64,
+}
+
+/// Parameters for the spectrum estimator.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectrumParams {
+    /// Maximum moment order L (walk length).
+    pub max_moment: usize,
+    /// Vertices sampled per moment.
+    pub vertices: usize,
+    /// Walk pairs per sampled vertex.
+    pub reps: usize,
+    /// Moment-matching grid size over [-1, 1].
+    pub grid: usize,
+    /// Projected-gradient iterations.
+    pub pg_iters: usize,
+}
+
+impl Default for SpectrumParams {
+    fn default() -> Self {
+        SpectrumParams { max_moment: 8, vertices: 24, reps: 200, grid: 81, pg_iters: 4_000 }
+    }
+}
+
+/// Euclidean projection onto the probability simplex (sort-based).
+pub fn project_simplex(v: &mut [f64]) {
+    let n = v.len();
+    let mut u = v.to_vec();
+    u.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut css = 0.0;
+    let mut rho = 0;
+    let mut theta = 0.0;
+    for (i, &ui) in u.iter().enumerate() {
+        css += ui;
+        let t = (css - 1.0) / (i + 1) as f64;
+        if ui - t > 0.0 {
+            rho = i;
+            theta = t;
+        }
+    }
+    let _ = rho;
+    for x in v.iter_mut() {
+        *x = (*x - theta).max(0.0);
+    }
+    let s: f64 = v.iter().sum();
+    if s > 0.0 {
+        for x in v.iter_mut() {
+            *x /= s;
+        }
+    } else {
+        let uniform = 1.0 / n as f64;
+        for x in v.iter_mut() {
+            *x = uniform;
+        }
+    }
+}
+
+/// Estimate walk-matrix moments m_1..m_L by collision walks.
+pub fn estimate_moments(
+    prims: &Primitives,
+    params: &SpectrumParams,
+    rng: &mut Rng,
+) -> (Vec<f64>, u64) {
+    let n = prims.n();
+    let degrees = &prims.degrees.degrees;
+    let mut moments = vec![0.0f64; params.max_moment + 1];
+    moments[0] = 1.0;
+    let mut walks = 0u64;
+    for l in 1..=params.max_moment {
+        let a = l / 2;
+        let b = l - a;
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for _ in 0..params.vertices {
+            let u = rng.below(n);
+            for _ in 0..params.reps {
+                let v1 = prims.walker.walk(u, a, rng);
+                let v2 = prims.walker.walk(u, b, rng);
+                walks += 2;
+                if v1 == v2 {
+                    acc += degrees[u] / degrees[v1].max(1e-300);
+                }
+                count += 1;
+            }
+        }
+        moments[l] = acc / count as f64;
+    }
+    (moments, walks)
+}
+
+/// Recover a distribution over grid points in [-1, 1] matching the
+/// moments, by exponentiated-gradient (mirror) descent on the simplex —
+/// more stable than Euclidean projected gradient for this geometry.
+pub fn match_moments(moments: &[f64], grid: usize, iters: usize) -> (Vec<f64>, Vec<f64>) {
+    let g = grid;
+    let mus: Vec<f64> = (0..g)
+        .map(|i| -1.0 + 2.0 * i as f64 / (g - 1) as f64)
+        .collect();
+    // powers[l][i] = mus[i]^l
+    let lmax = moments.len() - 1;
+    let mut powers = vec![vec![1.0f64; g]; lmax + 1];
+    for l in 1..=lmax {
+        for i in 0..g {
+            powers[l][i] = powers[l - 1][i] * mus[i];
+        }
+    }
+    let mut w = vec![1.0 / g as f64; g];
+    let eta = 0.2;
+    for _ in 0..iters {
+        // residuals r_l = sum_i w_i mu_i^l - m_l  (skip l = 0: simplex)
+        let mut grad = vec![0.0f64; g];
+        for l in 1..=lmax {
+            let pred: f64 = (0..g).map(|i| w[i] * powers[l][i]).sum();
+            let r = pred - moments[l];
+            for i in 0..g {
+                grad[i] += 2.0 * r * powers[l][i];
+            }
+        }
+        let mut total = 0.0;
+        for i in 0..g {
+            w[i] *= (-eta * grad[i]).exp();
+            total += w[i];
+        }
+        if total > 0.0 && total.is_finite() {
+            for x in w.iter_mut() {
+                *x /= total;
+            }
+        } else {
+            for x in w.iter_mut() {
+                *x = 1.0 / g as f64;
+            }
+        }
+    }
+    (mus, w)
+}
+
+/// Full Theorem 5.17 pipeline.
+pub fn approximate_spectrum(
+    prims: &Primitives,
+    params: &SpectrumParams,
+    rng: &mut Rng,
+) -> SpectrumResult {
+    let queries_before = prims.counters.queries();
+    let (moments, walks) = estimate_moments(prims, params, rng);
+    let (mus, w) = match_moments(&moments, params.grid, params.pg_iters);
+    // Expand the grid distribution into n eigenvalues lambda = 1 - mu.
+    let n = prims.n();
+    let mut eigenvalues = Vec::with_capacity(n);
+    // Largest-remainder apportionment of n points across grid weights.
+    let mut alloc: Vec<(usize, f64)> = w
+        .iter()
+        .enumerate()
+        .map(|(i, &wi)| (i, wi * n as f64))
+        .collect();
+    let mut counts: Vec<usize> = alloc.iter().map(|&(_, x)| x.floor() as usize).collect();
+    let assigned: usize = counts.iter().sum();
+    alloc.sort_by(|a, b| {
+        (b.1 - b.1.floor())
+            .partial_cmp(&(a.1 - a.1.floor()))
+            .unwrap()
+    });
+    for &(i, _) in alloc.iter().take(n - assigned) {
+        counts[i] += 1;
+    }
+    for (i, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            eigenvalues.push(1.0 - mus[i]);
+        }
+    }
+    eigenvalues.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    SpectrumResult {
+        eigenvalues,
+        moments,
+        kde_queries: prims.counters.queries() - queries_before,
+        walks,
+    }
+}
+
+/// Exact normalized-Laplacian eigenvalues (O(n^3) Jacobi; baseline).
+pub fn exact_spectrum(ds: &crate::kernel::Dataset, kernel: crate::kernel::Kernel) -> Vec<f64> {
+    let g = crate::graph::WGraph::complete_kernel_graph(ds, kernel);
+    let nl = g.normalized_laplacian_dense();
+    let (mut vals, _) = crate::linalg::jacobi_eigen(&nl, 100);
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kde::KdeConfig;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::stats::emd_1d;
+    use std::sync::Arc;
+
+    #[test]
+    fn simplex_projection_properties() {
+        let mut v = vec![0.5, 2.0, -1.0, 0.3];
+        project_simplex(&mut v);
+        let s: f64 = v.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(v.iter().all(|&x| x >= 0.0));
+        // already-simplex input is a fixed point
+        let mut p = vec![0.25, 0.25, 0.25, 0.25];
+        project_simplex(&mut p);
+        for x in &p {
+            assert!((x - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn moment_matching_recovers_point_mass() {
+        // Distribution concentrated at mu = 0.5: moments m_l = 0.5^l.
+        let moments: Vec<f64> = (0..=8).map(|l| 0.5f64.powi(l)).collect();
+        let (mus, w) = match_moments(&moments, 81, 6_000);
+        let mean: f64 = mus.iter().zip(&w).map(|(m, wi)| m * wi).sum();
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        // Mass concentrated near 0.5.
+        let near: f64 = mus
+            .iter()
+            .zip(&w)
+            .filter(|(m, _)| (**m - 0.5).abs() < 0.15)
+            .map(|(_, wi)| wi)
+            .sum();
+        assert!(near > 0.7, "mass near point {near}");
+    }
+
+    #[test]
+    fn estimated_moments_match_exact_trace() {
+        let mut rng = Rng::new(211);
+        let ds = Arc::new(gaussian_mixture(48, 3, 2, 1.0, 0.5, &mut rng));
+        let prims = Primitives::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        let params = SpectrumParams { max_moment: 4, vertices: 48, reps: 400, ..Default::default() };
+        let (moments, _) = estimate_moments(&prims, &params, &mut rng);
+        // exact tr(M^l)/n via dense eigenvalues of the normalized Laplacian
+        let exact = exact_spectrum(&ds, Kernel::Laplacian);
+        for l in 2..=4 {
+            let want: f64 =
+                exact.iter().map(|&lam| (1.0 - lam).powi(l as i32)).sum::<f64>() / 48.0;
+            let got = moments[l];
+            assert!(
+                (got - want).abs() < 0.05 + 0.3 * want.abs(),
+                "moment {l}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn spectrum_emd_small() {
+        let mut rng = Rng::new(213);
+        let ds = Arc::new(gaussian_mixture(64, 3, 2, 1.2, 0.5, &mut rng));
+        let prims = Primitives::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        let params = SpectrumParams { vertices: 32, reps: 300, ..Default::default() };
+        let got = approximate_spectrum(&prims, &params, &mut rng);
+        let want = exact_spectrum(&ds, Kernel::Laplacian);
+        assert_eq!(got.eigenvalues.len(), 64);
+        let emd = emd_1d(&got.eigenvalues, &want);
+        assert!(emd < 0.2, "EMD {emd} (Theorem 5.17 target eps)");
+        for &l in &got.eigenvalues {
+            assert!((-1e-9..=2.0 + 1e-9).contains(&l));
+        }
+    }
+}

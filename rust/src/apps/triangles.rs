@@ -1,0 +1,151 @@
+//! Total weight of triangles (weight = product of edge weights):
+//! Theorem 6.17, adapting ELRS17 to the kernel-graph query model.
+//!
+//! Every pair is an edge of the complete kernel graph, so a uniform edge
+//! is a uniform pair. Each triangle (a, b, c) is assigned to its edge
+//! (a, b) where `a ≺ b ≺ c` under the degree ordering (ties by index).
+//! For a sampled pair e = (a, b) with `a ≺ b`, the assigned weight
+//!
+//! ```text
+//! W_e = sum_{c: b ≺ c} k(a,c) k(b,c) k(a,b)
+//! ```
+//!
+//! is estimated by weighted-neighbor sampling from `a`:
+//! draw `c ~ k(a, ·)/deg(a)`, return `deg(a) · 1{b ≺ c} · k(b,c) k(a,b)`
+//! — unbiased by construction. The total is `C(n,2)/|R| * sum_e Ŵ_e`.
+
+use crate::sampling::Primitives;
+use crate::util::rng::Rng;
+
+pub struct TriangleResult {
+    pub estimate: f64,
+    pub kde_queries: u64,
+    pub kernel_evals: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TriangleParams {
+    /// Number of uniformly sampled edges |R|.
+    pub edge_pool: usize,
+    /// Neighbor samples per pooled edge.
+    pub reps: usize,
+}
+
+impl Default for TriangleParams {
+    fn default() -> Self {
+        TriangleParams { edge_pool: 256, reps: 16 }
+    }
+}
+
+/// Degree ordering `a ≺ b` (ties broken by index) per §6.4.
+fn precedes(deg: &[f64], a: usize, b: usize) -> bool {
+    (deg[a], a) < (deg[b], b)
+}
+
+/// Theorem 6.17 estimator.
+pub fn triangle_weight_estimate(
+    prims: &Primitives,
+    params: &TriangleParams,
+    rng: &mut Rng,
+) -> TriangleResult {
+    let ds = &prims.tree.ds;
+    let kernel = prims.tree.kernel;
+    let n = ds.n;
+    let deg = &prims.degrees.degrees;
+    let before = prims.counters.queries();
+    let mut kernel_evals = 0u64;
+    let mut acc = 0.0f64;
+    for _ in 0..params.edge_pool {
+        // uniform pair (u, v), u != v; order so a ≺ b.
+        let u = rng.below(n);
+        let mut v = rng.below(n);
+        while v == u {
+            v = rng.below(n);
+        }
+        let (a, b) = if precedes(deg, u, v) { (u, v) } else { (v, u) };
+        let k_ab = kernel.eval(ds.point(a), ds.point(b)) as f64;
+        kernel_evals += 1;
+        let mut w_e = 0.0;
+        for _ in 0..params.reps {
+            let Some(s) = prims.neighbors.sample(a, rng) else { continue };
+            let c = s.neighbor;
+            if c != b && precedes(deg, b, c) {
+                let k_bc = kernel.eval(ds.point(b), ds.point(c)) as f64;
+                kernel_evals += 1;
+                w_e += deg[a] * k_bc * k_ab;
+            }
+        }
+        acc += w_e / params.reps as f64;
+    }
+    let num_pairs = (n * (n - 1) / 2) as f64;
+    TriangleResult {
+        estimate: acc / params.edge_pool as f64 * num_pairs,
+        kde_queries: prims.counters.queries() - before,
+        kernel_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::WGraph;
+    use crate::kde::KdeConfig;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+    use std::sync::Arc;
+
+    fn setup(n: usize, seed: u64) -> (Arc<crate::kernel::Dataset>, Primitives, Rng) {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 3, 2, 1.0, 0.5, &mut rng));
+        let prims = Primitives::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        (ds, prims, rng)
+    }
+
+    #[test]
+    fn estimate_matches_exact_total() {
+        let (ds, prims, mut rng) = setup(32, 251);
+        let g = WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+        let exact = g.exact_triangle_weight();
+        let params = TriangleParams { edge_pool: 496, reps: 64 };
+        let est = triangle_weight_estimate(&prims, &params, &mut rng);
+        let rel = (est.estimate - exact).abs() / exact;
+        assert!(
+            rel < 0.15,
+            "triangle est {} vs exact {exact} (rel {rel})",
+            est.estimate
+        );
+    }
+
+    #[test]
+    fn estimator_is_unbiased_over_runs() {
+        let (ds, prims, mut rng) = setup(20, 253);
+        let g = WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+        let exact = g.exact_triangle_weight();
+        let params = TriangleParams { edge_pool: 64, reps: 8 };
+        let runs = 40;
+        let mut acc = 0.0;
+        for _ in 0..runs {
+            acc += triangle_weight_estimate(&prims, &params, &mut rng).estimate;
+        }
+        let mean = acc / runs as f64;
+        assert!(
+            (mean - exact).abs() < 0.08 * exact,
+            "mean {mean} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn cost_independent_of_n_given_pool() {
+        let (_, prims, mut rng) = setup(64, 255);
+        let params = TriangleParams { edge_pool: 32, reps: 4 };
+        let est = triangle_weight_estimate(&prims, &params, &mut rng);
+        // kernel evals <= pool * (1 + reps)
+        assert!(est.kernel_evals <= 32 * 5, "evals {}", est.kernel_evals);
+    }
+}

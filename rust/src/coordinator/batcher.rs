@@ -1,0 +1,407 @@
+//! Dynamic batcher + worker pool for KDE queries.
+//!
+//! One router thread drains the ingress queue, groups requests per shard,
+//! and flushes a batch when it reaches `max_batch` or when the oldest
+//! request exceeds `max_wait`. Worker threads execute batches against the
+//! shared `KernelBackend` (one `sums` call per batch — the AOT artifact's
+//! native shape) and deliver results to per-request response channels.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::kernel::{Dataset, Kernel};
+use crate::runtime::backend::KernelBackend;
+
+/// A registered shard: one dataset (or dataset slice) served under an id.
+struct Shard {
+    kernel: Kernel,
+    data: Arc<Dataset>,
+}
+
+/// One KDE query in flight.
+pub struct QueryRequest {
+    pub shard: usize,
+    pub point: Vec<f32>,
+    pub respond: SyncSender<f64>,
+    pub enqueued_at: Instant,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub workers: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64, // = AOT_B
+            max_wait: Duration::from_micros(500),
+            workers: 2,
+        }
+    }
+}
+
+enum Control {
+    Request(QueryRequest),
+    Shutdown,
+}
+
+/// Handle to a running KDE query service.
+pub struct KdeService {
+    ingress: Sender<Control>,
+    router: Option<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<ServiceMetrics>,
+    shards_len: usize,
+}
+
+impl KdeService {
+    /// Spawn the router + workers over the given shards.
+    pub fn start(
+        shards: Vec<(Kernel, Arc<Dataset>)>,
+        backend: Arc<dyn KernelBackend>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        assert!(!shards.is_empty());
+        let metrics = Arc::new(ServiceMetrics::new());
+        let shards: Vec<Shard> = shards
+            .into_iter()
+            .map(|(kernel, data)| Shard { kernel, data })
+            .collect();
+        let shards_len = shards.len();
+        let (tx, rx) = mpsc::channel::<Control>();
+        let m = metrics.clone();
+        let router = std::thread::spawn(move || {
+            run_router(rx, shards, backend, cfg, m);
+        });
+        KdeService { ingress: tx, router: Some(router), metrics, shards_len }
+    }
+
+    /// Async submit: returns a receiver for the answer.
+    pub fn submit(&self, shard: usize, point: Vec<f32>) -> Receiver<f64> {
+        assert!(shard < self.shards_len, "unknown shard {shard}");
+        let (tx, rx) = mpsc::sync_channel(1);
+        self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
+        self.ingress
+            .send(Control::Request(QueryRequest {
+                shard,
+                point,
+                respond: tx,
+                enqueued_at: Instant::now(),
+            }))
+            .expect("service stopped");
+        rx
+    }
+
+    /// Blocking query.
+    pub fn query(&self, shard: usize, point: Vec<f32>) -> f64 {
+        self.submit(shard, point).recv().expect("service dropped request")
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.ingress.send(Control::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for KdeService {
+    fn drop(&mut self) {
+        let _ = self.ingress.send(Control::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_router(
+    rx: Receiver<Control>,
+    shards: Vec<Shard>,
+    backend: Arc<dyn KernelBackend>,
+    cfg: BatcherConfig,
+    metrics: Arc<ServiceMetrics>,
+) {
+    let shards = Arc::new(shards);
+    // Worker pool: batches travel over a crossbeam-free mpsc + mutex'd rx.
+    let (batch_tx, batch_rx) = mpsc::channel::<Vec<QueryRequest>>();
+    let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for _ in 0..cfg.workers.max(1) {
+        let rx = batch_rx.clone();
+        let be = backend.clone();
+        let sh = shards.clone();
+        let m = metrics.clone();
+        let stop_flag = stop.clone();
+        workers.push(std::thread::spawn(move || loop {
+            let batch = {
+                let guard = rx.lock().unwrap();
+                match guard.recv_timeout(Duration::from_millis(20)) {
+                    Ok(b) => b,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        if stop_flag.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        continue;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                }
+            };
+            execute_batch(batch, &sh, be.as_ref(), &m);
+        }));
+    }
+
+    // Pending per-shard queues. `pending_since[s]` is when the oldest
+    // *currently pending* request entered the pending queue (NOT its
+    // client enqueue time: while workers are busy, requests age in the
+    // ingress channel, and flushing on client-side age would degrade every
+    // flush to a single-request batch under backlog — the bug the
+    // `batching actually batches` tests pin down).
+    let mut pending: Vec<Vec<QueryRequest>> = (0..shards.len()).map(|_| Vec::new()).collect();
+    let mut pending_since: Vec<Option<Instant>> = vec![None; shards.len()];
+    let mut running = true;
+    while running {
+        // Wait for at least one request (or shutdown), with a deadline if
+        // something is pending.
+        let timeout = if pending.iter().any(|q| !q.is_empty()) {
+            cfg.max_wait
+        } else {
+            Duration::from_millis(50)
+        };
+        let mut absorb = |ctl: Control,
+                          pending: &mut Vec<Vec<QueryRequest>>,
+                          pending_since: &mut Vec<Option<Instant>>,
+                          running: &mut bool| {
+            match ctl {
+                Control::Request(req) => {
+                    let s = req.shard;
+                    if pending_since[s].is_none() {
+                        pending_since[s] = Some(Instant::now());
+                    }
+                    pending[s].push(req);
+                }
+                Control::Shutdown => *running = false,
+            }
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(ctl) => absorb(ctl, &mut pending, &mut pending_since, &mut running),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+        }
+        // Greedily drain everything already waiting in the ingress channel
+        // so a backlog becomes one large batch, not many singletons.
+        while let Ok(ctl) = rx.try_recv() {
+            absorb(ctl, &mut pending, &mut pending_since, &mut running);
+        }
+        // Flush policy: size or pending-age.
+        for s in 0..pending.len() {
+            let flush = pending[s].len() >= cfg.max_batch
+                || (!pending[s].is_empty()
+                    && pending_since[s]
+                        .map(|t| t.elapsed() >= cfg.max_wait)
+                        .unwrap_or(false));
+            if flush {
+                let take = pending[s].len().min(cfg.max_batch);
+                let batch: Vec<QueryRequest> = pending[s].drain(..take).collect();
+                pending_since[s] = if pending[s].is_empty() {
+                    None
+                } else {
+                    Some(Instant::now())
+                };
+                metrics.record_batch(batch.len());
+                let _ = batch_tx.send(batch);
+            }
+        }
+    }
+    // Drain everything left, then stop workers.
+    for s in 0..pending.len() {
+        while !pending[s].is_empty() {
+            let take = pending[s].len().min(cfg.max_batch);
+            let batch: Vec<QueryRequest> = pending[s].drain(..take).collect();
+            metrics.record_batch(batch.len());
+            let _ = batch_tx.send(batch);
+        }
+    }
+    drop(batch_tx);
+    stop.store(true, Ordering::Relaxed);
+    for w in workers {
+        let _ = w.join();
+    }
+}
+
+fn execute_batch(
+    batch: Vec<QueryRequest>,
+    shards: &[Shard],
+    backend: &dyn KernelBackend,
+    metrics: &ServiceMetrics,
+) {
+    if batch.is_empty() {
+        return;
+    }
+    let shard = &shards[batch[0].shard];
+    let d = shard.data.d;
+    let mut queries = Vec::with_capacity(batch.len() * d);
+    for req in &batch {
+        assert_eq!(req.point.len(), d, "query dim mismatch");
+        queries.extend_from_slice(&req.point);
+    }
+    let sums = backend.sums(shard.kernel, &queries, shard.data.flat(), d);
+    for (req, &ans) in batch.iter().zip(&sums) {
+        // Record BEFORE responding: once `send` lands the client may check
+        // the completed counter, and recording after would race it.
+        metrics.record_latency_us(req.enqueued_at.elapsed().as_micros() as f64);
+        let _ = req.respond.send(ans);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::rng::Rng;
+
+    fn service(n: usize, cfg: BatcherConfig) -> (KdeService, Arc<Dataset>) {
+        let mut rng = Rng::new(261);
+        let ds = Arc::new(gaussian_mixture(n, 4, 2, 1.0, 0.5, &mut rng));
+        let svc = KdeService::start(
+            vec![(Kernel::Laplacian, ds.clone())],
+            CpuBackend::new(),
+            cfg,
+        );
+        (svc, ds)
+    }
+
+    fn exact(ds: &Dataset, y: &[f32]) -> f64 {
+        (0..ds.n)
+            .map(|j| Kernel::Laplacian.eval(ds.point(j), y) as f64)
+            .sum()
+    }
+
+    #[test]
+    fn single_query_matches_naive() {
+        let (svc, ds) = service(64, BatcherConfig::default());
+        let y = ds.point(5).to_vec();
+        let got = svc.query(0, y.clone());
+        let want = exact(&ds, &y);
+        assert!((got - want).abs() < 1e-6 * (1.0 + want));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn no_request_dropped_or_misrouted_under_load() {
+        let (svc, ds) = service(48, BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            workers: 3,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..200 {
+            let y = ds.point(i % 48).to_vec();
+            rxs.push((i % 48, svc.submit(0, y)));
+        }
+        for (idx, rx) in rxs {
+            let got = rx.recv_timeout(Duration::from_secs(10)).expect("dropped");
+            let want = exact(&ds, ds.point(idx));
+            assert!(
+                (got - want).abs() < 1e-6 * (1.0 + want),
+                "request for point {idx} got wrong answer"
+            );
+        }
+        assert_eq!(
+            svc.metrics.completed.load(Ordering::Relaxed),
+            200,
+            "all requests completed"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batching_actually_batches() {
+        let (svc, ds) = service(32, BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(20),
+            workers: 1,
+        });
+        let mut rxs = Vec::new();
+        for i in 0..64 {
+            rxs.push(svc.submit(0, ds.point(i % 32).to_vec()));
+        }
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        }
+        let occ = svc.metrics.mean_batch_occupancy();
+        assert!(occ > 2.0, "mean occupancy {occ} — batcher not batching");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multi_shard_routing() {
+        let mut rng = Rng::new(263);
+        let ds1 = Arc::new(gaussian_mixture(16, 3, 1, 0.0, 0.3, &mut rng));
+        let ds2 = Arc::new(gaussian_mixture(40, 3, 1, 5.0, 0.3, &mut rng));
+        let svc = KdeService::start(
+            vec![
+                (Kernel::Gaussian, ds1.clone()),
+                (Kernel::Gaussian, ds2.clone()),
+            ],
+            CpuBackend::new(),
+            BatcherConfig::default(),
+        );
+        let y = ds1.point(0).to_vec();
+        let a = svc.query(0, y.clone());
+        let b = svc.query(1, y.clone());
+        let want1: f64 = (0..16)
+            .map(|j| Kernel::Gaussian.eval(ds1.point(j), &y) as f64)
+            .sum();
+        let want2: f64 = (0..40)
+            .map(|j| Kernel::Gaussian.eval(ds2.point(j), &y) as f64)
+            .sum();
+        assert!((a - want1).abs() < 1e-6 * (1.0 + want1));
+        assert!((b - want2).abs() < 1e-6 * (1.0 + want2));
+        svc.shutdown();
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown shard")]
+    fn unknown_shard_rejected() {
+        let (svc, _) = service(8, BatcherConfig::default());
+        let _ = svc.submit(3, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn property_random_loads_all_answered() {
+        crate::util::prop::forall(6, |rng, _| {
+            let n = 8 + rng.below(32);
+            let mut r2 = Rng::new(rng.next_u64());
+            let ds = Arc::new(gaussian_mixture(n, 3, 2, 1.0, 0.5, &mut r2));
+            let svc = KdeService::start(
+                vec![(Kernel::Laplacian, ds.clone())],
+                CpuBackend::new(),
+                BatcherConfig {
+                    max_batch: 1 + rng.below(16),
+                    max_wait: Duration::from_micros(100 + rng.below(500) as u64),
+                    workers: 1 + rng.below(3),
+                },
+            );
+            let reqs = 1 + rng.below(60);
+            let mut rxs = Vec::new();
+            for i in 0..reqs {
+                rxs.push((i % n, svc.submit(0, ds.point(i % n).to_vec())));
+            }
+            for (idx, rx) in rxs {
+                let got = rx.recv_timeout(Duration::from_secs(10)).expect("dropped");
+                let want: f64 = (0..n)
+                    .map(|j| Kernel::Laplacian.eval(ds.point(j), ds.point(idx)) as f64)
+                    .sum();
+                assert!((got - want).abs() < 1e-6 * (1.0 + want));
+            }
+            svc.shutdown();
+        });
+    }
+}

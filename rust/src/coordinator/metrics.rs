@@ -1,0 +1,83 @@
+//! Service metrics: queue depth, batch occupancy, latency percentiles.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Default)]
+pub struct ServiceMetrics {
+    pub enqueued: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(us);
+    }
+
+    /// Mean queries per batch (batch occupancy; 64 is the AOT optimum).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    pub fn latency_percentile_us(&self, p: f64) -> f64 {
+        let l = self.latencies_us.lock().unwrap();
+        if l.is_empty() {
+            return 0.0;
+        }
+        crate::util::stats::percentile(&l, p)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "enqueued={} completed={} batches={} occupancy={:.1} p50={:.0}us p95={:.0}us p99={:.0}us",
+            self.enqueued.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_occupancy(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let m = ServiceMetrics::new();
+        m.record_batch(64);
+        m.record_batch(32);
+        assert!((m.mean_batch_occupancy() - 48.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = ServiceMetrics::new();
+        for i in 1..=100 {
+            m.record_latency_us(i as f64);
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), 100);
+        assert!((m.latency_percentile_us(50.0) - 50.0).abs() <= 1.0);
+        assert!(m.latency_percentile_us(95.0) >= 94.0);
+    }
+}

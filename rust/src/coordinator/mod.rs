@@ -1,0 +1,25 @@
+//! The KDE query coordinator: the serving-layer system around the paper's
+//! oracle.
+//!
+//! Architecture (vLLM-router-style, thread + channel based — tokio is not
+//! available in the offline registry, DESIGN.md §3):
+//!
+//! ```text
+//!   clients ──> router (mpsc) ──> dynamic batcher ──> worker pool
+//!                                   |  flush at B=64 or deadline     \
+//!                                   v                                v
+//!                            per-shard queues                 KernelBackend
+//!                                                          (CPU or PJRT AOT)
+//! ```
+//!
+//! Requests are single KDE queries (`shard`, `point`); the batcher packs up
+//! to `max_batch` of them into one backend `sums` call — exactly the shape
+//! the AOT artifact wants (B = 64 queries per execution) — and fans results
+//! back out through per-request channels. Shards correspond to datasets /
+//! multi-level-tree nodes registered with the service.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use batcher::{BatcherConfig, KdeService, QueryRequest};
+pub use metrics::ServiceMetrics;

@@ -1,0 +1,412 @@
+//! Max-flow (Dinic) and exact weighted densest-subgraph via Goldberg's
+//! binary-search reduction.
+//!
+//! The paper's arboricity (§6.3) is `max_U w(E(G_U)) / |U|` — the weighted
+//! densest-subgraph density. Algorithm 6.14 subsamples edges and then
+//! computes the arboricity of the subsample *exactly*; this module is that
+//! exact offline solver (the paper cites [Cha00]'s LP; we use the
+//! equivalent flow formulation, which is self-contained).
+
+/// Dinic's max-flow on a capacity network with f64 capacities.
+pub struct Dinic {
+    n: usize,
+    // adjacency: per node, list of edge ids
+    adj: Vec<Vec<usize>>,
+    // edges stored as (to, cap); reverse edge is id ^ 1
+    to: Vec<usize>,
+    cap: Vec<f64>,
+    level: Vec<i32>,
+    iter: Vec<usize>,
+}
+
+impl Dinic {
+    pub fn new(n: usize) -> Self {
+        Dinic {
+            n,
+            adj: vec![Vec::new(); n],
+            to: Vec::new(),
+            cap: Vec::new(),
+            level: vec![-1; n],
+            iter: vec![0; n],
+        }
+    }
+
+    /// Add a directed edge u -> v with capacity c (and residual v -> u, 0).
+    pub fn add_edge(&mut self, u: usize, v: usize, c: f64) {
+        debug_assert!(c >= 0.0);
+        let id = self.to.len();
+        self.to.push(v);
+        self.cap.push(c);
+        self.adj[u].push(id);
+        self.to.push(u);
+        self.cap.push(0.0);
+        self.adj[v].push(id + 1);
+    }
+
+    /// Add an undirected edge with capacity c in both directions.
+    pub fn add_undirected(&mut self, u: usize, v: usize, c: f64) {
+        let id = self.to.len();
+        self.to.push(v);
+        self.cap.push(c);
+        self.adj[u].push(id);
+        self.to.push(u);
+        self.cap.push(c);
+        self.adj[v].push(id + 1);
+    }
+
+    fn bfs(&mut self, s: usize, t: usize) -> bool {
+        self.level.fill(-1);
+        let mut q = std::collections::VecDeque::new();
+        self.level[s] = 0;
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for &e in &self.adj[u] {
+                if self.cap[e] > 1e-12 && self.level[self.to[e]] < 0 {
+                    self.level[self.to[e]] = self.level[u] + 1;
+                    q.push_back(self.to[e]);
+                }
+            }
+        }
+        self.level[t] >= 0
+    }
+
+    fn dfs(&mut self, u: usize, t: usize, f: f64) -> f64 {
+        if u == t {
+            return f;
+        }
+        while self.iter[u] < self.adj[u].len() {
+            let e = self.adj[u][self.iter[u]];
+            let v = self.to[e];
+            if self.cap[e] > 1e-12 && self.level[v] == self.level[u] + 1 {
+                let d = self.dfs(v, t, f.min(self.cap[e]));
+                if d > 1e-12 {
+                    self.cap[e] -= d;
+                    self.cap[e ^ 1] += d;
+                    return d;
+                }
+            }
+            self.iter[u] += 1;
+        }
+        0.0
+    }
+
+    /// Compute max flow from s to t; consumes residual capacities.
+    pub fn max_flow(&mut self, s: usize, t: usize) -> f64 {
+        assert!(s < self.n && t < self.n && s != t);
+        let mut flow = 0.0;
+        while self.bfs(s, t) {
+            self.iter.fill(0);
+            loop {
+                let f = self.dfs(s, t, f64::INFINITY);
+                if f <= 1e-12 {
+                    break;
+                }
+                flow += f;
+            }
+        }
+        flow
+    }
+
+    /// After max_flow, the min-cut source side = nodes reachable from s in
+    /// the residual graph.
+    pub fn min_cut_source_side(&self, s: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n];
+        let mut q = std::collections::VecDeque::new();
+        seen[s] = true;
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for &e in &self.adj[u] {
+                let v = self.to[e];
+                if self.cap[e] > 1e-9 && !seen[v] {
+                    seen[v] = true;
+                    q.push_back(v);
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Exact weighted densest subgraph (max_U w(E(U))/|U|) via Goldberg's
+/// binary-search-on-guess flow construction, weighted variant:
+///
+///   source -> v   capacity  W          (W = total edge weight)
+///   v -> sink     capacity  W + 2g - deg_w(v)
+///   u <-> v       capacity  w(u, v)
+///
+/// `exists U with density > g` iff min-cut < n*W. Binary search g to
+/// relative precision, then extract the optimal set from the final cut.
+///
+/// Returns `(density, membership)`.
+pub fn densest_subgraph(
+    n: usize,
+    edges: &[(u32, u32, f64)],
+    precision: f64,
+) -> (f64, Vec<bool>) {
+    assert!(n > 0);
+    if edges.is_empty() {
+        let mut set = vec![false; n];
+        set[0] = true;
+        return (0.0, set);
+    }
+    let w_total: f64 = edges.iter().map(|e| e.2).sum();
+    let mut deg = vec![0.0f64; n];
+    for &(u, v, w) in edges {
+        deg[u as usize] += w;
+        deg[v as usize] += w;
+    }
+    let (mut lo, mut hi) = (0.0f64, w_total);
+    let mut best_set: Option<Vec<bool>> = None;
+    let s = n;
+    let t = n + 1;
+    // Fixed iteration count: precision halves each round.
+    let iters = ((w_total / precision).log2().ceil() as usize).clamp(1, 64);
+    for _ in 0..iters {
+        let g = 0.5 * (lo + hi);
+        let mut net = Dinic::new(n + 2);
+        for v in 0..n {
+            net.add_edge(s, v, w_total);
+            net.add_edge(v, t, w_total + 2.0 * g - deg[v]);
+        }
+        for &(u, v, w) in edges {
+            net.add_undirected(u as usize, v as usize, w);
+        }
+        let flow = net.max_flow(s, t);
+        // If cut < n*W some U has density > g.
+        if flow < n as f64 * w_total - 1e-9 {
+            let side = net.min_cut_source_side(s);
+            let sel: Vec<bool> = (0..n).map(|v| side[v]).collect();
+            if sel.iter().any(|&b| b) {
+                best_set = Some(sel);
+            }
+            lo = g;
+        } else {
+            hi = g;
+        }
+    }
+    let set = best_set.unwrap_or_else(|| {
+        // Density never exceeded 0+eps; the densest set is any single
+        // maximum-degree... fall back to the full vertex set.
+        vec![true; n]
+    });
+    // Report the exact density of the extracted set (better than returning
+    // the binary-search midpoint).
+    let size = set.iter().filter(|&&b| b).count().max(1);
+    let mut w_in = 0.0;
+    for &(u, v, w) in edges {
+        if set[u as usize] && set[v as usize] {
+            w_in += w;
+        }
+    }
+    (w_in / size as f64, set)
+}
+
+/// Charikar's greedy peeling 2-approximation (used as a cross-check and as
+/// a fast path for very large samples).
+pub fn densest_subgraph_greedy(n: usize, edges: &[(u32, u32, f64)]) -> (f64, Vec<bool>) {
+    let mut adj: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+    for &(u, v, w) in edges {
+        adj[u as usize].push((v, w));
+        adj[v as usize].push((u, w));
+    }
+    let mut deg: Vec<f64> = (0..n)
+        .map(|v| adj[v].iter().map(|&(_, w)| w).sum())
+        .collect();
+    let mut alive = vec![true; n];
+    let mut alive_count = n;
+    let mut total_w: f64 = edges.iter().map(|e| e.2).sum();
+    let mut best_density = total_w / n as f64;
+    let mut removal_order = Vec::with_capacity(n);
+    // O(n^2) peeling — fine at sample sizes (m = O(n log n)).
+    for _ in 0..n {
+        // find min-degree alive vertex
+        let mut vmin = usize::MAX;
+        let mut dmin = f64::INFINITY;
+        for v in 0..n {
+            if alive[v] && deg[v] < dmin {
+                dmin = deg[v];
+                vmin = v;
+            }
+        }
+        if vmin == usize::MAX {
+            break;
+        }
+        alive[vmin] = false;
+        alive_count -= 1;
+        removal_order.push(vmin);
+        for &(u, w) in &adj[vmin] {
+            if alive[u as usize] {
+                deg[u as usize] -= w;
+                total_w -= w;
+            }
+        }
+        if alive_count > 0 {
+            best_density = best_density.max(total_w / alive_count as f64);
+        }
+    }
+    // Reconstruct the best prefix set.
+    let mut set = vec![true; n];
+    let mut alive_count = n;
+    let mut total_w: f64 = edges.iter().map(|e| e.2).sum();
+    let mut best = (total_w / n as f64, set.clone());
+    let mut deg: Vec<f64> = (0..n)
+        .map(|v| adj[v].iter().map(|&(_, w)| w).sum())
+        .collect();
+    for &v in &removal_order {
+        set[v] = false;
+        alive_count -= 1;
+        for &(u, w) in &adj[v] {
+            if set[u as usize] {
+                deg[u as usize] -= w;
+                total_w -= w;
+            }
+        }
+        if alive_count > 0 {
+            let d = total_w / alive_count as f64;
+            if d > best.0 {
+                best = (d, set.clone());
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn dinic_known_small() {
+        // s=0, t=3; edges 0->1 (3), 0->2 (2), 1->2 (5), 1->3 (2), 2->3 (3)
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 3.0);
+        d.add_edge(0, 2, 2.0);
+        d.add_edge(1, 2, 5.0);
+        d.add_edge(1, 3, 2.0);
+        d.add_edge(2, 3, 3.0);
+        assert!((d.max_flow(0, 3) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dinic_disconnected_zero() {
+        let mut d = Dinic::new(4);
+        d.add_edge(0, 1, 10.0);
+        d.add_edge(2, 3, 10.0);
+        assert_eq!(d.max_flow(0, 3), 0.0);
+    }
+
+    #[test]
+    fn dinic_min_cut_matches_flow() {
+        forall(12, |rng, _| {
+            let n = 4 + rng.below(6);
+            let mut caps = Vec::new();
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v && rng.bernoulli(0.4) {
+                        caps.push((u, v, 0.5 + rng.f64() * 2.0));
+                    }
+                }
+            }
+            let mut d = Dinic::new(n);
+            for &(u, v, c) in &caps {
+                d.add_edge(u, v, c);
+            }
+            let flow = d.max_flow(0, n - 1);
+            let side = d.min_cut_source_side(0);
+            assert!(side[0] && !side[n - 1]);
+            // cut capacity == flow (max-flow min-cut theorem)
+            let cut: f64 = caps
+                .iter()
+                .filter(|&&(u, v, _)| side[u] && !side[v])
+                .map(|&(_, _, c)| c)
+                .sum();
+            assert!((cut - flow).abs() < 1e-6, "cut {cut} vs flow {flow}");
+        });
+    }
+
+    fn brute_force_densest(n: usize, edges: &[(u32, u32, f64)]) -> f64 {
+        let mut best = 0.0f64;
+        for mask in 1u32..(1 << n) {
+            let size = mask.count_ones() as f64;
+            let mut w = 0.0;
+            for &(u, v, ww) in edges {
+                if mask & (1 << u) != 0 && mask & (1 << v) != 0 {
+                    w += ww;
+                }
+            }
+            best = best.max(w / size);
+        }
+        best
+    }
+
+    #[test]
+    fn densest_matches_brute_force() {
+        forall(16, |rng, _| {
+            let n = 3 + rng.below(6); // <= 8 for brute force
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    if rng.bernoulli(0.6) {
+                        edges.push((u as u32, v as u32, 0.2 + rng.f64()));
+                    }
+                }
+            }
+            if edges.is_empty() {
+                return;
+            }
+            let want = brute_force_densest(n, &edges);
+            let (got, set) = densest_subgraph(n, &edges, 1e-6);
+            assert!(
+                (got - want).abs() < 1e-4 * (1.0 + want),
+                "flow {got} vs brute {want}"
+            );
+            assert!(set.iter().any(|&b| b));
+        });
+    }
+
+    #[test]
+    fn densest_planted_clique() {
+        // sparse background + dense planted subgraph on {0..4}
+        let mut edges = Vec::new();
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                edges.push((u, v, 1.0));
+            }
+        }
+        for v in 5..12u32 {
+            edges.push((0, v, 0.01));
+        }
+        let (d, set) = densest_subgraph(12, &edges, 1e-6);
+        // clique density = 10 edges / 5 nodes = 2.0
+        assert!((d - 2.0).abs() < 1e-3, "density {d}");
+        for v in 0..5 {
+            assert!(set[v], "clique vertex {v} excluded");
+        }
+        for v in 5..12 {
+            assert!(!set[v], "background vertex {v} included");
+        }
+    }
+
+    #[test]
+    fn greedy_within_factor_two() {
+        forall(12, |rng, _| {
+            let n = 4 + rng.below(5);
+            let mut edges = Vec::new();
+            for u in 0..n {
+                for v in (u + 1)..n {
+                    if rng.bernoulli(0.5) {
+                        edges.push((u as u32, v as u32, 0.2 + rng.f64()));
+                    }
+                }
+            }
+            if edges.is_empty() {
+                return;
+            }
+            let opt = brute_force_densest(n, &edges);
+            let (greedy, _) = densest_subgraph_greedy(n, &edges);
+            assert!(greedy <= opt + 1e-9);
+            assert!(greedy >= 0.5 * opt - 1e-9, "greedy {greedy} vs opt {opt}");
+        });
+    }
+}

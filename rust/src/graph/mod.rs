@@ -1,0 +1,471 @@
+//! Weighted-graph substrate: edge-list graph with CSR adjacency, Laplacian
+//! operations (quadratic forms, matvecs, dense materialization for tests),
+//! conductance, exact kernel-graph construction, and the flow machinery
+//! behind exact densest-subgraph (arboricity) computation.
+
+pub mod flow;
+
+use crate::kernel::{Dataset, Kernel};
+use crate::linalg::eigen::SymOp;
+use crate::linalg::mat::Mat;
+
+/// An undirected weighted graph stored as a deduplicated edge list
+/// (parallel edges merged by weight) plus a CSR adjacency built on demand.
+#[derive(Clone, Debug)]
+pub struct WGraph {
+    pub n: usize,
+    /// Unique undirected edges `(u, v, w)` with `u < v`, `w > 0`.
+    pub edges: Vec<(u32, u32, f64)>,
+    csr_offsets: Vec<usize>,
+    csr_neighbors: Vec<(u32, f64)>,
+}
+
+impl WGraph {
+    /// Build from possibly-repeated undirected edges; parallel edges are
+    /// merged by summing weights, self-loops dropped.
+    pub fn from_edges(n: usize, raw: impl IntoIterator<Item = (usize, usize, f64)>) -> Self {
+        let mut map: crate::util::fxhash::FxHashMap<(u32, u32), f64> =
+            crate::util::fxhash::FxHashMap::default();
+        for (a, b, w) in raw {
+            if a == b || w == 0.0 {
+                continue;
+            }
+            assert!(a < n && b < n, "edge endpoint out of range");
+            let key = if a < b { (a as u32, b as u32) } else { (b as u32, a as u32) };
+            *map.entry(key).or_insert(0.0) += w;
+        }
+        let mut edges: Vec<(u32, u32, f64)> =
+            map.into_iter().map(|((a, b), w)| (a, b, w)).collect();
+        edges.sort_unstable_by_key(|e| (e.0, e.1));
+        let mut g = WGraph { n, edges, csr_offsets: Vec::new(), csr_neighbors: Vec::new() };
+        g.build_csr();
+        g
+    }
+
+    /// Materialize the complete kernel graph (O(n^2 d); baseline oracle).
+    pub fn complete_kernel_graph(ds: &Dataset, k: Kernel) -> Self {
+        let mut edges = Vec::with_capacity(ds.n * (ds.n - 1) / 2);
+        for i in 0..ds.n {
+            for j in (i + 1)..ds.n {
+                edges.push((i, j, ds.kernel(k, i, j) as f64));
+            }
+        }
+        WGraph::from_edges(ds.n, edges)
+    }
+
+    fn build_csr(&mut self) {
+        let mut deg = vec![0usize; self.n];
+        for &(u, v, _) in &self.edges {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; self.n + 1];
+        for i in 0..self.n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![(0u32, 0.0f64); offsets[self.n]];
+        for &(u, v, w) in &self.edges {
+            neighbors[cursor[u as usize]] = (v, w);
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize]] = (u, w);
+            cursor[v as usize] += 1;
+        }
+        self.csr_offsets = offsets;
+        self.csr_neighbors = neighbors;
+    }
+
+    /// Neighbors of `v` as `(other, weight)`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[(u32, f64)] {
+        &self.csr_neighbors[self.csr_offsets[v]..self.csr_offsets[v + 1]]
+    }
+
+    /// Weighted degree.
+    pub fn degree(&self, v: usize) -> f64 {
+        self.neighbors(v).iter().map(|&(_, w)| w).sum()
+    }
+
+    pub fn degrees(&self) -> Vec<f64> {
+        (0..self.n).map(|v| self.degree(v)).collect()
+    }
+
+    /// Total edge weight.
+    pub fn total_weight(&self) -> f64 {
+        self.edges.iter().map(|e| e.2).sum()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Laplacian quadratic form `x^T L x = sum_e w_e (x_u - x_v)^2`.
+    pub fn laplacian_quadratic(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.n);
+        self.edges
+            .iter()
+            .map(|&(u, v, w)| {
+                let d = x[u as usize] - x[v as usize];
+                w * d * d
+            })
+            .sum()
+    }
+
+    /// `L x` without materializing L.
+    pub fn laplacian_matvec(&self, x: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(out.len(), self.n);
+        out.fill(0.0);
+        for &(u, v, w) in &self.edges {
+            let (u, v) = (u as usize, v as usize);
+            let d = x[u] - x[v];
+            out[u] += w * d;
+            out[v] -= w * d;
+        }
+    }
+
+    /// Dense Laplacian `D - A` (tests / small baselines).
+    pub fn laplacian_dense(&self) -> Mat {
+        let mut l = Mat::zeros(self.n, self.n);
+        for &(u, v, w) in &self.edges {
+            let (u, v) = (u as usize, v as usize);
+            l[(u, v)] -= w;
+            l[(v, u)] -= w;
+            l[(u, u)] += w;
+            l[(v, v)] += w;
+        }
+        l
+    }
+
+    /// Dense *normalized* Laplacian `I - D^{-1/2} A D^{-1/2}`.
+    pub fn normalized_laplacian_dense(&self) -> Mat {
+        let deg = self.degrees();
+        let mut l = Mat::identity(self.n);
+        for &(u, v, w) in &self.edges {
+            let (u, v) = (u as usize, v as usize);
+            let s = w / (deg[u] * deg[v]).sqrt();
+            l[(u, v)] -= s;
+            l[(v, u)] -= s;
+        }
+        l
+    }
+
+    /// Conductance of a vertex subset (Definition 6.2).
+    pub fn conductance(&self, in_set: &[bool]) -> f64 {
+        assert_eq!(in_set.len(), self.n);
+        let mut cut = 0.0;
+        let mut vol_s = 0.0;
+        let mut vol_c = 0.0;
+        for &(u, v, w) in &self.edges {
+            let (a, b) = (in_set[u as usize], in_set[v as usize]);
+            if a != b {
+                cut += w;
+            }
+            // each edge contributes w to the degree of both endpoints
+            if a {
+                vol_s += w;
+            } else {
+                vol_c += w;
+            }
+            if b {
+                vol_s += w;
+            } else {
+                vol_c += w;
+            }
+        }
+        let denom = vol_s.min(vol_c);
+        if denom <= 0.0 {
+            return f64::INFINITY;
+        }
+        cut / denom
+    }
+
+    /// Density `w(E(G_U)) / |U|` of the induced subgraph on `U` (§6.3).
+    pub fn subgraph_density(&self, in_set: &[bool]) -> f64 {
+        let size = in_set.iter().filter(|&&b| b).count();
+        if size == 0 {
+            return 0.0;
+        }
+        let mut w_in = 0.0;
+        for &(u, v, w) in &self.edges {
+            if in_set[u as usize] && in_set[v as usize] {
+                w_in += w;
+            }
+        }
+        w_in / size as f64
+    }
+
+    /// Exact total weight of triangles, weight = product of edge weights
+    /// (Definition 6.16). O(n * m) over CSR — baseline for Theorem 6.17.
+    pub fn exact_triangle_weight(&self) -> f64 {
+        // adjacency lookup map for membership tests
+        let mut wmap: crate::util::fxhash::FxHashMap<(u32, u32), f64> =
+            crate::util::fxhash::FxHashMap::default();
+        wmap.reserve(self.edges.len());
+        for &(u, v, w) in &self.edges {
+            wmap.insert((u, v), w);
+        }
+        let mut total = 0.0;
+        for &(u, v, w_uv) in &self.edges {
+            // iterate the smaller adjacency of u, count x > v to count each
+            // triangle once via its smallest vertex ordering u < v < x
+            for &(x, w_ux) in self.neighbors(u as usize) {
+                if x > v {
+                    if let Some(&w_vx) = wmap.get(&(v.min(x), v.max(x))) {
+                        total += w_uv * w_ux * w_vx;
+                    }
+                }
+            }
+        }
+        total
+    }
+}
+
+/// Laplacian-as-operator adapter for the CG solver and eigensolvers.
+pub struct LaplacianOp<'a>(pub &'a WGraph);
+
+impl SymOp for LaplacianOp<'_> {
+    fn dim(&self) -> usize {
+        self.0.n
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        self.0.laplacian_matvec(x, out);
+    }
+}
+
+/// `c*I - normalized Laplacian` operator: top eigenvectors of this are the
+/// bottom eigenvectors of the normalized Laplacian (spectral embedding).
+pub struct ShiftedNormLaplacianOp<'a> {
+    pub g: &'a WGraph,
+    pub shift: f64,
+    inv_sqrt_deg: Vec<f64>,
+}
+
+impl<'a> ShiftedNormLaplacianOp<'a> {
+    pub fn new(g: &'a WGraph, shift: f64) -> Self {
+        let inv_sqrt_deg = g
+            .degrees()
+            .iter()
+            .map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 })
+            .collect();
+        ShiftedNormLaplacianOp { g, shift, inv_sqrt_deg }
+    }
+}
+
+impl SymOp for ShiftedNormLaplacianOp<'_> {
+    fn dim(&self) -> usize {
+        self.g.n
+    }
+    fn apply(&self, x: &[f64], out: &mut [f64]) {
+        // out = shift*x - (x - D^{-1/2} A D^{-1/2} x)
+        //     = (shift-1)*x + D^{-1/2} A D^{-1/2} x
+        out.fill(0.0);
+        for &(u, v, w) in &self.g.edges {
+            let (u, v) = (u as usize, v as usize);
+            let s = w * self.inv_sqrt_deg[u] * self.inv_sqrt_deg[v];
+            out[u] += s * x[v];
+            out[v] += s * x[u];
+        }
+        for i in 0..x.len() {
+            out[i] += (self.shift - 1.0) * x[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn random_graph(rng: &mut Rng, n: usize, p: f64) -> WGraph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.bernoulli(p) {
+                    edges.push((i, j, 0.1 + rng.f64()));
+                }
+            }
+        }
+        // ensure connectivity-ish: path backbone
+        for i in 0..n - 1 {
+            edges.push((i, i + 1, 0.05));
+        }
+        WGraph::from_edges(n, edges)
+    }
+
+    #[test]
+    fn parallel_edges_merge() {
+        let g = WGraph::from_edges(3, vec![(0, 1, 1.0), (1, 0, 2.0), (1, 2, 0.5)]);
+        assert_eq!(g.num_edges(), 2);
+        let w01 = g
+            .edges
+            .iter()
+            .find(|e| (e.0, e.1) == (0, 1))
+            .unwrap()
+            .2;
+        assert_eq!(w01, 3.0);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = WGraph::from_edges(2, vec![(0, 0, 5.0), (0, 1, 1.0)]);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn degrees_and_total_weight_consistent() {
+        forall(16, |rng, _| {
+            let n = 3 + rng.below(12);
+            let g = random_graph(rng, n, 0.4);
+            let degs = g.degrees();
+            let sum_deg: f64 = degs.iter().sum();
+            assert!(
+                (sum_deg - 2.0 * g.total_weight()).abs() < 1e-9,
+                "handshake lemma"
+            );
+        });
+    }
+
+    #[test]
+    fn laplacian_quadratic_matches_dense() {
+        forall(12, |rng, _| {
+            let n = 3 + rng.below(10);
+            let g = random_graph(rng, n, 0.5);
+            let l = g.laplacian_dense();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let want = crate::linalg::dot(&x, &l.matvec(&x));
+            let got = g.laplacian_quadratic(&x);
+            assert!((got - want).abs() < 1e-8 * (1.0 + want.abs()));
+        });
+    }
+
+    #[test]
+    fn laplacian_matvec_matches_dense() {
+        forall(12, |rng, _| {
+            let n = 3 + rng.below(10);
+            let g = random_graph(rng, n, 0.5);
+            let l = g.laplacian_dense();
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let want = l.matvec(&x);
+            let mut got = vec![0.0; n];
+            g.laplacian_matvec(&x, &mut got);
+            for i in 0..n {
+                assert!((got[i] - want[i]).abs() < 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn laplacian_annihilates_ones() {
+        let mut rng = Rng::new(3);
+        let g = random_graph(&mut rng, 8, 0.5);
+        let ones = vec![1.0; 8];
+        let mut out = vec![0.0; 8];
+        g.laplacian_matvec(&ones, &mut out);
+        for v in out {
+            assert!(v.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalized_laplacian_psd_with_spectrum_in_0_2() {
+        let mut rng = Rng::new(4);
+        let g = random_graph(&mut rng, 10, 0.6);
+        let nl = g.normalized_laplacian_dense();
+        let (vals, _) = crate::linalg::jacobi_eigen(&nl, 60);
+        for &v in &vals {
+            assert!(v > -1e-9 && v < 2.0 + 1e-9, "eigenvalue {v}");
+        }
+        // smallest eigenvalue is 0
+        assert!(vals.last().unwrap().abs() < 1e-8);
+    }
+
+    #[test]
+    fn conductance_known_barbell() {
+        // Two triangles joined by one weak edge.
+        let mut edges = vec![
+            (0, 1, 1.0),
+            (1, 2, 1.0),
+            (0, 2, 1.0),
+            (3, 4, 1.0),
+            (4, 5, 1.0),
+            (3, 5, 1.0),
+            (2, 3, 0.1),
+        ];
+        edges.dedup();
+        let g = WGraph::from_edges(6, edges);
+        let mut in_set = vec![false; 6];
+        in_set[0] = true;
+        in_set[1] = true;
+        in_set[2] = true;
+        let phi = g.conductance(&in_set);
+        // cut = 0.1, vol(S) = 6*1 + 0.1 = 6.1
+        assert!((phi - 0.1 / 6.1).abs() < 1e-9, "phi {phi}");
+    }
+
+    #[test]
+    fn exact_triangle_weight_known() {
+        // Single triangle with weights 2, 3, 4 -> product 24.
+        let g = WGraph::from_edges(3, vec![(0, 1, 2.0), (1, 2, 3.0), (0, 2, 4.0)]);
+        assert!((g.exact_triangle_weight() - 24.0).abs() < 1e-9);
+        // Adding a disconnected edge changes nothing.
+        let g2 = WGraph::from_edges(
+            5,
+            vec![(0, 1, 2.0), (1, 2, 3.0), (0, 2, 4.0), (3, 4, 9.0)],
+        );
+        assert!((g2.exact_triangle_weight() - 24.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_triangle_weight_vs_brute_force() {
+        forall(8, |rng, _| {
+            let n = 4 + rng.below(8);
+            let g = random_graph(rng, n, 0.5);
+            let mut want = 0.0;
+            let mut wmat = vec![vec![0.0f64; n]; n];
+            for &(u, v, w) in &g.edges {
+                wmat[u as usize][v as usize] = w;
+                wmat[v as usize][u as usize] = w;
+            }
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    for c in (b + 1)..n {
+                        want += wmat[a][b] * wmat[b][c] * wmat[a][c];
+                    }
+                }
+            }
+            let got = g.exact_triangle_weight();
+            assert!((got - want).abs() < 1e-8 * (1.0 + want), "{got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn shifted_norm_laplacian_op_matches_dense() {
+        let mut rng = Rng::new(5);
+        let g = random_graph(&mut rng, 9, 0.5);
+        let op = ShiftedNormLaplacianOp::new(&g, 2.0);
+        let nl = g.normalized_laplacian_dense();
+        let x: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let mut got = vec![0.0; 9];
+        op.apply(&x, &mut got);
+        let lx = nl.matvec(&x);
+        for i in 0..9 {
+            let want = 2.0 * x[i] - lx[i];
+            assert!((got[i] - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn complete_kernel_graph_edge_count() {
+        let mut rng = Rng::new(6);
+        let ds = crate::kernel::dataset::gaussian_mixture(12, 3, 2, 1.0, 0.4, &mut rng);
+        let g = WGraph::complete_kernel_graph(&ds, Kernel::Gaussian);
+        assert_eq!(g.num_edges(), 12 * 11 / 2);
+        // weights match kernel evals
+        for &(u, v, w) in g.edges.iter().take(10) {
+            let want = ds.kernel(Kernel::Gaussian, u as usize, v as usize) as f64;
+            assert!((w - want).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! Naive and sampling KDE estimators over contiguous index ranges of a
+//! dataset.
+
+use std::sync::Arc;
+
+use crate::kde::{Kde, KdeConfig, KdeCounters};
+use crate::kernel::{Dataset, Kernel};
+use crate::runtime::backend::KernelBackend;
+use crate::util::rng::Rng;
+
+/// Exact KDE over `ds[lo..hi)`: a full scan per query. `eps = 0`.
+pub struct NaiveKde {
+    ds: Arc<Dataset>,
+    kernel: Kernel,
+    lo: usize,
+    hi: usize,
+    backend: Arc<dyn KernelBackend>,
+    counters: Arc<KdeCounters>,
+}
+
+impl NaiveKde {
+    pub fn new(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        lo: usize,
+        hi: usize,
+        backend: Arc<dyn KernelBackend>,
+        counters: Arc<KdeCounters>,
+    ) -> Self {
+        assert!(lo < hi && hi <= ds.n);
+        NaiveKde { ds, kernel, lo, hi, backend, counters }
+    }
+}
+
+impl Kde for NaiveKde {
+    fn query(&self, y: &[f32]) -> f64 {
+        self.counters.record_query();
+        let d = self.ds.d;
+        let data = &self.ds.flat()[self.lo * d..self.hi * d];
+        self.backend.sums(self.kernel, y, data, d)[0]
+    }
+
+    fn subset_len(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+/// Uniform-sampling KDE (§3.1): a fixed random subsample `R` of the range,
+/// drawn once at construction; `query(y) = |S|/|R| * sum_{x in R} k(x, y)`.
+///
+/// For kernels with all values `>= tau` this is a `(1 ± eps)` estimator
+/// with `|R| = O(1/(tau eps^2))` (exponent `p = 1` in Table 1's terms).
+/// The subsample is gathered into a contiguous buffer so each query is one
+/// backend call (and one PJRT tile execution on the artifact path).
+pub struct SamplingKde {
+    kernel: Kernel,
+    d: usize,
+    /// Gathered sample coordinates, row-major `s x d`.
+    sample: Vec<f32>,
+    /// Number of sampled points.
+    s: usize,
+    /// Range size |S| that the estimate scales up to.
+    len: usize,
+    backend: Arc<dyn KernelBackend>,
+    counters: Arc<KdeCounters>,
+}
+
+impl SamplingKde {
+    pub fn new(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        lo: usize,
+        hi: usize,
+        cfg: &KdeConfig,
+        backend: Arc<dyn KernelBackend>,
+        counters: Arc<KdeCounters>,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(lo < hi && hi <= ds.n);
+        let len = hi - lo;
+        let s = cfg.sample_size(len);
+        let idx = rng.sample_indices(len, s);
+        let d = ds.d;
+        let mut sample = Vec::with_capacity(s * d);
+        for &i in &idx {
+            sample.extend_from_slice(ds.point(lo + i));
+        }
+        SamplingKde { kernel, d, sample, s, len, backend, counters }
+    }
+}
+
+impl Kde for SamplingKde {
+    fn query(&self, y: &[f32]) -> f64 {
+        self.counters.record_query();
+        let raw = self.backend.sums(self.kernel, y, &self.sample, self.d)[0];
+        raw * self.len as f64 / self.s as f64
+    }
+
+    fn subset_len(&self) -> usize {
+        self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::prop::forall;
+
+    fn setup(n: usize, seed: u64) -> (Arc<Dataset>, Arc<CpuBackend>, Arc<KdeCounters>, Rng) {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 6, 3, 1.0, 0.6, &mut rng));
+        (ds, CpuBackend::new(), KdeCounters::new(), rng)
+    }
+
+    fn exact_range_sum(ds: &Dataset, k: Kernel, lo: usize, hi: usize, y: &[f32]) -> f64 {
+        (lo..hi).map(|j| k.eval(ds.point(j), y) as f64).sum()
+    }
+
+    #[test]
+    fn naive_is_exact() {
+        let (ds, be, ctr, mut rng) = setup(64, 41);
+        let k = Kernel::Laplacian;
+        let kde = NaiveKde::new(ds.clone(), k, 8, 40, be, ctr.clone());
+        for _ in 0..10 {
+            let q = rng.below(ds.n);
+            let got = kde.query(ds.point(q));
+            let want = exact_range_sum(&ds, k, 8, 40, ds.point(q));
+            assert!((got - want).abs() < 1e-6 * (1.0 + want));
+        }
+        assert_eq!(ctr.queries(), 10);
+        assert_eq!(kde.subset_len(), 32);
+    }
+
+    #[test]
+    fn sampling_full_size_is_exact() {
+        // When the sample covers the whole range, estimate is exact.
+        let (ds, be, ctr, mut rng) = setup(48, 43);
+        let cfg = KdeConfig { kind: crate::kde::EstimatorKind::Sampling { eps: 0.01, tau: 0.9 }, ..Default::default() };
+        // sample_size = 4/(0.9*1e-4) >> 48 -> clamped to 48.
+        let kde = SamplingKde::new(
+            ds.clone(),
+            Kernel::Gaussian,
+            0,
+            48,
+            &cfg,
+            be,
+            ctr,
+            &mut rng,
+        );
+        let y = ds.point(0).to_vec();
+        let got = kde.query(&y);
+        let want = exact_range_sum(&ds, Kernel::Gaussian, 0, 48, &y);
+        assert!((got - want).abs() < 1e-6 * (1.0 + want));
+    }
+
+    #[test]
+    fn sampling_concentrates() {
+        // Tight dataset (all kernel values near 1) -> tiny relative error.
+        forall(8, |rng, case| {
+            let ds = Arc::new(gaussian_mixture(512, 4, 1, 0.0, 0.15, rng));
+            let tau = ds.tau(Kernel::Laplacian);
+            assert!(tau > 0.05, "setup: tau too small ({tau})");
+            let cfg = KdeConfig {
+                kind: crate::kde::EstimatorKind::Sampling { eps: 0.2, tau: 0.2 },
+                ..Default::default()
+            };
+            let kde = SamplingKde::new(
+                ds.clone(),
+                Kernel::Laplacian,
+                0,
+                512,
+                &cfg,
+                CpuBackend::new(),
+                KdeCounters::new(),
+                rng,
+            );
+            let q = rng.below(512);
+            let got = kde.query(ds.point(q));
+            let want = exact_range_sum(&ds, Kernel::Laplacian, 0, 512, ds.point(q));
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.25, "case {case}: rel err {rel}");
+        });
+    }
+
+    #[test]
+    fn sampling_unbiased_over_redraws() {
+        let (ds, be, _, mut rng) = setup(256, 47);
+        let k = Kernel::Gaussian;
+        let y = ds.point(3).to_vec();
+        let want = exact_range_sum(&ds, k, 0, 256, &y);
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.8, tau: 0.2 },
+            ..Default::default()
+        };
+        let trials = 200;
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let kde = SamplingKde::new(
+                ds.clone(),
+                k,
+                0,
+                256,
+                &cfg,
+                be.clone(),
+                KdeCounters::new(),
+                &mut rng,
+            );
+            acc += kde.query(&y);
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - want).abs() < 0.05 * want,
+            "mean {mean} vs exact {want}"
+        );
+    }
+}

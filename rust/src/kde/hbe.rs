@@ -1,0 +1,222 @@
+//! Hashing-Based Estimator for the Laplacian kernel (BIW19-style).
+//!
+//! LSH family: per hash table, a random-grid hash over R^d with per-table
+//! width `w` and per-dimension uniform offsets. For this family the
+//! collision probability of two points is exactly
+//! `p(x, y) = prod_j max(0, 1 - |x_j - y_j| / w)`.
+//!
+//! The estimator samples a uniform point `Z` from the query's bucket and
+//! returns `|bucket| * k(Z, y) / p(Z, y)`, which is unbiased for the mass
+//! of all points with positive collision probability:
+//! `E = sum_x E[1{x in bucket}] * k(x,y)/p(x,y) = sum_{x: p>0} k(x, y)`.
+//!
+//! Points with some coordinate gap >= w are invisible to one table; with
+//! `w` a small multiple of the (pre-scaled) typical distance their kernel
+//! mass is exponentially small, and averaging over tables controls the
+//! variance — this is the practical trade documented in DESIGN.md §3
+//! (paper Table 1 lists the theoretical tau^0.5 variant).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::kde::{Kde, KdeCounters};
+use crate::kernel::{Dataset, Kernel};
+use crate::util::rng::Rng;
+use std::cell::RefCell;
+
+struct Table {
+    offsets: Vec<f32>,
+    buckets: HashMap<Vec<i32>, Vec<usize>>,
+}
+
+pub struct HbeKde {
+    ds: Arc<Dataset>,
+    lo: usize,
+    hi: usize,
+    width: f32,
+    tables: Vec<Table>,
+    counters: Arc<KdeCounters>,
+    rng: RefCell<Rng>,
+    evals: std::sync::atomic::AtomicU64,
+}
+
+// The RefCell makes HbeKde !Sync by default; queries are single-threaded in
+// the sampling primitives, and the coordinator wraps estimators in a Mutex.
+unsafe impl Sync for HbeKde {}
+
+impl HbeKde {
+    pub fn new(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        lo: usize,
+        hi: usize,
+        num_tables: usize,
+        width: f32,
+        counters: Arc<KdeCounters>,
+        rng: &mut Rng,
+    ) -> Self {
+        assert_eq!(
+            kernel,
+            Kernel::Laplacian,
+            "HBE here implements the L1 (Laplacian) scheme only"
+        );
+        assert!(lo < hi && hi <= ds.n && width > 0.0);
+        let d = ds.d;
+        let mut tables = Vec::with_capacity(num_tables);
+        for _ in 0..num_tables {
+            let offsets: Vec<f32> = (0..d).map(|_| (rng.f64() as f32) * width).collect();
+            let mut buckets: HashMap<Vec<i32>, Vec<usize>> = HashMap::new();
+            for i in lo..hi {
+                let key = Self::hash_key(ds.point(i), &offsets, width);
+                buckets.entry(key).or_default().push(i);
+            }
+            tables.push(Table { offsets, buckets });
+        }
+        HbeKde {
+            ds,
+            lo,
+            hi,
+            width,
+            tables,
+            counters,
+            rng: RefCell::new(rng.fork()),
+            evals: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn hash_key(x: &[f32], offsets: &[f32], w: f32) -> Vec<i32> {
+        x.iter()
+            .zip(offsets)
+            .map(|(v, o)| ((v + o) / w).floor() as i32)
+            .collect()
+    }
+
+    fn collision_prob(&self, x: &[f32], y: &[f32]) -> f64 {
+        let mut p = 1.0f64;
+        for j in 0..x.len() {
+            let frac = 1.0 - ((x[j] - y[j]).abs() / self.width) as f64;
+            if frac <= 0.0 {
+                return 0.0;
+            }
+            p *= frac;
+        }
+        p
+    }
+
+    pub fn kernel_evals(&self) -> u64 {
+        self.evals.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl Kde for HbeKde {
+    fn query(&self, y: &[f32]) -> f64 {
+        self.counters.record_query();
+        let mut rng = self.rng.borrow_mut();
+        let mut acc = 0.0f64;
+        for t in &self.tables {
+            let key = Self::hash_key(y, &t.offsets, self.width);
+            let Some(bucket) = t.buckets.get(&key) else { continue };
+            if bucket.is_empty() {
+                continue;
+            }
+            let z = bucket[rng.below(bucket.len())];
+            let zx = self.ds.point(z);
+            let p = self.collision_prob(zx, y);
+            if p <= 0.0 {
+                continue;
+            }
+            self.evals
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let k = Kernel::Laplacian.eval(zx, y) as f64;
+            acc += bucket.len() as f64 * k / p;
+        }
+        acc / self.tables.len() as f64
+    }
+
+    fn subset_len(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+
+    fn exact_sum(ds: &Dataset, y: &[f32]) -> f64 {
+        (0..ds.n)
+            .map(|j| Kernel::Laplacian.eval(ds.point(j), y) as f64)
+            .sum()
+    }
+
+    #[test]
+    fn hbe_close_to_exact_on_scaled_data() {
+        let mut rng = Rng::new(51);
+        // Tight single blob, coordinates O(0.3): width 4.0 covers all pairs.
+        let ds = Arc::new(gaussian_mixture(400, 4, 1, 0.0, 0.3, &mut rng));
+        let kde = HbeKde::new(
+            ds.clone(),
+            Kernel::Laplacian,
+            0,
+            400,
+            60,
+            4.0,
+            KdeCounters::new(),
+            &mut rng,
+        );
+        let mut worst: f64 = 0.0;
+        for q in [0usize, 17, 99, 321] {
+            let got = kde.query(ds.point(q));
+            let want = exact_sum(&ds, ds.point(q));
+            worst = worst.max((got - want).abs() / want);
+        }
+        assert!(worst < 0.2, "worst rel err {worst}");
+    }
+
+    #[test]
+    fn hbe_unbiased_when_width_covers_everything() {
+        let mut rng = Rng::new(53);
+        let ds = Arc::new(gaussian_mixture(128, 3, 1, 0.0, 0.2, &mut rng));
+        let want = exact_sum(&ds, ds.point(5));
+        let trials = 60;
+        let mut acc = 0.0;
+        for t in 0..trials {
+            let mut r = Rng::new(1000 + t);
+            let kde = HbeKde::new(
+                ds.clone(),
+                Kernel::Laplacian,
+                0,
+                128,
+                8,
+                6.0,
+                KdeCounters::new(),
+                &mut r,
+            );
+            acc += kde.query(ds.point(5));
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - want).abs() < 0.08 * want,
+            "mean {mean} vs exact {want}"
+        );
+    }
+
+    #[test]
+    fn hbe_query_cost_sublinear() {
+        // Kernel evaluations per query = #tables, independent of n.
+        let mut rng = Rng::new(57);
+        let ds = Arc::new(gaussian_mixture(1000, 3, 1, 0.0, 0.3, &mut rng));
+        let kde = HbeKde::new(
+            ds.clone(),
+            Kernel::Laplacian,
+            0,
+            1000,
+            20,
+            4.0,
+            KdeCounters::new(),
+            &mut rng,
+        );
+        kde.query(ds.point(0));
+        assert!(kde.kernel_evals() <= 20, "evals {}", kde.kernel_evals());
+    }
+}

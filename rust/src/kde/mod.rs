@@ -1,0 +1,144 @@
+//! Kernel Density Estimation oracles (Definition 1.1) and the multi-level
+//! KDE structure (Algorithm 4.1).
+//!
+//! The paper treats KDE strictly as a black box: `query(y)` returns a value
+//! in `[(1-eps) z, (1+eps) z]` for `z = sum_{x in S} k(x, y)` over the
+//! structure's subset `S`, assuming all kernel values >= tau. Three
+//! realizations live here:
+//!
+//! * [`NaiveKde`]    — exact scan; the test oracle and the `eps = 0` point.
+//! * [`SamplingKde`] — uniform-subsample estimator; the paper's §3.1
+//!   "simple random sampling" baseline achieving exponent `p = 1` for any
+//!   bounded kernel. This is the default estimator in experiments.
+//! * [`HbeKde`]      — hashing-based estimator for the Laplacian kernel
+//!   (BIW19-style L1 random-grid LSH with importance-weighted collisions).
+//!
+//! All estimators route their bulk evaluations through a
+//! [`KernelBackend`](crate::runtime::backend::KernelBackend) so the same
+//! code runs on the pure-Rust path and the PJRT artifact path.
+
+pub mod estimators;
+pub mod hbe;
+pub mod multilevel;
+pub mod ptree;
+
+pub use estimators::{NaiveKde, SamplingKde};
+pub use hbe::HbeKde;
+pub use multilevel::MultiLevelKde;
+pub use ptree::PartitionTreeKde;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared query accounting (the paper's "number of KDE queries" metric).
+#[derive(Default, Debug)]
+pub struct KdeCounters {
+    queries: AtomicU64,
+}
+
+impl KdeCounters {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+    pub fn record_query(&self) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+    pub fn reset(&self) {
+        self.queries.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A KDE oracle over some subset of the dataset.
+pub trait Kde: Send + Sync {
+    /// Approximate `sum_{x in S} k(x, y)`. NOTE: if `y` is itself a member
+    /// of `S`, its self-term `k(y,y) = 1` **is included** — callers
+    /// subtract it (Algorithm 4.3 line (a)).
+    fn query(&self, y: &[f32]) -> f64;
+
+    /// |S|, the subset size this oracle covers.
+    fn subset_len(&self) -> usize;
+}
+
+/// Which estimator the factories instantiate.
+#[derive(Clone, Copy, Debug)]
+pub enum EstimatorKind {
+    Naive,
+    /// Uniform sampling with the §3.1 sample size `O(1/(tau eps^2))`.
+    Sampling { eps: f64, tau: f64 },
+    /// Laplacian-kernel HBE; `tables` hash tables of width `width`.
+    Hbe { tables: usize, width: f32 },
+    /// Deterministic space-partition-tree estimator with certified
+    /// per-query relative error `eps` (§3.1's practical tree family).
+    PartitionTree { eps: f64 },
+}
+
+/// Configuration shared by the sampling primitives.
+#[derive(Clone, Copy, Debug)]
+pub struct KdeConfig {
+    pub kind: EstimatorKind,
+    /// Ranges of at most this many points get exact (naive) estimators in
+    /// the multi-level tree — the bottom levels are where accuracy matters
+    /// most for edge sampling and exactness there is cheaper than sampling.
+    pub leaf_cutoff: usize,
+    pub seed: u64,
+}
+
+impl Default for KdeConfig {
+    fn default() -> Self {
+        KdeConfig {
+            kind: EstimatorKind::Sampling { eps: 0.25, tau: 0.05 },
+            leaf_cutoff: 16,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl KdeConfig {
+    pub fn exact() -> Self {
+        KdeConfig { kind: EstimatorKind::Naive, leaf_cutoff: 16, seed: 0x5EED }
+    }
+
+    /// Sample size the sampling estimator uses for a subset of size `len`.
+    pub fn sample_size(&self, len: usize) -> usize {
+        match self.kind {
+            EstimatorKind::Naive => len,
+            EstimatorKind::Sampling { eps, tau } => {
+                let s = (4.0 / (tau * eps * eps)).ceil() as usize;
+                s.clamp(1, len)
+            }
+            EstimatorKind::Hbe { .. } => len,
+            EstimatorKind::PartitionTree { .. } => len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        let c = KdeCounters::new();
+        c.record_query();
+        c.record_query();
+        assert_eq!(c.queries(), 2);
+        c.reset();
+        assert_eq!(c.queries(), 0);
+    }
+
+    #[test]
+    fn sample_size_clamps() {
+        let cfg = KdeConfig {
+            kind: EstimatorKind::Sampling { eps: 0.5, tau: 0.1 },
+            ..Default::default()
+        };
+        // 4/(0.1*0.25) = 160
+        assert_eq!(cfg.sample_size(1000), 160);
+        assert_eq!(cfg.sample_size(50), 50);
+        let exact = KdeConfig::exact();
+        assert_eq!(exact.sample_size(77), 77);
+    }
+}

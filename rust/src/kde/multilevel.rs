@@ -1,0 +1,277 @@
+//! Multi-level KDE (Algorithm 4.1): a binary tree over contiguous index
+//! ranges of the dataset, each node holding an independent KDE oracle over
+//! its range. The tree is the engine behind Algorithm 4.11's weighted
+//! neighbor sampling descent and everything built on it.
+//!
+//! Per the technical overview (§2), KDE answers must be **consistent**
+//! between the sampling descent and the later probability computation
+//! (`neighbor_prob`) — so per-(node, query-point) answers are memoized.
+//! Cache misses are what the query counter counts; cache hits are free,
+//! matching the paper's accounting where a degree array is "computed once".
+
+use std::cell::RefCell;
+use std::sync::Arc;
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
+use crate::kde::hbe::HbeKde;
+use crate::kernel::{Dataset, Kernel};
+use crate::runtime::backend::KernelBackend;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub lo: usize,
+    pub hi: usize,
+    pub left: Option<usize>,
+    pub right: Option<usize>,
+}
+
+pub struct MultiLevelKde {
+    pub ds: Arc<Dataset>,
+    pub kernel: Kernel,
+    nodes: Vec<Node>,
+    oracles: Vec<Box<dyn Kde>>,
+    cache: RefCell<FxHashMap<(u32, u32), f64>>,
+    pub counters: Arc<KdeCounters>,
+}
+
+// Queries go through a RefCell cache; the structure is used single-threaded
+// (the coordinator owns per-shard instances behind a Mutex).
+unsafe impl Sync for MultiLevelKde {}
+
+impl MultiLevelKde {
+    /// Build the tree with the configured estimator at every node
+    /// (Lemma 4.2: construction cost is one level's cost times O(log n)).
+    pub fn build(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: Arc<dyn KernelBackend>,
+        counters: Arc<KdeCounters>,
+    ) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut nodes = Vec::new();
+        let mut oracles: Vec<Box<dyn Kde>> = Vec::new();
+        Self::build_rec(
+            &ds, kernel, cfg, &backend, &counters, &mut rng, 0, ds.n, &mut nodes, &mut oracles,
+        );
+        MultiLevelKde {
+            ds,
+            kernel,
+            nodes,
+            oracles,
+            cache: RefCell::new(FxHashMap::default()),
+            counters,
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_rec(
+        ds: &Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: &Arc<dyn KernelBackend>,
+        counters: &Arc<KdeCounters>,
+        rng: &mut Rng,
+        lo: usize,
+        hi: usize,
+        nodes: &mut Vec<Node>,
+        oracles: &mut Vec<Box<dyn Kde>>,
+    ) -> usize {
+        let id = nodes.len();
+        nodes.push(Node { lo, hi, left: None, right: None });
+        let len = hi - lo;
+        let oracle: Box<dyn Kde> = if len <= cfg.leaf_cutoff {
+            Box::new(NaiveKde::new(
+                ds.clone(),
+                kernel,
+                lo,
+                hi,
+                backend.clone(),
+                counters.clone(),
+            ))
+        } else {
+            match cfg.kind {
+                EstimatorKind::Naive => Box::new(NaiveKde::new(
+                    ds.clone(),
+                    kernel,
+                    lo,
+                    hi,
+                    backend.clone(),
+                    counters.clone(),
+                )),
+                EstimatorKind::Sampling { .. } => Box::new(SamplingKde::new(
+                    ds.clone(),
+                    kernel,
+                    lo,
+                    hi,
+                    cfg,
+                    backend.clone(),
+                    counters.clone(),
+                    rng,
+                )),
+                EstimatorKind::Hbe { tables, width } => Box::new(HbeKde::new(
+                    ds.clone(),
+                    kernel,
+                    lo,
+                    hi,
+                    tables,
+                    width,
+                    counters.clone(),
+                    rng,
+                )),
+                EstimatorKind::PartitionTree { eps } => {
+                    Box::new(crate::kde::ptree::PartitionTreeKde::new(
+                        ds.clone(),
+                        kernel,
+                        lo,
+                        hi,
+                        eps,
+                        counters.clone(),
+                    ))
+                }
+            }
+        };
+        oracles.push(oracle);
+        if len > 1 {
+            let mid = lo + len / 2;
+            let l = Self::build_rec(
+                ds, kernel, cfg, backend, counters, rng, lo, mid, nodes, oracles,
+            );
+            let r = Self::build_rec(
+                ds, kernel, cfg, backend, counters, rng, mid, hi, nodes, oracles,
+            );
+            nodes[id].left = Some(l);
+            nodes[id].right = Some(r);
+        }
+        id
+    }
+
+    pub fn root(&self) -> usize {
+        0
+    }
+
+    pub fn node(&self, id: usize) -> Node {
+        self.nodes[id]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Memoized KDE answer for dataset point `i` against node `id`'s
+    /// subset. Includes `k(x_i, x_i)` if `i` lies inside the node's range —
+    /// callers subtract 1.0 in that case (Alg 4.3 / 4.11).
+    pub fn query_point(&self, id: usize, i: usize) -> f64 {
+        let key = (id as u32, i as u32);
+        if let Some(&v) = self.cache.borrow().get(&key) {
+            return v;
+        }
+        let v = self.oracles[id].query(self.ds.point(i));
+        self.cache.borrow_mut().insert(key, v);
+        v
+    }
+
+    /// Un-memoized query for an arbitrary vector (serving path).
+    pub fn query_vec(&self, id: usize, y: &[f32]) -> f64 {
+        self.oracles[id].query(y)
+    }
+
+    /// Clear the per-point memo table (experiment hygiene between runs).
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+
+    fn build_exact(n: usize, seed: u64) -> (Arc<Dataset>, MultiLevelKde) {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 4, 2, 1.0, 0.5, &mut rng));
+        let tree = MultiLevelKde::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        (ds, tree)
+    }
+
+    #[test]
+    fn tree_covers_all_ranges() {
+        let (_, tree) = build_exact(37, 61); // non-power-of-two
+        // Every internal node's children partition it.
+        for id in 0..tree.num_nodes() {
+            let n = tree.node(id);
+            if let (Some(l), Some(r)) = (n.left, n.right) {
+                let (nl, nr) = (tree.node(l), tree.node(r));
+                assert_eq!(nl.lo, n.lo);
+                assert_eq!(nl.hi, nr.lo);
+                assert_eq!(nr.hi, n.hi);
+            } else {
+                assert_eq!(n.hi - n.lo, 1, "leaf must be a single point");
+            }
+        }
+        let root = tree.node(tree.root());
+        assert_eq!((root.lo, root.hi), (0, 37));
+    }
+
+    #[test]
+    fn node_count_is_2n_minus_1() {
+        let (_, tree) = build_exact(32, 63);
+        assert_eq!(tree.num_nodes(), 2 * 32 - 1);
+    }
+
+    #[test]
+    fn exact_tree_children_sum_to_parent() {
+        let (ds, tree) = build_exact(24, 65);
+        for id in 0..tree.num_nodes() {
+            let n = tree.node(id);
+            if let (Some(l), Some(r)) = (n.left, n.right) {
+                for q in [0usize, 7, 23] {
+                    let parent = tree.query_point(id, q);
+                    let sum = tree.query_point(l, q) + tree.query_point(r, q);
+                    assert!(
+                        (parent - sum).abs() < 1e-6 * (1.0 + parent),
+                        "node {id} point {q}: {parent} vs {sum}"
+                    );
+                    let _ = &ds;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_and_counts_misses_only() {
+        let (_, tree) = build_exact(16, 67);
+        let before = tree.counters.queries();
+        let a = tree.query_point(0, 3);
+        let mid = tree.counters.queries();
+        let b = tree.query_point(0, 3);
+        let after = tree.counters.queries();
+        assert_eq!(a, b);
+        assert_eq!(mid, before + 1);
+        assert_eq!(after, mid, "cache hit must not count as a query");
+    }
+
+    #[test]
+    fn query_point_matches_exact_range_sum() {
+        let (ds, tree) = build_exact(20, 69);
+        for id in [0usize, 1, 2] {
+            let n = tree.node(id);
+            let q = 5;
+            let got = tree.query_point(id, q);
+            let want: f64 = (n.lo..n.hi)
+                .map(|j| Kernel::Laplacian.eval(ds.point(j), ds.point(q)) as f64)
+                .sum();
+            assert!((got - want).abs() < 1e-6 * (1.0 + want));
+        }
+    }
+}

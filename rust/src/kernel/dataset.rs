@@ -1,0 +1,391 @@
+//! Row-major f32 datasets + synthetic generators for the paper's
+//! experiments.
+//!
+//! Generators:
+//! * `gaussian_mixture`  — MNIST substitute (well-clustered, fast spectral
+//!   decay; DESIGN.md §3).
+//! * `heavy_tailed_mixture` — GloVe substitute (spread row norms).
+//! * `nested`            — §7 "Nested": points at the origin + a circle.
+//! * `rings`             — §7 "Rings": two interlocked tori in 3-D.
+//! * `clusterable`       — k well-separated blobs for local clustering
+//!   (Definition 6.4-style instances).
+
+use crate::kernel::Kernel;
+use crate::util::rng::Rng;
+
+/// A dataset of `n` points in `R^d`, stored row-major, already scaled by
+/// `1/sigma` (bandwidth folded into the coordinates).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub d: usize,
+    data: Vec<f32>,
+    /// Optional ground-truth labels (for clustering experiments).
+    pub labels: Option<Vec<usize>>,
+}
+
+impl Dataset {
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        assert!(!rows.is_empty());
+        let d = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == d));
+        let n = rows.len();
+        let mut data = Vec::with_capacity(n * d);
+        for r in &rows {
+            data.extend_from_slice(r);
+        }
+        Dataset { n, d, data, labels: None }
+    }
+
+    pub fn from_flat(n: usize, d: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * d);
+        Dataset { n, d, data, labels: None }
+    }
+
+    #[inline]
+    pub fn point(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn flat(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Kernel evaluation between two stored points.
+    #[inline]
+    pub fn kernel(&self, k: Kernel, i: usize, j: usize) -> f32 {
+        k.eval(self.point(i), self.point(j))
+    }
+
+    /// Weighted degree `sum_{j != i} k(x_i, x_j)` computed exactly (O(nd);
+    /// baseline / test oracle).
+    pub fn exact_degree(&self, k: Kernel, i: usize) -> f64 {
+        let mut s = 0.0f64;
+        for j in 0..self.n {
+            if j != i {
+                s += self.kernel(k, i, j) as f64;
+            }
+        }
+        s
+    }
+
+    /// The minimum off-diagonal kernel value = the paper's `tau`
+    /// (Parameterization 1.2). O(n^2 d) — experiment-setup helper.
+    pub fn tau(&self, k: Kernel) -> f64 {
+        let mut t = f64::INFINITY;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                t = t.min(self.kernel(k, i, j) as f64);
+            }
+        }
+        t
+    }
+
+    /// Scale all coordinates by `c` (returns a new dataset). Used for the
+    /// squared-kernel row-norm trick (§5.2) and for bandwidth folding.
+    pub fn scaled(&self, c: f32) -> Dataset {
+        Dataset {
+            n: self.n,
+            d: self.d,
+            data: self.data.iter().map(|v| v * c).collect(),
+            labels: self.labels.clone(),
+        }
+    }
+
+    /// Restrict to a subset of indices (Alg 5.18's principal submatrix).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut data = Vec::with_capacity(idx.len() * self.d);
+        for &i in idx {
+            data.extend_from_slice(self.point(i));
+        }
+        Dataset {
+            n: idx.len(),
+            d: self.d,
+            data,
+            labels: self
+                .labels
+                .as_ref()
+                .map(|l| idx.iter().map(|&i| l[i]).collect()),
+        }
+    }
+
+    /// Median-rule bandwidth (§3.1): median pairwise distance over a sample
+    /// of pairs, under the metric the kernel uses (L1 for Laplacian,
+    /// L2 or L2^2 otherwise).
+    pub fn median_rule_sigma(&self, k: Kernel, rng: &mut Rng) -> f64 {
+        let pairs = 2_000.min(self.n * (self.n - 1) / 2).max(1);
+        let mut dists = Vec::with_capacity(pairs);
+        for _ in 0..pairs {
+            let i = rng.below(self.n);
+            let mut j = rng.below(self.n);
+            while j == i {
+                j = rng.below(self.n);
+            }
+            let (a, b) = (self.point(i), self.point(j));
+            let dist = match k {
+                Kernel::Laplacian => a
+                    .iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y).abs() as f64)
+                    .sum::<f64>(),
+                Kernel::Gaussian | Kernel::RationalQuadratic => a
+                    .iter()
+                    .zip(b)
+                    .map(|(x, y)| ((x - y) * (x - y)) as f64)
+                    .sum::<f64>(),
+                Kernel::Exponential => a
+                    .iter()
+                    .zip(b)
+                    .map(|(x, y)| ((x - y) * (x - y)) as f64)
+                    .sum::<f64>()
+                    .sqrt(),
+            };
+            dists.push(dist);
+        }
+        crate::util::stats::percentile(&dists, 50.0).max(1e-9)
+    }
+
+    /// Fold bandwidth in: returns the dataset scaled so that using the
+    /// bandwidth-free kernels reproduces `k_sigma`. For Gaussian /
+    /// rational-quadratic the scale applies to squared distances, so the
+    /// coordinate scale is `1/sqrt(sigma)` of the *squared* median; for L1 /
+    /// L2 kernels it is `1/sigma`.
+    pub fn with_median_bandwidth(&self, k: Kernel, rng: &mut Rng) -> Dataset {
+        let med = self.median_rule_sigma(k, rng);
+        let scale = match k {
+            Kernel::Gaussian | Kernel::RationalQuadratic => (1.0 / med).sqrt(),
+            Kernel::Laplacian | Kernel::Exponential => 1.0 / med,
+        };
+        self.scaled(scale as f32)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic generators
+// ---------------------------------------------------------------------------
+
+/// `k` isotropic Gaussian blobs in `R^d` (MNIST substitute).
+pub fn gaussian_mixture(
+    n: usize,
+    d: usize,
+    k: usize,
+    sep: f64,
+    spread: f64,
+    rng: &mut Rng,
+) -> Dataset {
+    let centers: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.normal() * sep).collect())
+        .collect();
+    let mut data = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = i % k;
+        labels.push(c);
+        for j in 0..d {
+            data.push((centers[c][j] + rng.normal() * spread) as f32);
+        }
+    }
+    let mut ds = Dataset::from_flat(n, d, data);
+    ds.labels = Some(labels);
+    ds
+}
+
+/// Heavy-tailed mixture (GloVe substitute): blob draws multiplied by a
+/// per-point log-normal radius so row norms are spread out.
+pub fn heavy_tailed_mixture(n: usize, d: usize, k: usize, rng: &mut Rng) -> Dataset {
+    let base = gaussian_mixture(n, d, k, 1.5, 0.6, rng);
+    let mut data = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let r = (rng.normal() * 0.5).exp() as f32;
+        for v in base.point(i) {
+            data.push(v * r);
+        }
+    }
+    let mut ds = Dataset::from_flat(n, d, data);
+    ds.labels = base.labels;
+    ds
+}
+
+/// §7 "Nested": half the points at the origin (jittered), half on the unit
+/// circle. Two clusters, one inside the other's convex hull.
+pub fn nested(n: usize, rng: &mut Rng) -> Dataset {
+    let mut data = Vec::with_capacity(n * 2);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        if i % 2 == 0 {
+            data.push((rng.normal() * 0.05) as f32);
+            data.push((rng.normal() * 0.05) as f32);
+            labels.push(0);
+        } else {
+            let theta = rng.f64() * std::f64::consts::TAU;
+            data.push(theta.cos() as f32);
+            data.push(theta.sin() as f32);
+            labels.push(1);
+        }
+    }
+    let mut ds = Dataset::from_flat(n, 2, data);
+    ds.labels = Some(labels);
+    ds
+}
+
+/// §7 "Rings": two interlocked tori in 3-D. Paper: small radius 5, large
+/// radius 100 — we keep the 1:20 ratio at unit scale (r = 0.05, R = 1).
+pub fn rings(n: usize, rng: &mut Rng) -> Dataset {
+    let (r, big_r) = (0.05f64, 1.0f64);
+    let mut data = Vec::with_capacity(n * 3);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let u = rng.f64() * std::f64::consts::TAU;
+        let v = rng.f64() * std::f64::consts::TAU;
+        let (x, y, z);
+        if i % 2 == 0 {
+            // Torus 1 in the xy-plane centered at origin.
+            x = (big_r + r * v.cos()) * u.cos();
+            y = (big_r + r * v.cos()) * u.sin();
+            z = r * v.sin();
+            labels.push(0);
+        } else {
+            // Torus 2 in the xz-plane, shifted so it threads torus 1.
+            x = big_r + (big_r + r * v.cos()) * u.cos();
+            y = r * v.sin();
+            z = (big_r + r * v.cos()) * u.sin();
+            labels.push(1);
+        }
+        data.push(x as f32);
+        data.push(y as f32);
+        data.push(z as f32);
+    }
+    let mut ds = Dataset::from_flat(n, 3, data);
+    ds.labels = Some(labels);
+    ds
+}
+
+/// `k` well-separated tight blobs: a `(k, phi_in, phi_out)`-clusterable
+/// kernel graph instance for the local-clustering experiments (Def. 6.4).
+pub fn clusterable(n: usize, d: usize, k: usize, rng: &mut Rng) -> Dataset {
+    gaussian_mixture(n, d, k, 4.0, 0.25, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    #[test]
+    fn from_rows_layout() {
+        let ds = Dataset::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.point(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn exact_degree_matches_brute() {
+        let mut rng = Rng::new(5);
+        let ds = gaussian_mixture(20, 4, 2, 1.0, 0.5, &mut rng);
+        let k = Kernel::Laplacian;
+        for i in 0..ds.n {
+            let mut want = 0.0f64;
+            for j in 0..ds.n {
+                if j != i {
+                    want += k.eval(ds.point(i), ds.point(j)) as f64;
+                }
+            }
+            assert!((ds.exact_degree(k, i) - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn subset_preserves_points_and_labels() {
+        let mut rng = Rng::new(6);
+        let ds = gaussian_mixture(10, 3, 2, 1.0, 0.3, &mut rng);
+        let sub = ds.subset(&[7, 1, 4]);
+        assert_eq!(sub.n, 3);
+        assert_eq!(sub.point(0), ds.point(7));
+        assert_eq!(sub.point(2), ds.point(4));
+        assert_eq!(
+            sub.labels.as_ref().unwrap()[1],
+            ds.labels.as_ref().unwrap()[1]
+        );
+    }
+
+    #[test]
+    fn scaled_scales() {
+        let ds = Dataset::from_rows(vec![vec![2.0, -4.0]]);
+        let s = ds.scaled(0.5);
+        assert_eq!(s.point(0), &[1.0, -2.0]);
+    }
+
+    #[test]
+    fn nested_has_two_radii() {
+        let mut rng = Rng::new(7);
+        let ds = nested(100, &mut rng);
+        let labels = ds.labels.as_ref().unwrap();
+        for i in 0..ds.n {
+            let p = ds.point(i);
+            let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+            if labels[i] == 0 {
+                assert!(r < 0.5, "origin cluster point too far: {r}");
+            } else {
+                assert!((r - 1.0).abs() < 0.01, "circle point off circle: {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn rings_points_on_tori() {
+        let mut rng = Rng::new(8);
+        let ds = rings(200, &mut rng);
+        let labels = ds.labels.as_ref().unwrap();
+        for i in 0..ds.n {
+            let p = ds.point(i);
+            if labels[i] == 0 {
+                // distance from the unit circle in the xy-plane ~ r = 0.05
+                let rho = ((p[0] * p[0] + p[1] * p[1]).sqrt() - 1.0).abs();
+                let dist = ((rho * rho + p[2] * p[2]) as f64).sqrt();
+                assert!((dist - 0.05).abs() < 1e-3, "torus1 dist {dist}");
+            }
+        }
+    }
+
+    #[test]
+    fn median_bandwidth_gives_order_one_kernel_values() {
+        let mut rng = Rng::new(9);
+        let ds = gaussian_mixture(200, 8, 3, 2.0, 1.0, &mut rng);
+        for k in [Kernel::Laplacian, Kernel::Gaussian, Kernel::Exponential] {
+            let scaled = ds.with_median_bandwidth(k, &mut rng);
+            // The median pair should now have kernel value ~ exp(-1).
+            let mut vals = Vec::new();
+            for t in 0..500 {
+                let i = (t * 7) % scaled.n;
+                let j = (t * 13 + 1) % scaled.n;
+                if i != j {
+                    vals.push(scaled.kernel(k, i, j) as f64);
+                }
+            }
+            let med = crate::util::stats::percentile(&vals, 50.0);
+            assert!(
+                (0.15..0.65).contains(&med),
+                "{:?}: median kernel value {med} not O(1)",
+                k
+            );
+        }
+    }
+
+    #[test]
+    fn tau_is_min_offdiag() {
+        let mut rng = Rng::new(10);
+        let ds = gaussian_mixture(15, 3, 2, 0.5, 0.2, &mut rng);
+        let k = Kernel::Gaussian;
+        let tau = ds.tau(k);
+        let mut want = f64::INFINITY;
+        for i in 0..ds.n {
+            for j in 0..ds.n {
+                if i != j {
+                    want = want.min(ds.kernel(k, i, j) as f64);
+                }
+            }
+        }
+        assert!((tau - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,276 @@
+//! Kernel functions and datasets.
+//!
+//! The four kernels of Table 1, the bandwidth "median rule" (§3.1), and the
+//! synthetic dataset generators used across the experiments (§7:
+//! Nested / Rings, plus the MNIST/GloVe substitutes documented in
+//! DESIGN.md §3).
+//!
+//! Convention: datasets are stored *pre-scaled* by `1/sigma`, so every
+//! kernel evaluation is bandwidth-free — this matches the AOT artifacts,
+//! which bake no bandwidth.
+
+pub mod dataset;
+
+pub use dataset::Dataset;
+
+/// Kernel families from Table 1 of the paper. All values lie in (0, 1]
+/// and `k(x, x) = 1`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Kernel {
+    /// `exp(-||x-y||_1)`
+    Laplacian,
+    /// `exp(-||x-y||_2^2)`
+    Gaussian,
+    /// `exp(-||x-y||_2)`
+    Exponential,
+    /// `1 / (1 + ||x-y||_2^2)` (beta = 1)
+    RationalQuadratic,
+}
+
+pub const ALL_KERNELS: [Kernel; 4] = [
+    Kernel::Laplacian,
+    Kernel::Gaussian,
+    Kernel::Exponential,
+    Kernel::RationalQuadratic,
+];
+
+impl Kernel {
+    /// Artifact / manifest name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Laplacian => "laplacian",
+            Kernel::Gaussian => "gaussian",
+            Kernel::Exponential => "exponential",
+            Kernel::RationalQuadratic => "rational_quadratic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Kernel> {
+        Some(match s {
+            "laplacian" => Kernel::Laplacian,
+            "gaussian" => Kernel::Gaussian,
+            "exponential" => Kernel::Exponential,
+            "rational_quadratic" | "rq" => Kernel::RationalQuadratic,
+            _ => return None,
+        })
+    }
+
+    /// Evaluate `k(x, y)` on pre-scaled coordinates.
+    ///
+    /// The distance loops are the crate's hottest code (every KDE query is
+    /// a string of these); they use 8-lane manual accumulators so LLVM
+    /// autovectorizes them. (A scalar polynomial fast-exp was tried in the
+    /// §Perf pass and REVERTED: its serial dependency chain is no cheaper
+    /// than libm `expf` on this target — see EXPERIMENTS.md §Perf.)
+    #[inline]
+    pub fn eval(self, x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        match self {
+            Kernel::Laplacian => (-l1_dist(x, y)).exp(),
+            Kernel::Gaussian => (-sq_dist(x, y)).exp(),
+            Kernel::Exponential => (-sq_dist(x, y).max(0.0).sqrt()).exp(),
+            Kernel::RationalQuadratic => 1.0 / (1.0 + sq_dist(x, y)),
+        }
+    }
+
+    /// The constant `c` with `k(x,y)^2 = k(cx, cy)`, when it exists
+    /// (§5.2 squared-row-norm trick). `None` for rational quadratic.
+    ///
+    /// Note: the paper states c = 4 for the Gaussian; the correct value is
+    /// `sqrt(2)` since `exp(-||cx-cy||^2) = exp(-c^2 ||x-y||^2)` — verified
+    /// by `squared_scaling_law` below and the pytest twin.
+    pub fn square_scale(self) -> Option<f32> {
+        match self {
+            Kernel::Laplacian | Kernel::Exponential => Some(2.0),
+            Kernel::Gaussian => Some(std::f32::consts::SQRT_2),
+            Kernel::RationalQuadratic => None,
+        }
+    }
+
+    /// KDE query-time exponent `p` from Table 1 (used for reporting only;
+    /// the sampling estimator realizes p = 1, HBE realizes p ~ 0.5).
+    pub fn table1_exponent(self) -> f64 {
+        match self {
+            Kernel::Gaussian => 0.173,
+            Kernel::Exponential => 0.1,
+            Kernel::Laplacian => 0.5,
+            Kernel::RationalQuadratic => 0.0,
+        }
+    }
+}
+
+/// Fast `e^x` for `x <= 0` via range reduction `e^x = 2^j * e^f` with a
+/// degree-5 polynomial on `|f| <= ln2/2`. Relative error < 2e-6 (worst
+/// near the underflow edge; verified by `fast_exp_matches_std`).
+///
+/// NOT used on the hot path: the §Perf pass measured it no faster than
+/// libm `expf` on this target (the serial polynomial chain dominates) and
+/// it was reverted from `Kernel::eval`. Kept as a utility + negative
+/// result record (EXPERIMENTS.md §Perf).
+#[inline]
+pub fn fast_exp_neg(x: f32) -> f32 {
+    debug_assert!(x <= 1e-6, "fast_exp_neg expects non-positive input");
+    if x < -87.0 {
+        return 0.0;
+    }
+    const LOG2E: f32 = std::f32::consts::LOG2_E;
+    // Split ln2 into high+low parts for an accurate reduction.
+    const LN2_HI: f32 = 0.693_145_75;
+    const LN2_LO: f32 = 1.428_606_8e-6;
+    // Round-to-nearest via the magic-constant trick: `round()` lowers to a
+    // libm call on baseline x86-64 and dominates the whole function.
+    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
+    let j = (x * LOG2E + MAGIC) - MAGIC;
+    let f = (x - j * LN2_HI) - j * LN2_LO;
+    // e^f, |f| <= 0.3466: Taylor/minimax degree 5.
+    let p = 1.0
+        + f * (1.0
+            + f * (0.5
+                + f * (0.166_666_67 + f * (0.041_666_67 + f * 0.008_333_76))));
+    let scale = f32::from_bits((((j as i32) + 127) << 23) as u32);
+    scale * p
+}
+
+const LANES: usize = 8;
+
+/// 8-lane L1 distance: independent partial sums let LLVM emit SIMD adds
+/// (a single scalar accumulator forces strict FP ordering and defeats
+/// vectorization).
+#[inline]
+fn l1_dist(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xa, ya) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += (xa[l] - ya[l]).abs();
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+        s += (a - b).abs();
+    }
+    s
+}
+
+/// 8-lane squared L2 distance (see `l1_dist`).
+#[inline]
+fn sq_dist(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xa, ya) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            let d = xa[l] - ya[l];
+            acc[l] += d * d;
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+        let d = a - b;
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn rand_point(rng: &mut Rng, d: usize, scale: f64) -> Vec<f32> {
+        (0..d).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    #[test]
+    fn self_kernel_is_one() {
+        let mut rng = Rng::new(3);
+        for k in ALL_KERNELS {
+            let x = rand_point(&mut rng, 8, 1.0);
+            assert!((k.eval(&x, &x) - 1.0).abs() < 1e-6, "{:?}", k);
+        }
+    }
+
+    #[test]
+    fn kernels_symmetric_and_unit_interval() {
+        forall(32, |rng, _| {
+            let d = 1 + rng.below(16);
+            let x = rand_point(rng, d, 2.0);
+            let y = rand_point(rng, d, 2.0);
+            for k in ALL_KERNELS {
+                let a = k.eval(&x, &y);
+                let b = k.eval(&y, &x);
+                assert!((a - b).abs() < 1e-6, "{:?} not symmetric", k);
+                // Values are mathematically in (0, 1] but may underflow to
+                // +0.0 in f32 at large distances — allow that.
+                assert!((0.0..=1.0 + 1e-6).contains(&a), "{:?} out of [0,1]: {a}", k);
+            }
+        });
+    }
+
+    #[test]
+    fn kernels_decrease_with_distance() {
+        let x = [0.0f32; 4];
+        let near = [0.1f32; 4];
+        let far = [1.0f32; 4];
+        for k in ALL_KERNELS {
+            assert!(k.eval(&x, &near) > k.eval(&x, &far), "{:?}", k);
+        }
+    }
+
+    #[test]
+    fn squared_scaling_law() {
+        forall(32, |rng, _| {
+            let d = 1 + rng.below(8);
+            let x = rand_point(rng, d, 1.0);
+            let y = rand_point(rng, d, 1.0);
+            for k in ALL_KERNELS {
+                if let Some(c) = k.square_scale() {
+                    let xs: Vec<f32> = x.iter().map(|v| v * c).collect();
+                    let ys: Vec<f32> = y.iter().map(|v| v * c).collect();
+                    let lhs = k.eval(&x, &y).powi(2);
+                    let rhs = k.eval(&xs, &ys);
+                    assert!(
+                        (lhs - rhs).abs() < 1e-4 * lhs.max(1e-6),
+                        "{:?}: {lhs} vs {rhs}",
+                        k
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fast_exp_matches_std() {
+        // Sweep the whole useful range; require < 1e-6 relative error.
+        let mut x = -87.0f32;
+        while x < 0.0 {
+            let got = fast_exp_neg(x);
+            let want = x.exp();
+            let rel = (got - want).abs() / want.max(f32::MIN_POSITIVE);
+            assert!(rel < 5e-6, "x={x}: fast {got} vs std {want} (rel {rel})");
+            x += 0.0137;
+        }
+        assert_eq!(fast_exp_neg(-100.0), 0.0, "underflow clamps to 0");
+        assert!((fast_exp_neg(0.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn known_values() {
+        let x = [0.0f32, 0.0];
+        let y = [1.0f32, 0.0];
+        assert!((Kernel::Laplacian.eval(&x, &y) - (-1.0f32).exp()).abs() < 1e-6);
+        assert!((Kernel::Gaussian.eval(&x, &y) - (-1.0f32).exp()).abs() < 1e-6);
+        assert!((Kernel::Exponential.eval(&x, &y) - (-1.0f32).exp()).abs() < 1e-6);
+        assert!((Kernel::RationalQuadratic.eval(&x, &y) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn name_round_trip() {
+        for k in ALL_KERNELS {
+            assert_eq!(Kernel::from_name(k.name()), Some(k));
+        }
+        assert_eq!(Kernel::from_name("nope"), None);
+    }
+}

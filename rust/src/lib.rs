@@ -1,0 +1,41 @@
+//! # kde-matrix
+//!
+//! Sub-quadratic algorithms for kernel matrices via Kernel Density
+//! Estimation — a reproduction of Bakshi, Indyk, Kacham, Silwal & Zhou
+//! (2022) as a three-layer Rust + JAX + Pallas system.
+//!
+//! * **Layer 1/2 (build time)** — `python/compile/` authors the tiled
+//!   pairwise-kernel Pallas kernel and the batched KDE compute graphs, and
+//!   AOT-lowers them to HLO text (`make artifacts`).
+//! * **Layer 3 (this crate)** — the paper's algorithms over black-box KDE
+//!   oracles, a PJRT runtime that executes the artifacts, and a batching
+//!   query coordinator. Python never runs on the request path.
+//!
+//! Map from the paper to modules:
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | Def. 1.1 KDE oracle, Alg 4.1 multi-level KDE | [`kde`] |
+//! | Alg 4.3/4.5/4.6 vertex sampling | [`sampling::vertex`] |
+//! | Alg 4.11/4.13 neighbor & edge sampling | [`sampling::neighbor`], [`sampling::edge`] |
+//! | Alg 4.16 random walks | [`sampling::walk`] |
+//! | §5.2 row-norm sampling | [`sampling::rownorm`] |
+//! | Thm 5.3 spectral sparsification | [`apps::sparsify`] |
+//! | §5.1.1 Laplacian solver | [`apps::solver`] |
+//! | Cor 5.14 low-rank approximation | [`apps::lra`] |
+//! | Thm 5.17 spectrum in EMD | [`apps::spectrum`] |
+//! | Thm 5.22 top eigenvalue | [`apps::eigen_top`] |
+//! | Thm 6.9 local clustering | [`apps::cluster_local`] |
+//! | §6.2 spectral clustering | [`apps::cluster_spectral`] |
+//! | Thm 6.15 arboricity | [`apps::arboricity`] |
+//! | Thm 6.17 weighted triangles | [`apps::triangles`] |
+
+pub mod apps;
+pub mod coordinator;
+pub mod graph;
+pub mod kde;
+pub mod kernel;
+pub mod linalg;
+pub mod runtime;
+pub mod sampling;
+pub mod util;

@@ -1,0 +1,170 @@
+//! Conjugate-gradient solver over an abstract symmetric PSD operator, with
+//! optional diagonal (Jacobi) preconditioning and null-space projection.
+//!
+//! This is the §5.1.1 workhorse: "fast Laplacian solver" is instantiated as
+//! preconditioned CG on the **sparsifier** Laplacian (Theorem 5.10's solver
+//! replaced by the classical iterative method — same contract: returns x
+//! with `||x - L^+ b||_L <= alpha ||L^+ b||_L`).
+
+use crate::linalg::eigen::SymOp;
+use crate::linalg::mat::{axpy, dot};
+
+/// Outcome of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub residual: f64,
+    pub converged: bool,
+}
+
+/// Solve `A x = b` by (optionally preconditioned) CG.
+///
+/// * `diag_precond` — if provided, the diagonal of `A` (Jacobi M^{-1}).
+/// * `project_ones` — if true, keep iterates orthogonal to the all-ones
+///   vector (the Laplacian null space for connected graphs); `b` must also
+///   satisfy `1^T b = 0` for the system to be consistent.
+pub fn cg(
+    a: &dyn SymOp,
+    b: &[f64],
+    diag_precond: Option<&[f64]>,
+    project_ones: bool,
+    tol: f64,
+    max_iters: usize,
+) -> CgResult {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let proj = |v: &mut Vec<f64>| {
+        if project_ones {
+            let m: f64 = v.iter().sum::<f64>() / n as f64;
+            for x in v.iter_mut() {
+                *x -= m;
+            }
+        }
+    };
+    let apply_precond = |r: &[f64]| -> Vec<f64> {
+        match diag_precond {
+            Some(d) => r
+                .iter()
+                .zip(d)
+                .map(|(ri, di)| if *di > 0.0 { ri / di } else { *ri })
+                .collect(),
+            None => r.to_vec(),
+        }
+    };
+
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    proj(&mut r);
+    let bnorm = dot(&r, &r).sqrt().max(1e-300);
+    let mut z = apply_precond(&r);
+    proj(&mut z);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut buf = vec![0.0; n];
+
+    for it in 0..max_iters {
+        let rnorm = dot(&r, &r).sqrt();
+        if rnorm <= tol * bnorm {
+            return CgResult { x, iters: it, residual: rnorm / bnorm, converged: true };
+        }
+        a.apply(&p, &mut buf);
+        let pap = dot(&p, &buf);
+        if pap <= 0.0 {
+            break; // numerical breakdown / null-space direction
+        }
+        let alpha = rz / pap;
+        axpy(&mut x, alpha, &p);
+        axpy(&mut r, -alpha, &buf);
+        let mut rv = r.clone();
+        proj(&mut rv);
+        r = rv;
+        z = apply_precond(&r);
+        proj(&mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    let rnorm = dot(&r, &r).sqrt();
+    CgResult { x, iters: max_iters, residual: rnorm / bnorm, converged: rnorm <= tol * bnorm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::Mat;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cg_solves_spd_system() {
+        forall(8, |rng, _| {
+            let n = 4 + rng.below(12);
+            // SPD matrix B B^T + I.
+            let mut b = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    b[(i, j)] = rng.normal();
+                }
+            }
+            let mut a = b.matmul(&b.transpose());
+            for i in 0..n {
+                a[(i, i)] += 1.0;
+            }
+            let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let rhs = a.matvec(&xs);
+            let res = cg(&a, &rhs, None, false, 1e-12, 10 * n);
+            assert!(res.converged, "residual {}", res.residual);
+            for i in 0..n {
+                assert!((res.x[i] - xs[i]).abs() < 1e-6, "x[{i}]");
+            }
+        });
+    }
+
+    #[test]
+    fn cg_with_jacobi_preconditioner_converges_faster_or_equal() {
+        let mut rng = Rng::new(77);
+        let n = 32;
+        // Ill-conditioned diagonal + small coupling.
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0 + (i as f64) * 10.0;
+        }
+        for i in 0..n - 1 {
+            a[(i, i + 1)] = 0.1;
+            a[(i + 1, i)] = 0.1;
+        }
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let rhs = a.matvec(&xs);
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let plain = cg(&a, &rhs, None, false, 1e-10, 500);
+        let pre = cg(&a, &rhs, Some(&diag), false, 1e-10, 500);
+        assert!(plain.converged && pre.converged);
+        assert!(pre.iters <= plain.iters, "pre {} vs plain {}", pre.iters, plain.iters);
+    }
+
+    #[test]
+    fn cg_laplacian_with_projection() {
+        // Path graph Laplacian on 4 nodes; b orthogonal to ones.
+        let a = Mat::from_rows(vec![
+            vec![1.0, -1.0, 0.0, 0.0],
+            vec![-1.0, 2.0, -1.0, 0.0],
+            vec![0.0, -1.0, 2.0, -1.0],
+            vec![0.0, 0.0, -1.0, 1.0],
+        ]);
+        let b = vec![1.0, 0.0, 0.0, -1.0];
+        let res = cg(&a, &b, None, true, 1e-12, 200);
+        assert!(res.converged);
+        // Check A x = b up to the null space.
+        let ax = a.matvec(&res.x);
+        for i in 0..4 {
+            assert!((ax[i] - b[i]).abs() < 1e-8, "coord {i}: {} vs {}", ax[i], b[i]);
+        }
+        // Solution is mean-zero.
+        let mean: f64 = res.x.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-10);
+    }
+}

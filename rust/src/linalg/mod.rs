@@ -1,0 +1,15 @@
+//! Dense/sparse linear-algebra substrate built from scratch (no external
+//! BLAS/LAPACK): dense matrices, symmetric eigensolvers, CG, CountSketch.
+//!
+//! Everything downstream (sparsification quality checks, LRA baselines,
+//! spectral clustering, EMD-spectrum ground truth) sits on these.
+
+pub mod cg;
+pub mod eigen;
+pub mod mat;
+pub mod sketch;
+
+pub use cg::{cg, CgResult};
+pub use eigen::{block_power, jacobi_eigen, SymOp};
+pub use mat::{axpy, dot, norm, normalize, Mat};
+pub use sketch::CountSketch;

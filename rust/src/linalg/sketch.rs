@@ -1,0 +1,102 @@
+//! Sketching baselines: CountSketch (Clarkson-Woodruff 2013 input-sparsity
+//! transform) used as the **IS** baseline in the Fig. 3 low-rank
+//! approximation experiments, exactly as in the paper's §7 comparison.
+
+use crate::linalg::mat::Mat;
+use crate::util::rng::Rng;
+
+/// A CountSketch matrix `S in R^{s x n}`: each column has a single ±1 in a
+/// uniformly random row. Stored implicitly as (row index, sign) per column.
+#[derive(Clone, Debug)]
+pub struct CountSketch {
+    pub s: usize,
+    pub n: usize,
+    bucket: Vec<usize>,
+    sign: Vec<f64>,
+}
+
+impl CountSketch {
+    pub fn new(s: usize, n: usize, rng: &mut Rng) -> Self {
+        assert!(s > 0);
+        let bucket = (0..n).map(|_| rng.below(s)).collect();
+        let sign = (0..n)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        CountSketch { s, n, bucket, sign }
+    }
+
+    /// `S * A` for a dense `A (n x m)` in O(nnz(A)) time.
+    pub fn sketch(&self, a: &Mat) -> Mat {
+        assert_eq!(a.rows, self.n);
+        let mut out = Mat::zeros(self.s, a.cols);
+        for i in 0..a.rows {
+            let b = self.bucket[i];
+            let sg = self.sign[i];
+            let src = a.row(i);
+            let dst = out.row_mut(b);
+            for j in 0..a.cols {
+                dst[j] += sg * src[j];
+            }
+        }
+        out
+    }
+
+    /// Apply to a vector.
+    pub fn sketch_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut out = vec![0.0; self.s];
+        for i in 0..x.len() {
+            out[self.bucket[i]] += self.sign[i] * x[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::dot;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn sketch_matches_explicit_matrix() {
+        let mut rng = Rng::new(31);
+        let cs = CountSketch::new(4, 10, &mut rng);
+        // Build explicit S.
+        let mut s_mat = Mat::zeros(4, 10);
+        for j in 0..10 {
+            s_mat[(cs.bucket[j], j)] = cs.sign[j];
+        }
+        let mut a = Mat::zeros(10, 3);
+        for i in 0..10 {
+            for j in 0..3 {
+                a[(i, j)] = rng.normal();
+            }
+        }
+        let fast = cs.sketch(&a);
+        let slow = s_mat.matmul(&a);
+        assert!(fast.frob_dist_sq(&slow) < 1e-20);
+    }
+
+    #[test]
+    fn sketch_preserves_norms_in_expectation() {
+        // E[||Sx||^2] = ||x||^2 for CountSketch.
+        forall(4, |rng, _| {
+            let n = 64;
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let want = dot(&x, &x);
+            let trials = 300;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let cs = CountSketch::new(16, n, rng);
+                let y = cs.sketch_vec(&x);
+                acc += dot(&y, &y);
+            }
+            let got = acc / trials as f64;
+            assert!(
+                (got - want).abs() < 0.25 * want,
+                "E||Sx||^2 = {got}, want {want}"
+            );
+        });
+    }
+}

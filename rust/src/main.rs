@@ -1,0 +1,420 @@
+//! `kdem` — CLI launcher for the kernel-matrix algorithm suite.
+//!
+//! Every subcommand runs one of the paper's algorithms on a synthetic
+//! workload with explicit cost accounting, so the paper's tables can be
+//! regenerated from the shell. `kdem reproduce <experiment>` drives the
+//! per-figure harnesses (see EXPERIMENTS.md).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use kde_matrix::apps;
+use kde_matrix::graph::WGraph;
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::rng::Rng;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn backend_from_args(a: &Args) -> Arc<dyn KernelBackend> {
+    match a.str("backend", "cpu").as_str() {
+        "pjrt" => {
+            let dir = a.str("artifacts", "artifacts");
+            match PjrtBackend::new(dir) {
+                Ok(b) => b,
+                Err(e) => {
+                    eprintln!("PJRT backend unavailable ({e}); falling back to CPU");
+                    CpuBackend::new()
+                }
+            }
+        }
+        _ => CpuBackend::new(),
+    }
+}
+
+fn config_from_args(a: &Args) -> KdeConfig {
+    let kind = match a.str("estimator", "sampling").as_str() {
+        "naive" | "exact" => EstimatorKind::Naive,
+        "hbe" => EstimatorKind::Hbe {
+            tables: a.usize("hbe-tables", 32),
+            width: a.f64("hbe-width", 4.0) as f32,
+        },
+        _ => EstimatorKind::Sampling {
+            eps: a.f64("eps", 0.25),
+            tau: a.f64("tau", 0.05),
+        },
+    };
+    KdeConfig { kind, leaf_cutoff: a.usize("leaf-cutoff", 16), seed: a.usize("seed", 0x5EED) as u64 }
+}
+
+fn make_dataset(a: &Args, rng: &mut Rng) -> Arc<kde_matrix::kernel::Dataset> {
+    let n = a.usize("n", 1024);
+    let d = a.usize("d", 16);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).expect("unknown kernel");
+    let ds = match a.str("data", "mixture").as_str() {
+        "nested" => dataset::nested(n, rng).scaled(3.0),
+        "rings" => dataset::rings(n, rng).scaled(6.0),
+        "heavy" => dataset::heavy_tailed_mixture(n, d, a.usize("clusters", 10), rng)
+            .with_median_bandwidth(kernel, rng),
+        "clusterable" => dataset::clusterable(n, d, a.usize("clusters", 3), rng),
+        _ => dataset::gaussian_mixture(n, d, a.usize("clusters", 10), 2.0, 0.5, rng)
+            .with_median_bandwidth(kernel, rng),
+    };
+    Arc::new(ds)
+}
+
+fn cmd_info() {
+    println!("kdem — sub-quadratic kernel-matrix algorithms via KDE");
+    println!("(Bakshi, Indyk, Kacham, Silwal, Zhou 2022; three-layer Rust+JAX+Pallas)");
+    println!();
+    println!("subcommands:");
+    println!("  info                         this message");
+    println!("  check-runtime                load artifacts, verify PJRT vs CPU parity");
+    println!("  sparsify   --n --t           spectral sparsification (Thm 5.3)");
+    println!("  resparsify --n --t --t2      two-stage: Alg 5.1 + eff.-resistance stage (§5.1)");
+    println!("  solve      --n --t           Laplacian solve on the sparsifier (§5.1.1)");
+    println!("  lra        --n --rank        low-rank approximation (Cor 5.14)");
+    println!("  eigen      --n --t           top eigenvalue (Thm 5.22)");
+    println!("  spectrum   --n               EMD spectrum (Thm 5.17)");
+    println!("  cluster    --data nested     spectral clustering on sparsifier (§6.2)");
+    println!("  local      --n               local clustering (Thm 6.9)");
+    println!("  arboricity --n --m           arboricity estimation (Thm 6.15)");
+    println!("  triangles  --n               weighted triangle total (Thm 6.17)");
+    println!();
+    println!("common flags: --kernel laplacian|gaussian|exponential|rational_quadratic");
+    println!("              --estimator sampling|naive|hbe  --backend cpu|pjrt");
+    println!("              --n <points> --d <dims> --seed <u64>");
+}
+
+fn cmd_check_runtime(a: &Args) {
+    let dir = a.str("artifacts", "artifacts");
+    let pjrt = match PjrtBackend::new(&dir) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("FAIL: {e}");
+            std::process::exit(1);
+        }
+    };
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(7);
+    let d = 8;
+    let queries: Vec<f32> = (0..5 * d).map(|_| rng.normal() as f32).collect();
+    let data: Vec<f32> = (0..300 * d).map(|_| rng.normal() as f32).collect();
+    for k in kde_matrix::kernel::ALL_KERNELS {
+        let a_s = pjrt.sums(k, &queries, &data, d);
+        let b_s = cpu.sums(k, &queries, &data, d);
+        let mut worst = 0.0f64;
+        for (x, y) in a_s.iter().zip(&b_s) {
+            worst = worst.max((x - y).abs() / (1.0 + y.abs()));
+        }
+        println!("{:<22} parity rel-err {:.2e}  {}", k.name(), worst, if worst < 1e-4 { "OK" } else { "FAIL" });
+        if worst >= 1e-4 {
+            std::process::exit(1);
+        }
+    }
+    println!("runtime OK ({} PJRT executions)", pjrt.executions());
+}
+
+fn cmd_sparsify(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let t = a.usize("t", 20 * ds.n);
+    let r = apps::sparsify::sparsify(&prims, t, &mut rng);
+    let complete_edges = ds.n * (ds.n - 1) / 2;
+    println!(
+        "n={} samples={} distinct_edges={} reduction={:.1}x kde_queries={} kernel_evals={}",
+        ds.n,
+        r.samples,
+        r.distinct_edges,
+        complete_edges as f64 / r.distinct_edges as f64,
+        r.kde_queries,
+        r.kernel_evals
+    );
+    if a.bool("check") {
+        let err = apps::sparsify::spectral_error(&ds, kernel, &r.graph, 30, &mut rng);
+        println!("spectral_error={err:.4}");
+    }
+}
+
+fn cmd_resparsify(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let t = a.usize("t", 20 * ds.n);
+    let stage1 = apps::sparsify::sparsify(&prims, t, &mut rng);
+    let t2 = a.usize("t2", 4 * ds.n);
+    let stage2 = apps::resparsify::resparsify(&stage1.graph, t2, a.usize("jl", 24), &mut rng);
+    println!(
+        "n={} stage1_edges={} stage2_edges={} total_reduction={:.1}x",
+        ds.n,
+        stage1.distinct_edges,
+        stage2.num_edges(),
+        (ds.n * (ds.n - 1) / 2) as f64 / stage2.num_edges().max(1) as f64
+    );
+    if a.bool("check") {
+        let err1 = apps::sparsify::spectral_error(&ds, kernel, &stage1.graph, 20, &mut rng);
+        let err2 = apps::sparsify::spectral_error(&ds, kernel, &stage2, 20, &mut rng);
+        println!("spectral_error stage1={err1:.4} stage2={err2:.4}");
+    }
+}
+
+fn cmd_solve(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let t = a.usize("t", 20 * ds.n);
+    let sp = apps::sparsify::sparsify(&prims, t, &mut rng);
+    let mut b: Vec<f64> = (0..ds.n).map(|_| rng.normal()).collect();
+    let m = b.iter().sum::<f64>() / ds.n as f64;
+    for v in b.iter_mut() {
+        *v -= m;
+    }
+    let res = apps::solver::solve_laplacian(&sp.graph, &b, 1e-8, 5_000);
+    println!(
+        "n={} sparsifier_edges={} cg_iters={} residual={:.2e} converged={}",
+        ds.n, sp.distinct_edges, res.iters, res.residual, res.converged
+    );
+}
+
+fn cmd_lra(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let rank = a.usize("rank", 10);
+    let r = apps::lra::lra_kde(
+        &ds,
+        kernel,
+        rank,
+        a.usize("rows-factor", 25),
+        &config_from_args(a),
+        backend_from_args(a),
+        &mut rng,
+    );
+    println!(
+        "n={} rank={} sampled_rows={} kde_queries={} kernel_evals={} floats_stored={}",
+        ds.n, rank, r.sampled_rows, r.kde_queries, r.kernel_evals, r.floats_stored
+    );
+    if a.bool("check") {
+        let kmat = apps::lra::materialize_kernel_matrix(&ds, kernel);
+        let err = apps::lra::lra_error(&kmat, &r.v);
+        println!(
+            "frob_err={:.4e} rel={:.4}",
+            err.sqrt(),
+            (err / kmat.frob_norm_sq()).sqrt()
+        );
+    }
+}
+
+fn cmd_eigen(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let t = a.usize("t", 256);
+    let r = apps::eigen_top::eigen_top_direct(&ds, kernel, t, 300, &mut rng);
+    println!("n={} t={} lambda_est={:.4}", ds.n, r.submatrix_size, r.lambda);
+    if a.bool("check") {
+        let exact = apps::eigen_top::exact_top_eigenvalue(&ds, kernel, &mut rng);
+        println!(
+            "lambda_exact={:.4} rel_err={:.4}",
+            exact,
+            (r.lambda - exact).abs() / exact
+        );
+    }
+}
+
+fn cmd_spectrum(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let params = apps::spectrum::SpectrumParams {
+        vertices: a.usize("vertices", 24),
+        reps: a.usize("reps", 200),
+        ..Default::default()
+    };
+    let r = apps::spectrum::approximate_spectrum(&prims, &params, &mut rng);
+    println!(
+        "n={} walks={} kde_queries={} moments={:?}",
+        ds.n,
+        r.walks,
+        r.kde_queries,
+        r.moments.iter().map(|m| (m * 1e4).round() / 1e4).collect::<Vec<_>>()
+    );
+    if a.bool("check") {
+        let exact = apps::spectrum::exact_spectrum(&ds, kernel);
+        let emd = kde_matrix::util::stats::emd_1d(&r.eigenvalues, &exact);
+        println!("emd={emd:.4}");
+    }
+}
+
+fn cmd_cluster(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "gaussian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let t = a.usize("t", 40 * ds.n);
+    let sp = apps::sparsify::sparsify(&prims, t, &mut rng);
+    let k = a.usize("k", 2);
+    let labels = apps::cluster_spectral::spectral_cluster(&sp.graph, k, &mut rng);
+    if let Some(truth) = &ds.labels {
+        let acc = apps::cluster_spectral::clustering_accuracy(&labels, truth, k);
+        println!(
+            "n={} sparsifier_edges={} accuracy={:.4} kde_queries={}",
+            ds.n, sp.distinct_edges, acc, sp.kde_queries
+        );
+    } else {
+        println!("n={} sparsifier_edges={} (no ground-truth labels)", ds.n, sp.distinct_edges);
+    }
+}
+
+fn cmd_local(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let n = a.usize("n", 256);
+    let ds = Arc::new(dataset::clusterable(n, a.usize("d", 8), a.usize("clusters", 3), &mut rng));
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let params = apps::cluster_local::LocalClusterParams::for_n(n);
+    let labels = ds.labels.as_ref().unwrap();
+    let trials = a.usize("trials", 20);
+    let mut correct = 0;
+    for _ in 0..trials {
+        let u = rng.below(n);
+        let mut w = rng.below(n);
+        while w == u {
+            w = rng.below(n);
+        }
+        let out = apps::cluster_local::same_cluster(&prims, u, w, &params, &mut rng);
+        if out.same_cluster == (labels[u] == labels[w]) {
+            correct += 1;
+        }
+    }
+    println!(
+        "n={} trials={} correct={} walk_len={} samples_per_dist={}",
+        n, trials, correct, params.walk_len, params.samples
+    );
+}
+
+fn cmd_arboricity(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let m = a.usize("m", 20 * ds.n);
+    let r = apps::arboricity::arboricity_estimate(&prims, m, !a.bool("greedy"), &mut rng);
+    println!(
+        "n={} m={} density_est={:.4} sample_edges={} kde_queries={}",
+        ds.n, m, r.density, r.subsampled_graph_edges, r.kde_queries
+    );
+    if a.bool("check") {
+        let g = WGraph::complete_kernel_graph(&ds, kernel);
+        let exact = apps::arboricity::arboricity_exact(&g);
+        println!(
+            "density_exact={:.4} rel_err={:.4}",
+            exact,
+            (r.density - exact).abs() / exact
+        );
+    }
+}
+
+fn cmd_triangles(a: &Args) {
+    let mut rng = Rng::new(a.usize("seed", 1) as u64);
+    let ds = make_dataset(a, &mut rng);
+    let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
+    let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
+    let params = apps::triangles::TriangleParams {
+        edge_pool: a.usize("pool", 512),
+        reps: a.usize("reps", 32),
+    };
+    let r = apps::triangles::triangle_weight_estimate(&prims, &params, &mut rng);
+    println!(
+        "n={} estimate={:.4e} kde_queries={} kernel_evals={}",
+        ds.n, r.estimate, r.kde_queries, r.kernel_evals
+    );
+    if a.bool("check") {
+        let g = WGraph::complete_kernel_graph(&ds, kernel);
+        let exact = g.exact_triangle_weight();
+        println!(
+            "exact={:.4e} rel_err={:.4}",
+            exact,
+            (r.estimate - exact).abs() / exact
+        );
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("info");
+    let args = Args::parse(&argv[argv.len().min(1)..]);
+    match cmd {
+        "info" | "--help" | "-h" => cmd_info(),
+        "check-runtime" => cmd_check_runtime(&args),
+        "sparsify" => cmd_sparsify(&args),
+        "resparsify" => cmd_resparsify(&args),
+        "solve" => cmd_solve(&args),
+        "lra" => cmd_lra(&args),
+        "eigen" => cmd_eigen(&args),
+        "spectrum" => cmd_spectrum(&args),
+        "cluster" => cmd_cluster(&args),
+        "local" => cmd_local(&args),
+        "arboricity" => cmd_arboricity(&args),
+        "triangles" => cmd_triangles(&args),
+        other => {
+            eprintln!("unknown subcommand: {other}");
+            cmd_info();
+            std::process::exit(2);
+        }
+    }
+}

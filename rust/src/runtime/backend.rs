@@ -1,0 +1,126 @@
+//! The kernel-evaluation backend contract shared by the pure-Rust CPU path
+//! and the PJRT (AOT artifact) path.
+//!
+//! Every KDE estimator and every explicit row construction routes its bulk
+//! kernel evaluations through a `KernelBackend`, so the same algorithm code
+//! runs against either execution engine. Logical kernel-evaluation counts
+//! (the paper's §7 cost metric) are tracked here.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::kernel::Kernel;
+
+/// Batched kernel evaluation engine.
+///
+/// Layouts: `queries` is `b x d` row-major, `data` is `m x d` row-major.
+pub trait KernelBackend: Send + Sync {
+    /// `out[q] = sum_j k(queries[q], data[j])` — the KDE-sum primitive.
+    fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64>;
+
+    /// `out[q*m + j] = k(queries[q], data[j])` — the dense block primitive.
+    fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32>;
+
+    /// Logical kernel evaluations performed so far (b*m per call).
+    fn kernel_evals(&self) -> u64;
+
+    /// Human-readable engine name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference backend. The inner loops are the crate's hottest
+/// code; see EXPERIMENTS.md §Perf for the optimization log.
+pub struct CpuBackend {
+    evals: AtomicU64,
+}
+
+impl CpuBackend {
+    pub fn new() -> Arc<Self> {
+        Arc::new(CpuBackend { evals: AtomicU64::new(0) })
+    }
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        CpuBackend { evals: AtomicU64::new(0) }
+    }
+}
+
+impl KernelBackend for CpuBackend {
+    fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+        let mut out = vec![0.0f64; b];
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let mut acc = 0.0f64;
+            for x in data.chunks_exact(d) {
+                acc += kernel.eval(q, x) as f64;
+            }
+            out[qi] = acc;
+        }
+        out
+    }
+
+    fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+        let mut out = vec![0.0f32; b * m];
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let row = &mut out[qi * m..(qi + 1) * m];
+            for (j, x) in data.chunks_exact(d).enumerate() {
+                row[j] = kernel.eval(q, x);
+            }
+        }
+        out
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::ALL_KERNELS;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn sums_match_block_row_sums() {
+        forall(16, |rng, _| {
+            let d = 1 + rng.below(8);
+            let b = 1 + rng.below(4);
+            let m = 1 + rng.below(32);
+            let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+            let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let be = CpuBackend::new();
+            for k in ALL_KERNELS {
+                let sums = be.sums(k, &queries, &data, d);
+                let block = be.block(k, &queries, &data, d);
+                for q in 0..b {
+                    let want: f64 = block[q * m..(q + 1) * m].iter().map(|&v| v as f64).sum();
+                    assert!((sums[q] - want).abs() < 1e-4 * (1.0 + want));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn eval_counter_counts_pairs() {
+        let be = CpuBackend::new();
+        let q = vec![0.0f32; 3 * 2]; // b=3, d=2
+        let x = vec![0.0f32; 5 * 2]; // m=5
+        be.sums(Kernel::Gaussian, &q, &x, 2);
+        assert_eq!(be.kernel_evals(), 15);
+        be.block(Kernel::Gaussian, &q, &x, 2);
+        assert_eq!(be.kernel_evals(), 30);
+    }
+}

@@ -1,0 +1,9 @@
+//! Execution runtime: the `KernelBackend` contract, the pure-Rust CPU
+//! engine, and the PJRT engine that loads the AOT HLO-text artifacts
+//! produced by `python/compile/aot.py` (`make artifacts`).
+
+pub mod backend;
+pub mod pjrt;
+
+pub use backend::{CpuBackend, KernelBackend};
+pub use pjrt::{PjrtBackend, PjrtEngine};

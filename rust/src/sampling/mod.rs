@@ -1,0 +1,100 @@
+//! The paper's §4 algorithmic building blocks, each a thin layer over the
+//! multi-level KDE oracle:
+//!
+//! * [`vertex`]   — Algorithms 4.3 / 4.5 / 4.6: approximate degrees +
+//!   degree-proportional vertex sampling.
+//! * [`neighbor`] — Algorithm 4.11: weighted neighbor sampling by KDE tree
+//!   descent, with exact descent-probability recovery.
+//! * [`edge`]     — Algorithm 4.13: weighted edge sampling.
+//! * [`walk`]     — Algorithm 4.16: random walks on the kernel graph.
+//! * [`rownorm`]  — §5.2: squared-row-norm sampling via the `cX` trick.
+//!
+//! A [`Primitives`] bundle wires them together for the applications.
+
+pub mod edge;
+pub mod neighbor;
+pub mod rownorm;
+pub mod vertex;
+pub mod walk;
+
+pub use edge::{EdgeSample, EdgeSampler};
+pub use neighbor::{NeighborSample, NeighborSampler};
+pub use rownorm::RowNormSampler;
+pub use vertex::{DegreeSampler, PrefixSampler};
+pub use walk::RandomWalker;
+
+use std::sync::Arc;
+
+use crate::kde::multilevel::MultiLevelKde;
+use crate::kde::{KdeConfig, KdeCounters};
+use crate::kernel::{Dataset, Kernel};
+use crate::runtime::backend::KernelBackend;
+
+/// Ready-to-use bundle of all §4 primitives over one kernel graph.
+pub struct Primitives {
+    pub tree: Arc<MultiLevelKde>,
+    pub degrees: Arc<DegreeSampler>,
+    pub neighbors: Arc<NeighborSampler>,
+    pub edges: EdgeSampler,
+    pub walker: RandomWalker,
+    pub counters: Arc<KdeCounters>,
+}
+
+impl Primitives {
+    pub fn build(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: Arc<dyn KernelBackend>,
+    ) -> Self {
+        let counters = KdeCounters::new();
+        let tree = Arc::new(MultiLevelKde::build(
+            ds,
+            kernel,
+            cfg,
+            backend,
+            counters.clone(),
+        ));
+        let degrees = Arc::new(DegreeSampler::build(&tree));
+        let neighbors = Arc::new(NeighborSampler::new(tree.clone()));
+        let edges = EdgeSampler::new(degrees.clone(), neighbors.clone());
+        let walker = RandomWalker::new(neighbors.clone());
+        Primitives { tree, degrees, neighbors, edges, walker, counters }
+    }
+
+    pub fn n(&self) -> usize {
+        self.tree.ds.n
+    }
+
+    pub fn kde_queries(&self) -> u64 {
+        self.counters.queries()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn primitives_bundle_smoke() {
+        let mut rng = Rng::new(151);
+        let ds = Arc::new(gaussian_mixture(32, 3, 2, 1.0, 0.5, &mut rng));
+        let p = Primitives::build(
+            ds,
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+        );
+        assert_eq!(p.n(), 32);
+        assert!(p.kde_queries() >= 32, "degree build must issue n queries");
+        let (u, pu) = p.degrees.sample(&mut rng);
+        assert!(u < 32 && pu > 0.0);
+        let e = p.edges.sample(&mut rng).unwrap();
+        assert_ne!(e.u, e.v);
+        let end = p.walker.walk(0, 5, &mut rng);
+        assert!(end < 32);
+    }
+}

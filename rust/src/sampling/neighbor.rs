@@ -1,0 +1,328 @@
+//! Weighted neighbor edge sampling: Algorithm 4.11 / Theorem 4.12.
+//!
+//! Given a vertex `x_i`, sample a neighbor `v` with `Pr[v = x_k] ~
+//! k(x_i, x_k)` by descending the multi-level KDE tree: at each internal
+//! node query the two children's KDE oracles at `x_i` (subtracting the
+//! self-term when `i` falls inside a child's range) and branch
+//! proportionally. O(log n) KDE queries per sample; answers are memoized
+//! inside the tree so the *probability* of any concrete descent is a
+//! well-defined deterministic quantity — `neighbor_prob` recomputes it
+//! exactly, which Algorithm 5.1 (sparsification) requires.
+
+use std::sync::Arc;
+
+use crate::kde::multilevel::MultiLevelKde;
+use crate::util::rng::Rng;
+
+pub struct NeighborSampler {
+    pub tree: Arc<MultiLevelKde>,
+}
+
+/// Outcome of one neighbor-sampling descent.
+#[derive(Clone, Copy, Debug)]
+pub struct NeighborSample {
+    /// Sampled neighbor index (never equals the source).
+    pub neighbor: usize,
+    /// Exact probability the descent produced this neighbor (product of
+    /// branch probabilities under the memoized KDE answers).
+    pub prob: f64,
+}
+
+impl NeighborSampler {
+    pub fn new(tree: Arc<MultiLevelKde>) -> Self {
+        NeighborSampler { tree }
+    }
+
+    /// Mass of node `id`'s subset as seen from source `i`, self-excluded.
+    fn side_mass(&self, id: usize, i: usize) -> f64 {
+        let n = self.tree.node(id);
+        let mut v = self.tree.query_point(id, i);
+        if n.lo <= i && i < n.hi {
+            v -= 1.0; // remove k(x_i, x_i)
+        }
+        v.max(0.0)
+    }
+
+    /// Algorithm 4.11. Returns the sampled neighbor and its exact descent
+    /// probability. Returns `None` only in the degenerate n = 1 case.
+    pub fn sample(&self, i: usize, rng: &mut Rng) -> Option<NeighborSample> {
+        let mut id = self.tree.root();
+        if self.tree.node(id).hi - self.tree.node(id).lo <= 1 {
+            return None;
+        }
+        let mut prob = 1.0f64;
+        loop {
+            let node = self.tree.node(id);
+            let (Some(l), Some(r)) = (node.left, node.right) else {
+                debug_assert_ne!(node.lo, i, "descended into the source leaf");
+                return Some(NeighborSample { neighbor: node.lo, prob });
+            };
+            let a = self.side_mass(l, i);
+            let b = self.side_mass(r, i);
+            let total = a + b;
+            let (next, p) = if total <= 0.0 {
+                // All mass vanished under estimation noise: fall back to a
+                // size-proportional branch, excluding the source leaf.
+                let nl = self.tree.node(l);
+                let nr = self.tree.node(r);
+                let sl = (nl.hi - nl.lo - usize::from(nl.lo <= i && i < nl.hi)) as f64;
+                let sr = (nr.hi - nr.lo - usize::from(nr.lo <= i && i < nr.hi)) as f64;
+                if sl + sr <= 0.0 {
+                    return None;
+                }
+                if rng.f64() * (sl + sr) < sl {
+                    (l, sl / (sl + sr))
+                } else {
+                    (r, sr / (sl + sr))
+                }
+            } else if rng.f64() * total < a {
+                (l, a / total)
+            } else {
+                (r, b / total)
+            };
+            prob *= p;
+            id = next;
+        }
+    }
+
+    /// Deterministic probability that `sample(i)` returns `j` (the product
+    /// of branch probabilities along the root-to-j path, under the same
+    /// memoized KDE answers the sampler used). Algorithm 5.1 step (c)/(d).
+    pub fn neighbor_prob(&self, i: usize, j: usize) -> f64 {
+        assert_ne!(i, j, "a vertex is not its own neighbor");
+        let mut id = self.tree.root();
+        let mut prob = 1.0f64;
+        loop {
+            let node = self.tree.node(id);
+            let (Some(l), Some(r)) = (node.left, node.right) else {
+                debug_assert_eq!(node.lo, j);
+                return prob;
+            };
+            let a = self.side_mass(l, i);
+            let b = self.side_mass(r, i);
+            let total = a + b;
+            let nl = self.tree.node(l);
+            let goes_left = nl.lo <= j && j < nl.hi;
+            if total <= 0.0 {
+                let nr = self.tree.node(r);
+                let sl = (nl.hi - nl.lo - usize::from(nl.lo <= i && i < nl.hi)) as f64;
+                let sr = (nr.hi - nr.lo - usize::from(nr.lo <= i && i < nr.hi)) as f64;
+                let denom = sl + sr;
+                if denom <= 0.0 {
+                    return 0.0;
+                }
+                prob *= if goes_left { sl / denom } else { sr / denom };
+            } else {
+                prob *= if goes_left { a / total } else { b / total };
+            }
+            id = if goes_left { l } else { r };
+        }
+    }
+
+    /// Theorem 4.12's exact mode: rejection-sample against true kernel
+    /// weights to remove the estimator's TV error. The proposal is the tree
+    /// descent; accept with ratio true/(c * proposal). Also returns the
+    /// number of kernel evaluations spent (expected O(1/tau)).
+    pub fn sample_exact(
+        &self,
+        i: usize,
+        rng: &mut Rng,
+        max_rounds: usize,
+    ) -> Option<(usize, u64)> {
+        let ds = &self.tree.ds;
+        let kernel = self.tree.kernel;
+        // True neighbor mass of i (one extra linear pass amortized over
+        // many samples would be ideal; here we take the root KDE answer
+        // as the normalizer since it is cached).
+        let denom = (self.tree.query_point(self.tree.root(), i) - 1.0).max(1e-12);
+        let mut evals = 0u64;
+        for _ in 0..max_rounds {
+            let s = self.sample(i, rng)?;
+            let true_w = kernel.eval(ds.point(i), ds.point(s.neighbor)) as f64;
+            evals += 1;
+            let target = true_w / denom;
+            // Accept w.p. min(1, target / (c * proposal)); c=2 slack keeps
+            // the ratio <= 1 w.h.p. under (1 ± eps) estimates.
+            let ratio = target / (2.0 * s.prob);
+            if rng.f64() < ratio.min(1.0) {
+                return Some((s.neighbor, evals));
+            }
+        }
+        // Fall back to the proposal sample after max_rounds.
+        self.sample(i, rng).map(|s| (s.neighbor, evals))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kde::{KdeConfig, KdeCounters};
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+
+    fn build(n: usize, seed: u64, cfg: KdeConfig) -> NeighborSampler {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 4, 2, 1.5, 0.5, &mut rng));
+        let tree = Arc::new(MultiLevelKde::build(
+            ds,
+            Kernel::Laplacian,
+            &cfg,
+            CpuBackend::new(),
+            KdeCounters::new(),
+        ));
+        NeighborSampler::new(tree)
+    }
+
+    #[test]
+    fn never_samples_self() {
+        let s = build(31, 81, KdeConfig::exact());
+        let mut rng = Rng::new(83);
+        for i in [0usize, 7, 30] {
+            for _ in 0..200 {
+                let got = s.sample(i, &mut rng).unwrap();
+                assert_ne!(got.neighbor, i);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_tree_matches_true_edge_distribution() {
+        let s = build(32, 85, KdeConfig::exact());
+        let ds = &s.tree.ds;
+        let i = 5;
+        let mut rng = Rng::new(87);
+        let trials = 40_000;
+        let mut counts = vec![0f64; 32];
+        for _ in 0..trials {
+            counts[s.sample(i, &mut rng).unwrap().neighbor] += 1.0;
+        }
+        let mut want: Vec<f64> = (0..32)
+            .map(|j| {
+                if j == i {
+                    0.0
+                } else {
+                    Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64
+                }
+            })
+            .collect();
+        // TV distance between empirical and true neighbor distribution.
+        counts[i] = 1e-300;
+        want[i] = 1e-300;
+        let tv = crate::util::stats::tv_distance(&counts, &want);
+        assert!(tv < 0.03, "TV {tv}");
+    }
+
+    #[test]
+    fn reported_prob_matches_neighbor_prob() {
+        let s = build(24, 89, KdeConfig::exact());
+        let mut rng = Rng::new(91);
+        for _ in 0..100 {
+            let i = rng.below(24);
+            let got = s.sample(i, &mut rng).unwrap();
+            let recomputed = s.neighbor_prob(i, got.neighbor);
+            assert!(
+                (got.prob - recomputed).abs() < 1e-12 * (1.0 + got.prob),
+                "prob mismatch: {} vs {recomputed}",
+                got.prob
+            );
+        }
+    }
+
+    #[test]
+    fn neighbor_probs_sum_to_one() {
+        let s = build(20, 93, KdeConfig::exact());
+        for i in [0usize, 9, 19] {
+            let total: f64 = (0..20)
+                .filter(|&j| j != i)
+                .map(|j| s.neighbor_prob(i, j))
+                .sum();
+            assert!((total - 1.0).abs() < 1e-9, "source {i}: sum {total}");
+        }
+    }
+
+    #[test]
+    fn probs_consistent_under_sampling_estimator() {
+        // Even with a noisy estimator, memoization must make sample() and
+        // neighbor_prob() agree exactly.
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.5, tau: 0.3 },
+            ..Default::default()
+        };
+        let s = build(64, 95, cfg);
+        let mut rng = Rng::new(97);
+        for _ in 0..50 {
+            let i = rng.below(64);
+            let got = s.sample(i, &mut rng).unwrap();
+            let recomputed = s.neighbor_prob(i, got.neighbor);
+            assert!(
+                (got.prob - recomputed).abs() < 1e-12 * (1.0 + got.prob),
+                "memoized probs must be identical"
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_estimator_close_in_tv() {
+        // Theorem 4.12: TV distance O(eps) with eps' = eps / log n.
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.12, tau: 0.1 },
+            leaf_cutoff: 8,
+            seed: 0xAB,
+        };
+        let s = build(64, 99, cfg);
+        let ds = &s.tree.ds;
+        let i = 11;
+        let mut rng = Rng::new(101);
+        let trials = 30_000;
+        let mut counts = vec![0f64; 64];
+        for _ in 0..trials {
+            counts[s.sample(i, &mut rng).unwrap().neighbor] += 1.0;
+        }
+        let mut want: Vec<f64> = (0..64)
+            .map(|j| {
+                if j == i {
+                    1e-300
+                } else {
+                    Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64
+                }
+            })
+            .collect();
+        counts[i] = 1e-300;
+        let tv = crate::util::stats::tv_distance(&counts, &want);
+        want[i] = 0.0;
+        assert!(tv < 0.25, "TV {tv} too large for eps=0.12 sampling oracle");
+    }
+
+    #[test]
+    fn exact_mode_reduces_tv() {
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.4, tau: 0.1 },
+            leaf_cutoff: 4,
+            seed: 0xCD,
+        };
+        let s = build(48, 103, cfg);
+        let ds = &s.tree.ds;
+        let i = 3;
+        let mut rng = Rng::new(105);
+        let trials = 20_000;
+        let mut counts = vec![0f64; 48];
+        for _ in 0..trials {
+            let (j, _) = s.sample_exact(i, &mut rng, 32).unwrap();
+            counts[j] += 1.0;
+        }
+        let mut want: Vec<f64> = (0..48)
+            .map(|j| {
+                if j == i {
+                    1e-300
+                } else {
+                    Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64
+                }
+            })
+            .collect();
+        counts[i] = 1e-300;
+        let tv_exact = crate::util::stats::tv_distance(&counts, &want);
+        want[i] = 0.0;
+        assert!(tv_exact < 0.08, "rejection-corrected TV {tv_exact}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Squared-row-norm importance sampling on the kernel matrix (§5.2).
+//!
+//! For kernels with `k(x,y)^2 = k(cx, cy)` (Laplacian, exponential,
+//! Gaussian), the squared l2 norm of row i of K equals the degree of
+//! vertex i in the kernel graph of the *scaled* dataset `cX`, **plus** the
+//! self term `k(x_i,x_i)^2 = 1` — so n KDE queries on `cX` give every
+//! row norm, and the prefix sampler gives row samples forever after.
+
+use std::sync::Arc;
+
+use crate::kde::multilevel::MultiLevelKde;
+use crate::kde::{KdeConfig, KdeCounters};
+use crate::kernel::{Dataset, Kernel};
+use crate::runtime::backend::KernelBackend;
+use crate::sampling::vertex::PrefixSampler;
+
+pub struct RowNormSampler {
+    /// Estimated squared row norms of K (including the diagonal term).
+    pub row_norms_sq: Vec<f64>,
+    sampler: PrefixSampler,
+    pub build_queries: u64,
+}
+
+impl RowNormSampler {
+    /// Build via n KDE queries against the scaled dataset `cX`.
+    pub fn build(
+        ds: &Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: Arc<dyn KernelBackend>,
+        counters: Arc<KdeCounters>,
+    ) -> Self {
+        let c = kernel
+            .square_scale()
+            .expect("kernel does not satisfy k^2(x,y) = k(cx,cy)");
+        let scaled = Arc::new(ds.scaled(c));
+        let tree = MultiLevelKde::build(scaled, kernel, cfg, backend, counters.clone());
+        let before = counters.queries();
+        let n = ds.n;
+        let mut row_norms_sq = Vec::with_capacity(n);
+        for i in 0..n {
+            // Root query on cX at (c x_i) = sum_j k(x_i, x_j)^2, including
+            // the j = i self term (= 1), which IS part of the row norm.
+            let v = tree.query_point(tree.root(), i).max(1e-12);
+            row_norms_sq.push(v);
+        }
+        let build_queries = counters.queries() - before;
+        let sampler = PrefixSampler::new(&row_norms_sq);
+        RowNormSampler { row_norms_sq, sampler, build_queries }
+    }
+
+    /// Sample a row index with probability ~ ||K_i||_2^2; returns
+    /// `(row, probability)`.
+    pub fn sample(&self, rng: &mut crate::util::rng::Rng) -> (usize, f64) {
+        let i = self.sampler.sample(rng);
+        (i, self.sampler.prob(i))
+    }
+
+    pub fn prob(&self, i: usize) -> f64 {
+        self.sampler.prob(i)
+    }
+
+    /// Estimated ||K||_F^2 (sum of the row-norm estimates).
+    pub fn frob_norm_sq(&self) -> f64 {
+        self.sampler.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::rng::Rng;
+
+    fn exact_row_norm_sq(ds: &Dataset, k: Kernel, i: usize) -> f64 {
+        (0..ds.n)
+            .map(|j| {
+                let v = k.eval(ds.point(i), ds.point(j)) as f64;
+                v * v
+            })
+            .sum()
+    }
+
+    #[test]
+    fn exact_oracle_matches_true_row_norms() {
+        let mut rng = Rng::new(141);
+        let ds = Arc::new(gaussian_mixture(40, 4, 2, 1.0, 0.5, &mut rng));
+        for k in [Kernel::Laplacian, Kernel::Gaussian, Kernel::Exponential] {
+            let rn = RowNormSampler::build(
+                &ds,
+                k,
+                &KdeConfig::exact(),
+                CpuBackend::new(),
+                KdeCounters::new(),
+            );
+            for i in 0..ds.n {
+                let want = exact_row_norm_sq(&ds, k, i);
+                let got = rn.row_norms_sq[i];
+                assert!(
+                    (got - want).abs() < 1e-4 * (1.0 + want),
+                    "{:?} row {i}: {got} vs {want}",
+                    k
+                );
+            }
+            assert_eq!(rn.build_queries, 40, "n queries upfront");
+        }
+    }
+
+    #[test]
+    fn sampling_frequencies_match_row_norms() {
+        let mut rng = Rng::new(143);
+        let ds = Arc::new(gaussian_mixture(24, 3, 2, 1.5, 0.4, &mut rng));
+        let rn = RowNormSampler::build(
+            &ds,
+            Kernel::Gaussian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        let trials = 40_000;
+        let mut counts = vec![0f64; 24];
+        for _ in 0..trials {
+            counts[rn.sample(&mut rng).0] += 1.0;
+        }
+        let want: Vec<f64> = (0..24)
+            .map(|i| exact_row_norm_sq(&ds, Kernel::Gaussian, i))
+            .collect();
+        let tv = crate::util::stats::tv_distance(&counts, &want);
+        assert!(tv < 0.03, "row-norm sampling TV {tv}");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not satisfy")]
+    fn rational_quadratic_rejected() {
+        let mut rng = Rng::new(145);
+        let ds = Arc::new(gaussian_mixture(8, 2, 1, 0.0, 0.5, &mut rng));
+        let _ = RowNormSampler::build(
+            &ds,
+            Kernel::RationalQuadratic,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+    }
+}

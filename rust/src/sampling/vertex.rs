@@ -1,0 +1,211 @@
+//! Weighted vertex (degree) sampling: Algorithms 4.3, 4.5 and 4.6.
+//!
+//! Algorithm 4.3 computes `p_i ~ deg(x_i)` with one KDE query per vertex
+//! (subtracting the self term `k(x_i, x_i) = 1`), **once**; afterwards
+//! every sample costs O(log n) via the prefix-sum tree of Algorithm 4.5.
+
+use std::sync::Arc;
+
+use crate::kde::multilevel::MultiLevelKde;
+use crate::util::rng::Rng;
+
+/// Algorithm 4.5: sample an index proportional to a positive array, via
+/// binary descent on prefix sums (O(log n) per sample after O(n) build).
+#[derive(Clone, Debug)]
+pub struct PrefixSampler {
+    /// prefix[i] = sum of weights[0..i]; prefix[n] = total.
+    prefix: Vec<f64>,
+}
+
+impl PrefixSampler {
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        assert!(weights.iter().all(|&w| w >= 0.0), "negative weight");
+        let mut prefix = Vec::with_capacity(weights.len() + 1);
+        prefix.push(0.0);
+        let mut acc = 0.0;
+        for &w in weights {
+            acc += w;
+            prefix.push(acc);
+        }
+        assert!(acc > 0.0, "all-zero weights");
+        PrefixSampler { prefix }
+    }
+
+    pub fn total(&self) -> f64 {
+        *self.prefix.last().unwrap()
+    }
+
+    /// Weight of index `i`.
+    pub fn weight(&self, i: usize) -> f64 {
+        self.prefix[i + 1] - self.prefix[i]
+    }
+
+    /// Probability of sampling index `i`.
+    pub fn prob(&self, i: usize) -> f64 {
+        self.weight(i) / self.total()
+    }
+
+    /// Draw one index (binary search = the Algorithm 4.5 tree descent).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let target = rng.f64() * self.total();
+        // partition_point: first i with prefix[i+1] > target
+        let idx = self
+            .prefix
+            .partition_point(|&p| p <= target)
+            .saturating_sub(1);
+        idx.min(self.prefix.len() - 2)
+    }
+}
+
+/// Algorithm 4.3 + 4.6: approximate-degree array + degree-proportional
+/// vertex sampling over the kernel graph.
+pub struct DegreeSampler {
+    pub degrees: Vec<f64>,
+    sampler: PrefixSampler,
+    /// KDE queries spent building the degree array (exactly n).
+    pub build_queries: u64,
+}
+
+impl DegreeSampler {
+    /// Run Algorithm 4.3 against the multi-level KDE's root oracle: n KDE
+    /// queries, executed once.
+    pub fn build(tree: &Arc<MultiLevelKde>) -> Self {
+        let n = tree.ds.n;
+        let before = tree.counters.queries();
+        let mut degrees = Vec::with_capacity(n);
+        for i in 0..n {
+            // Root query includes the self term k(x_i, x_i) = 1: subtract.
+            let raw = tree.query_point(tree.root(), i) - 1.0;
+            // Estimates can dip <= 0 under sampling noise; floor at a tiny
+            // positive value so the distribution stays well-defined.
+            degrees.push(raw.max(1e-12));
+        }
+        let build_queries = tree.counters.queries() - before;
+        let sampler = PrefixSampler::new(&degrees);
+        DegreeSampler { degrees, sampler, build_queries }
+    }
+
+    /// Build directly from an exact degree array (test / baseline path).
+    pub fn from_degrees(degrees: Vec<f64>) -> Self {
+        let sampler = PrefixSampler::new(&degrees);
+        DegreeSampler { degrees, sampler, build_queries: 0 }
+    }
+
+    /// Sample a vertex; returns `(index, sampling probability)`.
+    pub fn sample(&self, rng: &mut Rng) -> (usize, f64) {
+        let i = self.sampler.sample(rng);
+        (i, self.sampler.prob(i))
+    }
+
+    /// Probability this sampler assigns to vertex `i`.
+    pub fn prob(&self, i: usize) -> f64 {
+        self.sampler.prob(i)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.sampler.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kde::{KdeConfig, KdeCounters};
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn prefix_sampler_matches_exact_categorical() {
+        forall(8, |rng, _| {
+            let n = 2 + rng.below(12);
+            let weights: Vec<f64> = (0..n).map(|_| rng.f64() + 0.01).collect();
+            let s = PrefixSampler::new(&weights);
+            let total: f64 = weights.iter().sum();
+            let trials = 30_000;
+            let mut counts = vec![0usize; n];
+            for _ in 0..trials {
+                counts[s.sample(rng)] += 1;
+            }
+            for i in 0..n {
+                let want = weights[i] / total;
+                let got = counts[i] as f64 / trials as f64;
+                assert!(
+                    (got - want).abs() < 0.02 + 0.15 * want,
+                    "idx {i}: got {got}, want {want}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prefix_sampler_skips_zero_weights() {
+        let mut rng = Rng::new(71);
+        let s = PrefixSampler::new(&[0.0, 1.0, 0.0, 2.0, 0.0]);
+        for _ in 0..2_000 {
+            let i = s.sample(&mut rng);
+            assert!(i == 1 || i == 3, "sampled zero-weight index {i}");
+        }
+    }
+
+    #[test]
+    fn prefix_probs_sum_to_one() {
+        let s = PrefixSampler::new(&[0.5, 1.5, 3.0]);
+        let total: f64 = (0..3).map(|i| s.prob(i)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!((s.prob(2) - 0.6).abs() < 1e-12);
+    }
+
+    fn build_tree(n: usize, seed: u64, cfg: KdeConfig) -> Arc<MultiLevelKde> {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 4, 2, 1.0, 0.5, &mut rng));
+        Arc::new(MultiLevelKde::build(
+            ds,
+            Kernel::Laplacian,
+            &cfg,
+            CpuBackend::new(),
+            KdeCounters::new(),
+        ))
+    }
+
+    #[test]
+    fn degrees_exact_with_naive_oracle() {
+        let tree = build_tree(40, 73, KdeConfig::exact());
+        let sampler = DegreeSampler::build(&tree);
+        for i in 0..40 {
+            let want = tree.ds.exact_degree(Kernel::Laplacian, i);
+            let got = sampler.degrees[i];
+            assert!(
+                (got - want).abs() < 1e-6 * (1.0 + want),
+                "deg {i}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn build_uses_exactly_n_queries() {
+        let tree = build_tree(33, 75, KdeConfig::exact());
+        let sampler = DegreeSampler::build(&tree);
+        assert_eq!(sampler.build_queries, 33, "Theorem 4.9: n queries upfront");
+    }
+
+    #[test]
+    fn degree_sampling_close_to_true_distribution() {
+        // Theorem 4.9: TV distance O(eps) from the true degree distribution.
+        let tree = build_tree(64, 77, KdeConfig::exact());
+        let sampler = DegreeSampler::build(&tree);
+        let mut rng = Rng::new(79);
+        let trials = 60_000;
+        let mut counts = vec![0f64; 64];
+        for _ in 0..trials {
+            counts[sampler.sample(&mut rng).0] += 1.0;
+        }
+        let true_deg: Vec<f64> = (0..64)
+            .map(|i| tree.ds.exact_degree(Kernel::Laplacian, i))
+            .collect();
+        let tv = crate::util::stats::tv_distance(&counts, &true_deg);
+        assert!(tv < 0.03, "TV distance {tv}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Random walks on the kernel graph: Algorithm 4.16 / Theorem 4.15.
+//!
+//! A T-step walk is T sequential neighbor samples; each step costs
+//! O(log n) KDE queries (cache-cold) and the endpoint distribution is
+//! within O(T eps) TV of the true walk distribution.
+
+use std::sync::Arc;
+
+use crate::sampling::neighbor::NeighborSampler;
+use crate::util::rng::Rng;
+
+pub struct RandomWalker {
+    pub neighbors: Arc<NeighborSampler>,
+    /// If true, apply Theorem 4.12's rejection correction at every step.
+    pub exact_steps: bool,
+}
+
+impl RandomWalker {
+    pub fn new(neighbors: Arc<NeighborSampler>) -> Self {
+        RandomWalker { neighbors, exact_steps: false }
+    }
+
+    pub fn exact(neighbors: Arc<NeighborSampler>) -> Self {
+        RandomWalker { neighbors, exact_steps: true }
+    }
+
+    /// Run a `t`-step walk from `start`; returns the endpoint.
+    pub fn walk(&self, start: usize, t: usize, rng: &mut Rng) -> usize {
+        let mut v = start;
+        for _ in 0..t {
+            v = if self.exact_steps {
+                match self.neighbors.sample_exact(v, rng, 16) {
+                    Some((j, _)) => j,
+                    None => v,
+                }
+            } else {
+                match self.neighbors.sample(v, rng) {
+                    Some(s) => s.neighbor,
+                    None => v,
+                }
+            };
+        }
+        v
+    }
+
+    /// Run a walk and return the full trajectory including the start.
+    pub fn trajectory(&self, start: usize, t: usize, rng: &mut Rng) -> Vec<usize> {
+        let mut path = Vec::with_capacity(t + 1);
+        let mut v = start;
+        path.push(v);
+        for _ in 0..t {
+            if let Some(s) = self.neighbors.sample(v, rng) {
+                v = s.neighbor;
+            }
+            path.push(v);
+        }
+        path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kde::multilevel::MultiLevelKde;
+    use crate::kde::{KdeConfig, KdeCounters};
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::linalg::Mat;
+    use crate::runtime::backend::CpuBackend;
+
+    fn build(n: usize, seed: u64) -> (RandomWalker, Arc<crate::kernel::Dataset>) {
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(n, 3, 2, 1.2, 0.5, &mut rng));
+        let tree = Arc::new(MultiLevelKde::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        ));
+        (RandomWalker::new(Arc::new(NeighborSampler::new(tree))), ds)
+    }
+
+    /// Exact t-step endpoint distribution via dense transition matrix.
+    fn exact_walk_dist(ds: &crate::kernel::Dataset, start: usize, t: usize) -> Vec<f64> {
+        let n = ds.n;
+        let mut m = Mat::zeros(n, n); // column-stochastic M = A D^{-1}
+        for j in 0..n {
+            let deg = ds.exact_degree(Kernel::Laplacian, j);
+            for i in 0..n {
+                if i != j {
+                    m[(i, j)] =
+                        Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64 / deg;
+                }
+            }
+        }
+        let mut p = vec![0.0; n];
+        p[start] = 1.0;
+        for _ in 0..t {
+            p = m.matvec(&p);
+        }
+        p
+    }
+
+    #[test]
+    fn trajectory_has_no_self_steps_and_right_length() {
+        let (w, _) = build(20, 121);
+        let mut rng = Rng::new(123);
+        let path = w.trajectory(4, 10, &mut rng);
+        assert_eq!(path.len(), 11);
+        for i in 0..10 {
+            assert_ne!(path[i], path[i + 1], "self step at {i}");
+        }
+    }
+
+    #[test]
+    fn endpoint_distribution_matches_exact_markov_chain() {
+        let (w, ds) = build(12, 125);
+        let start = 2;
+        let t = 3;
+        let want = exact_walk_dist(&ds, start, t);
+        let mut rng = Rng::new(127);
+        let trials = 60_000;
+        let mut counts = vec![0f64; ds.n];
+        for _ in 0..trials {
+            counts[w.walk(start, t, &mut rng)] += 1.0;
+        }
+        let tv = crate::util::stats::tv_distance(&counts, &want);
+        assert!(tv < 0.03, "walk endpoint TV {tv}");
+    }
+
+    #[test]
+    fn zero_step_walk_stays_put() {
+        let (w, _) = build(8, 129);
+        let mut rng = Rng::new(131);
+        assert_eq!(w.walk(5, 0, &mut rng), 5);
+    }
+}

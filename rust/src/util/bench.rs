@@ -1,0 +1,135 @@
+//! In-repo micro-benchmark harness (criterion is unavailable in the offline
+//! registry — see DESIGN.md §3).
+//!
+//! Usage pattern inside a `harness = false` bench target:
+//!
+//! ```ignore
+//! let mut b = BenchSuite::new("bench_kde");
+//! b.bench("sampling_kde_query/n=4096", || { /* work */ });
+//! b.finish();
+//! ```
+//!
+//! Each case is warmed up, then timed over enough iterations to pass a
+//! minimum measuring window; mean / p50 / p95 per-iteration times are
+//! printed as aligned table rows so `cargo bench` output reads like the
+//! paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// One measured benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+/// Collects and prints benchmark cases.
+pub struct BenchSuite {
+    suite: String,
+    results: Vec<BenchResult>,
+    /// Minimum total measurement window per case.
+    pub min_window: Duration,
+    /// Hard cap on sample count per case.
+    pub max_samples: u64,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        println!("\n== {suite} ==");
+        println!(
+            "{:<56} {:>10} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "p95"
+        );
+        BenchSuite {
+            suite: suite.to_string(),
+            results: Vec::new(),
+            min_window: Duration::from_millis(300),
+            max_samples: 200,
+        }
+    }
+
+    /// Time `f`, printing one row. Returns per-iteration mean in ns.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> f64 {
+        // Warmup: one untimed run.
+        f();
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.min_window && (samples.len() as u64) < self.max_samples {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let mean = crate::util::stats::mean(&samples);
+        let p50 = crate::util::stats::percentile(&samples, 50.0);
+        let p95 = crate::util::stats::percentile(&samples, 95.0);
+        println!(
+            "{:<56} {:>10} {:>12} {:>12} {:>12}",
+            name,
+            samples.len(),
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p95)
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+        });
+        mean
+    }
+
+    /// Print a free-form annotation row (e.g. KDE-query counts for Table 2).
+    pub fn note(&mut self, text: &str) {
+        println!("   . {text}");
+    }
+
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("== {} done ({} cases) ==\n", self.suite, self.results.len());
+        self.results
+    }
+}
+
+/// Human-format a nanosecond quantity.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut suite = BenchSuite::new("selftest");
+        suite.min_window = Duration::from_millis(5);
+        let mut acc = 0u64;
+        let mean = suite.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(mean >= 0.0);
+        let results = suite.finish();
+        assert_eq!(results.len(), 1);
+        assert!(results[0].iters >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+}

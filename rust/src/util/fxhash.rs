@@ -1,0 +1,85 @@
+//! Tiny Fx-style hasher (rustc's FxHash algorithm) for hot-path hash maps
+//! keyed by small integers: the multi-level KDE answer cache and graph
+//! edge deduplication. SipHash (std default) costs ~10x more per lookup
+//! for these keys — see EXPERIMENTS.md §Perf.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_basics() {
+        let mut m: FxHashMap<(u32, u32), f64> = FxHashMap::default();
+        for i in 0..1000u32 {
+            m.insert((i, i * 7), i as f64);
+        }
+        assert_eq!(m.len(), 1000);
+        for i in 0..1000u32 {
+            assert_eq!(m.get(&(i, i * 7)), Some(&(i as f64)));
+        }
+        assert_eq!(m.get(&(5, 5)), None);
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes_mostly() {
+        use std::hash::{BuildHasher, Hash};
+        let bh = FxBuildHasher::default();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10_000u64 {
+            let mut h = bh.build_hasher();
+            i.hash(&mut h);
+            seen.insert(h.finish());
+        }
+        assert!(seen.len() > 9_990, "too many collisions: {}", seen.len());
+    }
+}

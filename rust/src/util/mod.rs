@@ -1,0 +1,45 @@
+//! Self-contained utility substrate: PRNG, statistics, micro-bench harness,
+//! property-test driver, CSV emission.
+//!
+//! These exist because the offline crate registry only carries the `xla`
+//! closure (+ `anyhow`); see DESIGN.md §3 for the substitution table.
+
+pub mod bench;
+pub mod fxhash;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows of f64 columns as a CSV file with a header line.
+/// Used by the figure-regenerating examples (Fig. 3b/3d scatter data etc.).
+pub fn write_csv<P: AsRef<Path>>(
+    path: P,
+    header: &[&str],
+    rows: &[Vec<f64>],
+) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("kdem_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        super::write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, 4.5]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n"));
+        assert!(text.contains("3.5,4.5"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Minimal property-testing driver (proptest is unavailable offline —
+//! DESIGN.md §3).
+//!
+//! `forall(cases, |rng, case| ...)` runs a seeded generator/checker loop;
+//! on failure it panics with the failing case index and seed so the exact
+//! case reproduces with `PROP_SEED=<seed>`.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (overridable via env `PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `check(rng, case_index)` for `cases` seeded cases. The closure should
+/// generate its own inputs from `rng` and assert its property.
+pub fn forall<F: FnMut(&mut Rng, usize)>(cases: usize, mut check: F) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(case as u64 * 0x9E37_79B9));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check(&mut rng, case)
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {case} (PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        forall(16, |rng, _| {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            ran += 1;
+        });
+        assert_eq!(ran, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_case() {
+        forall(8, |rng, _| {
+            assert!(rng.f64() < 0.0, "impossible");
+        });
+    }
+}

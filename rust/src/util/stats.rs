@@ -1,0 +1,125 @@
+//! Small statistics helpers: summaries, percentiles, 1-D earth-mover
+//! distance, total-variation distance.
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Percentile via nearest-rank on a *sorted copy*; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// 1-D earth-mover distance between two equal-size multisets: the optimal
+/// matching in 1-D is the sorted matching, so EMD = mean |a_(i) - b_(i)|
+/// (Eq. 2 of the paper normalized by n so that `EMD <= eps` is scale-free,
+/// matching Theorem 5.17's statement for n eigenvalues in [0, 2]).
+pub fn emd_1d(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "EMD needs equal-size multisets");
+    assert!(!a.is_empty());
+    let mut sa = a.to_vec();
+    let mut sb = b.to_vec();
+    sa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    sb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    sa.iter()
+        .zip(&sb)
+        .map(|(x, y)| (x - y).abs())
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Total-variation distance between two discrete distributions given as
+/// unnormalized weight vectors of equal length.
+pub fn tv_distance(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let sp: f64 = p.iter().sum();
+    let sq: f64 = q.iter().sum();
+    assert!(sp > 0.0 && sq > 0.0);
+    0.5 * p
+        .iter()
+        .zip(q)
+        .map(|(a, b)| (a / sp - b / sq).abs())
+        .sum::<f64>()
+}
+
+/// Relative error |got - want| / |want| (0 when both are 0).
+pub fn rel_err(got: f64, want: f64) -> f64 {
+    if want == 0.0 {
+        if got == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (got - want).abs() / want.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_ordering() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn emd_identical_is_zero() {
+        let a = [0.3, 0.7, 0.1];
+        assert_eq!(emd_1d(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn emd_sorted_matching() {
+        // {0, 1} vs {1, 0} -> zero after sorting.
+        assert_eq!(emd_1d(&[0.0, 1.0], &[1.0, 0.0]), 0.0);
+        // {0,0} vs {1,1} -> 1.0 mean move.
+        assert!((emd_1d(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn emd_is_metric_like() {
+        let a = [0.1, 0.5, 0.9];
+        let b = [0.2, 0.4, 1.0];
+        let c = [0.0, 0.6, 0.8];
+        let (ab, bc, ac) = (emd_1d(&a, &b), emd_1d(&b, &c), emd_1d(&a, &c));
+        assert!(ab >= 0.0 && bc >= 0.0);
+        assert!(ac <= ab + bc + 1e-12, "triangle inequality");
+    }
+
+    #[test]
+    fn tv_basics() {
+        assert_eq!(tv_distance(&[1.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert!((tv_distance(&[1.0, 0.0], &[0.0, 1.0]) - 1.0).abs() < 1e-12);
+        // Unnormalized inputs are normalized first.
+        assert_eq!(tv_distance(&[2.0, 2.0], &[5.0, 5.0]), 0.0);
+    }
+}

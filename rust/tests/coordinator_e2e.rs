@@ -1,0 +1,116 @@
+//! Coordinator end-to-end: the batching KDE service under concurrent
+//! client load, on both backends.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kde_matrix::coordinator::{BatcherConfig, KdeService};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::util::rng::Rng;
+
+fn exact(ds: &kde_matrix::kernel::Dataset, k: Kernel, y: &[f32]) -> f64 {
+    (0..ds.n).map(|j| k.eval(ds.point(j), y) as f64).sum()
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let mut rng = Rng::new(501);
+    let ds = Arc::new(dataset::gaussian_mixture(256, 8, 3, 1.0, 0.5, &mut rng));
+    let svc = Arc::new(KdeService::start(
+        vec![(Kernel::Laplacian, ds.clone())],
+        CpuBackend::new(),
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(300),
+            workers: 4,
+        },
+    ));
+    let mut handles = Vec::new();
+    for c in 0..8u64 {
+        let svc = svc.clone();
+        let ds = ds.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(600 + c);
+            for _ in 0..50 {
+                let i = rng.below(ds.n);
+                let got = svc.query(0, ds.point(i).to_vec());
+                let want = exact(&ds, Kernel::Laplacian, ds.point(i));
+                assert!(
+                    (got - want).abs() < 1e-6 * (1.0 + want),
+                    "client {c}: {got} vs {want}"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        svc.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        8 * 50
+    );
+    // Concurrency should produce real batching.
+    assert!(
+        svc.metrics.mean_batch_occupancy() > 1.2,
+        "occupancy {}",
+        svc.metrics.mean_batch_occupancy()
+    );
+}
+
+#[test]
+fn service_on_pjrt_backend() {
+    let Ok(pjrt) = PjrtBackend::new("artifacts") else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rng = Rng::new(503);
+    let ds = Arc::new(dataset::gaussian_mixture(300, 8, 2, 1.0, 0.5, &mut rng));
+    let svc = KdeService::start(
+        vec![(Kernel::Gaussian, ds.clone())],
+        pjrt,
+        BatcherConfig::default(),
+    );
+    for i in [0usize, 100, 299] {
+        let got = svc.query(0, ds.point(i).to_vec());
+        let want = exact(&ds, Kernel::Gaussian, ds.point(i));
+        assert!(
+            (got - want).abs() < 1e-3 * (1.0 + want),
+            "pjrt service {got} vs {want}"
+        );
+    }
+    println!("pjrt service metrics: {}", svc.metrics.summary());
+    svc.shutdown();
+}
+
+#[test]
+fn throughput_improves_with_batching() {
+    // Same load, batch=1 vs batch=64: batched should not be slower.
+    let mut rng = Rng::new(505);
+    let ds = Arc::new(dataset::gaussian_mixture(512, 8, 3, 1.0, 0.5, &mut rng));
+    let load = 256usize;
+    let run = |max_batch: usize| -> f64 {
+        let svc = Arc::new(KdeService::start(
+            vec![(Kernel::Laplacian, ds.clone())],
+            CpuBackend::new(),
+            BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                workers: 2,
+            },
+        ));
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..load)
+            .map(|i| svc.submit(0, ds.point(i % ds.n).to_vec()))
+            .collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+        t0.elapsed().as_secs_f64()
+    };
+    let t1 = run(1);
+    let t64 = run(64);
+    println!("batch=1: {t1:.3}s, batch=64: {t64:.3}s");
+    assert!(t64 < t1 * 2.0, "batching regressed: {t64} vs {t1}");
+}

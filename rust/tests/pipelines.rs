@@ -1,0 +1,214 @@
+//! Cross-module integration tests: full paper pipelines on small datasets,
+//! CPU backend (fast; PJRT coverage lives in pjrt_parity.rs).
+
+use std::sync::Arc;
+
+use kde_matrix::apps;
+use kde_matrix::graph::WGraph;
+use kde_matrix::kde::{EstimatorKind, KdeConfig};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::rng::Rng;
+use kde_matrix::util::stats::emd_1d;
+
+fn sampling_cfg() -> KdeConfig {
+    KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.25, tau: 0.1 },
+        leaf_cutoff: 16,
+        seed: 0xBEEF,
+    }
+}
+
+#[test]
+fn sparsify_then_solve_then_cluster() {
+    // One primitives build feeding three applications, as a user would.
+    let mut rng = Rng::new(401);
+    let ds = Arc::new(dataset::nested(128, &mut rng).scaled(3.0));
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Gaussian,
+        &sampling_cfg(),
+        CpuBackend::new(),
+    );
+    // 1. sparsify
+    let sp = apps::sparsify::sparsify(&prims, 12_000, &mut rng);
+    assert!(sp.distinct_edges < 128 * 127 / 2);
+    // 2. solve a Laplacian system on the sparsifier
+    let mut b: Vec<f64> = (0..128).map(|_| rng.normal()).collect();
+    let mean = b.iter().sum::<f64>() / 128.0;
+    for v in b.iter_mut() {
+        *v -= mean;
+    }
+    let solve = apps::solver::solve_laplacian(&sp.graph, &b, 1e-8, 4_000);
+    assert!(solve.converged, "residual {}", solve.residual);
+    // 3. spectral clustering on the sparsifier recovers the two clusters
+    let labels = apps::cluster_spectral::spectral_cluster(&sp.graph, 2, &mut rng);
+    let acc = apps::cluster_spectral::clustering_accuracy(
+        &labels,
+        ds.labels.as_ref().unwrap(),
+        2,
+    );
+    assert!(acc > 0.95, "nested clustering accuracy on sparsifier: {acc}");
+}
+
+#[test]
+fn lra_pipeline_with_sampling_oracle() {
+    let mut rng = Rng::new(403);
+    let ds = Arc::new(dataset::gaussian_mixture(128, 8, 4, 2.0, 0.4, &mut rng));
+    let kmat = apps::lra::materialize_kernel_matrix(&ds, Kernel::Laplacian);
+    // Wider-eps sampling oracle: at n = 128 the default config degenerates
+    // to a near-full sample and the o(n^2) claim is vacuous.
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.5, tau: 0.3 },
+        leaf_cutoff: 16,
+        seed: 0xBEEF,
+    };
+    let r = apps::lra::lra_kde(
+        &ds,
+        Kernel::Laplacian,
+        5,
+        8,
+        &cfg,
+        CpuBackend::new(),
+        &mut rng,
+    );
+    let err = apps::lra::lra_error(&kmat, &r.v);
+    let opt = apps::lra::optimal_error(&kmat, 5);
+    let frob = kmat.frob_norm_sq();
+    assert!(
+        err <= opt + 0.2 * frob,
+        "additive-error bound: err {err}, opt {opt}, ||K||_F^2 {frob}"
+    );
+    // KDE path must beat full materialization on kernel evals.
+    assert!(
+        r.kernel_evals < (128 * 128) as u64,
+        "evals {}",
+        r.kernel_evals
+    );
+}
+
+#[test]
+fn spectrum_and_eigen_consistency() {
+    // The EMD spectrum's largest normalized-Laplacian eigenvalue and the
+    // top kernel eigenvalue must both be sane on the same dataset.
+    let mut rng = Rng::new(405);
+    let ds = Arc::new(dataset::gaussian_mixture(96, 4, 2, 1.0, 0.5, &mut rng));
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        CpuBackend::new(),
+    );
+    let params = apps::spectrum::SpectrumParams {
+        vertices: 32,
+        reps: 200,
+        ..Default::default()
+    };
+    let spec = apps::spectrum::approximate_spectrum(&prims, &params, &mut rng);
+    let exact = apps::spectrum::exact_spectrum(&ds, Kernel::Laplacian);
+    let emd = emd_1d(&spec.eigenvalues, &exact);
+    assert!(emd < 0.25, "spectrum EMD {emd}");
+
+    let eig = apps::eigen_top::eigen_top_direct(&ds, Kernel::Laplacian, 48, 200, &mut rng);
+    let eig_exact = apps::eigen_top::exact_top_eigenvalue(&ds, Kernel::Laplacian, &mut rng);
+    assert!(
+        (eig.lambda - eig_exact).abs() / eig_exact < 0.25,
+        "top eig {} vs {eig_exact}",
+        eig.lambda
+    );
+}
+
+#[test]
+fn graph_apps_agree_with_exact_baselines() {
+    let mut rng = Rng::new(407);
+    let ds = Arc::new(dataset::gaussian_mixture(48, 3, 2, 1.5, 0.4, &mut rng));
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        CpuBackend::new(),
+    );
+    let g = WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+
+    // triangles
+    let tri_exact = g.exact_triangle_weight();
+    let tri = apps::triangles::triangle_weight_estimate(
+        &prims,
+        &apps::triangles::TriangleParams { edge_pool: 600, reps: 48 },
+        &mut rng,
+    );
+    assert!(
+        (tri.estimate - tri_exact).abs() / tri_exact < 0.15,
+        "triangles {} vs {tri_exact}",
+        tri.estimate
+    );
+
+    // arboricity
+    let arb_exact = apps::arboricity::arboricity_exact(&g);
+    let arb = apps::arboricity::arboricity_estimate(&prims, 10_000, true, &mut rng);
+    assert!(
+        (arb.density - arb_exact).abs() / arb_exact < 0.15,
+        "arboricity {} vs {arb_exact}",
+        arb.density
+    );
+}
+
+#[test]
+fn local_clustering_pipeline() {
+    let mut rng = Rng::new(409);
+    let ds = Arc::new(dataset::clusterable(128, 6, 2, &mut rng));
+    let labels = ds.labels.clone().unwrap();
+    let prims = Primitives::build(
+        ds,
+        Kernel::Laplacian,
+        &sampling_cfg(),
+        CpuBackend::new(),
+    );
+    let params = apps::cluster_local::LocalClusterParams::for_n(128);
+    let mut correct = 0;
+    let trials = 12;
+    for t in 0..trials {
+        let u = (t * 11) % 128;
+        let w = (t * 17 + 1) % 128;
+        if u == w {
+            correct += 1;
+            continue;
+        }
+        let out = apps::cluster_local::same_cluster(&prims, u, w, &params, &mut rng);
+        if out.same_cluster == (labels[u] == labels[w]) {
+            correct += 1;
+        }
+    }
+    assert!(correct >= trials - 1, "local clustering {correct}/{trials}");
+}
+
+#[test]
+fn hbe_estimator_powers_the_primitives() {
+    // The HBE oracle slot must work end-to-end (Laplacian kernel).
+    let mut rng = Rng::new(411);
+    let ds = Arc::new(dataset::gaussian_mixture(96, 4, 1, 0.0, 0.4, &mut rng));
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig {
+            kind: EstimatorKind::Hbe { tables: 40, width: 5.0 },
+            leaf_cutoff: 16,
+            seed: 0xFACE,
+        },
+        CpuBackend::new(),
+    );
+    // degrees close to exact
+    let mut worst: f64 = 0.0;
+    for i in (0..96).step_by(7) {
+        let want = ds.exact_degree(Kernel::Laplacian, i);
+        let got = prims.degrees.degrees[i];
+        worst = worst.max((got - want).abs() / want);
+    }
+    assert!(worst < 0.35, "HBE degree worst rel err {worst}");
+    // sparsifier still consistent (importance weights fix proposal noise)
+    let sp = apps::sparsify::sparsify(&prims, 5_000, &mut rng);
+    let err =
+        apps::sparsify::spectral_error(&ds, Kernel::Laplacian, &sp.graph, 10, &mut rng);
+    assert!(err < 0.6, "HBE-driven sparsifier spectral error {err}");
+}

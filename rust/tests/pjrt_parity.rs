@@ -1,0 +1,157 @@
+//! PJRT-vs-CPU backend parity: the AOT artifacts (Pallas -> HLO text ->
+//! PJRT CPU) must produce the same numbers as the pure-Rust backend.
+//!
+//! Requires `make artifacts` to have run; tests skip (with a notice) if the
+//! artifacts are missing so `cargo test` stays green in a fresh checkout.
+
+use std::sync::Arc;
+
+use kde_matrix::kde::{KdeConfig, KdeCounters};
+use kde_matrix::kde::estimators::NaiveKde;
+use kde_matrix::kde::Kde;
+use kde_matrix::kernel::{dataset, Kernel, ALL_KERNELS};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::util::rng::Rng;
+
+fn pjrt() -> Option<Arc<PjrtBackend>> {
+    match PjrtBackend::new("artifacts") {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("skipping PJRT test: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn missing_artifacts_is_a_clean_error() {
+    let msg = match PjrtBackend::new("/nonexistent/artifacts") {
+        Ok(_) => panic!("must not succeed without artifacts"),
+        Err(e) => format!("{e}"),
+    };
+    assert!(
+        msg.contains("artifacts not built") && msg.contains("make artifacts"),
+        "error must tell the user what to run: {msg}"
+    );
+}
+
+#[test]
+fn sums_parity_all_kernels() {
+    let Some(pjrt) = pjrt() else { return };
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(301);
+    for &(b, m, d) in &[(1usize, 10usize, 3usize), (5, 300, 8), (64, 1024, 64), (70, 1500, 17)] {
+        let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        for k in ALL_KERNELS {
+            let got = pjrt.sums(k, &queries, &data, d);
+            let want = cpu.sums(k, &queries, &data, d);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (g - w).abs() < 2e-3 * (1.0 + w.abs()),
+                    "{:?} b={b} m={m} d={d} query {i}: pjrt {g} vs cpu {w}",
+                    k
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn block_parity_all_kernels() {
+    let Some(pjrt) = pjrt() else { return };
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(303);
+    let (b, m, d) = (7usize, 200usize, 5usize);
+    let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    for k in ALL_KERNELS {
+        let got = pjrt.block(k, &queries, &data, d);
+        let want = cpu.block(k, &queries, &data, d);
+        assert_eq!(got.len(), want.len());
+        for i in 0..got.len() {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-4 * (1.0 + want[i].abs()),
+                "{:?} entry {i}: {} vs {}",
+                k,
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn padding_does_not_leak_mass() {
+    // Data sizes straddling tile boundaries must give identical sums.
+    let Some(pjrt) = pjrt() else { return };
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(305);
+    let d = 4;
+    let q: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    for m in [1usize, 1023, 1024, 1025, 2048, 3000] {
+        let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let got = pjrt.sums(Kernel::Laplacian, &q, &data, d)[0];
+        let want = cpu.sums(Kernel::Laplacian, &q, &data, d)[0];
+        assert!(
+            (got - want).abs() < 2e-3 * (1.0 + want),
+            "m={m}: pjrt {got} vs cpu {want}"
+        );
+    }
+}
+
+#[test]
+fn kde_estimator_runs_on_pjrt_backend() {
+    // The same estimator code must run against the artifact path.
+    let Some(pjrt) = pjrt() else { return };
+    let mut rng = Rng::new(307);
+    let ds = Arc::new(dataset::gaussian_mixture(200, 6, 2, 1.0, 0.5, &mut rng));
+    let counters = KdeCounters::new();
+    let kde = NaiveKde::new(
+        ds.clone(),
+        Kernel::Gaussian,
+        0,
+        200,
+        pjrt.clone(),
+        counters,
+    );
+    let got = kde.query(ds.point(3));
+    let want: f64 = (0..200)
+        .map(|j| Kernel::Gaussian.eval(ds.point(j), ds.point(3)) as f64)
+        .sum();
+    assert!(
+        (got - want).abs() < 1e-3 * (1.0 + want),
+        "pjrt-backed KDE {got} vs exact {want}"
+    );
+}
+
+#[test]
+fn full_primitives_pipeline_on_pjrt() {
+    // End-to-end: primitives + sparsification running entirely on the
+    // AOT artifact path.
+    let Some(pjrt) = pjrt() else { return };
+    let mut rng = Rng::new(309);
+    let ds = Arc::new(dataset::gaussian_mixture(96, 6, 2, 0.8, 0.5, &mut rng));
+    let prims = kde_matrix::sampling::Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig {
+            kind: kde_matrix::kde::EstimatorKind::Sampling { eps: 0.4, tau: 0.2 },
+            leaf_cutoff: 16,
+            seed: 0xFE,
+        },
+        pjrt.clone(),
+    );
+    let sp = kde_matrix::apps::sparsify::sparsify(&prims, 3_000, &mut rng);
+    assert!(sp.distinct_edges > 0);
+    let err = kde_matrix::apps::sparsify::spectral_error(
+        &ds,
+        Kernel::Laplacian,
+        &sp.graph,
+        10,
+        &mut rng,
+    );
+    assert!(err < 0.6, "pjrt pipeline spectral error {err}");
+    assert!(pjrt.executions() > 0, "pipeline must actually hit PJRT");
+}
