@@ -13,15 +13,13 @@
 //!   f32 (verified in python/tests/test_kernel.py and here);
 //! * feature dimension must be <= D; columns are zero-padded (distances
 //!   are unaffected).
-
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::kernel::Kernel;
-use crate::runtime::backend::KernelBackend;
+//!
+//! The engine itself is gated behind the `xla` cargo feature because the
+//! `xla` crate only exists in the internal offline registry. Without the
+//! feature a stub with the same API is compiled whose constructors always
+//! fail with an actionable error, so callers' fallback paths (every caller
+//! already handles `PjrtBackend::new` failing when artifacts are missing)
+//! degrade gracefully to the CPU/tiled backends.
 
 /// AOT interface shapes — keep in sync with python/compile/model.py.
 pub const AOT_B: usize = 64;
@@ -30,188 +28,297 @@ pub const AOT_D: usize = 64;
 /// Far-point coordinate used for data padding.
 pub const FAR: f32 = 1.0e6;
 
-/// Which artifact entry to execute.
-#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
-enum Entry {
-    Sums(Kernel),
-    Block(Kernel),
-}
-
-impl Entry {
-    fn file_stem(self) -> String {
-        match self {
-            Entry::Sums(k) => format!("kde_sums_{}", k.name()),
-            Entry::Block(k) => format!("kernel_block_{}", k.name()),
-        }
-    }
-}
-
-/// Compiled-executable cache over the PJRT CPU client.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-    artifacts_dir: std::path::PathBuf,
-    exes: Mutex<HashMap<Entry, xla::PjRtLoadedExecutable>>,
-    pub executions: AtomicU64,
-}
-
-// xla::PjRtClient wraps a C++ client that is safe to share for our
-// compile/execute usage; executions are serialized through the Mutex'd
-// executable map plus PJRT's own synchronization.
-unsafe impl Send for PjrtEngine {}
-unsafe impl Sync for PjrtEngine {}
-
-impl PjrtEngine {
-    /// Create the CPU client and point at an artifacts directory.
-    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
-        let dir = artifacts_dir.into();
-        if !dir.join("manifest.json").exists() {
-            return Err(anyhow!(
-                "artifacts not built: {} missing (run `make artifacts`)",
-                dir.join("manifest.json").display()
-            ));
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtEngine {
-            client,
-            artifacts_dir: dir,
-            exes: Mutex::new(HashMap::new()),
-            executions: AtomicU64::new(0),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn run_entry(&self, entry: Entry, queries: &[f32], data: &[f32]) -> Result<Vec<f32>> {
-        debug_assert_eq!(queries.len(), AOT_B * AOT_D);
-        debug_assert_eq!(data.len(), AOT_M * AOT_D);
-        let mut exes = self.exes.lock().unwrap();
-        if !exes.contains_key(&entry) {
-            let path = self
-                .artifacts_dir
-                .join(format!("{}.hlo.txt", entry.file_stem()));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {}", path.display()))?;
-            exes.insert(entry, exe);
-        }
-        let exe = exes.get(&entry).unwrap();
-        let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
-        let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
-        let result = exe.execute::<xla::Literal>(&[q, x])?[0][0].to_literal_sync()?;
-        self.executions.fetch_add(1, Ordering::Relaxed);
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// `KernelBackend` implementation over the PJRT engine, with the
-/// padding/tiling logic.
-pub struct PjrtBackend {
-    engine: PjrtEngine,
-    evals: AtomicU64,
-}
-
-impl PjrtBackend {
-    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::Arc<Self>> {
-        Ok(std::sync::Arc::new(PjrtBackend {
-            engine: PjrtEngine::new(artifacts_dir)?,
-            evals: AtomicU64::new(0),
-        }))
-    }
-
-    pub fn executions(&self) -> u64 {
-        self.engine.executions.load(Ordering::Relaxed)
-    }
-
-    /// Pad a `rows x d` buffer into `target_rows x AOT_D`, filling padded
-    /// *rows* with `fill` and padded *columns* with 0.
-    fn pad(rows_buf: &[f32], rows: usize, d: usize, target_rows: usize, fill: f32) -> Vec<f32> {
-        let mut out = vec![0.0f32; target_rows * AOT_D];
-        for r in 0..target_rows {
-            if r < rows {
-                let src = &rows_buf[r * d..(r + 1) * d];
-                out[r * AOT_D..r * AOT_D + d].copy_from_slice(src);
-            } else {
-                for c in 0..AOT_D {
-                    out[r * AOT_D + c] = fill;
-                }
+/// Pad a `rows x d` buffer into `target_rows x AOT_D`, filling padded
+/// *rows* with `fill` and padded *columns* with 0.
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
+pub(crate) fn pad(
+    rows_buf: &[f32],
+    rows: usize,
+    d: usize,
+    target_rows: usize,
+    fill: f32,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; target_rows * AOT_D];
+    for r in 0..target_rows {
+        if r < rows {
+            let src = &rows_buf[r * d..(r + 1) * d];
+            out[r * AOT_D..r * AOT_D + d].copy_from_slice(src);
+        } else {
+            for c in 0..AOT_D {
+                out[r * AOT_D + c] = fill;
             }
         }
-        out
     }
+    out
 }
 
-impl KernelBackend for PjrtBackend {
-    fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
-        assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
-        assert!(queries.len() % d == 0 && data.len() % d == 0);
-        let b = queries.len() / d;
-        let m = data.len() / d;
-        self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
-        let mut out = vec![0.0f64; b];
-        for (qc, qchunk) in queries.chunks(AOT_B * d).enumerate() {
-            let bq = qchunk.len() / d;
-            let qpad = Self::pad(qchunk, bq, d, AOT_B, 0.0);
-            for xchunk in data.chunks(AOT_M * d) {
-                let mx = xchunk.len() / d;
-                let xpad = Self::pad(xchunk, mx, d, AOT_M, FAR);
-                let sums = self
-                    .engine
-                    .run_entry(Entry::Sums(kernel), &qpad, &xpad)
-                    .expect("PJRT execution failed");
-                for q in 0..bq {
-                    out[qc * AOT_B + q] += sums[q] as f64;
-                }
-            }
-        }
-        out
+#[cfg(feature = "xla")]
+mod engine {
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{pad, AOT_B, AOT_D, AOT_M, FAR};
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::KernelBackend;
+
+    /// Which artifact entry to execute.
+    #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+    enum Entry {
+        Sums(Kernel),
+        Block(Kernel),
     }
 
-    fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
-        assert!(d > 0 && d <= AOT_D);
-        assert!(queries.len() % d == 0 && data.len() % d == 0);
-        let b = queries.len() / d;
-        let m = data.len() / d;
-        self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
-        let mut out = vec![0.0f32; b * m];
-        for (qc, qchunk) in queries.chunks(AOT_B * d).enumerate() {
-            let bq = qchunk.len() / d;
-            let qpad = Self::pad(qchunk, bq, d, AOT_B, 0.0);
-            for (xc, xchunk) in data.chunks(AOT_M * d).enumerate() {
-                let mx = xchunk.len() / d;
-                let xpad = Self::pad(xchunk, mx, d, AOT_M, FAR);
-                let blk = self
-                    .engine
-                    .run_entry(Entry::Block(kernel), &qpad, &xpad)
-                    .expect("PJRT execution failed");
-                for q in 0..bq {
-                    let dst_row = qc * AOT_B + q;
-                    for j in 0..mx {
-                        out[dst_row * m + xc * AOT_M + j] = blk[q * AOT_M + j];
+    impl Entry {
+        fn file_stem(self) -> String {
+            match self {
+                Entry::Sums(k) => format!("kde_sums_{}", k.name()),
+                Entry::Block(k) => format!("kernel_block_{}", k.name()),
+            }
+        }
+    }
+
+    /// Compiled-executable cache over the PJRT CPU client.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
+        artifacts_dir: std::path::PathBuf,
+        exes: Mutex<HashMap<Entry, xla::PjRtLoadedExecutable>>,
+        pub executions: AtomicU64,
+    }
+
+    // xla::PjRtClient wraps a C++ client that is safe to share for our
+    // compile/execute usage; executions are serialized through the Mutex'd
+    // executable map plus PJRT's own synchronization.
+    unsafe impl Send for PjrtEngine {}
+    unsafe impl Sync for PjrtEngine {}
+
+    impl PjrtEngine {
+        /// Create the CPU client and point at an artifacts directory.
+        pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+            let dir = artifacts_dir.into();
+            if !dir.join("manifest.json").exists() {
+                return Err(anyhow!(
+                    "artifacts not built: {} missing (run `make artifacts`)",
+                    dir.join("manifest.json").display()
+                ));
+            }
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(PjrtEngine {
+                client,
+                artifacts_dir: dir,
+                exes: Mutex::new(HashMap::new()),
+                executions: AtomicU64::new(0),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn run_entry(&self, entry: Entry, queries: &[f32], data: &[f32]) -> Result<Vec<f32>> {
+            debug_assert_eq!(queries.len(), AOT_B * AOT_D);
+            debug_assert_eq!(data.len(), AOT_M * AOT_D);
+            let mut exes = self.exes.lock().unwrap();
+            if !exes.contains_key(&entry) {
+                let path = self
+                    .artifacts_dir
+                    .join(format!("{}.hlo.txt", entry.file_stem()));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", path.display()))?;
+                exes.insert(entry, exe);
+            }
+            let exe = exes.get(&entry).unwrap();
+            let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
+            let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
+            let result = exe.execute::<xla::Literal>(&[q, x])?[0][0].to_literal_sync()?;
+            self.executions.fetch_add(1, Ordering::Relaxed);
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    /// `KernelBackend` implementation over the PJRT engine, with the
+    /// padding/tiling logic.
+    pub struct PjrtBackend {
+        engine: PjrtEngine,
+        evals: AtomicU64,
+        calls: AtomicU64,
+    }
+
+    impl PjrtBackend {
+        pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::Arc<Self>> {
+            Ok(std::sync::Arc::new(PjrtBackend {
+                engine: PjrtEngine::new(artifacts_dir)?,
+                evals: AtomicU64::new(0),
+                calls: AtomicU64::new(0),
+            }))
+        }
+
+        pub fn executions(&self) -> u64 {
+            self.engine.executions.load(Ordering::Relaxed)
+        }
+    }
+
+    impl KernelBackend for PjrtBackend {
+        fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
+            assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
+            assert!(queries.len() % d == 0 && data.len() % d == 0);
+            let b = queries.len() / d;
+            let m = data.len() / d;
+            self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = vec![0.0f64; b];
+            for (qc, qchunk) in queries.chunks(AOT_B * d).enumerate() {
+                let bq = qchunk.len() / d;
+                let qpad = pad(qchunk, bq, d, AOT_B, 0.0);
+                for xchunk in data.chunks(AOT_M * d) {
+                    let mx = xchunk.len() / d;
+                    let xpad = pad(xchunk, mx, d, AOT_M, FAR);
+                    let sums = self
+                        .engine
+                        .run_entry(Entry::Sums(kernel), &qpad, &xpad)
+                        .expect("PJRT execution failed");
+                    for q in 0..bq {
+                        out[qc * AOT_B + q] += sums[q] as f64;
                     }
                 }
             }
+            out
         }
-        out
-    }
 
-    fn kernel_evals(&self) -> u64 {
-        self.evals.load(Ordering::Relaxed)
-    }
+        fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
+            assert!(d > 0 && d <= AOT_D);
+            assert!(queries.len() % d == 0 && data.len() % d == 0);
+            let b = queries.len() / d;
+            let m = data.len() / d;
+            self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = vec![0.0f32; b * m];
+            for (qc, qchunk) in queries.chunks(AOT_B * d).enumerate() {
+                let bq = qchunk.len() / d;
+                let qpad = pad(qchunk, bq, d, AOT_B, 0.0);
+                for (xc, xchunk) in data.chunks(AOT_M * d).enumerate() {
+                    let mx = xchunk.len() / d;
+                    let xpad = pad(xchunk, mx, d, AOT_M, FAR);
+                    let blk = self
+                        .engine
+                        .run_entry(Entry::Block(kernel), &qpad, &xpad)
+                        .expect("PJRT execution failed");
+                    for q in 0..bq {
+                        let dst_row = qc * AOT_B + q;
+                        for j in 0..mx {
+                            out[dst_row * m + xc * AOT_M + j] = blk[q * AOT_M + j];
+                        }
+                    }
+                }
+            }
+            out
+        }
 
-    fn name(&self) -> &'static str {
-        "pjrt"
+        fn kernel_evals(&self) -> u64 {
+            self.evals.load(Ordering::Relaxed)
+        }
+
+        fn calls(&self) -> u64 {
+            self.calls.load(Ordering::Relaxed)
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt"
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use engine::{PjrtBackend, PjrtEngine};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use anyhow::{anyhow, Result};
+
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::KernelBackend;
+
+    fn unavailable(dir: std::path::PathBuf) -> anyhow::Error {
+        // Keep the missing-artifacts message identical to the real engine:
+        // callers (and tests/pjrt_parity.rs) match on it to decide whether
+        // to tell the user to build artifacts or to enable the runtime.
+        if dir.join("manifest.json").exists() {
+            anyhow!(
+                "PJRT runtime disabled: this binary was built without the `xla` \
+                 cargo feature (artifacts found at {})",
+                dir.display()
+            )
+        } else {
+            anyhow!(
+                "artifacts not built: {} missing (run `make artifacts`)",
+                dir.join("manifest.json").display()
+            )
+        }
+    }
+
+    /// Stub engine compiled when the `xla` feature is off: construction
+    /// always fails, so no method past `new` is ever reachable.
+    pub struct PjrtEngine {
+        _private: (),
+    }
+
+    impl PjrtEngine {
+        pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+            Err(unavailable(artifacts_dir.into()))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+    }
+
+    /// Stub backend with the same API surface as the real one.
+    pub struct PjrtBackend {
+        _private: (),
+    }
+
+    impl PjrtBackend {
+        pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::Arc<Self>> {
+            Err(unavailable(artifacts_dir.into()))
+        }
+
+        pub fn executions(&self) -> u64 {
+            0
+        }
+    }
+
+    impl KernelBackend for PjrtBackend {
+        fn sums(&self, _kernel: Kernel, _queries: &[f32], _data: &[f32], _d: usize) -> Vec<f64> {
+            unreachable!("PjrtBackend cannot be constructed without the `xla` feature")
+        }
+
+        fn block(&self, _kernel: Kernel, _queries: &[f32], _data: &[f32], _d: usize) -> Vec<f32> {
+            unreachable!("PjrtBackend cannot be constructed without the `xla` feature")
+        }
+
+        fn kernel_evals(&self) -> u64 {
+            0
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-disabled"
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{PjrtBackend, PjrtEngine};
 
 // PJRT integration tests live in rust/tests/pjrt_parity.rs (they need the
 // artifacts built); unit tests here cover the pure padding logic.
@@ -223,7 +330,7 @@ mod tests {
     fn pad_zero_fill_layout() {
         // 2 rows, d=3 -> 4 rows x AOT_D
         let buf = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let out = PjrtBackend::pad(&buf, 2, 3, 4, 0.0);
+        let out = pad(&buf, 2, 3, 4, 0.0);
         assert_eq!(out.len(), 4 * AOT_D);
         assert_eq!(&out[0..3], &[1.0, 2.0, 3.0]);
         assert_eq!(out[3], 0.0, "column padding is zero");
@@ -234,7 +341,7 @@ mod tests {
     #[test]
     fn pad_far_fill_rows() {
         let buf = [1.0f32, 2.0];
-        let out = PjrtBackend::pad(&buf, 1, 2, 3, FAR);
+        let out = pad(&buf, 1, 2, 3, FAR);
         // padded rows are FAR across all AOT_D columns
         for c in 0..AOT_D {
             assert_eq!(out[AOT_D + c], FAR);
@@ -244,5 +351,14 @@ mod tests {
         assert_eq!(out[0], 1.0);
         assert_eq!(out[1], 2.0);
         assert_eq!(out[2], 0.0);
+    }
+
+    #[test]
+    fn backend_constructor_fails_cleanly_without_artifacts() {
+        let err = match PjrtBackend::new("/nonexistent/artifacts-dir") {
+            Ok(_) => panic!("must not succeed without artifacts"),
+            Err(e) => format!("{e}"),
+        };
+        assert!(err.contains("artifacts not built"), "got: {err}");
     }
 }
