@@ -24,6 +24,15 @@ pub trait KernelBackend: Send + Sync {
     /// Logical kernel evaluations performed so far (b*m per call).
     fn kernel_evals(&self) -> u64;
 
+    /// Backend invocations (`sums` + `block` calls) so far. This is the
+    /// dispatch-count metric the batched query pipeline optimizes: a
+    /// per-query path issues one call per cache miss, the level-order
+    /// batched path issues one call per (node, level) group. Backends that
+    /// do not track it return 0.
+    fn calls(&self) -> u64 {
+        0
+    }
+
     /// Human-readable engine name for reports.
     fn name(&self) -> &'static str;
 }
@@ -32,17 +41,18 @@ pub trait KernelBackend: Send + Sync {
 /// code; see EXPERIMENTS.md §Perf for the optimization log.
 pub struct CpuBackend {
     evals: AtomicU64,
+    calls: AtomicU64,
 }
 
 impl CpuBackend {
     pub fn new() -> Arc<Self> {
-        Arc::new(CpuBackend { evals: AtomicU64::new(0) })
+        Arc::new(Self::default())
     }
 }
 
 impl Default for CpuBackend {
     fn default() -> Self {
-        CpuBackend { evals: AtomicU64::new(0) }
+        CpuBackend { evals: AtomicU64::new(0), calls: AtomicU64::new(0) }
     }
 }
 
@@ -52,6 +62,7 @@ impl KernelBackend for CpuBackend {
         let b = queries.len() / d;
         let m = data.len() / d;
         self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let mut out = vec![0.0f64; b];
         for (qi, q) in queries.chunks_exact(d).enumerate() {
             let mut acc = 0.0f64;
@@ -68,6 +79,7 @@ impl KernelBackend for CpuBackend {
         let b = queries.len() / d;
         let m = data.len() / d;
         self.evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let mut out = vec![0.0f32; b * m];
         for (qi, q) in queries.chunks_exact(d).enumerate() {
             let row = &mut out[qi * m..(qi + 1) * m];
@@ -80,6 +92,10 @@ impl KernelBackend for CpuBackend {
 
     fn kernel_evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
     }
 
     fn name(&self) -> &'static str {
@@ -120,7 +136,9 @@ mod tests {
         let x = vec![0.0f32; 5 * 2]; // m=5
         be.sums(Kernel::Gaussian, &q, &x, 2);
         assert_eq!(be.kernel_evals(), 15);
+        assert_eq!(be.calls(), 1);
         be.block(Kernel::Gaussian, &q, &x, 2);
         assert_eq!(be.kernel_evals(), 30);
+        assert_eq!(be.calls(), 2);
     }
 }

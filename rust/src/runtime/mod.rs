@@ -1,9 +1,12 @@
-//! Execution runtime: the `KernelBackend` contract, the pure-Rust CPU
-//! engine, and the PJRT engine that loads the AOT HLO-text artifacts
-//! produced by `python/compile/aot.py` (`make artifacts`).
+//! Execution runtime: the `KernelBackend` contract, the pure-Rust scalar
+//! CPU engine, the tiled multi-threaded CPU engine, and the PJRT engine
+//! that loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`; requires the `xla` feature).
 
 pub mod backend;
 pub mod pjrt;
+pub mod tiled;
 
 pub use backend::{CpuBackend, KernelBackend};
 pub use pjrt::{PjrtBackend, PjrtEngine};
+pub use tiled::TiledBackend;

@@ -1,0 +1,461 @@
+//! Tiled, multi-threaded CPU kernel backend.
+//!
+//! The scalar [`CpuBackend`](crate::runtime::backend::CpuBackend) walks
+//! every (query, data) pair with a per-pair distance loop. This backend
+//! restructures the same computation three ways (EXPERIMENTS.md §Perf):
+//!
+//! 1. **Blocked-GEMM distance trick** — for the L2 kernels (Gaussian,
+//!    exponential, rational quadratic) squared distances are computed as
+//!    `||x||^2 + ||y||^2 - 2<x,y>` from precomputed row norms, so the
+//!    inner loop is a pure dot product (one fma per element instead of
+//!    sub + fma). The Laplacian kernel keeps a dedicated L1 tile loop —
+//!    there is no norm decomposition for L1 distances.
+//! 2. **Cache tiling** — data is processed in tiles of [`DTILE`] rows so a
+//!    tile stays resident in L1/L2 across all query rows of a chunk, and
+//!    per-tile distances land in a stack buffer that the kernel map then
+//!    consumes. Batching the kernel map over the tile gives the compiler
+//!    independent [`fast_exp_neg`] chains to pipeline — the scalar
+//!    backend's one-libm-`expf`-per-pair serialization is the single
+//!    biggest cost at moderate `d` (see the §Perf log).
+//! 3. **Threading** — `std::thread::scope` workers split the query rows
+//!    (or, when a call has few queries but much data, the data rows) with
+//!    per-thread eval counts folded into the shared atomic counter.
+//!
+//! Determinism: for a fixed thread split mode, every output value is
+//! accumulated in a fixed order (data tiles in order, f64 accumulator per
+//! query row), so results are reproducible run-to-run and independent of
+//! the worker count in the query-split path. The data-split path (b <<
+//! threads) folds per-thread partial sums in chunk order, which groups the
+//! same additions differently — equal up to f64 rounding.
+//!
+//! Numerical caveat: the norm trick computes `d(x,y)^2` by cancellation,
+//! so for two *nearly identical points with huge coordinates* (norms ~1e13)
+//! the result carries absolute error up to ~1e7 and the Gaussian value can
+//! underflow where the scalar backend returns ~1. This case is outside the
+//! PJRT padding contract this backend mirrors (FAR padding rows are only
+//! ever paired with real, bandwidth-scaled queries — see
+//! `tests/backend_parity.rs`); negative cancellation residue is clamped to
+//! zero so `k(x, x) = 1` holds for realistic coordinates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::kernel::{fast_exp_neg, Kernel};
+use crate::runtime::backend::KernelBackend;
+
+/// Data rows per cache tile. A tile of f32 coordinates occupies
+/// `DTILE * d * 4` bytes — 32 KiB at the AOT shape d = 64, sized for L1.
+const DTILE: usize = 128;
+
+const LANES: usize = 8;
+
+/// Tiled multi-threaded backend; see the module docs.
+pub struct TiledBackend {
+    threads: usize,
+    evals: AtomicU64,
+    calls: AtomicU64,
+}
+
+impl TiledBackend {
+    /// One worker per available core.
+    pub fn new() -> Arc<Self> {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::with_threads(threads)
+    }
+
+    /// Fixed worker count (1 = tiling only, no thread spawns).
+    pub fn with_threads(threads: usize) -> Arc<Self> {
+        assert!(threads >= 1, "need at least one worker");
+        Arc::new(TiledBackend {
+            threads,
+            evals: AtomicU64::new(0),
+            calls: AtomicU64::new(0),
+        })
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+/// 8-lane dot product (same layout trick as `kernel::sq_dist`: independent
+/// partial sums so LLVM vectorizes).
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xa, ya) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * ya[l];
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+        s += a * b;
+    }
+    s
+}
+
+/// 8-lane L1 distance (the Laplacian tile loop's inner kernel).
+#[inline]
+fn l1(x: &[f32], y: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact(LANES);
+    for (xa, ya) in (&mut xc).zip(&mut yc) {
+        for l in 0..LANES {
+            acc[l] += (xa[l] - ya[l]).abs();
+        }
+    }
+    let mut s: f32 = acc.iter().sum();
+    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+        s += (a - b).abs();
+    }
+    s
+}
+
+/// Squared row norms of a `rows x d` buffer.
+fn row_sq_norms(buf: &[f32], d: usize) -> Vec<f32> {
+    buf.chunks_exact(d).map(|row| dot(row, row)).collect()
+}
+
+/// Map a tile's squared distances to kernel values. Runs over a contiguous
+/// buffer so the `fast_exp_neg` chains are independent and pipeline.
+#[inline]
+fn map_kernel_sq(kernel: Kernel, sq: &[f32], out: &mut [f32]) {
+    match kernel {
+        Kernel::Gaussian => {
+            for (o, &s) in out.iter_mut().zip(sq) {
+                *o = fast_exp_neg(-s.max(0.0));
+            }
+        }
+        Kernel::Exponential => {
+            for (o, &s) in out.iter_mut().zip(sq) {
+                *o = fast_exp_neg(-s.max(0.0).sqrt());
+            }
+        }
+        Kernel::RationalQuadratic => {
+            for (o, &s) in out.iter_mut().zip(sq) {
+                *o = 1.0 / (1.0 + s.max(0.0));
+            }
+        }
+        Kernel::Laplacian => unreachable!("Laplacian takes the L1 tile path"),
+    }
+}
+
+/// KDE sums for a chunk of query rows against (a chunk of) the data.
+/// `qn`/`xn` are the squared row norms matching `queries`/`data`; both are
+/// empty (and unused) on the Laplacian path. Accumulates INTO `out` (one
+/// f64 slot per query row), data tiles in order, so callers may feed data
+/// chunks sequentially and keep a deterministic summation order.
+fn sums_rows(
+    kernel: Kernel,
+    queries: &[f32],
+    data: &[f32],
+    d: usize,
+    qn: &[f32],
+    xn: &[f32],
+    out: &mut [f64],
+) {
+    debug_assert_eq!(queries.len() / d, out.len());
+    let mut kbuf = [0.0f32; DTILE];
+    if kernel == Kernel::Laplacian {
+        for tile in data.chunks(DTILE * d) {
+            let rows = tile.len() / d;
+            for (qi, q) in queries.chunks_exact(d).enumerate() {
+                for (j, x) in tile.chunks_exact(d).enumerate() {
+                    kbuf[j] = fast_exp_neg(-l1(q, x));
+                }
+                let mut acc = 0.0f64;
+                for &k in &kbuf[..rows] {
+                    acc += k as f64;
+                }
+                out[qi] += acc;
+            }
+        }
+        return;
+    }
+    let mut sqbuf = [0.0f32; DTILE];
+    for (ti, tile) in data.chunks(DTILE * d).enumerate() {
+        let rows = tile.len() / d;
+        let xn_t = &xn[ti * DTILE..ti * DTILE + rows];
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let qnv = qn[qi];
+            for (j, x) in tile.chunks_exact(d).enumerate() {
+                sqbuf[j] = qnv + xn_t[j] - 2.0 * dot(q, x);
+            }
+            map_kernel_sq(kernel, &sqbuf[..rows], &mut kbuf[..rows]);
+            let mut acc = 0.0f64;
+            for &k in &kbuf[..rows] {
+                acc += k as f64;
+            }
+            out[qi] += acc;
+        }
+    }
+}
+
+/// Dense kernel block for a chunk of query rows; writes `rows x m` values
+/// into `out` (row stride `m`, starting at the chunk's first row).
+fn block_rows(
+    kernel: Kernel,
+    queries: &[f32],
+    data: &[f32],
+    d: usize,
+    qn: &[f32],
+    xn: &[f32],
+    out: &mut [f32],
+    m: usize,
+) {
+    debug_assert_eq!(queries.len() / d * m, out.len());
+    if kernel == Kernel::Laplacian {
+        for (ti, tile) in data.chunks(DTILE * d).enumerate() {
+            let off = ti * DTILE;
+            let rows = tile.len() / d;
+            for (qi, q) in queries.chunks_exact(d).enumerate() {
+                let dst = &mut out[qi * m + off..qi * m + off + rows];
+                for (j, x) in tile.chunks_exact(d).enumerate() {
+                    dst[j] = fast_exp_neg(-l1(q, x));
+                }
+            }
+        }
+        return;
+    }
+    let mut sqbuf = [0.0f32; DTILE];
+    for (ti, tile) in data.chunks(DTILE * d).enumerate() {
+        let off = ti * DTILE;
+        let rows = tile.len() / d;
+        let xn_t = &xn[off..off + rows];
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let qnv = qn[qi];
+            for (j, x) in tile.chunks_exact(d).enumerate() {
+                sqbuf[j] = qnv + xn_t[j] - 2.0 * dot(q, x);
+            }
+            let dst = &mut out[qi * m + off..qi * m + off + rows];
+            map_kernel_sq(kernel, &sqbuf[..rows], dst);
+        }
+    }
+}
+
+impl KernelBackend for TiledBackend {
+    fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut out = vec![0.0f64; b];
+        if b == 0 || m == 0 {
+            return out;
+        }
+        let l2 = kernel != Kernel::Laplacian;
+        let qn = if l2 { row_sq_norms(queries, d) } else { Vec::new() };
+        let xn = if l2 { row_sq_norms(data, d) } else { Vec::new() };
+        let qn_s: &[f32] = &qn;
+        let xn_s: &[f32] = &xn;
+        let evals = &self.evals;
+        if self.threads == 1 {
+            sums_rows(kernel, queries, data, d, qn_s, xn_s, &mut out);
+            evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+        } else if b >= self.threads {
+            // Query split: each worker owns a disjoint slice of output
+            // rows, so no reduction is needed and per-row summation order
+            // is identical to the single-thread path.
+            let chunk_rows = (b + self.threads - 1) / self.threads;
+            std::thread::scope(|s| {
+                for (ci, out_chunk) in out.chunks_mut(chunk_rows).enumerate() {
+                    let lo = ci * chunk_rows;
+                    let rows = out_chunk.len();
+                    let q_chunk = &queries[lo * d..(lo + rows) * d];
+                    let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
+                    s.spawn(move || {
+                        sums_rows(kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk);
+                        evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
+                    });
+                }
+            });
+        } else {
+            // Few queries, much data (the KDE-sum shape for small batches):
+            // split the data rows, fold per-worker partials in chunk order.
+            let workers = self.threads.min((m + DTILE - 1) / DTILE).max(1);
+            let mut chunk_rows = (m + workers - 1) / workers;
+            chunk_rows = ((chunk_rows + DTILE - 1) / DTILE) * DTILE;
+            std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                let mut lo = 0usize;
+                while lo < m {
+                    let hi = (lo + chunk_rows).min(m);
+                    let d_chunk = &data[lo * d..hi * d];
+                    let xn_chunk: &[f32] = if l2 { &xn_s[lo..hi] } else { &[] };
+                    handles.push(s.spawn(move || {
+                        let mut part = vec![0.0f64; b];
+                        sums_rows(kernel, queries, d_chunk, d, qn_s, xn_chunk, &mut part);
+                        evals.fetch_add((b * (hi - lo)) as u64, Ordering::Relaxed);
+                        part
+                    }));
+                    lo = hi;
+                }
+                for h in handles {
+                    let part = h.join().expect("tiled sums worker panicked");
+                    for (o, p) in out.iter_mut().zip(&part) {
+                        *o += p;
+                    }
+                }
+            });
+        }
+        out
+    }
+
+    fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut out = vec![0.0f32; b * m];
+        if b == 0 || m == 0 {
+            return out;
+        }
+        let l2 = kernel != Kernel::Laplacian;
+        let qn = if l2 { row_sq_norms(queries, d) } else { Vec::new() };
+        let xn = if l2 { row_sq_norms(data, d) } else { Vec::new() };
+        let qn_s: &[f32] = &qn;
+        let xn_s: &[f32] = &xn;
+        let evals = &self.evals;
+        if self.threads == 1 || b == 1 {
+            block_rows(kernel, queries, data, d, qn_s, xn_s, &mut out, m);
+            evals.fetch_add((b * m) as u64, Ordering::Relaxed);
+        } else {
+            // Query split over disjoint output row ranges (the block shape
+            // is row-parallel by construction; data-splitting would write
+            // interleaved columns).
+            let workers = self.threads.min(b);
+            let chunk_rows = (b + workers - 1) / workers;
+            std::thread::scope(|s| {
+                for (ci, out_chunk) in out.chunks_mut(chunk_rows * m).enumerate() {
+                    let lo = ci * chunk_rows;
+                    let rows = out_chunk.len() / m;
+                    let q_chunk = &queries[lo * d..(lo + rows) * d];
+                    let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
+                    s.spawn(move || {
+                        block_rows(kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk, m);
+                        evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
+                    });
+                }
+            });
+        }
+        out
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        self.evals.load(Ordering::Relaxed)
+    }
+
+    fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::ALL_KERNELS;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::rng::Rng;
+
+    fn rand_buf(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    #[test]
+    fn matches_cpu_backend_smoke() {
+        let mut rng = Rng::new(811);
+        let (b, m, d) = (9usize, 301usize, 13usize);
+        let queries = rand_buf(&mut rng, b * d, 1.5);
+        let data = rand_buf(&mut rng, m * d, 1.5);
+        let cpu = CpuBackend::new();
+        let tiled = TiledBackend::with_threads(3);
+        for k in ALL_KERNELS {
+            let want = cpu.sums(k, &queries, &data, d);
+            let got = tiled.sums(k, &queries, &data, d);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < 2e-3 * (1.0 + w.abs()),
+                    "{:?}: tiled {g} vs cpu {w}",
+                    k
+                );
+            }
+            let want_b = cpu.block(k, &queries, &data, d);
+            let got_b = tiled.block(k, &queries, &data, d);
+            for (g, w) in got_b.iter().zip(&want_b) {
+                assert!(
+                    (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                    "{:?} block: tiled {g} vs cpu {w}",
+                    k
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_and_call_counters() {
+        let be = TiledBackend::with_threads(2);
+        let q = vec![0.0f32; 3 * 2];
+        let x = vec![0.5f32; 5 * 2];
+        be.sums(Kernel::Gaussian, &q, &x, 2);
+        assert_eq!(be.kernel_evals(), 15);
+        assert_eq!(be.calls(), 1);
+        be.block(Kernel::Laplacian, &q, &x, 2);
+        assert_eq!(be.kernel_evals(), 30);
+        assert_eq!(be.calls(), 2);
+    }
+
+    #[test]
+    fn query_split_is_thread_count_invariant() {
+        // With b >= threads both paths sum each output row over the data
+        // tiles in the same order -> bitwise identical results.
+        let mut rng = Rng::new(813);
+        let (b, m, d) = (16usize, 200usize, 7usize);
+        let queries = rand_buf(&mut rng, b * d, 1.0);
+        let data = rand_buf(&mut rng, m * d, 1.0);
+        let t1 = TiledBackend::with_threads(1);
+        let t4 = TiledBackend::with_threads(4);
+        for k in ALL_KERNELS {
+            let a = t1.sums(k, &queries, &data, d);
+            let c = t4.sums(k, &queries, &data, d);
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{:?} nondeterministic", k);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let be = TiledBackend::with_threads(4);
+        let q = vec![0.25f32; 2 * 3];
+        let empty: Vec<f32> = Vec::new();
+        // empty data -> zero sums, empty block
+        let s = be.sums(Kernel::Gaussian, &q, &empty, 3);
+        assert_eq!(s, vec![0.0, 0.0]);
+        assert!(be.block(Kernel::Gaussian, &q, &empty, 3).is_empty());
+        // empty queries -> empty outputs
+        assert!(be.sums(Kernel::Gaussian, &empty, &q, 3).is_empty());
+        assert!(be.block(Kernel::Gaussian, &empty, &q, 3).is_empty());
+    }
+
+    #[test]
+    fn self_kernel_is_one_at_realistic_scale() {
+        let mut rng = Rng::new(815);
+        let d = 24;
+        let q = rand_buf(&mut rng, d, 2.0);
+        let be = TiledBackend::with_threads(1);
+        for k in ALL_KERNELS {
+            let v = be.block(k, &q, &q, d)[0];
+            assert!((v - 1.0).abs() < 1e-4, "{:?}: k(x,x) = {v}", k);
+        }
+    }
+}

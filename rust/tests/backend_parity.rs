@@ -1,0 +1,179 @@
+//! TiledBackend vs CpuBackend parity: the blocked norm-trick backend must
+//! agree with the scalar reference on `sums` and `block` for all four
+//! kernels across odd dimensions, degenerate shapes (empty / 1-row data)
+//! and large-coordinate inputs (the PJRT FAR-padding underflow contract).
+
+use kde_matrix::kernel::{Kernel, ALL_KERNELS};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::pjrt::FAR;
+use kde_matrix::runtime::tiled::TiledBackend;
+use kde_matrix::util::prop::forall;
+use kde_matrix::util::rng::Rng;
+
+/// Sums agree to this relative tolerance (fast-exp rel err ~5e-6 plus the
+/// norm trick's f32 cancellation at ||x||^2 ~ 1e3 leaves ~1e-3 headroom).
+const SUM_TOL: f64 = 5e-3;
+/// Per-element block tolerance.
+const BLOCK_TOL: f32 = 2e-3;
+
+fn rand_buf(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+fn check_parity(queries: &[f32], data: &[f32], d: usize, threads: usize) {
+    let cpu = CpuBackend::new();
+    let tiled = TiledBackend::with_threads(threads);
+    let b = queries.len() / d;
+    let m = data.len() / d;
+    for k in ALL_KERNELS {
+        let want = cpu.sums(k, queries, data, d);
+        let got = tiled.sums(k, queries, data, d);
+        assert_eq!(got.len(), b);
+        for (q, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < SUM_TOL * (1.0 + w.abs()),
+                "{:?} b={b} m={m} d={d} threads={threads} query {q}: tiled {g} vs cpu {w}",
+                k
+            );
+        }
+        let want_b = cpu.block(k, queries, data, d);
+        let got_b = tiled.block(k, queries, data, d);
+        assert_eq!(got_b.len(), b * m);
+        for i in 0..got_b.len() {
+            assert!(
+                (got_b[i] - want_b[i]).abs() < BLOCK_TOL * (1.0 + want_b[i].abs()),
+                "{:?} d={d} entry {i}: tiled {} vs cpu {}",
+                k,
+                got_b[i],
+                want_b[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn property_parity_odd_dims_and_shapes() {
+    // d = 1, 7, 63 cross sizes that straddle the DTILE=128 tile boundary.
+    // Coordinates are scaled ~1/sqrt(d) so kernel values stay O(1) and the
+    // comparison actually exercises the kernel map (not just underflow).
+    for &d in &[1usize, 7, 63] {
+        let scale = 1.5 / (d as f64).sqrt();
+        forall(6, move |rng, _| {
+            let b = 1 + rng.below(6);
+            let m = 1 + rng.below(300);
+            let queries = rand_buf(rng, b * d, scale);
+            let data = rand_buf(rng, m * d, scale);
+            check_parity(&queries, &data, d, 1 + rng.below(4));
+        });
+    }
+}
+
+#[test]
+fn parity_single_row_and_empty_data() {
+    let mut rng = Rng::new(901);
+    for &d in &[1usize, 7, 63] {
+        // 1-row data, 1-row query: the smallest legal call.
+        let q = rand_buf(&mut rng, d, 1.0);
+        let x = rand_buf(&mut rng, d, 1.0);
+        check_parity(&q, &x, d, 4);
+        // Empty data: sums are exactly zero on both backends.
+        let empty: Vec<f32> = Vec::new();
+        let cpu = CpuBackend::new();
+        let tiled = TiledBackend::with_threads(4);
+        for k in ALL_KERNELS {
+            assert_eq!(cpu.sums(k, &q, &empty, d), vec![0.0]);
+            assert_eq!(tiled.sums(k, &q, &empty, d), vec![0.0]);
+            assert!(cpu.block(k, &q, &empty, d).is_empty());
+            assert!(tiled.block(k, &q, &empty, d).is_empty());
+        }
+        // Empty queries.
+        assert!(tiled.sums(Kernel::Gaussian, &empty, &x, d).is_empty());
+    }
+}
+
+#[test]
+fn parity_exact_tile_boundaries() {
+    // m at exactly the internal tile size and straddling multiples of it.
+    let mut rng = Rng::new(903);
+    let d = 9;
+    for &m in &[127usize, 128, 129, 256, 300] {
+        let q = rand_buf(&mut rng, 3 * d, 1.0);
+        let x = rand_buf(&mut rng, m * d, 1.0);
+        check_parity(&q, &x, d, 3);
+    }
+}
+
+#[test]
+fn far_point_underflow_parity() {
+    // The PJRT padding contract: data rows at coordinate FAR=1e6 paired
+    // with real (bandwidth-scaled) queries must contribute exactly zero
+    // mass on the exponential-family kernels, on BOTH backends, so padded
+    // and unpadded calls agree.
+    let mut rng = Rng::new(905);
+    let d = 16;
+    let b = 4;
+    let m_real = 40;
+    let queries = rand_buf(&mut rng, b * d, 1.0);
+    let real = rand_buf(&mut rng, m_real * d, 1.0);
+    let mut padded = real.clone();
+    for _ in 0..25 * d {
+        padded.push(FAR);
+    }
+    let cpu = CpuBackend::new();
+    let tiled = TiledBackend::with_threads(2);
+    for k in [Kernel::Laplacian, Kernel::Gaussian, Kernel::Exponential] {
+        let cpu_far = cpu.sums(k, &queries, &padded, d);
+        let tiled_far = tiled.sums(k, &queries, &padded, d);
+        let cpu_real = cpu.sums(k, &queries, &real, d);
+        for q in 0..b {
+            assert_eq!(
+                cpu_far[q], cpu_real[q],
+                "{:?}: FAR rows leaked mass on the scalar backend",
+                k
+            );
+            assert!(
+                (tiled_far[q] - cpu_real[q]).abs() < SUM_TOL * (1.0 + cpu_real[q]),
+                "{:?} query {q}: tiled-with-padding {} vs cpu-unpadded {}",
+                k,
+                tiled_far[q],
+                cpu_real[q]
+            );
+        }
+        // The far block entries themselves underflow to zero.
+        let blk = tiled.block(k, &queries, &padded, d);
+        let m_total = m_real + 25;
+        for q in 0..b {
+            for j in m_real..m_total {
+                assert_eq!(blk[q * m_total + j], 0.0, "{:?} far entry nonzero", k);
+            }
+        }
+    }
+    // Rational quadratic has no exponential underflow; it decays to ~1e-14
+    // per far row — verify the backends still agree.
+    let cpu_rq = cpu.sums(Kernel::RationalQuadratic, &queries, &padded, d);
+    let tiled_rq = tiled.sums(Kernel::RationalQuadratic, &queries, &padded, d);
+    for q in 0..b {
+        assert!(
+            (cpu_rq[q] - tiled_rq[q]).abs() < SUM_TOL * (1.0 + cpu_rq[q].abs()),
+            "RQ far parity: {} vs {}",
+            tiled_rq[q],
+            cpu_rq[q]
+        );
+    }
+}
+
+#[test]
+fn eval_counters_agree() {
+    let mut rng = Rng::new(907);
+    let d = 5;
+    let queries = rand_buf(&mut rng, 7 * d, 1.0);
+    let data = rand_buf(&mut rng, 33 * d, 1.0);
+    let cpu = CpuBackend::new();
+    let tiled = TiledBackend::with_threads(3);
+    cpu.sums(Kernel::Gaussian, &queries, &data, d);
+    tiled.sums(Kernel::Gaussian, &queries, &data, d);
+    assert_eq!(cpu.kernel_evals(), 7 * 33);
+    assert_eq!(tiled.kernel_evals(), 7 * 33, "per-thread counts must fold");
+    assert_eq!(cpu.calls(), 1);
+    assert_eq!(tiled.calls(), 1);
+}
