@@ -40,8 +40,23 @@ impl Kde for NaiveKde {
         self.backend.sums(self.kernel, y, data, d)[0]
     }
 
+    /// Native batch: one backend `sums` dispatch for the whole query set.
+    /// Each output equals the corresponding single `query` exactly (the
+    /// backend computes rows independently).
+    fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
+        let d = self.ds.d;
+        assert!(ys.len() % d == 0);
+        self.counters.record_queries((ys.len() / d) as u64);
+        let data = &self.ds.flat()[self.lo * d..self.hi * d];
+        self.backend.sums(self.kernel, ys, data, d)
+    }
+
     fn subset_len(&self) -> usize {
         self.hi - self.lo
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.d
     }
 }
 
@@ -96,8 +111,23 @@ impl Kde for SamplingKde {
         raw * self.len as f64 / self.s as f64
     }
 
+    /// Native batch: the fixed subsample is shared by every query, so the
+    /// whole batch is one backend `sums` dispatch over it.
+    fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
+        assert!(ys.len() % self.d == 0);
+        self.counters.record_queries((ys.len() / self.d) as u64);
+        let raw = self.backend.sums(self.kernel, ys, &self.sample, self.d);
+        raw.into_iter()
+            .map(|v| v * self.len as f64 / self.s as f64)
+            .collect()
+    }
+
     fn subset_len(&self) -> usize {
         self.len
+    }
+
+    fn dim(&self) -> usize {
+        self.d
     }
 }
 
@@ -182,6 +212,43 @@ mod tests {
             let rel = (got - want).abs() / want;
             assert!(rel < 0.25, "case {case}: rel err {rel}");
         });
+    }
+
+    #[test]
+    fn query_batch_matches_query_exactly() {
+        // Backends compute batch rows independently, so the native batch
+        // paths must reproduce the per-query answers bit-for-bit.
+        let (ds, be, ctr, mut rng) = setup(96, 45);
+        let naive = NaiveKde::new(ds.clone(), Kernel::Gaussian, 4, 90, be.clone(), ctr.clone());
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.3, tau: 0.1 },
+            ..Default::default()
+        };
+        let sampling = SamplingKde::new(
+            ds.clone(),
+            Kernel::Gaussian,
+            0,
+            96,
+            &cfg,
+            be,
+            ctr.clone(),
+            &mut rng,
+        );
+        let idx = [0usize, 7, 41, 95, 7];
+        let mut ys = Vec::new();
+        for &i in &idx {
+            ys.extend_from_slice(ds.point(i));
+        }
+        let before = ctr.queries();
+        let batch_n = naive.query_batch(&ys);
+        assert_eq!(ctr.queries(), before + idx.len() as u64, "batch counts b queries");
+        let batch_s = sampling.query_batch(&ys);
+        for (pos, &i) in idx.iter().enumerate() {
+            assert_eq!(batch_n[pos].to_bits(), naive.query(ds.point(i)).to_bits());
+            assert_eq!(batch_s[pos].to_bits(), sampling.query(ds.point(i)).to_bits());
+        }
+        assert_eq!(naive.dim(), ds.d);
+        assert_eq!(sampling.dim(), ds.d);
     }
 
     #[test]

@@ -17,12 +17,11 @@
 //! (paper Table 1 lists the theoretical tau^0.5 variant).
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::util::rng::Rng;
-use std::cell::RefCell;
 
 struct Table {
     offsets: Vec<f32>,
@@ -36,13 +35,12 @@ pub struct HbeKde {
     width: f32,
     tables: Vec<Table>,
     counters: Arc<KdeCounters>,
-    rng: RefCell<Rng>,
+    /// Per-query bucket sampling randomness; a Mutex (not RefCell) so the
+    /// estimator is safely `Sync` — concurrent queries serialize only on
+    /// the cheap RNG draw, not the hash probes.
+    rng: Mutex<Rng>,
     evals: std::sync::atomic::AtomicU64,
 }
-
-// The RefCell makes HbeKde !Sync by default; queries are single-threaded in
-// the sampling primitives, and the coordinator wraps estimators in a Mutex.
-unsafe impl Sync for HbeKde {}
 
 impl HbeKde {
     pub fn new(
@@ -79,7 +77,7 @@ impl HbeKde {
             width,
             tables,
             counters,
-            rng: RefCell::new(rng.fork()),
+            rng: Mutex::new(rng.fork()),
             evals: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -111,7 +109,6 @@ impl HbeKde {
 impl Kde for HbeKde {
     fn query(&self, y: &[f32]) -> f64 {
         self.counters.record_query();
-        let mut rng = self.rng.borrow_mut();
         let mut acc = 0.0f64;
         for t in &self.tables {
             let key = Self::hash_key(y, &t.offsets, self.width);
@@ -119,7 +116,12 @@ impl Kde for HbeKde {
             if bucket.is_empty() {
                 continue;
             }
-            let z = bucket[rng.below(bucket.len())];
+            // Lock only for the draw itself; the hash probes and kernel
+            // evals (the actual work) run outside the critical section.
+            let z = {
+                let mut rng = self.rng.lock().unwrap();
+                bucket[rng.below(bucket.len())]
+            };
             let zx = self.ds.point(z);
             let p = self.collision_prob(zx, y);
             if p <= 0.0 {
@@ -133,8 +135,21 @@ impl Kde for HbeKde {
         acc / self.tables.len() as f64
     }
 
+    /// Native batch: the HBE cost model is per-query hash probes (no
+    /// backend dispatch to amortize), so the batch is a sequential loop —
+    /// it exists so HBE-backed trees slot into the batched pipeline.
+    fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
+        let d = self.ds.d;
+        assert!(ys.len() % d == 0);
+        ys.chunks_exact(d).map(|y| self.query(y)).collect()
+    }
+
     fn subset_len(&self) -> usize {
         self.hi - self.lo
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.d
     }
 }
 

@@ -43,6 +43,10 @@ impl KdeCounters {
     pub fn record_query(&self) {
         self.queries.fetch_add(1, Ordering::Relaxed);
     }
+    /// Record `n` queries at once (the batched path).
+    pub fn record_queries(&self, n: u64) {
+        self.queries.fetch_add(n, Ordering::Relaxed);
+    }
     pub fn queries(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
     }
@@ -58,8 +62,24 @@ pub trait Kde: Send + Sync {
     /// subtract it (Algorithm 4.3 line (a)).
     fn query(&self, y: &[f32]) -> f64;
 
+    /// Batched query: `ys` is `b x dim()` row-major; returns the `b`
+    /// per-query answers, each identical in distribution (and, for
+    /// deterministic estimators, in value) to `query` on that row. The
+    /// default implementation loops `query`; estimators backed by a
+    /// [`KernelBackend`](crate::runtime::backend::KernelBackend) override
+    /// it with a single backend dispatch — the primitive the level-order
+    /// batched tree evaluation and the coordinator's batcher are built on.
+    fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
+        let d = self.dim();
+        assert!(d > 0 && ys.len() % d == 0, "query batch not a multiple of dim");
+        ys.chunks_exact(d).map(|y| self.query(y)).collect()
+    }
+
     /// |S|, the subset size this oracle covers.
     fn subset_len(&self) -> usize;
+
+    /// Feature dimension of the query points this oracle accepts.
+    fn dim(&self) -> usize;
 }
 
 /// Which estimator the factories instantiate.

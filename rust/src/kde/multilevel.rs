@@ -8,17 +8,32 @@
 //! (`neighbor_prob`) — so per-(node, query-point) answers are memoized.
 //! Cache misses are what the query counter counts; cache hits are free,
 //! matching the paper's accounting where a degree array is "computed once".
+//!
+//! The memo table is sharded across [`CACHE_SHARDS`] mutexes, which makes
+//! the structure safely `Sync` (no `unsafe impl`) and keeps contention low
+//! when the coordinator or the batched pipeline queries it from several
+//! threads. Concurrent misses of the same key may compute twice, but the
+//! first insert wins and every caller observes that single value — the
+//! consistency property Algorithm 5.1 needs survives races.
+//!
+//! [`MultiLevelKde::query_points`] is the batched entry point: it dedups
+//! its index list against the cache and issues one `query_batch` to the
+//! node's oracle for all misses — one backend dispatch per (node, batch)
+//! instead of one per point, which is what makes a `t`-descent sampling
+//! round cost O(log n) backend calls (see `sampling::neighbor`).
 
-use std::cell::RefCell;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::util::fxhash::FxHashMap;
 
-use crate::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
 use crate::kde::hbe::HbeKde;
+use crate::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
 use crate::util::rng::Rng;
+
+/// Number of independent mutex-protected cache shards.
+const CACHE_SHARDS: usize = 16;
 
 #[derive(Clone, Copy, Debug)]
 pub struct Node {
@@ -28,18 +43,54 @@ pub struct Node {
     pub right: Option<usize>,
 }
 
+/// Sharded (node, point) -> answer memo table; safely `Sync`.
+struct ShardedCache {
+    shards: Vec<Mutex<FxHashMap<(u32, u32), f64>>>,
+}
+
+impl ShardedCache {
+    fn new() -> Self {
+        ShardedCache {
+            shards: (0..CACHE_SHARDS)
+                .map(|_| Mutex::new(FxHashMap::default()))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: (u32, u32)) -> &Mutex<FxHashMap<(u32, u32), f64>> {
+        let h = key.0 as usize ^ (key.1 as usize).wrapping_mul(0x9E37_79B9);
+        &self.shards[h % CACHE_SHARDS]
+    }
+
+    #[inline]
+    fn get(&self, key: (u32, u32)) -> Option<f64> {
+        self.shard(key).lock().unwrap().get(&key).copied()
+    }
+
+    /// Insert unless present; returns the value that ended up cached (the
+    /// first writer's), which the caller must report for consistency.
+    #[inline]
+    fn insert_or_get(&self, key: (u32, u32), v: f64) -> f64 {
+        *self.shard(key).lock().unwrap().entry(key).or_insert(v)
+    }
+
+    fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
 pub struct MultiLevelKde {
     pub ds: Arc<Dataset>,
     pub kernel: Kernel,
     nodes: Vec<Node>,
     oracles: Vec<Box<dyn Kde>>,
-    cache: RefCell<FxHashMap<(u32, u32), f64>>,
+    cache: ShardedCache,
+    leaf_cutoff: usize,
     pub counters: Arc<KdeCounters>,
 }
-
-// Queries go through a RefCell cache; the structure is used single-threaded
-// (the coordinator owns per-shard instances behind a Mutex).
-unsafe impl Sync for MultiLevelKde {}
 
 impl MultiLevelKde {
     /// Build the tree with the configured estimator at every node
@@ -62,7 +113,8 @@ impl MultiLevelKde {
             kernel,
             nodes,
             oracles,
-            cache: RefCell::new(FxHashMap::default()),
+            cache: ShardedCache::new(),
+            leaf_cutoff: cfg.leaf_cutoff,
             counters,
         }
     }
@@ -161,17 +213,63 @@ impl MultiLevelKde {
         self.nodes.len()
     }
 
+    /// The config's leaf cutoff: ranges of at most this size carry exact
+    /// (naive) oracles, which is what lets the samplers finish a descent
+    /// categorically once a subtree this small is reached.
+    pub fn leaf_cutoff(&self) -> usize {
+        self.leaf_cutoff
+    }
+
     /// Memoized KDE answer for dataset point `i` against node `id`'s
     /// subset. Includes `k(x_i, x_i)` if `i` lies inside the node's range —
     /// callers subtract 1.0 in that case (Alg 4.3 / 4.11).
     pub fn query_point(&self, id: usize, i: usize) -> f64 {
         let key = (id as u32, i as u32);
-        if let Some(&v) = self.cache.borrow().get(&key) {
+        if let Some(v) = self.cache.get(key) {
             return v;
         }
         let v = self.oracles[id].query(self.ds.point(i));
-        self.cache.borrow_mut().insert(key, v);
-        v
+        self.cache.insert_or_get(key, v)
+    }
+
+    /// Batched [`query_point`](Self::query_point): answers for every index
+    /// in `idx` against node `id`, deduping repeats and cache hits so the
+    /// misses cost ONE oracle `query_batch` (one backend dispatch for the
+    /// backend-based estimators). Returned values are the memoized ones —
+    /// later `query_point` calls observe exactly these answers.
+    pub fn query_points(&self, id: usize, idx: &[usize]) -> Vec<f64> {
+        // One shard lookup per DISTINCT index; answers resolve through a
+        // local map so the final pass is lock-free (and immune to a racing
+        // clear_cache between fill and readback).
+        let mut resolved: FxHashMap<u32, Option<f64>> = FxHashMap::default();
+        let mut missing: Vec<usize> = Vec::new();
+        for &i in idx {
+            let k = i as u32;
+            resolved.entry(k).or_insert_with(|| {
+                let cached = self.cache.get((id as u32, k));
+                if cached.is_none() {
+                    missing.push(i);
+                }
+                cached
+            });
+        }
+        if !missing.is_empty() {
+            let d = self.ds.d;
+            let mut ys = Vec::with_capacity(missing.len() * d);
+            for &i in &missing {
+                ys.extend_from_slice(self.ds.point(i));
+            }
+            let vals = self.oracles[id].query_batch(&ys);
+            for (&i, &v) in missing.iter().zip(&vals) {
+                // First writer wins under concurrent misses; report what
+                // actually ended up cached so callers stay consistent.
+                let stored = self.cache.insert_or_get((id as u32, i as u32), v);
+                resolved.insert(i as u32, Some(stored));
+            }
+        }
+        idx.iter()
+            .map(|&i| resolved[&(i as u32)].expect("every index resolved above"))
+            .collect()
     }
 
     /// Un-memoized query for an arbitrary vector (serving path).
@@ -181,7 +279,7 @@ impl MultiLevelKde {
 
     /// Clear the per-point memo table (experiment hygiene between runs).
     pub fn clear_cache(&self) {
-        self.cache.borrow_mut().clear();
+        self.cache.clear();
     }
 }
 
@@ -271,6 +369,55 @@ mod tests {
             let want: f64 = (n.lo..n.hi)
                 .map(|j| Kernel::Laplacian.eval(ds.point(j), ds.point(q)) as f64)
                 .sum();
+            assert!((got - want).abs() < 1e-6 * (1.0 + want));
+        }
+    }
+
+    #[test]
+    fn query_points_dedups_and_matches_query_point() {
+        let (_, tree) = build_exact(40, 71);
+        // Warm one entry through the single-point path first.
+        let warm = tree.query_point(1, 5);
+        let before = tree.counters.queries();
+        let idx = [5usize, 9, 9, 17, 5, 33];
+        let got = tree.query_points(1, &idx);
+        // 3 distinct cold points -> exactly 3 new queries, 1 backend batch.
+        assert_eq!(tree.counters.queries(), before + 3);
+        assert_eq!(got[0].to_bits(), warm.to_bits());
+        assert_eq!(got[1].to_bits(), got[2].to_bits());
+        assert_eq!(got[0].to_bits(), got[4].to_bits());
+        for (pos, &i) in idx.iter().enumerate() {
+            assert_eq!(got[pos].to_bits(), tree.query_point(1, i).to_bits());
+        }
+    }
+
+    #[test]
+    fn tree_is_safely_shareable_across_threads() {
+        // The sharded cache replaced the old `unsafe impl Sync`; verify the
+        // auto-derived bound holds and that concurrent mixed hit/miss
+        // traffic stays consistent with the exact answer.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<MultiLevelKde>();
+
+        let (ds, tree) = build_exact(64, 73);
+        let tree = Arc::new(tree);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let tr = tree.clone();
+                s.spawn(move || {
+                    for k in 0..64usize {
+                        let i = (k * 7 + t) % 64;
+                        let _ = tr.query_point(0, i);
+                        let _ = tr.query_points(2, &[i, (i + 1) % 64]);
+                    }
+                });
+            }
+        });
+        for i in (0..64).step_by(11) {
+            let want: f64 = (0..64)
+                .map(|j| Kernel::Laplacian.eval(ds.point(j), ds.point(i)) as f64)
+                .sum();
+            let got = tree.query_point(0, i);
             assert!((got - want).abs() < 1e-6 * (1.0 + want));
         }
     }

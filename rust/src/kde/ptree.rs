@@ -203,8 +203,21 @@ impl Kde for PartitionTreeKde {
         self.query_rec(0, y, budget)
     }
 
+    /// Native batch: each query's adaptive pruning budget depends on its
+    /// own two-pass calibration, so the batch is a per-query loop (the
+    /// structure is already `Sync`; there is no backend dispatch to fuse).
+    fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
+        let d = self.ds.d;
+        assert!(ys.len() % d == 0);
+        ys.chunks_exact(d).map(|y| self.query(y)).collect()
+    }
+
     fn subset_len(&self) -> usize {
         self.range_len
+    }
+
+    fn dim(&self) -> usize {
+        self.ds.d
     }
 }
 
