@@ -85,6 +85,10 @@ pub fn eigen_top_direct(
 /// `(K_S v)_i = v_i + sum_{j != i} k(i,j) v_j` is estimated as
 /// `v_i + deg_i * mean_{r}( v_{j_r} )` with `j_r` drawn by weighted
 /// neighbor sampling — KDE queries only, the submatrix is never formed.
+///
+/// The `t * matvec_samples` descents of one iteration are issued as a
+/// single `sample_batch` round, so a whole noisy matvec costs O(log t)
+/// backend dispatches rather than one per descent.
 pub fn eigen_top_noisy(
     ds: &Arc<Dataset>,
     kernel: Kernel,
@@ -103,13 +107,20 @@ pub fn eigen_top_noisy(
     let mut v: Vec<f64> = (0..t).map(|_| rng.normal()).collect();
     normalize(&mut v);
     let mut lam = 0.0;
+    // One batched descent round per power iteration: matvec_samples
+    // walkers per coordinate, all level-synchronized.
+    let mut sources = Vec::with_capacity(t * matvec_samples);
+    for i in 0..t {
+        sources.extend(std::iter::repeat(i).take(matvec_samples));
+    }
     for _ in 0..iters {
+        let samples = prims.neighbors.sample_batch(&sources, rng);
         let mut w = vec![0.0; t];
         for i in 0..t {
             let deg = prims.degrees.degrees[i];
             let mut acc = 0.0;
-            for _ in 0..matvec_samples {
-                if let Some(s) = prims.neighbors.sample(i, rng) {
+            for s in &samples[i * matvec_samples..(i + 1) * matvec_samples] {
+                if let Some(s) = s {
                     acc += v[s.neighbor];
                 }
             }

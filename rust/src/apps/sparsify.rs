@@ -41,6 +41,63 @@ pub fn theorem_sample_count(n: usize, eps: f64, tau: f64) -> usize {
     (t.ceil() as usize).max(n)
 }
 
+/// Algorithm 5.1 over prebuilt primitives with **batched** KDE traffic:
+/// all `t` degree draws happen first, the `t` neighbor descents run in
+/// level-order lock-step (`NeighborSampler::sample_batch`), and the `t`
+/// reverse probabilities are resolved by one batched probe — so a round
+/// issues O(log n) backend dispatches per tree level instead of O(t log n)
+/// singleton calls. The edge distribution and importance weights are the
+/// same as [`sparsify`]'s (each walker owns a forked RNG stream; the
+/// memoized oracle answers are shared), only the evaluation shape changes.
+pub fn sparsify_batched(prims: &Primitives, t: usize, rng: &mut Rng) -> SparsifyResult {
+    let ds = &prims.tree.ds;
+    let kernel = prims.tree.kernel;
+    let queries_before = prims.counters.queries();
+    // (a) degree-sample all sources up front.
+    let mut sources = Vec::with_capacity(t);
+    let mut p_u = Vec::with_capacity(t);
+    for _ in 0..t {
+        let (u, p) = prims.degrees.sample(rng);
+        sources.push(u);
+        p_u.push(p);
+    }
+    // (b) all neighbor descents in one batched round.
+    let samples = prims.neighbors.sample_batch(&sources, rng);
+    // (c) reverse descent probabilities q_{vu}, batched.
+    let mut pairs = Vec::new();
+    let mut keep = Vec::new();
+    for (idx, s) in samples.iter().enumerate() {
+        if let Some(s) = s {
+            pairs.push((s.neighbor, sources[idx]));
+            keep.push(idx);
+        }
+    }
+    let q_vu = prims.neighbors.neighbor_prob_batch(&pairs);
+    // (d) exact weights, identical to the per-query path.
+    let mut raw_edges: Vec<(usize, usize, f64)> = Vec::with_capacity(keep.len());
+    let mut kernel_evals = 0u64;
+    for (ki, &idx) in keep.iter().enumerate() {
+        let u = sources[idx];
+        let s = samples[idx].expect("kept samples are Some");
+        let v = s.neighbor;
+        let k_uv = kernel.eval(ds.point(u), ds.point(v)) as f64;
+        kernel_evals += 1;
+        let prob = p_u[idx] * s.prob + prims.degrees.prob(v) * q_vu[ki];
+        if prob <= 0.0 {
+            continue;
+        }
+        raw_edges.push((u, v, k_uv / (t as f64 * prob)));
+    }
+    let graph = WGraph::from_edges(ds.n, raw_edges);
+    SparsifyResult {
+        distinct_edges: graph.num_edges(),
+        graph,
+        samples: t,
+        kde_queries: prims.counters.queries() - queries_before,
+        kernel_evals,
+    }
+}
+
 /// Algorithm 5.1 over prebuilt primitives. `t` = number of edge samples.
 pub fn sparsify(
     prims: &Primitives,

@@ -2,9 +2,16 @@
 //!
 //! One router thread drains the ingress queue, groups requests per shard,
 //! and flushes a batch when it reaches `max_batch` or when the oldest
-//! request exceeds `max_wait`. Worker threads execute batches against the
-//! shared `KernelBackend` (one `sums` call per batch — the AOT artifact's
-//! native shape) and deliver results to per-request response channels.
+//! request exceeds `max_wait`. Worker threads execute batches through the
+//! shard's `Kde::query_batch` (one oracle/backend dispatch per batch — the
+//! AOT artifact's native shape) and deliver results to per-request
+//! response channels.
+//!
+//! A shard is any `Arc<dyn Kde>` — a raw dataset served exactly (the
+//! [`KdeService::start`] convenience wraps each `(kernel, dataset)` in a
+//! `NaiveKde`), a sampling/HBE estimator, or a multi-level-tree node —
+//! so the serving layer batches over the same oracle abstraction the
+//! algorithms use.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -12,14 +19,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
+use crate::kde::estimators::NaiveKde;
+use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
-
-/// A registered shard: one dataset (or dataset slice) served under an id.
-struct Shard {
-    kernel: Kernel,
-    data: Arc<Dataset>,
-}
 
 /// One KDE query in flight.
 pub struct QueryRequest {
@@ -60,23 +63,42 @@ pub struct KdeService {
 }
 
 impl KdeService {
-    /// Spawn the router + workers over the given shards.
+    /// Spawn the router + workers over exact-scan shards: each `(kernel,
+    /// dataset)` pair is served through a `NaiveKde` oracle over the
+    /// shared backend.
     pub fn start(
         shards: Vec<(Kernel, Arc<Dataset>)>,
         backend: Arc<dyn KernelBackend>,
         cfg: BatcherConfig,
     ) -> Self {
+        let counters = KdeCounters::new();
+        let oracles: Vec<Arc<dyn Kde>> = shards
+            .into_iter()
+            .map(|(kernel, data)| {
+                let n = data.n;
+                Arc::new(NaiveKde::new(
+                    data,
+                    kernel,
+                    0,
+                    n,
+                    backend.clone(),
+                    counters.clone(),
+                )) as Arc<dyn Kde>
+            })
+            .collect();
+        Self::start_with_oracles(oracles, cfg)
+    }
+
+    /// Spawn the router + workers over arbitrary KDE oracles (estimators,
+    /// tree nodes, ...): worker flushes call `query_batch` on the shard.
+    pub fn start_with_oracles(shards: Vec<Arc<dyn Kde>>, cfg: BatcherConfig) -> Self {
         assert!(!shards.is_empty());
         let metrics = Arc::new(ServiceMetrics::new());
-        let shards: Vec<Shard> = shards
-            .into_iter()
-            .map(|(kernel, data)| Shard { kernel, data })
-            .collect();
         let shards_len = shards.len();
         let (tx, rx) = mpsc::channel::<Control>();
         let m = metrics.clone();
         let router = std::thread::spawn(move || {
-            run_router(rx, shards, backend, cfg, m);
+            run_router(rx, shards, cfg, m);
         });
         KdeService { ingress: tx, router: Some(router), metrics, shards_len }
     }
@@ -121,8 +143,7 @@ impl Drop for KdeService {
 
 fn run_router(
     rx: Receiver<Control>,
-    shards: Vec<Shard>,
-    backend: Arc<dyn KernelBackend>,
+    shards: Vec<Arc<dyn Kde>>,
     cfg: BatcherConfig,
     metrics: Arc<ServiceMetrics>,
 ) {
@@ -134,7 +155,6 @@ fn run_router(
     let mut workers = Vec::new();
     for _ in 0..cfg.workers.max(1) {
         let rx = batch_rx.clone();
-        let be = backend.clone();
         let sh = shards.clone();
         let m = metrics.clone();
         let stop_flag = stop.clone();
@@ -152,7 +172,7 @@ fn run_router(
                     Err(mpsc::RecvTimeoutError::Disconnected) => return,
                 }
             };
-            execute_batch(batch, &sh, be.as_ref(), &m);
+            execute_batch(batch, sh.as_slice(), &m);
         }));
     }
 
@@ -234,23 +254,18 @@ fn run_router(
     }
 }
 
-fn execute_batch(
-    batch: Vec<QueryRequest>,
-    shards: &[Shard],
-    backend: &dyn KernelBackend,
-    metrics: &ServiceMetrics,
-) {
+fn execute_batch(batch: Vec<QueryRequest>, shards: &[Arc<dyn Kde>], metrics: &ServiceMetrics) {
     if batch.is_empty() {
         return;
     }
     let shard = &shards[batch[0].shard];
-    let d = shard.data.d;
+    let d = shard.dim();
     let mut queries = Vec::with_capacity(batch.len() * d);
     for req in &batch {
         assert_eq!(req.point.len(), d, "query dim mismatch");
         queries.extend_from_slice(&req.point);
     }
-    let sums = backend.sums(shard.kernel, &queries, shard.data.flat(), d);
+    let sums = shard.query_batch(&queries);
     for (req, &ans) in batch.iter().zip(&sums) {
         // Record BEFORE responding: once `send` lands the client may check
         // the completed counter, and recording after would race it.
@@ -364,6 +379,31 @@ mod tests {
             .sum();
         assert!((a - want1).abs() < 1e-6 * (1.0 + want1));
         assert!((b - want2).abs() < 1e-6 * (1.0 + want2));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oracle_shards_serve_estimators() {
+        // start_with_oracles: shards are arbitrary Kde oracles — here a
+        // NaiveKde over a subrange, i.e. a multi-level-tree node.
+        let mut rng = Rng::new(265);
+        let ds = Arc::new(gaussian_mixture(80, 4, 2, 1.0, 0.5, &mut rng));
+        let counters = crate::kde::KdeCounters::new();
+        let oracle: Arc<dyn crate::kde::Kde> = Arc::new(crate::kde::estimators::NaiveKde::new(
+            ds.clone(),
+            Kernel::Laplacian,
+            10,
+            60,
+            CpuBackend::new(),
+            counters,
+        ));
+        let svc = KdeService::start_with_oracles(vec![oracle], BatcherConfig::default());
+        let y = ds.point(2).to_vec();
+        let got = svc.query(0, y.clone());
+        let want: f64 = (10..60)
+            .map(|j| Kernel::Laplacian.eval(ds.point(j), &y) as f64)
+            .sum();
+        assert!((got - want).abs() < 1e-6 * (1.0 + want), "{got} vs {want}");
         svc.shutdown();
     }
 

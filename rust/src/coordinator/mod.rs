@@ -13,10 +13,11 @@
 //! ```
 //!
 //! Requests are single KDE queries (`shard`, `point`); the batcher packs up
-//! to `max_batch` of them into one backend `sums` call — exactly the shape
-//! the AOT artifact wants (B = 64 queries per execution) — and fans results
-//! back out through per-request channels. Shards correspond to datasets /
-//! multi-level-tree nodes registered with the service.
+//! to `max_batch` of them into one `Kde::query_batch` dispatch — exactly
+//! the shape the AOT artifact wants (B = 64 queries per execution) — and
+//! fans results back out through per-request channels. Shards are
+//! `Arc<dyn Kde>` oracles (`start_with_oracles`): raw datasets served
+//! exactly (`start`), sampling/HBE estimators, or multi-level-tree nodes.
 
 pub mod batcher;
 pub mod metrics;

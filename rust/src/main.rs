@@ -14,6 +14,7 @@ use kde_matrix::kde::{EstimatorKind, KdeConfig};
 use kde_matrix::kernel::{dataset, Kernel};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
 use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::runtime::tiled::TiledBackend;
 use kde_matrix::sampling::Primitives;
 use kde_matrix::util::rng::Rng;
 
@@ -66,18 +67,20 @@ impl Args {
 }
 
 fn backend_from_args(a: &Args) -> Arc<dyn KernelBackend> {
-    match a.str("backend", "cpu").as_str() {
+    match a.str("backend", "tiled").as_str() {
         "pjrt" => {
             let dir = a.str("artifacts", "artifacts");
             match PjrtBackend::new(dir) {
                 Ok(b) => b,
                 Err(e) => {
-                    eprintln!("PJRT backend unavailable ({e}); falling back to CPU");
-                    CpuBackend::new()
+                    eprintln!("PJRT backend unavailable ({e}); falling back to tiled CPU");
+                    TiledBackend::new()
                 }
             }
         }
-        _ => CpuBackend::new(),
+        "cpu" | "scalar" => CpuBackend::new(),
+        "tiled1" => TiledBackend::with_threads(1),
+        _ => TiledBackend::new(),
     }
 }
 
@@ -119,7 +122,7 @@ fn cmd_info() {
     println!("subcommands:");
     println!("  info                         this message");
     println!("  check-runtime                load artifacts, verify PJRT vs CPU parity");
-    println!("  sparsify   --n --t           spectral sparsification (Thm 5.3)");
+    println!("  sparsify   --n --t [--batched]  spectral sparsification (Thm 5.3)");
     println!("  resparsify --n --t --t2      two-stage: Alg 5.1 + eff.-resistance stage (§5.1)");
     println!("  solve      --n --t           Laplacian solve on the sparsifier (§5.1.1)");
     println!("  lra        --n --rank        low-rank approximation (Cor 5.14)");
@@ -131,7 +134,7 @@ fn cmd_info() {
     println!("  triangles  --n               weighted triangle total (Thm 6.17)");
     println!();
     println!("common flags: --kernel laplacian|gaussian|exponential|rational_quadratic");
-    println!("              --estimator sampling|naive|hbe  --backend cpu|pjrt");
+    println!("              --estimator sampling|naive|hbe  --backend tiled|tiled1|cpu|pjrt");
     println!("              --n <points> --d <dims> --seed <u64>");
 }
 
@@ -170,7 +173,11 @@ fn cmd_sparsify(a: &Args) {
     let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
     let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
     let t = a.usize("t", 20 * ds.n);
-    let r = apps::sparsify::sparsify(&prims, t, &mut rng);
+    let r = if a.bool("batched") {
+        apps::sparsify::sparsify_batched(&prims, t, &mut rng)
+    } else {
+        apps::sparsify::sparsify(&prims, t, &mut rng)
+    };
     let complete_edges = ds.n * (ds.n - 1) / 2;
     println!(
         "n={} samples={} distinct_edges={} reduction={:.1}x kde_queries={} kernel_evals={}",

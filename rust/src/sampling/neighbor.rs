@@ -8,6 +8,30 @@
 //! inside the tree so the *probability* of any concrete descent is a
 //! well-defined deterministic quantity — `neighbor_prob` recomputes it
 //! exactly, which Algorithm 5.1 (sparsification) requires.
+//!
+//! Two evaluation-shape refinements over the verbatim algorithm (both
+//! distribution-preserving):
+//!
+//! * **Leaf finish.** Once the descent reaches a node of size <=
+//!   `leaf_cutoff`, every oracle in that subtree is exact (the tree builds
+//!   naive oracles below the cutoff), so continuing the binary descent
+//!   telescopes to the categorical distribution `Pr[j] = k(x_i, x_j) /
+//!   mass(range)`. The sampler therefore finishes such nodes in one
+//!   categorical draw over the directly rescanned kernel values — the
+//!   normalizer is that exact rescan (not the memoized oracle answer), so
+//!   reported probability equals actual draw probability under any
+//!   backend, the leaf step costs zero oracle dispatches, and the descent
+//!   depth the batched path synchronizes over shrinks by
+//!   log2(leaf_cutoff) levels. `neighbor_prob` applies the same single
+//!   factor, keeping reported probabilities bit-identical.
+//! * **Level-order batching.** [`NeighborSampler::sample_batch`] runs many
+//!   descents in lock-step: per level it groups walkers by node and
+//!   fetches both children's answers for the whole group through
+//!   [`MultiLevelKde::query_points`] — one backend dispatch per (node,
+//!   side) instead of one per (walker, node, side). Each walker draws from
+//!   its own forked RNG stream, so a batched round produces *exactly* the
+//!   samples the sequential path produces from the same forked streams
+//!   (verified in tests/batched_pipeline.rs).
 
 use std::sync::Arc;
 
@@ -33,14 +57,153 @@ impl NeighborSampler {
         NeighborSampler { tree }
     }
 
-    /// Mass of node `id`'s subset as seen from source `i`, self-excluded.
-    fn side_mass(&self, id: usize, i: usize) -> f64 {
+    /// Node size at which the descent switches to the categorical finish.
+    fn finish_size(&self) -> usize {
+        self.tree.leaf_cutoff().max(1)
+    }
+
+    /// Self-exclude and clamp a raw node answer for source `i`.
+    fn side_mass_value(&self, id: usize, i: usize, raw: f64) -> f64 {
         let n = self.tree.node(id);
-        let mut v = self.tree.query_point(id, i);
+        let mut v = raw;
         if n.lo <= i && i < n.hi {
             v -= 1.0; // remove k(x_i, x_i)
         }
         v.max(0.0)
+    }
+
+    /// Mass of node `id`'s subset as seen from source `i`, self-excluded.
+    fn side_mass(&self, id: usize, i: usize) -> f64 {
+        self.side_mass_value(id, i, self.tree.query_point(id, i))
+    }
+
+    /// One branching step shared by the sequential and batched descents:
+    /// child masses `a`/`b` -> (chosen child, branch probability). `None`
+    /// only if both subtrees are empty of candidates.
+    fn branch(
+        &self,
+        l: usize,
+        r: usize,
+        i: usize,
+        a: f64,
+        b: f64,
+        rng: &mut Rng,
+    ) -> Option<(usize, f64)> {
+        let total = a + b;
+        if total <= 0.0 {
+            // All mass vanished under estimation noise: fall back to a
+            // size-proportional branch, excluding the source leaf.
+            let nl = self.tree.node(l);
+            let nr = self.tree.node(r);
+            let sl = (nl.hi - nl.lo - usize::from(nl.lo <= i && i < nl.hi)) as f64;
+            let sr = (nr.hi - nr.lo - usize::from(nr.lo <= i && i < nr.hi)) as f64;
+            let denom = sl + sr;
+            if denom <= 0.0 {
+                return None;
+            }
+            if rng.f64() * denom < sl {
+                Some((l, sl / denom))
+            } else {
+                Some((r, sr / denom))
+            }
+        } else if rng.f64() * total < a {
+            Some((l, a / total))
+        } else {
+            Some((r, b / total))
+        }
+    }
+
+    /// Exact self-excluded kernel mass of a cutoff-sized node's range,
+    /// rescanned with `Kernel::eval` in index order. The categorical
+    /// finish normalizes by THIS sum (not the memoized oracle answer) so
+    /// the reported probability equals the actual draw probability even
+    /// under an approximate backend (tiled fast-exp, PJRT) — and the leaf
+    /// step needs no oracle dispatch at all. `leaf_finish` and
+    /// `leaf_prob_factor` share it, keeping their factors bit-identical.
+    fn leaf_mass(&self, id: usize, i: usize) -> f64 {
+        let node = self.tree.node(id);
+        let ds = &self.tree.ds;
+        let kernel = self.tree.kernel;
+        let mut s = 0.0f64;
+        for j in node.lo..node.hi {
+            if j != i {
+                s += kernel.eval(ds.point(i), ds.point(j)) as f64;
+            }
+        }
+        s
+    }
+
+    /// Categorical finish at a cutoff-sized node: draw `j` in the node's
+    /// range (excluding `i`) with `Pr[j] = k(x_i, x_j) / mass`, returning
+    /// `(j, that factor)`. The node's subtree oracles are exact, so this
+    /// equals the distribution of descending the remaining levels.
+    fn leaf_finish(&self, id: usize, i: usize, rng: &mut Rng) -> Option<(usize, f64)> {
+        let node = self.tree.node(id);
+        let mass = self.leaf_mass(id, i);
+        if mass <= 0.0 {
+            // Degenerate mass: uniform over the range excluding the source
+            // (mirrors the size-proportional internal fallback).
+            let cnt = node.hi - node.lo - usize::from(node.lo <= i && i < node.hi);
+            if cnt == 0 {
+                return None;
+            }
+            let mut pick = (rng.f64() * cnt as f64) as usize;
+            if pick >= cnt {
+                pick = cnt - 1;
+            }
+            let mut seen = 0usize;
+            for j in node.lo..node.hi {
+                if j == i {
+                    continue;
+                }
+                if seen == pick {
+                    return Some((j, 1.0 / cnt as f64));
+                }
+                seen += 1;
+            }
+            return None;
+        }
+        let ds = &self.tree.ds;
+        let kernel = self.tree.kernel;
+        let target = rng.f64() * mass;
+        let mut acc = 0.0f64;
+        let mut last: Option<(usize, f64)> = None;
+        for j in node.lo..node.hi {
+            if j == i {
+                continue;
+            }
+            let k = kernel.eval(ds.point(i), ds.point(j)) as f64;
+            if k > 0.0 {
+                // mass > 0 guarantees at least one positive weight (mass
+                // sums these same evaluations), so tracking only positive
+                // candidates keeps reported probs > 0.
+                last = Some((j, k));
+            }
+            acc += k;
+            if target < acc {
+                return Some((j, k / mass));
+            }
+        }
+        // target < mass and acc reaches mass on the final element, so this
+        // is pure float-edge insurance: settle on the last positive
+        // candidate with its true factor.
+        last.map(|(j, k)| (j, k / mass))
+    }
+
+    /// Probability factor the categorical finish assigns to target `j`
+    /// (the exact counterpart of `leaf_finish`'s reported factor).
+    fn leaf_prob_factor(&self, id: usize, i: usize, j: usize) -> f64 {
+        let node = self.tree.node(id);
+        debug_assert!(node.lo <= j && j < node.hi && j != i);
+        let mass = self.leaf_mass(id, i);
+        if mass <= 0.0 {
+            let cnt = node.hi - node.lo - usize::from(node.lo <= i && i < node.hi);
+            if cnt == 0 {
+                return 0.0;
+            }
+            return 1.0 / cnt as f64;
+        }
+        self.tree.kernel.eval(self.tree.ds.point(i), self.tree.ds.point(j)) as f64 / mass
     }
 
     /// Algorithm 4.11. Returns the sampled neighbor and its exact descent
@@ -50,39 +213,88 @@ impl NeighborSampler {
         if self.tree.node(id).hi - self.tree.node(id).lo <= 1 {
             return None;
         }
+        let finish = self.finish_size();
         let mut prob = 1.0f64;
         loop {
             let node = self.tree.node(id);
-            let (Some(l), Some(r)) = (node.left, node.right) else {
-                debug_assert_ne!(node.lo, i, "descended into the source leaf");
-                return Some(NeighborSample { neighbor: node.lo, prob });
-            };
+            if node.hi - node.lo <= finish {
+                let (j, p) = self.leaf_finish(id, i, rng)?;
+                return Some(NeighborSample { neighbor: j, prob: prob * p });
+            }
+            let (l, r) = (
+                node.left.expect("internal node"),
+                node.right.expect("internal node"),
+            );
             let a = self.side_mass(l, i);
             let b = self.side_mass(r, i);
-            let total = a + b;
-            let (next, p) = if total <= 0.0 {
-                // All mass vanished under estimation noise: fall back to a
-                // size-proportional branch, excluding the source leaf.
-                let nl = self.tree.node(l);
-                let nr = self.tree.node(r);
-                let sl = (nl.hi - nl.lo - usize::from(nl.lo <= i && i < nl.hi)) as f64;
-                let sr = (nr.hi - nr.lo - usize::from(nr.lo <= i && i < nr.hi)) as f64;
-                if sl + sr <= 0.0 {
-                    return None;
-                }
-                if rng.f64() * (sl + sr) < sl {
-                    (l, sl / (sl + sr))
-                } else {
-                    (r, sr / (sl + sr))
-                }
-            } else if rng.f64() * total < a {
-                (l, a / total)
-            } else {
-                (r, b / total)
-            };
+            let (next, p) = self.branch(l, r, i, a, b, rng)?;
             prob *= p;
             id = next;
         }
+    }
+
+    /// Batched Algorithm 4.11: run one descent per entry of `sources` in
+    /// level-order lock-step, grouping same-node walkers so every level
+    /// costs one [`MultiLevelKde::query_points`] call per (node, side).
+    ///
+    /// Each walker draws from its own stream forked off `rng` in source
+    /// order, so the result is *identical* to calling [`Self::sample`]
+    /// sequentially with the same forked streams (deterministic oracles),
+    /// while issuing a small fraction of the backend dispatches.
+    pub fn sample_batch(&self, sources: &[usize], rng: &mut Rng) -> Vec<Option<NeighborSample>> {
+        let mut rngs: Vec<Rng> = sources.iter().map(|_| rng.fork()).collect();
+        let n = sources.len();
+        let mut out: Vec<Option<NeighborSample>> = vec![None; n];
+        let root = self.tree.root();
+        if self.tree.node(root).hi - self.tree.node(root).lo <= 1 {
+            return out;
+        }
+        let finish = self.finish_size();
+        // (walker, node, accumulated probability)
+        let mut active: Vec<(usize, usize, f64)> = (0..n).map(|w| (w, root, 1.0f64)).collect();
+        while !active.is_empty() {
+            // Group by node id; deterministic order so HBE-style stateful
+            // oracles see a reproducible first-query order.
+            active.sort_by_key(|&(w, id, _)| (id, w));
+            let mut next: Vec<(usize, usize, f64)> = Vec::with_capacity(active.len());
+            let mut g0 = 0usize;
+            while g0 < active.len() {
+                let id = active[g0].1;
+                let mut g1 = g0;
+                while g1 < active.len() && active[g1].1 == id {
+                    g1 += 1;
+                }
+                let group = &active[g0..g1];
+                let node = self.tree.node(id);
+                if node.hi - node.lo <= finish {
+                    // The categorical finish rescans the (cutoff-sized)
+                    // range directly — no oracle dispatch needed.
+                    for &(w, _, prob) in group {
+                        out[w] = self
+                            .leaf_finish(id, sources[w], &mut rngs[w])
+                            .map(|(j, p)| NeighborSample { neighbor: j, prob: prob * p });
+                    }
+                } else {
+                    let srcs: Vec<usize> = group.iter().map(|&(w, _, _)| sources[w]).collect();
+                    let l = node.left.expect("internal node");
+                    let r = node.right.expect("internal node");
+                    let raw_l = self.tree.query_points(l, &srcs);
+                    let raw_r = self.tree.query_points(r, &srcs);
+                    for (gi, &(w, _, prob)) in group.iter().enumerate() {
+                        let i = sources[w];
+                        let a = self.side_mass_value(l, i, raw_l[gi]);
+                        let b = self.side_mass_value(r, i, raw_r[gi]);
+                        match self.branch(l, r, i, a, b, &mut rngs[w]) {
+                            Some((nid, p)) => next.push((w, nid, prob * p)),
+                            None => out[w] = None,
+                        }
+                    }
+                }
+                g0 = g1;
+            }
+            active = next;
+        }
+        out
     }
 
     /// Deterministic probability that `sample(i)` returns `j` (the product
@@ -90,14 +302,18 @@ impl NeighborSampler {
     /// memoized KDE answers the sampler used). Algorithm 5.1 step (c)/(d).
     pub fn neighbor_prob(&self, i: usize, j: usize) -> f64 {
         assert_ne!(i, j, "a vertex is not its own neighbor");
+        let finish = self.finish_size();
         let mut id = self.tree.root();
         let mut prob = 1.0f64;
         loop {
             let node = self.tree.node(id);
-            let (Some(l), Some(r)) = (node.left, node.right) else {
-                debug_assert_eq!(node.lo, j);
-                return prob;
-            };
+            if node.hi - node.lo <= finish {
+                return prob * self.leaf_prob_factor(id, i, j);
+            }
+            let (l, r) = (
+                node.left.expect("internal node"),
+                node.right.expect("internal node"),
+            );
             let a = self.side_mass(l, i);
             let b = self.side_mass(r, i);
             let total = a + b;
@@ -117,6 +333,85 @@ impl NeighborSampler {
             }
             id = if goes_left { l } else { r };
         }
+    }
+
+    /// Batched [`Self::neighbor_prob`] over `(source, target)` pairs, with
+    /// the same level-order grouping as `sample_batch` (the descents are
+    /// deterministic — no RNG — so this is purely a dispatch-shape win).
+    pub fn neighbor_prob_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let n = pairs.len();
+        let mut out = vec![0.0f64; n];
+        if n == 0 {
+            return out;
+        }
+        let finish = self.finish_size();
+        let root = self.tree.root();
+        let mut active: Vec<(usize, usize, f64)> = (0..n)
+            .map(|w| {
+                let (i, j) = pairs[w];
+                assert_ne!(i, j, "a vertex is not its own neighbor");
+                (w, root, 1.0f64)
+            })
+            .collect();
+        while !active.is_empty() {
+            active.sort_by_key(|&(w, id, _)| (id, w));
+            let mut next: Vec<(usize, usize, f64)> = Vec::with_capacity(active.len());
+            let mut g0 = 0usize;
+            while g0 < active.len() {
+                let id = active[g0].1;
+                let mut g1 = g0;
+                while g1 < active.len() && active[g1].1 == id {
+                    g1 += 1;
+                }
+                let group = &active[g0..g1];
+                let node = self.tree.node(id);
+                if node.hi - node.lo <= finish {
+                    for &(w, _, prob) in group {
+                        let (i, j) = pairs[w];
+                        out[w] = prob * self.leaf_prob_factor(id, i, j);
+                    }
+                } else {
+                    let srcs: Vec<usize> = group.iter().map(|&(w, _, _)| pairs[w].0).collect();
+                    let l = node.left.expect("internal node");
+                    let r = node.right.expect("internal node");
+                    let raw_l = self.tree.query_points(l, &srcs);
+                    let raw_r = self.tree.query_points(r, &srcs);
+                    let nl = self.tree.node(l);
+                    let nr = self.tree.node(r);
+                    for (gi, &(w, _, prob)) in group.iter().enumerate() {
+                        let (i, j) = pairs[w];
+                        let a = self.side_mass_value(l, i, raw_l[gi]);
+                        let b = self.side_mass_value(r, i, raw_r[gi]);
+                        let total = a + b;
+                        let goes_left = nl.lo <= j && j < nl.hi;
+                        let factor = if total <= 0.0 {
+                            let sl =
+                                (nl.hi - nl.lo - usize::from(nl.lo <= i && i < nl.hi)) as f64;
+                            let sr =
+                                (nr.hi - nr.lo - usize::from(nr.lo <= i && i < nr.hi)) as f64;
+                            let denom = sl + sr;
+                            if denom <= 0.0 {
+                                out[w] = 0.0;
+                                continue;
+                            }
+                            if goes_left {
+                                sl / denom
+                            } else {
+                                sr / denom
+                            }
+                        } else if goes_left {
+                            a / total
+                        } else {
+                            b / total
+                        };
+                        next.push((w, if goes_left { l } else { r }, prob * factor));
+                    }
+                }
+                g0 = g1;
+            }
+            active = next;
+        }
+        out
     }
 
     /// Theorem 4.12's exact mode: rejection-sample against true kernel
@@ -324,5 +619,55 @@ mod tests {
         let tv_exact = crate::util::stats::tv_distance(&counts, &want);
         want[i] = 0.0;
         assert!(tv_exact < 0.08, "rejection-corrected TV {tv_exact}");
+    }
+
+    #[test]
+    fn leaf_finish_covers_whole_range_from_root() {
+        // n <= leaf_cutoff: the descent is a single categorical draw and
+        // must still match the true edge distribution and never self-step.
+        let s = build(12, 107, KdeConfig::exact());
+        assert!(12 <= s.finish_size() + 4, "setup: root should leaf-finish soon");
+        let ds = &s.tree.ds;
+        let i = 4;
+        let mut rng = Rng::new(109);
+        let trials = 30_000;
+        let mut counts = vec![0f64; 12];
+        for _ in 0..trials {
+            let got = s.sample(i, &mut rng).unwrap();
+            assert_ne!(got.neighbor, i);
+            counts[got.neighbor] += 1.0;
+        }
+        let mut want: Vec<f64> = (0..12)
+            .map(|j| {
+                if j == i {
+                    1e-300
+                } else {
+                    Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64
+                }
+            })
+            .collect();
+        counts[i] = 1e-300;
+        let tv = crate::util::stats::tv_distance(&counts, &want);
+        want[i] = 0.0;
+        assert!(tv < 0.03, "leaf-finish TV {tv}");
+    }
+
+    #[test]
+    fn prob_batch_matches_sequential_probs() {
+        let s = build(40, 111, KdeConfig::exact());
+        let pairs: Vec<(usize, usize)> = (0..40)
+            .flat_map(|i| [(i, (i + 7) % 40), (i, (i + 19) % 40)])
+            .filter(|&(i, j)| i != j)
+            .collect();
+        let batched = s.neighbor_prob_batch(&pairs);
+        for (w, &(i, j)) in pairs.iter().enumerate() {
+            let seq = s.neighbor_prob(i, j);
+            assert_eq!(
+                batched[w].to_bits(),
+                seq.to_bits(),
+                "pair ({i},{j}): batched {} vs sequential {seq}",
+                batched[w]
+            );
+        }
     }
 }

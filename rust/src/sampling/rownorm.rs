@@ -37,13 +37,15 @@ impl RowNormSampler {
         let tree = MultiLevelKde::build(scaled, kernel, cfg, backend, counters.clone());
         let before = counters.queries();
         let n = ds.n;
-        let mut row_norms_sq = Vec::with_capacity(n);
-        for i in 0..n {
-            // Root query on cX at (c x_i) = sum_j k(x_i, x_j)^2, including
-            // the j = i self term (= 1), which IS part of the row norm.
-            let v = tree.query_point(tree.root(), i).max(1e-12);
-            row_norms_sq.push(v);
-        }
+        // Root queries on cX at (c x_i) = sum_j k(x_i, x_j)^2, including
+        // the j = i self term (= 1), which IS part of the row norm. One
+        // batched dispatch for all n rows.
+        let idx: Vec<usize> = (0..n).collect();
+        let row_norms_sq: Vec<f64> = tree
+            .query_points(tree.root(), &idx)
+            .into_iter()
+            .map(|v| v.max(1e-12))
+            .collect();
         let build_queries = counters.queries() - before;
         let sampler = PrefixSampler::new(&row_norms_sq);
         RowNormSampler { row_norms_sq, sampler, build_queries }

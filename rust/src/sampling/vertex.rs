@@ -69,18 +69,20 @@ pub struct DegreeSampler {
 
 impl DegreeSampler {
     /// Run Algorithm 4.3 against the multi-level KDE's root oracle: n KDE
-    /// queries, executed once.
+    /// queries, executed once — batched through `query_points`, so the
+    /// whole degree array costs ONE backend dispatch instead of n.
     pub fn build(tree: &Arc<MultiLevelKde>) -> Self {
         let n = tree.ds.n;
         let before = tree.counters.queries();
-        let mut degrees = Vec::with_capacity(n);
-        for i in 0..n {
-            // Root query includes the self term k(x_i, x_i) = 1: subtract.
-            let raw = tree.query_point(tree.root(), i) - 1.0;
+        let idx: Vec<usize> = (0..n).collect();
+        let raw = tree.query_points(tree.root(), &idx);
+        let degrees: Vec<f64> = raw
+            .into_iter()
+            // Root answers include the self term k(x_i, x_i) = 1: subtract.
             // Estimates can dip <= 0 under sampling noise; floor at a tiny
             // positive value so the distribution stays well-defined.
-            degrees.push(raw.max(1e-12));
-        }
+            .map(|v| (v - 1.0).max(1e-12))
+            .collect();
         let build_queries = tree.counters.queries() - before;
         let sampler = PrefixSampler::new(&degrees);
         DegreeSampler { degrees, sampler, build_queries }

@@ -1,0 +1,171 @@
+//! The batched KDE query pipeline vs the per-query path.
+//!
+//! Three contracts:
+//! 1. `sample_batch` produces *exactly* the samples (neighbor + reported
+//!    probability, bit-for-bit) that sequential `sample` calls produce
+//!    from the same forked RNG streams — batching changes the evaluation
+//!    shape, never the distribution.
+//! 2. A 1024-descent sparsifier round through the batched pipeline issues
+//!    <= 10% of the backend calls the per-query path issues.
+//! 3. The batched sparsifier is still a spectral sparsifier.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::sparsify::{sparsify, sparsify_batched, spectral_error};
+use kde_matrix::kde::multilevel::MultiLevelKde;
+use kde_matrix::kde::{KdeConfig, KdeCounters};
+use kde_matrix::kernel::{dataset::gaussian_mixture, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::sampling::{NeighborSampler, Primitives};
+use kde_matrix::util::rng::Rng;
+
+/// Two independently built but identical trees (same dataset, config and
+/// deterministic backend), so batched and sequential runs cannot share a
+/// memo cache and the comparison is honest.
+fn twin_samplers(n: usize, cfg: &KdeConfig, seed: u64) -> (NeighborSampler, NeighborSampler) {
+    let mut rng = Rng::new(seed);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+    let build = |ds: Arc<kde_matrix::kernel::Dataset>| {
+        Arc::new(MultiLevelKde::build(
+            ds,
+            Kernel::Laplacian,
+            cfg,
+            CpuBackend::new(),
+            KdeCounters::new(),
+        ))
+    };
+    (
+        NeighborSampler::new(build(ds.clone())),
+        NeighborSampler::new(build(ds)),
+    )
+}
+
+#[test]
+fn batched_descents_match_sequential_bit_for_bit() {
+    for cfg in [
+        KdeConfig::exact(),
+        KdeConfig {
+            kind: kde_matrix::kde::EstimatorKind::Sampling { eps: 0.4, tau: 0.2 },
+            leaf_cutoff: 8,
+            seed: 0x77,
+        },
+    ] {
+        let (batched_s, seq_s) = twin_samplers(96, &cfg, 1201);
+        let sources: Vec<usize> = (0..300).map(|k| (k * 13) % 96).collect();
+        let batched = batched_s.sample_batch(&sources, &mut Rng::new(4242));
+        // Sequential replay: fork per-walker streams from an identical
+        // master RNG in the same order sample_batch does.
+        let mut master = Rng::new(4242);
+        let mut rngs: Vec<Rng> = sources.iter().map(|_| master.fork()).collect();
+        for (w, &src) in sources.iter().enumerate() {
+            let seq = seq_s.sample(src, &mut rngs[w]);
+            match (batched[w], seq) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.neighbor, b.neighbor, "walker {w} diverged");
+                    assert_eq!(
+                        a.prob.to_bits(),
+                        b.prob.to_bits(),
+                        "walker {w}: prob {} vs {}",
+                        a.prob,
+                        b.prob
+                    );
+                    assert_ne!(a.neighbor, src, "self-sample");
+                    // Reported probability matches the deterministic
+                    // recomputation on the batched tree too.
+                    let recomputed = batched_s.neighbor_prob(src, a.neighbor);
+                    assert_eq!(a.prob.to_bits(), recomputed.to_bits());
+                }
+                (None, None) => {}
+                (a, b) => panic!("walker {w}: batched {a:?} vs sequential {b:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_round_issues_under_ten_percent_of_backend_calls() {
+    // A 1024-descent sparsifier round, per-query vs batched, on identical
+    // primitives. Backend calls are counted at the KernelBackend (every
+    // `sums`/`block` dispatch), which is the quantity the AOT/PJRT path
+    // pays per execution.
+    let n = 256;
+    let t = 1024;
+    let cfg = KdeConfig::exact();
+    let mut rng = Rng::new(1301);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.0, 0.5, &mut rng));
+
+    let be_seq = CpuBackend::new();
+    let prims_seq = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, be_seq.clone());
+    let before_seq = be_seq.calls();
+    let r_seq = sparsify(&prims_seq, t, &mut Rng::new(7));
+    let calls_seq = be_seq.calls() - before_seq;
+
+    let be_bat = CpuBackend::new();
+    let prims_bat = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, be_bat.clone());
+    let before_bat = be_bat.calls();
+    let r_bat = sparsify_batched(&prims_bat, t, &mut Rng::new(7));
+    let calls_bat = be_bat.calls() - before_bat;
+
+    assert_eq!(r_seq.samples, t);
+    assert_eq!(r_bat.samples, t);
+    assert!(r_bat.distinct_edges > 0);
+    assert!(calls_bat > 0, "batched round must still hit the backend");
+    assert!(
+        calls_bat * 10 <= calls_seq,
+        "batched round used {calls_bat} backend calls vs {calls_seq} per-query \
+         (need <= 10%)"
+    );
+    // Both rounds answer the same number of logical KDE queries up to the
+    // cache-state difference of their own run (same descents, same memo
+    // discipline) — the batched one must not secretly do MORE work.
+    assert!(
+        r_bat.kde_queries <= r_seq.kde_queries * 2,
+        "batched queries {} vs per-query {}",
+        r_bat.kde_queries,
+        r_seq.kde_queries
+    );
+}
+
+#[test]
+fn batched_sparsifier_is_spectrally_sound() {
+    let n = 48;
+    let cfg = KdeConfig::exact();
+    let mut rng = Rng::new(1401);
+    let ds = Arc::new(gaussian_mixture(n, 3, 2, 0.8, 0.5, &mut rng));
+    let prims = Primitives::build(ds.clone(), Kernel::Laplacian, &cfg, CpuBackend::new());
+    let r = sparsify_batched(&prims, 6_000, &mut rng);
+    let err = spectral_error(&ds, Kernel::Laplacian, &r.graph, 20, &mut rng);
+    assert!(err < 0.4, "batched sparsifier spectral error {err}");
+    assert!(
+        r.distinct_edges < n * (n - 1) / 2,
+        "must be sparser than complete"
+    );
+}
+
+#[test]
+fn batched_sparsifier_weights_are_consistent() {
+    // Every edge weight must equal k(u,v) / (t * (p_u q_uv + p_v q_vu))
+    // under the deterministic recomputation of the same tree — i.e. the
+    // batched round reports honest probabilities. We verify through the
+    // unbiasedness statistic: mean Laplacian quadratic form over repeats
+    // approaches the exact one (the test that catches any probability
+    // bookkeeping drift in the batched path).
+    let n = 24;
+    let mut rng = Rng::new(1501);
+    let ds = Arc::new(gaussian_mixture(n, 3, 2, 0.8, 0.5, &mut rng));
+    let prims = Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), CpuBackend::new());
+    let full = kde_matrix::graph::WGraph::complete_kernel_graph(&ds, Kernel::Laplacian);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let want = full.laplacian_quadratic(&x);
+    let runs = 60;
+    let mut acc = 0.0;
+    for _ in 0..runs {
+        let r = sparsify_batched(&prims, 400, &mut rng);
+        acc += r.graph.laplacian_quadratic(&x);
+    }
+    let mean = acc / runs as f64;
+    assert!(
+        (mean - want).abs() < 0.08 * want,
+        "E[x'L'x] = {mean} vs x'Lx = {want}"
+    );
+}
