@@ -1,4 +1,7 @@
-//! Table 1 regeneration: KDE query cost per estimator / kernel / tau.
+//! Table 1 regeneration: KDE query cost per estimator / kernel / tau,
+//! plus the kernel-backend comparison (scalar vs tiled vs tiled+threads)
+//! that writes `BENCH_backend.json` so future PRs have a pairs/sec
+//! trajectory to regress against (EXPERIMENTS.md §Perf).
 //!
 //! The paper's Table 1 rows are preprocessing + query complexities; here
 //! we measure the realized query time and per-query kernel-evaluation
@@ -11,14 +14,65 @@ use std::sync::Arc;
 use kde_matrix::kde::estimators::{NaiveKde, SamplingKde};
 use kde_matrix::kde::hbe::HbeKde;
 use kde_matrix::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters};
-use kde_matrix::kernel::{dataset, Kernel};
-use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::kernel::{dataset, Kernel, ALL_KERNELS};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::tiled::TiledBackend;
 use kde_matrix::util::bench::BenchSuite;
 use kde_matrix::util::rng::Rng;
+
+/// Backend sums throughput at the acceptance shape (n = 4096, d = 64,
+/// queries = data) and JSON emission for the perf trajectory.
+fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
+    let (n, d) = (4096usize, 64usize);
+    let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
+    let buf = ds.flat();
+    let pairs = (n * n) as f64;
+    let threads = std::thread::available_parallelism()
+        .map(|t| t.get())
+        .unwrap_or(1);
+    let backends: Vec<(&str, Arc<dyn KernelBackend>)> = vec![
+        ("scalar", CpuBackend::new()),
+        ("tiled_1t", TiledBackend::with_threads(1)),
+        ("tiled_mt", TiledBackend::new()),
+    ];
+    let mut rows = Vec::new();
+    for k in ALL_KERNELS {
+        for (label, be) in &backends {
+            let mean_ns = suite.bench(
+                &format!("backend_sums/{}/{} n={n} d={d}", label, k.name()),
+                || {
+                    std::hint::black_box(be.sums(k, buf, buf, d));
+                },
+            );
+            let pairs_per_sec = pairs / (mean_ns * 1e-9);
+            rows.push(format!(
+                "    {{\"kernel\": \"{}\", \"backend\": \"{}\", \"mean_ns\": {:.0}, \
+                 \"pairs_per_sec\": {:.4e}}}",
+                k.name(),
+                label,
+                mean_ns,
+                pairs_per_sec
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"backend_sums\",\n  \"n\": {n},\n  \"d\": {d},\n  \
+         \"threads_available\": {threads},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    match std::fs::write("BENCH_backend.json", &json) {
+        Ok(()) => suite.note("wrote BENCH_backend.json"),
+        Err(e) => suite.note(&format!("could not write BENCH_backend.json: {e}")),
+    }
+}
 
 fn main() {
     let mut suite = BenchSuite::new("bench_kde (Table 1)");
     let mut rng = Rng::new(601);
+
+    // Backend comparison first so the JSON lands even if the long Table 1
+    // sweep is interrupted.
+    bench_backends(&mut suite, &mut rng);
 
     for &n in &[2_048usize, 8_192, 16_384] {
         let ds = Arc::new(dataset::gaussian_mixture(n, 16, 4, 0.6, 0.5, &mut rng));
