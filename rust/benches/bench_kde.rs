@@ -16,12 +16,23 @@ use kde_matrix::kde::hbe::HbeKde;
 use kde_matrix::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters};
 use kde_matrix::kernel::{dataset, Kernel, ALL_KERNELS};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::simd::{MicroKernel, SimdMode};
 use kde_matrix::runtime::tiled::TiledBackend;
 use kde_matrix::util::bench::BenchSuite;
 use kde_matrix::util::rng::Rng;
 
 /// Backend sums throughput at the acceptance shape (n = 4096, d = 64,
 /// queries = data) and JSON emission for the perf trajectory.
+///
+/// Series (scripts/compare_bench.py keys on kernel x backend, so labels
+/// are stable across hosts; the per-row `isa` records what actually ran):
+///
+/// * `scalar`          — per-pair scalar reference (`CpuBackend`).
+/// * `tiled_1t_scalar` — tiled backend, forced scalar microkernel, one
+///   thread: the autovectorized-tiling baseline the SIMD path must beat.
+/// * `tiled_1t`        — tiled backend, auto (best) microkernel, one
+///   thread: `tiled_1t / tiled_1t_scalar` is the pure SIMD speedup.
+/// * `tiled_mt`        — tiled backend, auto microkernel, all cores.
 fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     let (n, d) = (4096usize, 64usize);
     let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
@@ -30,8 +41,11 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     let threads = std::thread::available_parallelism()
         .map(|t| t.get())
         .unwrap_or(1);
+    let tiled_scalar = TiledBackend::with_simd(1, SimdMode::Scalar)
+        .expect("scalar microkernel is always available");
     let backends: Vec<(&str, Arc<dyn KernelBackend>)> = vec![
         ("scalar", CpuBackend::new()),
+        ("tiled_1t_scalar", tiled_scalar),
         ("tiled_1t", TiledBackend::with_threads(1)),
         ("tiled_mt", TiledBackend::new()),
     ];
@@ -46,10 +60,11 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
             );
             let pairs_per_sec = pairs / (mean_ns * 1e-9);
             rows.push(format!(
-                "    {{\"kernel\": \"{}\", \"backend\": \"{}\", \"mean_ns\": {:.0}, \
-                 \"pairs_per_sec\": {:.4e}}}",
+                "    {{\"kernel\": \"{}\", \"backend\": \"{}\", \"isa\": \"{}\", \
+                 \"mean_ns\": {:.0}, \"pairs_per_sec\": {:.4e}}}",
                 k.name(),
                 label,
+                be.isa(),
                 mean_ns,
                 pairs_per_sec
             ));
@@ -57,7 +72,9 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     }
     let json = format!(
         "{{\n  \"bench\": \"backend_sums\",\n  \"n\": {n},\n  \"d\": {d},\n  \
-         \"threads_available\": {threads},\n  \"results\": [\n{}\n  ]\n}}\n",
+         \"threads_available\": {threads},\n  \"isa_detected\": \"{}\",\n  \
+         \"provisional\": false,\n  \"results\": [\n{}\n  ]\n}}\n",
+        MicroKernel::detect().isa.name(),
         rows.join(",\n")
     );
     match std::fs::write("BENCH_backend.json", &json) {
@@ -73,6 +90,14 @@ fn main() {
     // Backend comparison first so the JSON lands even if the long Table 1
     // sweep is interrupted.
     bench_backends(&mut suite, &mut rng);
+
+    // The CI bench-regression job only consumes the backend series above;
+    // BENCH_BACKENDS_ONLY=1 skips the long Table 1 estimator sweep.
+    if std::env::var_os("BENCH_BACKENDS_ONLY").is_some() {
+        suite.note("BENCH_BACKENDS_ONLY set: skipping the Table 1 sweep");
+        suite.finish();
+        return;
+    }
 
     for &n in &[2_048usize, 8_192, 16_384] {
         let ds = Arc::new(dataset::gaussian_mixture(n, 16, 4, 0.6, 0.5, &mut rng));

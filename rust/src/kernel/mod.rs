@@ -99,34 +99,57 @@ impl Kernel {
     }
 }
 
+/// Coefficients of [`fast_exp_neg`]'s range reduction and polynomial,
+/// shared with the lane-parallel SIMD evaluations in
+/// [`crate::runtime::simd`]. Keeping a single source of truth means the
+/// scalar and vector paths evaluate the *same* approximation, so they
+/// agree to a few ULPs (FMA regrouping only) instead of carrying two
+/// independent approximation errors — that is what makes the SIMD parity
+/// contract in `tests/simd_parity.rs` tight enough to be useful.
+pub mod fexp {
+    /// `log2(e)` for the reduction `x = j*ln2 + f`.
+    pub const LOG2E: f32 = std::f32::consts::LOG2_E;
+    /// High part of `ln2` (hi/lo split for an accurate reduction).
+    pub const LN2_HI: f32 = 0.693_145_75;
+    /// Low part of `ln2`.
+    pub const LN2_LO: f32 = 1.428_606_8e-6;
+    /// Round-to-nearest magic constant, `1.5 * 2^23`. Adding and
+    /// subtracting it rounds to integer without a libm `round()` call and
+    /// lowers to plain adds in both scalar and vector code.
+    pub const MAGIC: f32 = 12_582_912.0;
+    /// Inputs below this hard-underflow to exactly 0 (`e^-87` is already
+    /// within a few ULPs of the smallest normal f32).
+    pub const UNDERFLOW: f32 = -87.0;
+    /// Degree-5 polynomial for `e^f` on `|f| <= ln2/2`:
+    /// `1 + f*(1 + f*(C2 + f*(C3 + f*(C4 + f*C5))))`.
+    pub const C2: f32 = 0.5;
+    pub const C3: f32 = 0.166_666_67;
+    pub const C4: f32 = 0.041_666_67;
+    pub const C5: f32 = 0.008_333_76;
+}
+
 /// Fast `e^x` for `x <= 0` via range reduction `e^x = 2^j * e^f` with a
-/// degree-5 polynomial on `|f| <= ln2/2`. Relative error < 2e-6 (worst
-/// near the underflow edge; verified by `fast_exp_matches_std`).
+/// degree-5 polynomial on `|f| <= ln2/2` (coefficients in [`fexp`]).
+/// Relative error < 5e-6 (worst near the underflow edge; verified by
+/// `fast_exp_matches_std`).
 ///
-/// NOT used on the hot path: the §Perf pass measured it no faster than
-/// libm `expf` on this target (the serial polynomial chain dominates) and
-/// it was reverted from `Kernel::eval`. Kept as a utility + negative
-/// result record (EXPERIMENTS.md §Perf).
+/// Not worth calling one-at-a-time: the §Perf pass measured a *single*
+/// evaluation no faster than libm `expf` (the serial polynomial chain
+/// dominates) and it was reverted from `Kernel::eval`. It pays when many
+/// independent evaluations are in flight: the tiled backend maps it over
+/// a whole distance tile, and `runtime::simd` evaluates the same
+/// polynomial on 8/4 lanes at once (EXPERIMENTS.md §Perf).
 #[inline]
 pub fn fast_exp_neg(x: f32) -> f32 {
     debug_assert!(x <= 1e-6, "fast_exp_neg expects non-positive input");
-    if x < -87.0 {
+    if x < fexp::UNDERFLOW {
         return 0.0;
     }
-    const LOG2E: f32 = std::f32::consts::LOG2_E;
-    // Split ln2 into high+low parts for an accurate reduction.
-    const LN2_HI: f32 = 0.693_145_75;
-    const LN2_LO: f32 = 1.428_606_8e-6;
-    // Round-to-nearest via the magic-constant trick: `round()` lowers to a
-    // libm call on baseline x86-64 and dominates the whole function.
-    const MAGIC: f32 = 12_582_912.0; // 1.5 * 2^23
-    let j = (x * LOG2E + MAGIC) - MAGIC;
-    let f = (x - j * LN2_HI) - j * LN2_LO;
-    // e^f, |f| <= 0.3466: Taylor/minimax degree 5.
+    let j = (x * fexp::LOG2E + fexp::MAGIC) - fexp::MAGIC;
+    let f = (x - j * fexp::LN2_HI) - j * fexp::LN2_LO;
     let p = 1.0
         + f * (1.0
-            + f * (0.5
-                + f * (0.166_666_67 + f * (0.041_666_67 + f * 0.008_333_76))));
+            + f * (fexp::C2 + f * (fexp::C3 + f * (fexp::C4 + f * fexp::C5))));
     let scale = f32::from_bits((((j as i32) + 127) << 23) as u32);
     scale * p
 }

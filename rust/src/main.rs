@@ -14,6 +14,7 @@ use kde_matrix::kde::{EstimatorKind, KdeConfig};
 use kde_matrix::kernel::{dataset, Kernel};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
 use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::runtime::simd::SimdMode;
 use kde_matrix::runtime::tiled::TiledBackend;
 use kde_matrix::sampling::Primitives;
 use kde_matrix::util::rng::Rng;
@@ -66,21 +67,66 @@ impl Args {
     }
 }
 
+/// `--simd {auto,avx2,neon,scalar}` — explicit microkernel ISA for the
+/// tiled backend (A/B benchmarking). An unsupported explicit request is a
+/// hard error rather than a silent fallback, so measurements mean what
+/// they claim.
+fn simd_mode_from_args(a: &Args) -> SimdMode {
+    let name = a.str("simd", "auto");
+    match SimdMode::from_name(&name) {
+        Some(mode) => mode,
+        None => {
+            eprintln!("unknown --simd mode `{name}` (expected auto|avx2|neon|scalar)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn tiled_backend(threads: usize, mode: SimdMode) -> Arc<dyn KernelBackend> {
+    match TiledBackend::with_simd(threads, mode) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("--simd {}: {e}", mode.name());
+            std::process::exit(2);
+        }
+    }
+}
+
+/// A non-default `--simd` on a backend that has no microkernel vtable
+/// would silently measure the wrong thing; keep the no-silent-fallback
+/// contract by refusing it.
+fn reject_explicit_simd(a: &Args, mode: SimdMode, backend: &str) {
+    if mode != SimdMode::Auto && a.flags.contains_key("simd") {
+        eprintln!(
+            "--simd {} only applies to the tiled backend (got --backend {backend})",
+            mode.name()
+        );
+        std::process::exit(2);
+    }
+}
+
 fn backend_from_args(a: &Args) -> Arc<dyn KernelBackend> {
+    let mode = simd_mode_from_args(a);
     match a.str("backend", "tiled").as_str() {
         "pjrt" => {
             let dir = a.str("artifacts", "artifacts");
             match PjrtBackend::new(dir) {
-                Ok(b) => b,
+                Ok(b) => {
+                    reject_explicit_simd(a, mode, "pjrt");
+                    b
+                }
                 Err(e) => {
                     eprintln!("PJRT backend unavailable ({e}); falling back to tiled CPU");
-                    TiledBackend::new()
+                    tiled_backend(TiledBackend::default_threads(), mode)
                 }
             }
         }
-        "cpu" | "scalar" => CpuBackend::new(),
-        "tiled1" => TiledBackend::with_threads(1),
-        _ => TiledBackend::new(),
+        "cpu" | "scalar" => {
+            reject_explicit_simd(a, mode, "cpu");
+            CpuBackend::new()
+        }
+        "tiled1" => tiled_backend(1, mode),
+        _ => tiled_backend(TiledBackend::default_threads(), mode),
     }
 }
 
@@ -96,7 +142,11 @@ fn config_from_args(a: &Args) -> KdeConfig {
             tau: a.f64("tau", 0.05),
         },
     };
-    KdeConfig { kind, leaf_cutoff: a.usize("leaf-cutoff", 16), seed: a.usize("seed", 0x5EED) as u64 }
+    KdeConfig {
+        kind,
+        leaf_cutoff: a.usize("leaf-cutoff", 16),
+        seed: a.usize("seed", 0x5EED) as u64,
+    }
 }
 
 fn make_dataset(a: &Args, rng: &mut Rng) -> Arc<kde_matrix::kernel::Dataset> {
@@ -135,6 +185,7 @@ fn cmd_info() {
     println!();
     println!("common flags: --kernel laplacian|gaussian|exponential|rational_quadratic");
     println!("              --estimator sampling|naive|hbe  --backend tiled|tiled1|cpu|pjrt");
+    println!("              --simd auto|avx2|neon|scalar (tiled microkernel ISA override)");
     println!("              --n <points> --d <dims> --seed <u64>");
 }
 
@@ -159,7 +210,8 @@ fn cmd_check_runtime(a: &Args) {
         for (x, y) in a_s.iter().zip(&b_s) {
             worst = worst.max((x - y).abs() / (1.0 + y.abs()));
         }
-        println!("{:<22} parity rel-err {:.2e}  {}", k.name(), worst, if worst < 1e-4 { "OK" } else { "FAIL" });
+        let verdict = if worst < 1e-4 { "OK" } else { "FAIL" };
+        println!("{:<22} parity rel-err {:.2e}  {}", k.name(), worst, verdict);
         if worst >= 1e-4 {
             std::process::exit(1);
         }

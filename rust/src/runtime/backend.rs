@@ -35,6 +35,15 @@ pub trait KernelBackend: Send + Sync {
 
     /// Human-readable engine name for reports.
     fn name(&self) -> &'static str;
+
+    /// Instruction set the backend's inner loops run on, for bench/report
+    /// metadata: `"avx2"` / `"neon"` / `"scalar"` for the explicitly
+    /// dispatched tiled backend, `"autovec"` for the scalar reference
+    /// (LLVM decides), `"generic"` for engines where the question does
+    /// not apply.
+    fn isa(&self) -> &'static str {
+        "generic"
+    }
 }
 
 /// Pure-Rust reference backend. The inner loops are the crate's hottest
@@ -100,6 +109,10 @@ impl KernelBackend for CpuBackend {
 
     fn name(&self) -> &'static str {
         "cpu"
+    }
+
+    fn isa(&self) -> &'static str {
+        "autovec"
     }
 }
 

@@ -1,12 +1,15 @@
 //! Execution runtime: the `KernelBackend` contract, the pure-Rust scalar
-//! CPU engine, the tiled multi-threaded CPU engine, and the PJRT engine
-//! that loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` (`make artifacts`; requires the `xla` feature).
+//! CPU engine, the tiled multi-threaded CPU engine with its SIMD
+//! microkernel layer, and the PJRT engine that loads the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` (`make artifacts`;
+//! requires the `xla` feature).
 
 pub mod backend;
 pub mod pjrt;
+pub mod simd;
 pub mod tiled;
 
 pub use backend::{CpuBackend, KernelBackend};
 pub use pjrt::{PjrtBackend, PjrtEngine};
+pub use simd::{Isa, MicroKernel, SimdMode};
 pub use tiled::TiledBackend;

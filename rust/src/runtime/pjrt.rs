@@ -15,11 +15,18 @@
 //!   are unaffected).
 //!
 //! The engine itself is gated behind the `xla` cargo feature because the
-//! `xla` crate only exists in the internal offline registry. Without the
-//! feature a stub with the same API is compiled whose constructors always
-//! fail with an actionable error, so callers' fallback paths (every caller
-//! already handles `PjrtBackend::new` failing when artifacts are missing)
-//! degrade gracefully to the CPU/tiled backends.
+//! *real* `xla` crate only exists in the internal offline registry.
+//! Without the feature a stub with the same API is compiled whose
+//! constructors always fail with an actionable error, so callers'
+//! fallback paths (every caller already handles `PjrtBackend::new`
+//! failing when artifacts are missing) degrade gracefully to the
+//! CPU/tiled backends. *With* the feature, the engine compiles against
+//! whatever `xla` dependency the manifest provides: by default the
+//! in-repo compile-only stub crate (`rust/xla-stub` — client construction
+//! fails, same graceful degradation), which keeps the CI leg
+//! `cargo check --features xla` type-checking this module everywhere;
+//! internal builds swap the path dependency for the registry crate to get
+//! the real runtime.
 
 /// AOT interface shapes — keep in sync with python/compile/model.py.
 pub const AOT_B: usize = 64;
@@ -235,6 +242,10 @@ mod engine {
 
         fn name(&self) -> &'static str {
             "pjrt"
+        }
+
+        fn isa(&self) -> &'static str {
+            "xla"
         }
     }
 }

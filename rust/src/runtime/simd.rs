@@ -1,0 +1,711 @@
+//! Explicit SIMD microkernels for the tiled CPU backend, with one-time
+//! runtime dispatch.
+//!
+//! The tiled backend's three hot inner loops — the `dot` product behind
+//! the blocked-GEMM distance trick, the `l1` distance of the Laplacian
+//! path, and the tile-wide kernel map (`fast_exp_neg` evaluated over a
+//! whole distance tile) — previously relied on LLVM autovectorization.
+//! On the baseline `x86_64-unknown-linux-gnu` target that means SSE2:
+//! 4-wide, no FMA, and a *scalar* exp per pair because the underflow
+//! branch in `fast_exp_neg` defeats the vectorizer. This module provides
+//! hand-written AVX2+FMA (x86_64) and NEON (aarch64) implementations plus
+//! the portable scalar fallback, packaged as a [`MicroKernel`] vtable of
+//! plain function pointers.
+//!
+//! Dispatch design: the ISA is picked **once**, at backend construction
+//! ([`MicroKernel::select`] / [`MicroKernel::detect`], via
+//! `is_x86_feature_detected!` on x86_64), and the chosen vtable is stored
+//! on the backend. The per-tile loops call straight through the function
+//! pointers — no per-tile or per-pair feature branching, and a forced
+//! scalar vtable (`--simd scalar` on the CLI) gives an exact A/B of the
+//! SIMD gain on identical code paths.
+//!
+//! Numerical contract (pinned by `tests/simd_parity.rs`):
+//!
+//! * `dot` / `l1` accumulate in a different order (and with FMA) than the
+//!   scalar path, so results differ from the scalar implementation by
+//!   reassociation roundoff only: within `4 * n * eps` of the f64
+//!   reference, where `n` is the vector length and `eps = 2^-24`.
+//! * `exp_neg` / `map_kernel_sq` evaluate the *same* polynomial as
+//!   [`fast_exp_neg`] (coefficients shared via [`crate::kernel::fexp`]);
+//!   lane results differ from the scalar routine by FMA rounding, and —
+//!   near a half-ulp tie in the range reduction, where the fused multiply
+//!   can round the exponent integer the other way — by at most ~128 ULPs,
+//!   with both sides inside the polynomial's 5e-6 envelope. Both are
+//!   within 1e-5 relative of the true `exp`. Inputs below
+//!   [`fexp::UNDERFLOW`] hard-underflow to exactly `0.0` on every path
+//!   (the PJRT FAR-padding contract), including inputs whose intermediate
+//!   products overflow f32.
+//!
+//! All slice arguments of a lane implementation handle `len % lanes != 0`
+//! remainders explicitly (scalar tail over the shared coefficients).
+//! Every entry point debug-asserts matching input lengths, and — because
+//! the vtable is a safe public API whose debug asserts compile out in
+//! release — the lane loops are additionally bounded by the *minimum* of
+//! the slice lengths, so a length mismatch truncates (like the scalar
+//! `zip`) instead of reading or writing out of bounds.
+
+use crate::kernel::{fast_exp_neg, fexp, Kernel};
+
+/// Instruction set a [`MicroKernel`] was built for.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// AVX2 + FMA, 8 f32 lanes (x86_64, runtime-detected).
+    Avx2,
+    /// NEON, 4 f32 lanes (aarch64 baseline).
+    Neon,
+    /// Portable Rust with 8-way manual accumulators (LLVM autovectorizes
+    /// the distance loops to whatever the target baseline offers).
+    Scalar,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// Requested dispatch mode (`kdem --simd {auto,avx2,neon,scalar}`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdMode {
+    /// Best ISA the host supports (the default).
+    Auto,
+    Avx2,
+    Neon,
+    Scalar,
+}
+
+impl SimdMode {
+    pub fn from_name(s: &str) -> Option<SimdMode> {
+        Some(match s {
+            "auto" => SimdMode::Auto,
+            "avx2" => SimdMode::Avx2,
+            "neon" => SimdMode::Neon,
+            "scalar" => SimdMode::Scalar,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+}
+
+pub const ALL_MODES: [SimdMode; 4] =
+    [SimdMode::Auto, SimdMode::Avx2, SimdMode::Neon, SimdMode::Scalar];
+
+/// Function-pointer vtable over the three hot inner loops. Selected once
+/// at backend construction; the tile loops call through it with zero
+/// per-tile branching.
+pub struct MicroKernel {
+    pub isa: Isa,
+    /// `sum_i x[i] * y[i]`.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `sum_i |x[i] - y[i]|`.
+    pub l1: fn(&[f32], &[f32]) -> f32,
+    /// Map a tile of distances to kernel values. For the L2 family the
+    /// input holds *squared* L2 distances; for `Kernel::Laplacian` it
+    /// holds L1 distances. Negative inputs (norm-trick cancellation
+    /// residue) are clamped to zero before the map.
+    pub map_kernel_sq: fn(Kernel, &[f32], &mut [f32]),
+    /// `out[i] = exp(-max(dists[i], 0))` — the lane-parallel
+    /// [`fast_exp_neg`] building block, exposed for direct A/B and ULP
+    /// testing.
+    pub exp_neg: fn(&[f32], &mut [f32]),
+}
+
+static SCALAR: MicroKernel = MicroKernel {
+    isa: Isa::Scalar,
+    dot: scalar::dot,
+    l1: scalar::l1,
+    map_kernel_sq: scalar::map_kernel_sq,
+    exp_neg: scalar::exp_neg,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: MicroKernel = MicroKernel {
+    isa: Isa::Avx2,
+    dot: avx2::dot,
+    l1: avx2::l1,
+    map_kernel_sq: avx2::map_kernel_sq,
+    exp_neg: avx2::exp_neg,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: MicroKernel = MicroKernel {
+    isa: Isa::Neon,
+    dot: neon::dot,
+    l1: neon::l1,
+    map_kernel_sq: neon::map_kernel_sq,
+    exp_neg: neon::exp_neg,
+};
+
+/// The AVX2 vtable, if this build targets x86_64 AND the host passes
+/// runtime detection (`is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+fn avx2_kernel() -> Option<&'static MicroKernel> {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        Some(&AVX2)
+    } else {
+        None
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_kernel() -> Option<&'static MicroKernel> {
+    None
+}
+
+/// The NEON vtable; aarch64 carries NEON in its baseline, so there is
+/// nothing to runtime-detect beyond the target architecture.
+#[cfg(target_arch = "aarch64")]
+fn neon_kernel() -> Option<&'static MicroKernel> {
+    Some(&NEON)
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_kernel() -> Option<&'static MicroKernel> {
+    None
+}
+
+impl MicroKernel {
+    /// Best microkernel the host supports.
+    pub fn detect() -> &'static MicroKernel {
+        if let Some(mk) = avx2_kernel() {
+            return mk;
+        }
+        if let Some(mk) = neon_kernel() {
+            return mk;
+        }
+        &SCALAR
+    }
+
+    /// Resolve an explicit mode; errors if the host (or this build's
+    /// target architecture) cannot run the requested ISA, so `--simd`
+    /// A/B runs never silently fall back.
+    pub fn select(mode: SimdMode) -> Result<&'static MicroKernel, String> {
+        match mode {
+            SimdMode::Auto => Ok(Self::detect()),
+            SimdMode::Scalar => Ok(&SCALAR),
+            SimdMode::Avx2 => avx2_kernel()
+                .ok_or_else(|| "avx2+fma not available on this host".to_string()),
+            SimdMode::Neon => neon_kernel()
+                .ok_or_else(|| "neon requires an aarch64 build".to_string()),
+        }
+    }
+
+    /// Every microkernel runnable on this host (scalar first). Used by
+    /// the parity tests and the per-ISA bench series.
+    pub fn available() -> Vec<&'static MicroKernel> {
+        let mut v = vec![&SCALAR];
+        v.extend(avx2_kernel());
+        v.extend(neon_kernel());
+        v
+    }
+}
+
+/// Portable implementations. `dot`/`l1` keep the 8-way manual-accumulator
+/// layout (LLVM autovectorizes it to the target baseline); the maps run
+/// the shared-coefficient scalar [`fast_exp_neg`], which the compiler
+/// pipelines across a tile but cannot vectorize past the underflow branch.
+mod scalar {
+    use super::{fast_exp_neg, Kernel};
+
+    const LANES: usize = 8;
+
+    pub(super) fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len(), "dot: mismatched input lengths");
+        let mut acc = [0.0f32; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        let mut yc = y.chunks_exact(LANES);
+        for (xa, ya) in (&mut xc).zip(&mut yc) {
+            for l in 0..LANES {
+                acc[l] += xa[l] * ya[l];
+            }
+        }
+        let mut s: f32 = acc.iter().sum();
+        for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+            s += a * b;
+        }
+        s
+    }
+
+    pub(super) fn l1(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len(), "l1: mismatched input lengths");
+        let mut acc = [0.0f32; LANES];
+        let mut xc = x.chunks_exact(LANES);
+        let mut yc = y.chunks_exact(LANES);
+        for (xa, ya) in (&mut xc).zip(&mut yc) {
+            for l in 0..LANES {
+                acc[l] += (xa[l] - ya[l]).abs();
+            }
+        }
+        let mut s: f32 = acc.iter().sum();
+        for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
+            s += (a - b).abs();
+        }
+        s
+    }
+
+    pub(super) fn exp_neg(dists: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(dists.len(), out.len(), "exp_neg: mismatched lengths");
+        for (o, &t) in out.iter_mut().zip(dists) {
+            *o = fast_exp_neg(-t.max(0.0));
+        }
+    }
+
+    pub(super) fn map_kernel_sq(kernel: Kernel, dists: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(dists.len(), out.len(), "map_kernel_sq: mismatched lengths");
+        match kernel {
+            Kernel::Gaussian | Kernel::Laplacian => exp_neg(dists, out),
+            Kernel::Exponential => {
+                for (o, &s) in out.iter_mut().zip(dists) {
+                    *o = fast_exp_neg(-s.max(0.0).sqrt());
+                }
+            }
+            Kernel::RationalQuadratic => {
+                for (o, &s) in out.iter_mut().zip(dists) {
+                    *o = 1.0 / (1.0 + s.max(0.0));
+                }
+            }
+        }
+    }
+}
+
+/// AVX2 + FMA, 8 f32 lanes.
+///
+/// SAFETY invariant for the whole module: the safe wrappers below are only
+/// reachable through the `AVX2` vtable, which `MicroKernel::select` /
+/// `detect` hand out exclusively after `is_x86_feature_detected!("avx2")`
+/// and `("fma")` both pass, so the `#[target_feature]` functions always
+/// run on a supporting CPU.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    use super::{fexp, scalar, Kernel};
+
+    pub(super) fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len(), "dot: mismatched input lengths");
+        // SAFETY: module invariant — AVX2+FMA verified at vtable selection.
+        unsafe { dot_impl(x, y) }
+    }
+
+    pub(super) fn l1(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len(), "l1: mismatched input lengths");
+        // SAFETY: module invariant.
+        unsafe { l1_impl(x, y) }
+    }
+
+    pub(super) fn exp_neg(dists: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(dists.len(), out.len(), "exp_neg: mismatched lengths");
+        // SAFETY: module invariant.
+        unsafe { exp_neg_impl(dists, out) }
+    }
+
+    pub(super) fn map_kernel_sq(kernel: Kernel, dists: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(dists.len(), out.len(), "map_kernel_sq: mismatched lengths");
+        // SAFETY: module invariant.
+        unsafe { map_impl(kernel, dists, out) }
+    }
+
+    /// Sum the 8 lanes of `v`.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_impl(x: &[f32], y: &[f32]) -> f32 {
+        // min() keeps the raw-pointer loop in bounds even if the release
+        // build skipped the wrapper's length debug-assert.
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        // Two accumulators hide the 4-cycle FMA latency at d = 64
+        // (8 iterations of 8 lanes, 4 per chain).
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 8)),
+                _mm256_loadu_ps(yp.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)), acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        // Explicit d % 8 remainder.
+        while i < n {
+            s += *xp.add(i) * *yp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn l1_impl(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        // Clearing the sign bit computes |a - b| without a branch.
+        let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            acc0 = _mm256_add_ps(acc0, _mm256_and_ps(d0, absmask));
+            let d1 =
+                _mm256_sub_ps(_mm256_loadu_ps(xp.add(i + 8)), _mm256_loadu_ps(yp.add(i + 8)));
+            acc1 = _mm256_add_ps(acc1, _mm256_and_ps(d1, absmask));
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(xp.add(i)), _mm256_loadu_ps(yp.add(i)));
+            acc0 = _mm256_add_ps(acc0, _mm256_and_ps(d0, absmask));
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += (*xp.add(i) - *yp.add(i)).abs();
+            i += 1;
+        }
+        s
+    }
+
+    /// `exp(-max(t, 0))` on 8 lanes — the same range reduction and
+    /// polynomial as [`super::fast_exp_neg`], coefficients from
+    /// [`fexp`]. The final mask zeroes every lane whose reduced input is
+    /// below [`fexp::UNDERFLOW`]; that also scrubs any garbage from
+    /// intermediate overflow on huge distances (FAR-padding rows), so
+    /// those lanes return exactly `0.0` like the scalar routine.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp_neg8(t: __m256) -> __m256 {
+        let zero = _mm256_setzero_ps();
+        let x = _mm256_sub_ps(zero, _mm256_max_ps(t, zero));
+        let magic = _mm256_set1_ps(fexp::MAGIC);
+        let j = _mm256_sub_ps(_mm256_fmadd_ps(x, _mm256_set1_ps(fexp::LOG2E), magic), magic);
+        let f = _mm256_fnmadd_ps(j, _mm256_set1_ps(fexp::LN2_HI), x);
+        let f = _mm256_fnmadd_ps(j, _mm256_set1_ps(fexp::LN2_LO), f);
+        let p = _mm256_set1_ps(fexp::C5);
+        let p = _mm256_fmadd_ps(p, f, _mm256_set1_ps(fexp::C4));
+        let p = _mm256_fmadd_ps(p, f, _mm256_set1_ps(fexp::C3));
+        let p = _mm256_fmadd_ps(p, f, _mm256_set1_ps(fexp::C2));
+        let p = _mm256_fmadd_ps(p, f, _mm256_set1_ps(1.0));
+        let p = _mm256_fmadd_ps(p, f, _mm256_set1_ps(1.0));
+        let scale = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+            _mm256_cvtps_epi32(j),
+            _mm256_set1_epi32(127),
+        )));
+        let r = _mm256_mul_ps(scale, p);
+        let live = _mm256_cmp_ps::<_CMP_GE_OQ>(x, _mm256_set1_ps(fexp::UNDERFLOW));
+        _mm256_and_ps(r, live)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp_neg_impl(dists: &[f32], out: &mut [f32]) {
+        let n = dists.len().min(out.len());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let t = _mm256_loadu_ps(dists.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), exp_neg8(t));
+            i += 8;
+        }
+        scalar::exp_neg(&dists[i..n], &mut out[i..n]);
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn map_impl(kernel: Kernel, dists: &[f32], out: &mut [f32]) {
+        let n = dists.len().min(out.len());
+        let dp = dists.as_ptr();
+        let op = out.as_mut_ptr();
+        let zero = _mm256_setzero_ps();
+        let one = _mm256_set1_ps(1.0);
+        let mut i = 0usize;
+        match kernel {
+            // Gaussian maps squared L2 distances, Laplacian maps L1
+            // distances — the lane op is the same exp(-t).
+            Kernel::Gaussian | Kernel::Laplacian => {
+                while i + 8 <= n {
+                    _mm256_storeu_ps(op.add(i), exp_neg8(_mm256_loadu_ps(dp.add(i))));
+                    i += 8;
+                }
+            }
+            Kernel::Exponential => {
+                while i + 8 <= n {
+                    let s = _mm256_max_ps(_mm256_loadu_ps(dp.add(i)), zero);
+                    _mm256_storeu_ps(op.add(i), exp_neg8(_mm256_sqrt_ps(s)));
+                    i += 8;
+                }
+            }
+            Kernel::RationalQuadratic => {
+                while i + 8 <= n {
+                    let s = _mm256_max_ps(_mm256_loadu_ps(dp.add(i)), zero);
+                    _mm256_storeu_ps(op.add(i), _mm256_div_ps(one, _mm256_add_ps(one, s)));
+                    i += 8;
+                }
+            }
+        }
+        scalar::map_kernel_sq(kernel, &dists[i..n], &mut out[i..n]);
+    }
+}
+
+/// NEON, 4 f32 lanes. NEON is part of the aarch64 baseline, so there is
+/// nothing to runtime-detect; the `#[target_feature]` functions are always
+/// safe to execute on this architecture.
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::{fexp, scalar, Kernel};
+
+    pub(super) fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len(), "dot: mismatched input lengths");
+        // SAFETY: NEON is unconditionally available on aarch64.
+        unsafe { dot_impl(x, y) }
+    }
+
+    pub(super) fn l1(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len(), "l1: mismatched input lengths");
+        // SAFETY: NEON is unconditionally available on aarch64.
+        unsafe { l1_impl(x, y) }
+    }
+
+    pub(super) fn exp_neg(dists: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(dists.len(), out.len(), "exp_neg: mismatched lengths");
+        // SAFETY: NEON is unconditionally available on aarch64.
+        unsafe { exp_neg_impl(dists, out) }
+    }
+
+    pub(super) fn map_kernel_sq(kernel: Kernel, dists: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(dists.len(), out.len(), "map_kernel_sq: mismatched lengths");
+        // SAFETY: NEON is unconditionally available on aarch64.
+        unsafe { map_impl(kernel, dists, out) }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_impl(x: &[f32], y: &[f32]) -> f32 {
+        // min() keeps the raw-pointer loop in bounds even if the release
+        // build skipped the wrapper's length debug-assert.
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i)));
+            acc1 = vfmaq_f32(acc1, vld1q_f32(xp.add(i + 4)), vld1q_f32(yp.add(i + 4)));
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += *xp.add(i) * *yp.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn l1_impl(x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vaddq_f32(acc0, vabdq_f32(vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i))));
+            acc1 = vaddq_f32(acc1, vabdq_f32(vld1q_f32(xp.add(i + 4)), vld1q_f32(yp.add(i + 4))));
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = vaddq_f32(acc0, vabdq_f32(vld1q_f32(xp.add(i)), vld1q_f32(yp.add(i))));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += (*xp.add(i) - *yp.add(i)).abs();
+            i += 1;
+        }
+        s
+    }
+
+    /// `exp(-max(t, 0))` on 4 lanes; same structure as the AVX2 version
+    /// (shared coefficients, magic-constant rounding, underflow mask).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn exp_neg4(t: float32x4_t) -> float32x4_t {
+        let zero = vdupq_n_f32(0.0);
+        let x = vnegq_f32(vmaxq_f32(t, zero));
+        let magic = vdupq_n_f32(fexp::MAGIC);
+        let j = vsubq_f32(vfmaq_f32(magic, x, vdupq_n_f32(fexp::LOG2E)), magic);
+        let f = vfmsq_f32(x, j, vdupq_n_f32(fexp::LN2_HI));
+        let f = vfmsq_f32(f, j, vdupq_n_f32(fexp::LN2_LO));
+        let p = vdupq_n_f32(fexp::C5);
+        let p = vfmaq_f32(vdupq_n_f32(fexp::C4), p, f);
+        let p = vfmaq_f32(vdupq_n_f32(fexp::C3), p, f);
+        let p = vfmaq_f32(vdupq_n_f32(fexp::C2), p, f);
+        let p = vfmaq_f32(vdupq_n_f32(1.0), p, f);
+        let p = vfmaq_f32(vdupq_n_f32(1.0), p, f);
+        // j is integral and, for live lanes, in [-126, 0]: truncation
+        // conversion is exact.
+        let scale = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+            vcvtq_s32_f32(j),
+            vdupq_n_s32(127),
+        )));
+        let r = vmulq_f32(scale, p);
+        let live = vcgeq_f32(x, vdupq_n_f32(fexp::UNDERFLOW));
+        vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(r), live))
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn exp_neg_impl(dists: &[f32], out: &mut [f32]) {
+        let n = dists.len().min(out.len());
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(out.as_mut_ptr().add(i), exp_neg4(vld1q_f32(dists.as_ptr().add(i))));
+            i += 4;
+        }
+        scalar::exp_neg(&dists[i..n], &mut out[i..n]);
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn map_impl(kernel: Kernel, dists: &[f32], out: &mut [f32]) {
+        let n = dists.len().min(out.len());
+        let dp = dists.as_ptr();
+        let op = out.as_mut_ptr();
+        let zero = vdupq_n_f32(0.0);
+        let one = vdupq_n_f32(1.0);
+        let mut i = 0usize;
+        match kernel {
+            Kernel::Gaussian | Kernel::Laplacian => {
+                while i + 4 <= n {
+                    vst1q_f32(op.add(i), exp_neg4(vld1q_f32(dp.add(i))));
+                    i += 4;
+                }
+            }
+            Kernel::Exponential => {
+                while i + 4 <= n {
+                    let s = vmaxq_f32(vld1q_f32(dp.add(i)), zero);
+                    vst1q_f32(op.add(i), exp_neg4(vsqrtq_f32(s)));
+                    i += 4;
+                }
+            }
+            Kernel::RationalQuadratic => {
+                while i + 4 <= n {
+                    let s = vmaxq_f32(vld1q_f32(dp.add(i)), zero);
+                    vst1q_f32(op.add(i), vdivq_f32(one, vaddq_f32(one, s)));
+                    i += 4;
+                }
+            }
+        }
+        scalar::map_kernel_sq(kernel, &dists[i..n], &mut out[i..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::ALL_KERNELS;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn detect_and_select_are_consistent() {
+        let auto = MicroKernel::detect();
+        assert_eq!(
+            MicroKernel::select(SimdMode::Auto).unwrap().isa,
+            auto.isa,
+            "auto must resolve to detect()"
+        );
+        // Scalar is available everywhere.
+        assert_eq!(MicroKernel::select(SimdMode::Scalar).unwrap().isa, Isa::Scalar);
+        // Every available vtable is individually selectable by its mode.
+        for mk in MicroKernel::available() {
+            let mode = match mk.isa {
+                Isa::Avx2 => SimdMode::Avx2,
+                Isa::Neon => SimdMode::Neon,
+                Isa::Scalar => SimdMode::Scalar,
+            };
+            assert_eq!(MicroKernel::select(mode).unwrap().isa, mk.isa);
+        }
+    }
+
+    #[test]
+    fn mode_names_round_trip() {
+        for m in ALL_MODES {
+            assert_eq!(SimdMode::from_name(m.name()), Some(m));
+        }
+        assert_eq!(SimdMode::from_name("sse9"), None);
+    }
+
+    #[test]
+    fn every_available_microkernel_smoke() {
+        // Light smoke over each host ISA; the heavy ULP/parity sweep lives
+        // in tests/simd_parity.rs.
+        let mut rng = Rng::new(421);
+        for &d in &[1usize, 4, 8, 13, 64, 65] {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let want_dot = (SCALAR.dot)(&x, &y);
+            let want_l1 = (SCALAR.l1)(&x, &y);
+            for mk in MicroKernel::available() {
+                let got_dot = (mk.dot)(&x, &y);
+                let got_l1 = (mk.l1)(&x, &y);
+                assert!(
+                    (got_dot - want_dot).abs() < 1e-4 * (1.0 + want_dot.abs()),
+                    "{:?} dot d={d}: {got_dot} vs {want_dot}",
+                    mk.isa
+                );
+                assert!(
+                    (got_l1 - want_l1).abs() < 1e-4 * (1.0 + want_l1.abs()),
+                    "{:?} l1 d={d}: {got_l1} vs {want_l1}",
+                    mk.isa
+                );
+                for k in ALL_KERNELS {
+                    let dists: Vec<f32> =
+                        (0..d).map(|_| (rng.f64() * 10.0) as f32).collect();
+                    let mut want = vec![0.0f32; d];
+                    let mut got = vec![0.0f32; d];
+                    (SCALAR.map_kernel_sq)(k, &dists, &mut want);
+                    (mk.map_kernel_sq)(k, &dists, &mut got);
+                    for (g, w) in got.iter().zip(&want) {
+                        assert!(
+                            (g - w).abs() < 1e-5 + 1e-4 * w.abs(),
+                            "{:?} {:?}: {g} vs {w}",
+                            mk.isa,
+                            k
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

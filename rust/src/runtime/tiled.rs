@@ -13,13 +13,18 @@
 //! 2. **Cache tiling** — data is processed in tiles of [`DTILE`] rows so a
 //!    tile stays resident in L1/L2 across all query rows of a chunk, and
 //!    per-tile distances land in a stack buffer that the kernel map then
-//!    consumes. Batching the kernel map over the tile gives the compiler
-//!    independent [`fast_exp_neg`] chains to pipeline — the scalar
-//!    backend's one-libm-`expf`-per-pair serialization is the single
-//!    biggest cost at moderate `d` (see the §Perf log).
+//!    consumes. Batching the kernel map over the tile keeps the
+//!    `fast_exp_neg` evaluations independent — the scalar backend's
+//!    one-libm-`expf`-per-pair serialization is the single biggest cost
+//!    at moderate `d` (see the §Perf log).
 //! 3. **Threading** — `std::thread::scope` workers split the query rows
 //!    (or, when a call has few queries but much data, the data rows) with
 //!    per-thread eval counts folded into the shared atomic counter.
+//! 4. **Explicit SIMD** — the dot/L1 inner loops and the tile-wide kernel
+//!    map dispatch through a [`MicroKernel`] function-pointer vtable
+//!    selected once at construction (AVX2+FMA, NEON, or portable scalar;
+//!    see `runtime::simd`), instead of relying on whatever the baseline
+//!    target's autovectorizer produces.
 //!
 //! Determinism: for a fixed thread split mode, every output value is
 //! accumulated in a fixed order (data tiles in order, f64 accumulator per
@@ -40,110 +45,71 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use crate::kernel::{fast_exp_neg, Kernel};
+use crate::kernel::Kernel;
 use crate::runtime::backend::KernelBackend;
+use crate::runtime::simd::{MicroKernel, SimdMode};
 
 /// Data rows per cache tile. A tile of f32 coordinates occupies
 /// `DTILE * d * 4` bytes — 32 KiB at the AOT shape d = 64, sized for L1.
 const DTILE: usize = 128;
 
-const LANES: usize = 8;
-
 /// Tiled multi-threaded backend; see the module docs.
+///
+/// The inner loops (dot / L1 / kernel map) run through a [`MicroKernel`]
+/// vtable chosen once at construction — AVX2+FMA or NEON when the host
+/// supports them, the portable scalar path otherwise (`runtime::simd`).
 pub struct TiledBackend {
     threads: usize,
+    mk: &'static MicroKernel,
     evals: AtomicU64,
     calls: AtomicU64,
 }
 
 impl TiledBackend {
-    /// One worker per available core.
+    /// One worker per available core, best SIMD ISA the host supports.
     pub fn new() -> Arc<Self> {
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        Self::with_threads(threads)
+        Self::with_threads(Self::default_threads())
     }
 
-    /// Fixed worker count (1 = tiling only, no thread spawns).
+    /// Fixed worker count (1 = tiling only, no thread spawns), best ISA.
     pub fn with_threads(threads: usize) -> Arc<Self> {
+        Self::with_simd(threads, SimdMode::Auto).expect("auto SIMD mode cannot fail")
+    }
+
+    /// Fixed worker count and explicit SIMD mode (`--simd` on the CLI).
+    /// Errors when the requested ISA is not runnable on this host, so
+    /// A/B benchmark runs never silently fall back.
+    pub fn with_simd(threads: usize, mode: SimdMode) -> Result<Arc<Self>, String> {
         assert!(threads >= 1, "need at least one worker");
-        Arc::new(TiledBackend {
+        let mk = MicroKernel::select(mode)?;
+        Ok(Arc::new(TiledBackend {
             threads,
+            mk,
             evals: AtomicU64::new(0),
             calls: AtomicU64::new(0),
-        })
+        }))
+    }
+
+    /// Worker count [`new`](Self::new) would pick.
+    pub fn default_threads() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
-}
 
-/// 8-lane dot product (same layout trick as `kernel::sq_dist`: independent
-/// partial sums so LLVM vectorizes).
-#[inline]
-fn dot(x: &[f32], y: &[f32]) -> f32 {
-    let mut acc = [0.0f32; LANES];
-    let mut xc = x.chunks_exact(LANES);
-    let mut yc = y.chunks_exact(LANES);
-    for (xa, ya) in (&mut xc).zip(&mut yc) {
-        for l in 0..LANES {
-            acc[l] += xa[l] * ya[l];
-        }
+    /// The microkernel vtable this backend dispatches through.
+    pub fn microkernel(&self) -> &'static MicroKernel {
+        self.mk
     }
-    let mut s: f32 = acc.iter().sum();
-    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
-        s += a * b;
-    }
-    s
-}
-
-/// 8-lane L1 distance (the Laplacian tile loop's inner kernel).
-#[inline]
-fn l1(x: &[f32], y: &[f32]) -> f32 {
-    let mut acc = [0.0f32; LANES];
-    let mut xc = x.chunks_exact(LANES);
-    let mut yc = y.chunks_exact(LANES);
-    for (xa, ya) in (&mut xc).zip(&mut yc) {
-        for l in 0..LANES {
-            acc[l] += (xa[l] - ya[l]).abs();
-        }
-    }
-    let mut s: f32 = acc.iter().sum();
-    for (a, b) in xc.remainder().iter().zip(yc.remainder()) {
-        s += (a - b).abs();
-    }
-    s
 }
 
 /// Squared row norms of a `rows x d` buffer.
-fn row_sq_norms(buf: &[f32], d: usize) -> Vec<f32> {
-    buf.chunks_exact(d).map(|row| dot(row, row)).collect()
-}
-
-/// Map a tile's squared distances to kernel values. Runs over a contiguous
-/// buffer so the `fast_exp_neg` chains are independent and pipeline.
-#[inline]
-fn map_kernel_sq(kernel: Kernel, sq: &[f32], out: &mut [f32]) {
-    match kernel {
-        Kernel::Gaussian => {
-            for (o, &s) in out.iter_mut().zip(sq) {
-                *o = fast_exp_neg(-s.max(0.0));
-            }
-        }
-        Kernel::Exponential => {
-            for (o, &s) in out.iter_mut().zip(sq) {
-                *o = fast_exp_neg(-s.max(0.0).sqrt());
-            }
-        }
-        Kernel::RationalQuadratic => {
-            for (o, &s) in out.iter_mut().zip(sq) {
-                *o = 1.0 / (1.0 + s.max(0.0));
-            }
-        }
-        Kernel::Laplacian => unreachable!("Laplacian takes the L1 tile path"),
-    }
+fn row_sq_norms(mk: &MicroKernel, buf: &[f32], d: usize) -> Vec<f32> {
+    buf.chunks_exact(d).map(|row| (mk.dot)(row, row)).collect()
 }
 
 /// KDE sums for a chunk of query rows against (a chunk of) the data.
@@ -151,7 +117,9 @@ fn map_kernel_sq(kernel: Kernel, sq: &[f32], out: &mut [f32]) {
 /// empty (and unused) on the Laplacian path. Accumulates INTO `out` (one
 /// f64 slot per query row), data tiles in order, so callers may feed data
 /// chunks sequentially and keep a deterministic summation order.
+#[allow(clippy::too_many_arguments)]
 fn sums_rows(
+    mk: &MicroKernel,
     kernel: Kernel,
     queries: &[f32],
     data: &[f32],
@@ -162,13 +130,17 @@ fn sums_rows(
 ) {
     debug_assert_eq!(queries.len() / d, out.len());
     let mut kbuf = [0.0f32; DTILE];
+    let mut sqbuf = [0.0f32; DTILE];
     if kernel == Kernel::Laplacian {
+        // L1 distances for a whole tile land in `sqbuf` so the kernel map
+        // runs lane-parallel over the tile, exactly like the L2 path.
         for tile in data.chunks(DTILE * d) {
             let rows = tile.len() / d;
             for (qi, q) in queries.chunks_exact(d).enumerate() {
                 for (j, x) in tile.chunks_exact(d).enumerate() {
-                    kbuf[j] = fast_exp_neg(-l1(q, x));
+                    sqbuf[j] = (mk.l1)(q, x);
                 }
+                (mk.map_kernel_sq)(kernel, &sqbuf[..rows], &mut kbuf[..rows]);
                 let mut acc = 0.0f64;
                 for &k in &kbuf[..rows] {
                     acc += k as f64;
@@ -178,16 +150,15 @@ fn sums_rows(
         }
         return;
     }
-    let mut sqbuf = [0.0f32; DTILE];
     for (ti, tile) in data.chunks(DTILE * d).enumerate() {
         let rows = tile.len() / d;
         let xn_t = &xn[ti * DTILE..ti * DTILE + rows];
         for (qi, q) in queries.chunks_exact(d).enumerate() {
             let qnv = qn[qi];
             for (j, x) in tile.chunks_exact(d).enumerate() {
-                sqbuf[j] = qnv + xn_t[j] - 2.0 * dot(q, x);
+                sqbuf[j] = qnv + xn_t[j] - 2.0 * (mk.dot)(q, x);
             }
-            map_kernel_sq(kernel, &sqbuf[..rows], &mut kbuf[..rows]);
+            (mk.map_kernel_sq)(kernel, &sqbuf[..rows], &mut kbuf[..rows]);
             let mut acc = 0.0f64;
             for &k in &kbuf[..rows] {
                 acc += k as f64;
@@ -199,7 +170,9 @@ fn sums_rows(
 
 /// Dense kernel block for a chunk of query rows; writes `rows x m` values
 /// into `out` (row stride `m`, starting at the chunk's first row).
+#[allow(clippy::too_many_arguments)]
 fn block_rows(
+    mk: &MicroKernel,
     kernel: Kernel,
     queries: &[f32],
     data: &[f32],
@@ -210,20 +183,21 @@ fn block_rows(
     m: usize,
 ) {
     debug_assert_eq!(queries.len() / d * m, out.len());
+    let mut sqbuf = [0.0f32; DTILE];
     if kernel == Kernel::Laplacian {
         for (ti, tile) in data.chunks(DTILE * d).enumerate() {
             let off = ti * DTILE;
             let rows = tile.len() / d;
             for (qi, q) in queries.chunks_exact(d).enumerate() {
-                let dst = &mut out[qi * m + off..qi * m + off + rows];
                 for (j, x) in tile.chunks_exact(d).enumerate() {
-                    dst[j] = fast_exp_neg(-l1(q, x));
+                    sqbuf[j] = (mk.l1)(q, x);
                 }
+                let dst = &mut out[qi * m + off..qi * m + off + rows];
+                (mk.map_kernel_sq)(kernel, &sqbuf[..rows], dst);
             }
         }
         return;
     }
-    let mut sqbuf = [0.0f32; DTILE];
     for (ti, tile) in data.chunks(DTILE * d).enumerate() {
         let off = ti * DTILE;
         let rows = tile.len() / d;
@@ -231,10 +205,10 @@ fn block_rows(
         for (qi, q) in queries.chunks_exact(d).enumerate() {
             let qnv = qn[qi];
             for (j, x) in tile.chunks_exact(d).enumerate() {
-                sqbuf[j] = qnv + xn_t[j] - 2.0 * dot(q, x);
+                sqbuf[j] = qnv + xn_t[j] - 2.0 * (mk.dot)(q, x);
             }
             let dst = &mut out[qi * m + off..qi * m + off + rows];
-            map_kernel_sq(kernel, &sqbuf[..rows], dst);
+            (mk.map_kernel_sq)(kernel, &sqbuf[..rows], dst);
         }
     }
 }
@@ -250,13 +224,14 @@ impl KernelBackend for TiledBackend {
             return out;
         }
         let l2 = kernel != Kernel::Laplacian;
-        let qn = if l2 { row_sq_norms(queries, d) } else { Vec::new() };
-        let xn = if l2 { row_sq_norms(data, d) } else { Vec::new() };
+        let mk = self.mk;
+        let qn = if l2 { row_sq_norms(mk, queries, d) } else { Vec::new() };
+        let xn = if l2 { row_sq_norms(mk, data, d) } else { Vec::new() };
         let qn_s: &[f32] = &qn;
         let xn_s: &[f32] = &xn;
         let evals = &self.evals;
         if self.threads == 1 {
-            sums_rows(kernel, queries, data, d, qn_s, xn_s, &mut out);
+            sums_rows(mk, kernel, queries, data, d, qn_s, xn_s, &mut out);
             evals.fetch_add((b * m) as u64, Ordering::Relaxed);
         } else if b >= self.threads {
             // Query split: each worker owns a disjoint slice of output
@@ -270,7 +245,7 @@ impl KernelBackend for TiledBackend {
                     let q_chunk = &queries[lo * d..(lo + rows) * d];
                     let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
                     s.spawn(move || {
-                        sums_rows(kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk);
+                        sums_rows(mk, kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk);
                         evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
                     });
                 }
@@ -290,7 +265,7 @@ impl KernelBackend for TiledBackend {
                     let xn_chunk: &[f32] = if l2 { &xn_s[lo..hi] } else { &[] };
                     handles.push(s.spawn(move || {
                         let mut part = vec![0.0f64; b];
-                        sums_rows(kernel, queries, d_chunk, d, qn_s, xn_chunk, &mut part);
+                        sums_rows(mk, kernel, queries, d_chunk, d, qn_s, xn_chunk, &mut part);
                         evals.fetch_add((b * (hi - lo)) as u64, Ordering::Relaxed);
                         part
                     }));
@@ -317,13 +292,14 @@ impl KernelBackend for TiledBackend {
             return out;
         }
         let l2 = kernel != Kernel::Laplacian;
-        let qn = if l2 { row_sq_norms(queries, d) } else { Vec::new() };
-        let xn = if l2 { row_sq_norms(data, d) } else { Vec::new() };
+        let mk = self.mk;
+        let qn = if l2 { row_sq_norms(mk, queries, d) } else { Vec::new() };
+        let xn = if l2 { row_sq_norms(mk, data, d) } else { Vec::new() };
         let qn_s: &[f32] = &qn;
         let xn_s: &[f32] = &xn;
         let evals = &self.evals;
         if self.threads == 1 || b == 1 {
-            block_rows(kernel, queries, data, d, qn_s, xn_s, &mut out, m);
+            block_rows(mk, kernel, queries, data, d, qn_s, xn_s, &mut out, m);
             evals.fetch_add((b * m) as u64, Ordering::Relaxed);
         } else {
             // Query split over disjoint output row ranges (the block shape
@@ -338,7 +314,7 @@ impl KernelBackend for TiledBackend {
                     let q_chunk = &queries[lo * d..(lo + rows) * d];
                     let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
                     s.spawn(move || {
-                        block_rows(kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk, m);
+                        block_rows(mk, kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk, m);
                         evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
                     });
                 }
@@ -357,6 +333,10 @@ impl KernelBackend for TiledBackend {
 
     fn name(&self) -> &'static str {
         "tiled"
+    }
+
+    fn isa(&self) -> &'static str {
+        self.mk.isa.name()
     }
 }
 
@@ -445,6 +425,28 @@ mod tests {
         // empty queries -> empty outputs
         assert!(be.sums(Kernel::Gaussian, &empty, &q, 3).is_empty());
         assert!(be.block(Kernel::Gaussian, &empty, &q, 3).is_empty());
+    }
+
+    #[test]
+    fn forced_scalar_mode_matches_auto() {
+        // The vtable is the only difference between modes; sums must agree
+        // within SIMD reassociation tolerance and the reported ISA must
+        // reflect the forced mode.
+        let mut rng = Rng::new(817);
+        let (b, m, d) = (5usize, 150usize, 19usize);
+        let queries = rand_buf(&mut rng, b * d, 1.0);
+        let data = rand_buf(&mut rng, m * d, 1.0);
+        let scalar = TiledBackend::with_simd(2, SimdMode::Scalar).unwrap();
+        assert_eq!(scalar.isa(), "scalar");
+        let auto = TiledBackend::with_threads(2);
+        assert_eq!(auto.isa(), auto.microkernel().isa.name());
+        for k in ALL_KERNELS {
+            let a = scalar.sums(k, &queries, &data, d);
+            let c = auto.sums(k, &queries, &data, d);
+            for (x, y) in a.iter().zip(&c) {
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{:?}: {x} vs {y}", k);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,381 @@
+//! Scalar vs SIMD microkernel parity: every vtable the host can run must
+//! agree with the portable scalar implementation within the documented
+//! bounds, on random *and* adversarial inputs (denormals, FAR-padding
+//! underflow, huge coordinates), and the tiled backend must produce the
+//! same sums/blocks under every `--simd` mode.
+//!
+//! Documented numerical contract (see `runtime/simd.rs` module docs):
+//!
+//! * `dot` / `l1`: the SIMD lanes accumulate in a different order (with
+//!   FMA), so each implementation is compared against an f64 reference
+//!   with a reassociation bound of `4 * n * eps * magnitude`, where
+//!   `magnitude` is the sum of absolute term values and `eps = 2^-24`.
+//! * `exp_neg` / `map_kernel_sq`: scalar and SIMD evaluate the same
+//!   polynomial (shared `kernel::fexp` coefficients). FMA usually only
+//!   perturbs the last bits, but near a half-ulp tie in `x * log2(e)` the
+//!   fused path can round the reduction integer `j` the other way; both
+//!   sides then sit at opposite edges of the polynomial interval, each
+//!   within its 5e-6 error envelope, up to ~128 ULPs apart. The contract
+//!   is therefore: within 128 ULPs of each other for normal results, and
+//!   both within 1e-5 relative of the true `exp` above the subnormal
+//!   range. Inputs past the underflow cutoff produce exactly `0.0` on
+//!   every path.
+
+use kde_matrix::kernel::{fast_exp_neg, fexp, Kernel, ALL_KERNELS};
+use kde_matrix::runtime::backend::KernelBackend;
+use kde_matrix::runtime::pjrt::FAR;
+use kde_matrix::runtime::simd::{Isa, MicroKernel, SimdMode, ALL_MODES};
+use kde_matrix::runtime::tiled::TiledBackend;
+use kde_matrix::util::prop::forall;
+use kde_matrix::util::rng::Rng;
+
+const EPS: f64 = 5.9604645e-8; // 2^-24, f32 unit roundoff
+
+/// Map an f32 onto the integer line so ULP distance is a subtraction
+/// (sign-magnitude -> lexicographic order; -0.0 and +0.0 coincide).
+fn ordered(x: f32) -> i64 {
+    let i = x.to_bits() as i32 as i64;
+    if i < 0 {
+        (i32::MIN as i64) - i
+    } else {
+        i
+    }
+}
+
+fn ulp_diff(a: f32, b: f32) -> u64 {
+    (ordered(a) - ordered(b)).unsigned_abs()
+}
+
+fn rand_buf(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+}
+
+/// Adversarial coordinate values: subnormals, the smallest/largest
+/// normals that survive squaring, FAR-padding magnitude, and exact zeros.
+fn adversarial_coords() -> Vec<f32> {
+    vec![
+        0.0,
+        -0.0,
+        1.0e-41,           // subnormal
+        -1.0e-41,          // negative subnormal
+        f32::MIN_POSITIVE, // smallest normal
+        1.0e-20,
+        -3.5e-1,
+        1.0,
+        87.0,
+        -123.456,
+        1.0e4,
+        FAR, // 1e6: the PJRT data-padding coordinate
+        -FAR,
+    ]
+}
+
+#[test]
+fn dot_and_l1_match_f64_reference_within_reassociation_bound() {
+    // Lengths straddle every remainder class of the 4/8/16-wide loops.
+    let lens = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 24, 31, 33, 63, 64, 65, 128, 300];
+    forall(38, move |rng, case| {
+        let n = lens[case % lens.len()];
+        let scale = if case % 3 == 0 { 1.0 } else { 10.0f64.powi((case % 7) as i32 - 3) };
+        let x = rand_buf(rng, n, scale);
+        let y = rand_buf(rng, n, scale);
+        let dot_ref: f64 = x.iter().zip(&y).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let dot_mag: f64 = x.iter().zip(&y).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+        let l1_ref: f64 = x.iter().zip(&y).map(|(&a, &b)| (a as f64 - b as f64).abs()).sum();
+        for mk in MicroKernel::available() {
+            let tol = 4.0 * (n as f64) * EPS;
+            let got_dot = (mk.dot)(&x, &y) as f64;
+            assert!(
+                (got_dot - dot_ref).abs() <= tol * dot_mag + 1e-30,
+                "{:?} dot n={n}: {got_dot} vs ref {dot_ref} (mag {dot_mag})",
+                mk.isa
+            );
+            let got_l1 = (mk.l1)(&x, &y) as f64;
+            assert!(
+                (got_l1 - l1_ref).abs() <= tol * l1_ref + 1e-30,
+                "{:?} l1 n={n}: {got_l1} vs ref {l1_ref}",
+                mk.isa
+            );
+        }
+    });
+}
+
+#[test]
+fn dot_and_l1_handle_adversarial_values() {
+    // Denormals, zeros and FAR-scale values in every lane position of a
+    // ragged-length vector.
+    let coords = adversarial_coords();
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for &a in &coords {
+        for &b in &coords {
+            x.push(a);
+            y.push(b);
+        }
+    }
+    // Trailing cuts push the adversarial values through the remainder
+    // (non-multiple-of-lane-width) paths as well.
+    for cut in [0usize, 1, 3, 7] {
+        let xs = &x[..x.len() - cut];
+        let ys = &y[..y.len() - cut];
+        let dot_ref: f64 = xs.iter().zip(ys).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let dot_mag: f64 = xs.iter().zip(ys).map(|(&a, &b)| (a as f64 * b as f64).abs()).sum();
+        let l1_ref: f64 = xs.iter().zip(ys).map(|(&a, &b)| (a as f64 - b as f64).abs()).sum();
+        for mk in MicroKernel::available() {
+            let tol = 4.0 * (xs.len() as f64) * EPS;
+            let got_dot = (mk.dot)(xs, ys) as f64;
+            assert!(
+                (got_dot - dot_ref).abs() <= tol * dot_mag + 1e-30,
+                "{:?} adversarial dot cut={cut}: {got_dot} vs {dot_ref}",
+                mk.isa
+            );
+            let got_l1 = (mk.l1)(xs, ys) as f64;
+            assert!(
+                (got_l1 - l1_ref).abs() <= tol * l1_ref + 1e-30,
+                "{:?} adversarial l1 cut={cut}: {got_l1} vs {l1_ref}",
+                mk.isa
+            );
+        }
+    }
+}
+
+/// Distances to feed the exp map: dense sweep of the live range, the
+/// underflow edge, subnormal inputs, negative cancellation residue, and
+/// FAR-underflow magnitudes (including values whose `x * log2e`
+/// intermediate overflows f32).
+fn exp_test_inputs() -> Vec<f32> {
+    let mut t = Vec::new();
+    let mut v = 0.0f32;
+    while v < 100.0 {
+        t.push(v);
+        v += 0.0417;
+    }
+    t.extend_from_slice(&[
+        0.0,
+        -0.0,
+        1.0e-41,
+        f32::MIN_POSITIVE,
+        1.0e-10,
+        -1.0e-3, // norm-trick cancellation residue: clamps to exp(0) = 1
+        -5.0,
+        86.99,
+        87.0,
+        87.01,
+        100.0,
+        1.0e4,
+        1.0e12,  // FAR sums: d * (1e6)^2
+        3.0e38,  // near f32::MAX
+        f32::MAX,
+        f32::INFINITY,
+    ]);
+    t
+}
+
+#[test]
+fn exp_neg_matches_scalar_within_ulps_and_true_exp() {
+    let inputs = exp_test_inputs();
+    let mut want = vec![0.0f32; inputs.len()];
+    let scalar = MicroKernel::select(SimdMode::Scalar).unwrap();
+    (scalar.exp_neg)(&inputs, &mut want);
+    // The scalar path is itself the documented fast_exp_neg.
+    for (&t, &w) in inputs.iter().zip(&want) {
+        assert_eq!(w.to_bits(), fast_exp_neg(-t.max(0.0)).to_bits());
+    }
+    for mk in MicroKernel::available() {
+        let mut got = vec![0.0f32; inputs.len()];
+        (mk.exp_neg)(&inputs, &mut got);
+        for ((&t, &g), &w) in inputs.iter().zip(&got).zip(&want) {
+            // Hard underflow must be exact zero on every path.
+            if t.max(0.0) > -fexp::UNDERFLOW {
+                assert_eq!(g, 0.0, "{:?}: exp(-{t}) must hard-underflow", mk.isa);
+                continue;
+            }
+            // Normal-range results: FMA regrouping, plus the possible
+            // one-off range-reduction tie documented in the header.
+            if w >= 1.0e-30 {
+                assert!(
+                    ulp_diff(g, w) <= 128,
+                    "{:?}: exp(-{t}) = {g} vs scalar {w} ({} ulps)",
+                    mk.isa,
+                    ulp_diff(g, w)
+                );
+                let true_exp = (-(t.max(0.0) as f64)).exp();
+                let rel = ((g as f64) - true_exp).abs() / true_exp;
+                assert!(rel < 1.0e-5, "{:?}: exp(-{t}) rel err {rel}", mk.isa);
+            } else {
+                // Deep tail / subnormal fringe: ULPs shrink below the
+                // relative envelope here, so bound relative to the scalar
+                // value (plus subnormal-rounding headroom).
+                assert!(
+                    (g as f64 - w as f64).abs() < 1.0e-5 * (w as f64) + 1.0e-42,
+                    "{:?}: tail exp(-{t}): {g} vs {w}",
+                    mk.isa
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn map_kernel_sq_parity_on_random_and_adversarial_tiles() {
+    let scalar = MicroKernel::select(SimdMode::Scalar).unwrap();
+    let adversarial = exp_test_inputs();
+    forall(12, move |rng, case| {
+        // Random tile sizes crossing the lane boundaries, values spanning
+        // the kernel-relevant range, plus the adversarial set appended.
+        let n = 1 + rng.below(200);
+        let mut dists: Vec<f32> = (0..n)
+            .map(|_| ((rng.f64() * 20.0) - 0.001) as f32)
+            .collect();
+        if case % 2 == 0 {
+            dists.extend_from_slice(&adversarial);
+        }
+        let mut want = vec![0.0f32; dists.len()];
+        let mut got = vec![0.0f32; dists.len()];
+        for k in ALL_KERNELS {
+            (scalar.map_kernel_sq)(k, &dists, &mut want);
+            for mk in MicroKernel::available() {
+                (mk.map_kernel_sq)(k, &dists, &mut got);
+                for ((&t, &g), &w) in dists.iter().zip(&got).zip(&want) {
+                    let ok = if w >= 1.0e-30 {
+                        ulp_diff(g, w) <= 128
+                    } else {
+                        (g as f64 - w as f64).abs() < 1.0e-5 * (w as f64) + 1.0e-42
+                    };
+                    assert!(
+                        ok,
+                        "{:?} {:?} input {t}: {g} vs scalar {w}",
+                        mk.isa, k
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// The AOT shape (d = 64) plus ragged dimensions across every `--simd`
+/// mode the host supports: sums and blocks must agree with the forced
+/// scalar-microkernel backend within reassociation tolerance.
+#[test]
+fn sums_and_block_parity_across_simd_modes() {
+    let mut rng = Rng::new(6301);
+    for &d in &[64usize, 1, 3, 17, 63, 65] {
+        let scale = 1.5 / (d as f64).sqrt();
+        let (b, m) = (6usize, 260usize);
+        let queries = rand_buf(&mut rng, b * d, scale);
+        let data = rand_buf(&mut rng, m * d, scale);
+        let reference = TiledBackend::with_simd(2, SimdMode::Scalar).unwrap();
+        for mode in ALL_MODES {
+            let be = match TiledBackend::with_simd(2, mode) {
+                Ok(be) => be,
+                Err(_) => continue, // ISA not runnable on this host
+            };
+            for k in ALL_KERNELS {
+                let want = reference.sums(k, &queries, &data, d);
+                let got = be.sums(k, &queries, &data, d);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                        "{:?} mode={} d={d}: sums {g} vs {w}",
+                        k,
+                        mode.name()
+                    );
+                }
+                let want_b = reference.block(k, &queries, &data, d);
+                let got_b = be.block(k, &queries, &data, d);
+                for (g, w) in got_b.iter().zip(&want_b) {
+                    assert!(
+                        (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                        "{:?} mode={} d={d}: block {g} vs {w}",
+                        k,
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// FAR-padding rows must contribute exactly zero mass under every SIMD
+/// mode (the PJRT padding contract): padded and unpadded sums agree, and
+/// the padded block entries are exact zeros.
+#[test]
+fn far_underflow_parity_across_simd_modes() {
+    let mut rng = Rng::new(6303);
+    let d = 16;
+    let (b, m_real, m_pad) = (4usize, 40usize, 25usize);
+    let queries = rand_buf(&mut rng, b * d, 1.0);
+    let real = rand_buf(&mut rng, m_real * d, 1.0);
+    let mut padded = real.clone();
+    padded.resize(real.len() + m_pad * d, FAR);
+    for mode in ALL_MODES {
+        let be = match TiledBackend::with_simd(1, mode) {
+            Ok(be) => be,
+            Err(_) => continue,
+        };
+        for k in [Kernel::Laplacian, Kernel::Gaussian, Kernel::Exponential] {
+            let s_real = be.sums(k, &queries, &real, d);
+            let s_pad = be.sums(k, &queries, &padded, d);
+            for q in 0..b {
+                assert_eq!(
+                    s_real[q].to_bits(),
+                    s_pad[q].to_bits(),
+                    "{:?} mode={}: FAR rows leaked mass (query {q})",
+                    k,
+                    mode.name()
+                );
+            }
+            let blk = be.block(k, &queries, &padded, d);
+            let m_total = m_real + m_pad;
+            for q in 0..b {
+                for j in m_real..m_total {
+                    assert_eq!(
+                        blk[q * m_total + j],
+                        0.0,
+                        "{:?} mode={}: far entry ({q},{j}) nonzero",
+                        k,
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The length-mismatch bug: `dot`/`l1` used to silently truncate to the
+/// shorter slice. Debug builds must now fail fast.
+#[cfg(debug_assertions)]
+mod length_asserts {
+    use super::*;
+
+    #[test]
+    #[should_panic(expected = "mismatched input lengths")]
+    fn dot_rejects_mismatched_lengths() {
+        let mk = MicroKernel::select(SimdMode::Scalar).unwrap();
+        (mk.dot)(&[1.0, 2.0, 3.0], &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched input lengths")]
+    fn l1_rejects_mismatched_lengths() {
+        let mk = MicroKernel::detect();
+        (mk.l1)(&[1.0, 2.0, 3.0], &[1.0, 2.0]);
+    }
+}
+
+#[test]
+fn reported_isa_is_consistent() {
+    // Every selectable mode reports its own ISA through the backend
+    // metadata, and auto matches detection.
+    for mode in ALL_MODES {
+        if let Ok(be) = TiledBackend::with_simd(1, mode) {
+            match mode {
+                SimdMode::Auto => {
+                    assert_eq!(be.isa(), MicroKernel::detect().isa.name())
+                }
+                _ => assert_eq!(be.isa(), mode.name()),
+            }
+        }
+    }
+    assert_eq!(Isa::Scalar.name(), "scalar");
+}

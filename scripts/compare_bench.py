@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the kernel-backend series (CI).
+
+Compares a fresh `BENCH_backend.json` (written by `cargo bench --bench
+bench_kde`) against the committed baseline and fails on
+
+  * a missing (kernel, backend) series — the bench stopped measuring
+    something it used to measure;
+  * pairs/sec below `(1 - tol)` of the baseline for any series
+    (default tol 0.15, override with env BENCH_REGRESSION_TOL);
+  * a SIMD microkernel that no longer beats the scalar-tiled path: on any
+    host whose detected ISA is not "scalar", the Gaussian-sums `tiled_1t`
+    series must be at least SIMD_MIN_SPEEDUP (default 1.2) times
+    `tiled_1t_scalar`. (The acceptance target on a quiet AVX2 host is
+    1.5x; the CI floor is lower to absorb shared-runner noise.)
+
+A baseline marked `"provisional": true` (the bootstrap state: committed
+before any CI host measured real numbers) skips the per-series regression
+comparison but still enforces series completeness and the SIMD speedup
+floor on the fresh run, and prints the fresh numbers so they can be
+committed as the real baseline.
+
+Usage: compare_bench.py BASELINE.json FRESH.json
+
+Stdlib only — the CI image needs nothing beyond python3.
+"""
+
+import json
+import os
+import sys
+
+KERNELS = ["laplacian", "gaussian", "exponential", "rational_quadratic"]
+BACKENDS = ["scalar", "tiled_1t_scalar", "tiled_1t", "tiled_mt"]
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def series(doc):
+    out = {}
+    for row in doc.get("results", []):
+        out[(row["kernel"], row["backend"])] = row
+    return out
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__)
+        return 2
+    baseline = load(argv[1])
+    fresh = load(argv[2])
+    tol = float(os.environ.get("BENCH_REGRESSION_TOL", "0.15"))
+    min_speedup = float(os.environ.get("SIMD_MIN_SPEEDUP", "1.2"))
+    base = series(baseline)
+    new = series(fresh)
+    failures = []
+
+    # 1. Completeness of the fresh run: the full kernel x backend grid.
+    for kernel in KERNELS:
+        for backend in BACKENDS:
+            if (kernel, backend) not in new:
+                failures.append(f"missing series in fresh run: {kernel}/{backend}")
+
+    # 2. SIMD must actually pay on hosts that have it.
+    isa = fresh.get("isa_detected", "scalar")
+    key_simd = ("gaussian", "tiled_1t")
+    key_scalar = ("gaussian", "tiled_1t_scalar")
+    if isa != "scalar" and key_simd in new and key_scalar in new:
+        ratio = new[key_simd]["pairs_per_sec"] / new[key_scalar]["pairs_per_sec"]
+        print(f"SIMD speedup ({isa}, gaussian sums): {ratio:.2f}x "
+              f"(floor {min_speedup:.2f}x, acceptance target 1.5x)")
+        if ratio < min_speedup:
+            failures.append(
+                f"SIMD regression: tiled_1t is only {ratio:.2f}x tiled_1t_scalar "
+                f"on gaussian sums (floor {min_speedup:.2f}x)")
+
+    # 3. Per-series throughput vs the committed baseline.
+    if baseline.get("provisional"):
+        print("baseline is provisional (no measured numbers committed yet): "
+              "skipping per-series regression comparison.")
+        print("fresh series, for committing as the baseline:")
+        for (kernel, backend), row in sorted(new.items()):
+            print(f"  {kernel:>20s}/{backend:<16s} {row['pairs_per_sec']:.3e} pairs/s "
+                  f"[{row.get('isa', '?')}]")
+    else:
+        print(f"{'series':>38s} {'baseline':>12s} {'fresh':>12s} {'ratio':>7s}")
+        for (kernel, backend), brow in sorted(base.items()):
+            frow = new.get((kernel, backend))
+            if frow is None:
+                failures.append(f"series dropped vs baseline: {kernel}/{backend}")
+                continue
+            ratio = frow["pairs_per_sec"] / brow["pairs_per_sec"]
+            flag = ""
+            if ratio < 1.0 - tol:
+                failures.append(
+                    f"regression: {kernel}/{backend} at {ratio:.2f}x baseline "
+                    f"({brow['pairs_per_sec']:.3e} -> {frow['pairs_per_sec']:.3e} pairs/s)")
+                flag = "  << REGRESSION"
+            print(f"{kernel + '/' + backend:>38s} {brow['pairs_per_sec']:>12.3e} "
+                  f"{frow['pairs_per_sec']:>12.3e} {ratio:>6.2f}x{flag}")
+        for key in sorted(set(new) - set(base)):
+            print(f"new series (no baseline yet): {key[0]}/{key[1]}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} bench-regression issue(s)")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: bench series complete, no regression beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
