@@ -9,9 +9,10 @@ cleanly.  See /opt/xla-example/README.md.
 Run once per build:  ``make artifacts``  (no-op when inputs unchanged).
 
 Artifacts written:
-  artifacts/kde_sums_<kind>.hlo.txt      (B,D),(M,D) -> ((B,),)
-  artifacts/kernel_block_<kind>.hlo.txt  (B,D),(M,D) -> ((B,M),)
-  artifacts/manifest.json                shapes + kernel list for Rust
+  artifacts/kde_sums_<kind>.hlo.txt         (B,D),(M,D) -> ((B,),)
+  artifacts/kde_sums_ranged_<kind>.hlo.txt  (B,D),(M,D),(B,)i32,(B,)i32 -> ((B,),)
+  artifacts/kernel_block_<kind>.hlo.txt     (B,D),(M,D) -> ((B,M),)
+  artifacts/manifest.json                   shapes + kernel list for Rust
 """
 
 import argparse
@@ -34,8 +35,8 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
-def lower_entry(fn) -> str:
-    lowered = jax.jit(fn).lower(*model.example_args())
+def lower_entry(fn, args=None) -> str:
+    lowered = jax.jit(fn).lower(*(args or model.example_args()))
     return to_hlo_text(lowered)
 
 
@@ -53,11 +54,12 @@ def main() -> None:
         "entries": [],
     }
     for kind in KERNELS:
-        for name, builder in (
-            ("kde_sums", model.kde_sums_fn),
-            ("kernel_block", model.kernel_block_fn),
+        for name, builder, entry_args in (
+            ("kde_sums", model.kde_sums_fn, model.example_args()),
+            ("kde_sums_ranged", model.kde_sums_ranged_fn, model.example_args_ranged()),
+            ("kernel_block", model.kernel_block_fn, model.example_args()),
         ):
-            text = lower_entry(builder(kind))
+            text = lower_entry(builder(kind), entry_args)
             path = os.path.join(args.out_dir, f"{name}_{kind}.hlo.txt")
             with open(path, "w") as f:
                 f.write(text)

@@ -80,6 +80,52 @@ def make_kde_sums(kind, b, m, d, dtype=jnp.float32):
     )
 
 
+def make_kde_sums_ranged(kind, b, m, d, dtype=jnp.float32):
+    """Build the range-masked KDE-sum function for fixed shapes.
+
+    Returns f(queries (b, d), data (m, d), lo (b,) i32, hi (b,) i32) ->
+    sums (b,), where row ``q`` only accumulates data rows in
+    ``[lo[q], hi[q])``.  This is the level-fusion entry: the Rust runtime
+    packs several tree nodes' query groups into one (b, m) execution, with
+    each node's data occupying one contiguous segment of the data input and
+    every query row carrying its own segment's row range.  Rows whose range
+    is empty (``lo == hi``) contribute exactly 0.0, which also covers the
+    B-padding rows.
+    """
+    if kind not in KERNELS:
+        raise ValueError(f"unknown kernel kind: {kind}")
+    tm = _pick_tile(m)
+    grid = (m // tm,)
+
+    def kernel(q_ref, d_ref, lo_ref, hi_ref, o_ref):
+        j = pl.program_id(0)
+        vals = _kernel_values(kind, q_ref[...], d_ref[...])
+        # Global data-row index of each column of this (b, tm) tile.
+        rows = jax.lax.broadcasted_iota(jnp.int32, (q_ref.shape[0], tm), 1) + j * tm
+        mask = (rows >= lo_ref[...][:, None]) & (rows < hi_ref[...][:, None])
+        part = jnp.sum(jnp.where(mask, vals, 0.0), axis=1)
+
+        @pl.when(j == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += part
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((tm, d), lambda j: (j, 0)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), dtype),
+        interpret=True,
+    )
+
+
 def make_kernel_block(kind, b, m, d, dtype=jnp.float32):
     """Build the tiled kernel-block function for fixed shapes.
 

@@ -39,3 +39,11 @@ def pairwise_kernel(kind, queries, data):
 def kde_sums(kind, queries, data):
     """Reference KDE sums: out[b] = sum_m k(queries[b], data[m])."""
     return jnp.sum(pairwise_kernel(kind, queries, data), axis=1)
+
+
+def kde_sums_ranged(kind, queries, data, lo, hi):
+    """Reference range-masked sums: out[b] = sum over m in [lo[b], hi[b])."""
+    vals = pairwise_kernel(kind, queries, data)
+    rows = jnp.arange(data.shape[0])[None, :]
+    mask = (rows >= lo[:, None]) & (rows < hi[:, None])
+    return jnp.sum(jnp.where(mask, vals, 0.0), axis=1)

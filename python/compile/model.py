@@ -5,10 +5,14 @@ text and executed from the Rust request path via PJRT.  Each graph wraps the
 Layer-1 Pallas kernel from ``kernels.pairwise`` so that the kernel lowers
 into the same HLO module.
 
-Two entry points per kernel type:
+Three entry points per kernel type:
 
-  * ``kde_sums``     (B, D), (M, D) -> (B,)     batched KDE queries
-  * ``kernel_block`` (B, D), (M, D) -> (B, M)   explicit kernel rows
+  * ``kde_sums``        (B, D), (M, D) -> (B,)     batched KDE queries
+  * ``kde_sums_ranged`` (B, D), (M, D), (B,) i32, (B,) i32 -> (B,)
+    range-masked sums: row q only accumulates data rows in [lo[q], hi[q]).
+    The level-fusion entry — the Rust runtime packs several tree nodes'
+    query groups into one execution, one data segment per node.
+  * ``kernel_block``    (B, D), (M, D) -> (B, M)   explicit kernel rows
 
 AOT shapes (must match ``rust/src/runtime``):  B = 64, M = 1024, D = 64.
 The Rust side pads queries/data to these shapes; padding *data* rows are
@@ -36,6 +40,16 @@ def kde_sums_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
     return f
 
 
+def kde_sums_ranged_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
+    """Range-masked KDE sums graph (the level-fusion entry)."""
+    inner = pairwise.make_kde_sums_ranged(kind, b, m, d)
+
+    def f(queries, data, lo, hi):
+        return (inner(queries, data, lo, hi),)
+
+    return f
+
+
 def kernel_block_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
     """Dense kernel block graph for a fixed kernel kind and shapes."""
     inner = pairwise.make_kernel_block(kind, b, m, d)
@@ -47,10 +61,20 @@ def kernel_block_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
 
 
 def example_args(b=AOT_B, m=AOT_M, d=AOT_D):
-    """ShapeDtypeStructs for lowering."""
+    """ShapeDtypeStructs for lowering the (queries, data) entries."""
     import jax.numpy as jnp
 
     return (
         jax.ShapeDtypeStruct((b, d), jnp.float32),
         jax.ShapeDtypeStruct((m, d), jnp.float32),
+    )
+
+
+def example_args_ranged(b=AOT_B, m=AOT_M, d=AOT_D):
+    """ShapeDtypeStructs for lowering the ranged entries."""
+    import jax.numpy as jnp
+
+    return example_args(b, m, d) + (
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
     )

@@ -61,6 +61,41 @@ def test_sweep_random_shapes(kind):
 
 
 @pytest.mark.parametrize("kind", KERNELS)
+@pytest.mark.parametrize("b,m,d", [(1, 8, 1), (3, 16, 5), (8, 64, 16), (64, 1024, 64)])
+def test_kde_sums_ranged_matches_ref(kind, b, m, d):
+    """Range-masked sums: every row attends only to its own [lo, hi)."""
+    q, x = _rand(b * 3000 + m + d, b, m, d)
+    r = RNG(b + m + d)
+    lo = r.integers(0, m, size=b).astype(np.int32)
+    hi = (lo + r.integers(0, m, size=b)).clip(max=m).astype(np.int32)
+    # Exercise the edges: one full row, one empty row (when b allows).
+    lo[0], hi[0] = 0, m
+    if b > 1:
+        lo[1], hi[1] = m // 2, m // 2
+    got = pairwise.make_kde_sums_ranged(kind, b, m, d)(q, x, lo, hi)
+    want = ref.kde_sums_ranged(kind, q, x, jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+    # Full range reduces to the unmasked sums; empty range is exactly zero.
+    full = pairwise.make_kde_sums(kind, b, m, d)(q, x)
+    np.testing.assert_allclose(got[0], full[0], rtol=2e-5, atol=1e-5)
+    if b > 1:
+        assert float(got[1]) == 0.0
+
+
+def test_kde_sums_ranged_tile_straddling_ranges():
+    """Ranges that start/end mid-tile must mask exactly at the boundary."""
+    kind = "laplacian"
+    b, m, d = 4, 256, 8
+    q, x = _rand(19, b, m, d)
+    lo = np.array([0, 100, 255, 17], dtype=np.int32)
+    hi = np.array([1, 156, 256, 200], dtype=np.int32)
+    got = np.asarray(pairwise.make_kde_sums_ranged(kind, b, m, d)(q, x, lo, hi))
+    for row in range(b):
+        want = float(np.asarray(ref.kde_sums(kind, q[row : row + 1], x[lo[row] : hi[row]]))[0])
+        np.testing.assert_allclose(got[row], want, rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KERNELS)
 def test_kernel_values_in_unit_interval(kind):
     q, x = _rand(7, 8, 128, 16)
     vals = np.asarray(pairwise.make_kernel_block(kind, 8, 128, 16)(q, x))

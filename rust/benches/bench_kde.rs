@@ -10,7 +10,9 @@
 //! ~ 1/(tau eps^2); HBE is flat with cost ~ #tables.
 
 use std::sync::Arc;
+use std::time::Instant;
 
+use kde_matrix::apps::sparsify::sparsify_batched;
 use kde_matrix::kde::estimators::{NaiveKde, SamplingKde};
 use kde_matrix::kde::hbe::HbeKde;
 use kde_matrix::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters};
@@ -18,6 +20,7 @@ use kde_matrix::kernel::{dataset, Kernel, ALL_KERNELS};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
 use kde_matrix::runtime::simd::{MicroKernel, SimdMode};
 use kde_matrix::runtime::tiled::TiledBackend;
+use kde_matrix::sampling::Primitives;
 use kde_matrix::util::bench::BenchSuite;
 use kde_matrix::util::rng::Rng;
 
@@ -33,6 +36,37 @@ use kde_matrix::util::rng::Rng;
 /// * `tiled_1t`        — tiled backend, auto (best) microkernel, one
 ///   thread: `tiled_1t / tiled_1t_scalar` is the pure SIMD speedup.
 /// * `tiled_mt`        — tiled backend, auto microkernel, all cores.
+/// Level-fusion dispatch series: one batched sparsifier round (t = 64) at
+/// n = 4096 with level fusion on vs off, counted at the backend's
+/// dispatch counter — the executions-per-round metric the PJRT path pays
+/// per padded artifact run. Emitted as the `fusion` object of
+/// `BENCH_backend.json` (tests/fusion.rs pins the O(log n) bound; this
+/// series tracks the measured trajectory).
+fn fusion_series(rng: &mut Rng) -> String {
+    let (n, t, d) = (4096usize, 64usize, 16usize);
+    let ds = Arc::new(dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng));
+    let run = |fused: bool| {
+        let be = CpuBackend::new();
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+        prims.tree.set_fusion(fused);
+        let before = be.calls();
+        let start = Instant::now();
+        let r = sparsify_batched(&prims, t, &mut Rng::new(17));
+        let wall_us = start.elapsed().as_micros();
+        assert_eq!(r.samples, t);
+        (be.calls() - before, wall_us)
+    };
+    let (calls_fused, us_fused) = run(true);
+    let (calls_unfused, us_unfused) = run(false);
+    let log2n = usize::BITS - n.leading_zeros() - 1;
+    format!(
+        "{{\"n\": {n}, \"t\": {t}, \"d\": {d}, \"log2_n\": {log2n}, \
+         \"dispatches_fused\": {calls_fused}, \"dispatches_unfused\": {calls_unfused}, \
+         \"round_us_fused\": {us_fused}, \"round_us_unfused\": {us_unfused}}}"
+    )
+}
+
 fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     let (n, d) = (4096usize, 64usize);
     let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
@@ -70,10 +104,13 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
             ));
         }
     }
+    let fusion = fusion_series(rng);
+    suite.note(&format!("fusion series: {fusion}"));
     let json = format!(
         "{{\n  \"bench\": \"backend_sums\",\n  \"n\": {n},\n  \"d\": {d},\n  \
          \"threads_available\": {threads},\n  \"isa_detected\": \"{}\",\n  \
-         \"provisional\": false,\n  \"results\": [\n{}\n  ]\n}}\n",
+         \"baseline\": \"measured\",\n  \"fusion\": {fusion},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
         MicroKernel::detect().isa.name(),
         rows.join(",\n")
     );

@@ -41,13 +41,16 @@ pub fn theorem_sample_count(n: usize, eps: f64, tau: f64) -> usize {
     (t.ceil() as usize).max(n)
 }
 
-/// Algorithm 5.1 over prebuilt primitives with **batched** KDE traffic:
-/// all `t` degree draws happen first, the `t` neighbor descents run in
-/// level-order lock-step (`NeighborSampler::sample_batch`), and the `t`
-/// reverse probabilities are resolved by one batched probe — so a round
-/// issues O(log n) backend dispatches per tree level instead of O(t log n)
-/// singleton calls. The edge distribution and importance weights are the
-/// same as [`sparsify`]'s (each walker owns a forked RNG stream; the
+/// Algorithm 5.1 over prebuilt primitives with **batched, level-fused**
+/// KDE traffic: all `t` degree draws happen first, the `t` neighbor
+/// descents run in level-order lock-step (`NeighborSampler::sample_batch`),
+/// and the `t` reverse probabilities are resolved by one batched probe.
+/// Each level's cache misses are coalesced across tree nodes into fused
+/// backend submissions (`MultiLevelKde::query_points_multi`), so a whole
+/// round issues O(log n) backend dispatches total — not O(t log n)
+/// singleton calls, and not one dispatch per tree node touched (pinned by
+/// `tests/fusion.rs`). The edge distribution and importance weights are
+/// the same as [`sparsify`]'s (each walker owns a forked RNG stream; the
 /// memoized oracle answers are shared), only the evaluation shape changes.
 pub fn sparsify_batched(prims: &Primitives, t: usize, rng: &mut Rng) -> SparsifyResult {
     let ds = &prims.tree.ds;

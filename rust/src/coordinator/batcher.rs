@@ -12,6 +12,13 @@
 //! `NaiveKde`), a sampling/HBE estimator, or a multi-level-tree node —
 //! so the serving layer batches over the same oracle abstraction the
 //! algorithms use.
+//!
+//! This module also hosts [`plan_level_fusion`], the static planner behind
+//! the batched tree pipeline's level fusion: it packs the cache-miss query
+//! groups of *several* tree nodes at one level into padded fused
+//! submissions shaped like the AOT artifact (B = 64 query rows, M = 1024
+//! packed data rows), which `MultiLevelKde::query_points_multi` then
+//! executes through one `KernelBackend::sums_ranged` dispatch each.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -23,6 +30,76 @@ use crate::kde::estimators::NaiveKde;
 use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
+
+/// One fusable query group handed to [`plan_level_fusion`]: `rows`
+/// cache-miss query rows that all attend to the same `seg_rows`-row data
+/// segment (one tree node's data slice or sample buffer).
+#[derive(Clone, Copy, Debug)]
+pub struct FuseJob {
+    /// Number of query rows in this group.
+    pub rows: usize,
+    /// Number of data rows in the group's segment.
+    pub seg_rows: usize,
+}
+
+/// One planned fused submission: which job rows it carries and which jobs'
+/// segments get packed (each segment once) into its shared data buffer.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FuseSubmission {
+    /// `(job index, row index within that job)` in submission row order.
+    pub rows: Vec<(usize, usize)>,
+    /// Distinct job indices whose segments are packed, in pack order. A
+    /// row's `(lo, hi)` data range is its job's segment offset within this
+    /// pack.
+    pub segments: Vec<usize>,
+}
+
+/// Pack one level's fusable query groups into fused submissions.
+///
+/// Greedy and deterministic: jobs are consumed in order; a submission is
+/// closed when it reaches `max_rows` query rows, or when admitting a *new*
+/// segment would push its packed data past `max_data_rows` (a single
+/// segment larger than `max_data_rows` is still admitted alone — the
+/// backend tiles internally). Rows never split across submissions, so a
+/// fused row's sum keeps the exact accumulation order of an unfused
+/// per-node dispatch; a job whose rows span several submissions has its
+/// segment re-packed into each.
+///
+/// `max_rows` and `max_data_rows` are normally the AOT shapes
+/// (`AOT_B` = 64, `AOT_M` = 1024), making the CPU backends' per-submission
+/// `calls()` counter line up with the PJRT executions a real artifact run
+/// would pay — the backend-uniform accounting the fusion tests assert on.
+pub fn plan_level_fusion(
+    jobs: &[FuseJob],
+    max_rows: usize,
+    max_data_rows: usize,
+) -> Vec<FuseSubmission> {
+    assert!(max_rows >= 1 && max_data_rows >= 1);
+    let mut subs: Vec<FuseSubmission> = Vec::new();
+    let mut cur = FuseSubmission::default();
+    let mut cur_data = 0usize;
+    for (j, job) in jobs.iter().enumerate() {
+        for r in 0..job.rows {
+            if cur.rows.len() == max_rows {
+                subs.push(std::mem::take(&mut cur));
+                cur_data = 0;
+            }
+            if !cur.segments.contains(&j) {
+                if !cur.rows.is_empty() && cur_data + job.seg_rows > max_data_rows {
+                    subs.push(std::mem::take(&mut cur));
+                    cur_data = 0;
+                }
+                cur.segments.push(j);
+                cur_data += job.seg_rows;
+            }
+            cur.rows.push((j, r));
+        }
+    }
+    if !cur.rows.is_empty() {
+        subs.push(cur);
+    }
+    subs
+}
 
 /// One KDE query in flight.
 pub struct QueryRequest {
@@ -412,6 +489,101 @@ mod tests {
     fn unknown_shard_rejected() {
         let (svc, _) = service(8, BatcherConfig::default());
         let _ = svc.submit(3, vec![0.0; 4]);
+    }
+
+    fn job(rows: usize, seg_rows: usize) -> FuseJob {
+        FuseJob { rows, seg_rows }
+    }
+
+    /// Planner invariants: every (job, row) appears exactly once, rows
+    /// never split, every submission packs each of its rows' segments
+    /// exactly once, and the row/data caps hold (single oversize segment
+    /// excepted).
+    fn check_plan(jobs: &[FuseJob], max_rows: usize, max_data: usize) -> Vec<FuseSubmission> {
+        let plan = plan_level_fusion(jobs, max_rows, max_data);
+        let mut seen = std::collections::HashSet::new();
+        for sub in &plan {
+            assert!(!sub.rows.is_empty());
+            assert!(sub.rows.len() <= max_rows);
+            let data: usize = sub.segments.iter().map(|&j| jobs[j].seg_rows).sum();
+            assert!(
+                data <= max_data || sub.segments.len() == 1,
+                "data {data} over budget with {} segments",
+                sub.segments.len()
+            );
+            let mut uniq = sub.segments.clone();
+            uniq.dedup();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), sub.segments.len(), "duplicate segment in pack");
+            for &(j, r) in &sub.rows {
+                assert!(r < jobs[j].rows);
+                assert!(sub.segments.contains(&j), "row without its segment");
+                assert!(seen.insert((j, r)), "row ({j}, {r}) planned twice");
+            }
+        }
+        let total: usize = jobs.iter().map(|j| j.rows).sum();
+        assert_eq!(seen.len(), total, "rows dropped by the plan");
+        plan
+    }
+
+    #[test]
+    fn fusion_planner_single_small_job_is_one_submission() {
+        let plan = check_plan(&[job(5, 100)], 64, 1024);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].segments, vec![0]);
+    }
+
+    #[test]
+    fn fusion_planner_splits_rows_at_max_and_repacks_segment() {
+        // 130 rows at B=64 -> 64 + 64 + 2, each carrying the segment.
+        let plan = check_plan(&[job(130, 100)], 64, 1024);
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan[0].rows.len(), 64);
+        assert_eq!(plan[1].rows.len(), 64);
+        assert_eq!(plan[2].rows.len(), 2);
+        for sub in &plan {
+            assert_eq!(sub.segments, vec![0], "split rows re-pack the segment");
+        }
+    }
+
+    #[test]
+    fn fusion_planner_packs_many_small_segments_per_submission() {
+        // 16 nodes x 2 rows x 128-row segments: 8 segments fit the M=1024
+        // data budget, 32 rows fit the B=64 row budget -> 2 submissions.
+        let jobs: Vec<FuseJob> = (0..16).map(|_| job(2, 128)).collect();
+        let plan = check_plan(&jobs, 64, 1024);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].segments.len(), 8);
+        assert_eq!(plan[1].segments.len(), 8);
+    }
+
+    #[test]
+    fn fusion_planner_oversize_segment_goes_alone() {
+        let plan = check_plan(&[job(3, 5000), job(2, 100)], 64, 1024);
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].segments, vec![0], "oversize segment isolated");
+        assert_eq!(plan[1].segments, vec![1]);
+    }
+
+    #[test]
+    fn fusion_planner_skips_empty_jobs_and_empty_input() {
+        assert!(plan_level_fusion(&[], 64, 1024).is_empty());
+        let plan = check_plan(&[job(0, 50), job(1, 50), job(0, 9)], 64, 1024);
+        assert_eq!(plan.len(), 1);
+        assert_eq!(plan[0].rows, vec![(1, 0)]);
+        assert_eq!(plan[0].segments, vec![1]);
+    }
+
+    #[test]
+    fn fusion_planner_ragged_property() {
+        // Random ragged job mixes keep all invariants.
+        crate::util::prop::forall(12, |rng, _| {
+            let jobs: Vec<FuseJob> = (0..1 + rng.below(20))
+                .map(|_| job(rng.below(100), 1 + rng.below(2000)))
+                .collect();
+            check_plan(&jobs, 64, 1024);
+        });
     }
 
     #[test]

@@ -18,9 +18,15 @@
 //! fans results back out through per-request channels. Shards are
 //! `Arc<dyn Kde>` oracles (`start_with_oracles`): raw datasets served
 //! exactly (`start`), sampling/HBE estimators, or multi-level-tree nodes.
+//!
+//! The module also hosts the offline pipeline's level-fusion planner
+//! ([`plan_level_fusion`]): the same B = 64 packing discipline, applied to
+//! whole tree levels instead of request queues.
 
 pub mod batcher;
 pub mod metrics;
 
-pub use batcher::{BatcherConfig, KdeService, QueryRequest};
+pub use batcher::{
+    plan_level_fusion, BatcherConfig, FuseJob, FuseSubmission, KdeService, QueryRequest,
+};
 pub use metrics::ServiceMetrics;

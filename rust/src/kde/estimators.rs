@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use crate::kde::{Kde, KdeConfig, KdeCounters};
+use crate::kde::{FusedView, Kde, KdeConfig, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
 use crate::util::rng::Rng;
@@ -19,6 +19,7 @@ pub struct NaiveKde {
 }
 
 impl NaiveKde {
+    /// Exact oracle over `ds[lo..hi)` dispatching through `backend`.
     pub fn new(
         ds: Arc<Dataset>,
         kernel: Kernel,
@@ -51,6 +52,15 @@ impl Kde for NaiveKde {
         self.backend.sums(self.kernel, ys, data, d)
     }
 
+    /// Fusable: one backend scan over the node's dataset slice, scale 1.
+    fn fused_view(&self) -> Option<FusedView<'_>> {
+        let d = self.ds.d;
+        Some(FusedView {
+            data: &self.ds.flat()[self.lo * d..self.hi * d],
+            scale: 1.0,
+        })
+    }
+
     fn subset_len(&self) -> usize {
         self.hi - self.lo
     }
@@ -72,15 +82,19 @@ pub struct SamplingKde {
     d: usize,
     /// Gathered sample coordinates, row-major `s x d`.
     sample: Vec<f32>,
-    /// Number of sampled points.
-    s: usize,
     /// Range size |S| that the estimate scales up to.
     len: usize,
+    /// `|S| / |R|`, the constant every raw backend sum is scaled by.
+    /// Precomputed so the per-query path and the fused level path apply
+    /// the *same* f64 multiplication and stay bit-identical.
+    scale: f64,
     backend: Arc<dyn KernelBackend>,
     counters: Arc<KdeCounters>,
 }
 
 impl SamplingKde {
+    /// Draw the subsample of `ds[lo..hi)` once; queries then scan only it.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         ds: Arc<Dataset>,
         kernel: Kernel,
@@ -100,7 +114,8 @@ impl SamplingKde {
         for &i in &idx {
             sample.extend_from_slice(ds.point(lo + i));
         }
-        SamplingKde { kernel, d, sample, s, len, backend, counters }
+        let scale = len as f64 / s as f64;
+        SamplingKde { kernel, d, sample, len, scale, backend, counters }
     }
 }
 
@@ -108,7 +123,7 @@ impl Kde for SamplingKde {
     fn query(&self, y: &[f32]) -> f64 {
         self.counters.record_query();
         let raw = self.backend.sums(self.kernel, y, &self.sample, self.d)[0];
-        raw * self.len as f64 / self.s as f64
+        raw * self.scale
     }
 
     /// Native batch: the fixed subsample is shared by every query, so the
@@ -117,9 +132,13 @@ impl Kde for SamplingKde {
         assert!(ys.len() % self.d == 0);
         self.counters.record_queries((ys.len() / self.d) as u64);
         let raw = self.backend.sums(self.kernel, ys, &self.sample, self.d);
-        raw.into_iter()
-            .map(|v| v * self.len as f64 / self.s as f64)
-            .collect()
+        raw.into_iter().map(|v| v * self.scale).collect()
+    }
+
+    /// Fusable: one backend scan over the gathered subsample, scaled by
+    /// `|S| / |R|`.
+    fn fused_view(&self) -> Option<FusedView<'_>> {
+        Some(FusedView { data: &self.sample, scale: self.scale })
     }
 
     fn subset_len(&self) -> usize {
@@ -167,7 +186,10 @@ mod tests {
     fn sampling_full_size_is_exact() {
         // When the sample covers the whole range, estimate is exact.
         let (ds, be, ctr, mut rng) = setup(48, 43);
-        let cfg = KdeConfig { kind: crate::kde::EstimatorKind::Sampling { eps: 0.01, tau: 0.9 }, ..Default::default() };
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.01, tau: 0.9 },
+            ..Default::default()
+        };
         // sample_size = 4/(0.9*1e-4) >> 48 -> clamped to 48.
         let kde = SamplingKde::new(
             ds.clone(),

@@ -28,6 +28,7 @@ struct Table {
     buckets: HashMap<Vec<i32>, Vec<usize>>,
 }
 
+/// Hashing-based estimator over `ds[lo..hi)`; see the module docs.
 pub struct HbeKde {
     ds: Arc<Dataset>,
     lo: usize,
@@ -43,6 +44,9 @@ pub struct HbeKde {
 }
 
 impl HbeKde {
+    /// Build `num_tables` random-grid hash tables of width `width` over
+    /// `ds[lo..hi)` (Laplacian kernel only).
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         ds: Arc<Dataset>,
         kernel: Kernel,
@@ -101,6 +105,7 @@ impl HbeKde {
         p
     }
 
+    /// Exact kernel evaluations spent so far (#tables per query).
     pub fn kernel_evals(&self) -> u64 {
         self.evals.load(std::sync::atomic::Ordering::Relaxed)
     }

@@ -15,7 +15,12 @@
 //!
 //! All estimators route their bulk evaluations through a
 //! [`KernelBackend`](crate::runtime::backend::KernelBackend) so the same
-//! code runs on the pure-Rust path and the PJRT artifact path.
+//! code runs on the pure-Rust path and the PJRT artifact path. Estimators
+//! whose query is a single contiguous backend scan additionally expose a
+//! [`FusedView`], which lets the multi-level tree coalesce several nodes'
+//! query groups into one fused backend dispatch per level (see
+//! [`MultiLevelKde::query_points_multi`] and `docs/ARCHITECTURE.md`).
+#![warn(missing_docs)]
 
 pub mod estimators;
 pub mod hbe;
@@ -37,9 +42,11 @@ pub struct KdeCounters {
 }
 
 impl KdeCounters {
+    /// Fresh zeroed counters behind an `Arc` (shared across oracles).
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }
+    /// Record one KDE query.
     pub fn record_query(&self) {
         self.queries.fetch_add(1, Ordering::Relaxed);
     }
@@ -47,12 +54,30 @@ impl KdeCounters {
     pub fn record_queries(&self, n: u64) {
         self.queries.fetch_add(n, Ordering::Relaxed);
     }
+    /// KDE queries recorded so far.
     pub fn queries(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
     }
+    /// Zero the counter (experiment hygiene between runs).
     pub fn reset(&self) {
         self.queries.store(0, Ordering::Relaxed);
     }
+}
+
+/// How a fusable oracle evaluates a query: one backend `sums` scan over a
+/// fixed row-major buffer, times a constant scale. Exposing the buffer
+/// lets the multi-level tree pack several oracles' scans into one fused
+/// `sums_ranged` dispatch (the buffer becomes one data segment of the
+/// packed submission) while reproducing `query_batch` bit for bit:
+/// `answer = scale * sum_{x in data} k(x, y)`.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedView<'a> {
+    /// The oracle's scan buffer, `rows x dim` row-major (a dataset range
+    /// for [`NaiveKde`], the gathered subsample for [`SamplingKde`]).
+    pub data: &'a [f32],
+    /// Constant the raw backend sum is multiplied by (1.0 for exact scans,
+    /// `|S| / |R|` for the sampling estimator).
+    pub scale: f64,
 }
 
 /// A KDE oracle over some subset of the dataset.
@@ -69,10 +94,45 @@ pub trait Kde: Send + Sync {
     /// [`KernelBackend`](crate::runtime::backend::KernelBackend) override
     /// it with a single backend dispatch — the primitive the level-order
     /// batched tree evaluation and the coordinator's batcher are built on.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use kde_matrix::kde::{Kde, KdeCounters, NaiveKde};
+    /// use kde_matrix::kernel::{dataset::gaussian_mixture, Kernel};
+    /// use kde_matrix::runtime::CpuBackend;
+    /// use kde_matrix::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(7);
+    /// let ds = Arc::new(gaussian_mixture(32, 3, 2, 1.0, 0.5, &mut rng));
+    /// let kde = NaiveKde::new(
+    ///     ds.clone(), Kernel::Laplacian, 0, 32, CpuBackend::new(), KdeCounters::new(),
+    /// );
+    /// // Two query points, packed row-major.
+    /// let mut ys = Vec::new();
+    /// ys.extend_from_slice(ds.point(0));
+    /// ys.extend_from_slice(ds.point(5));
+    /// let sums = kde.query_batch(&ys);
+    /// assert_eq!(sums.len(), 2);
+    /// // Batch rows reproduce single queries exactly (deterministic oracle),
+    /// // and a member point's answer includes its own self-term k(y, y) = 1.
+    /// assert_eq!(sums[0].to_bits(), kde.query(ds.point(0)).to_bits());
+    /// assert!(sums[0] >= 1.0);
+    /// ```
     fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
         let d = self.dim();
         assert!(d > 0 && ys.len() % d == 0, "query batch not a multiple of dim");
         ys.chunks_exact(d).map(|y| self.query(y)).collect()
+    }
+
+    /// The oracle's [`FusedView`], when its `query_batch` is exactly one
+    /// backend `sums` scan times a scale — `None` (the default) for
+    /// estimators with a different evaluation shape (hash probes, tree
+    /// pruning), which the fused pipeline then serves through
+    /// [`query_batch`](Self::query_batch) as before.
+    fn fused_view(&self) -> Option<FusedView<'_>> {
+        None
     }
 
     /// |S|, the subset size this oracle covers.
@@ -85,6 +145,7 @@ pub trait Kde: Send + Sync {
 /// Which estimator the factories instantiate.
 #[derive(Clone, Copy, Debug)]
 pub enum EstimatorKind {
+    /// Exact scan (`eps = 0`): [`NaiveKde`].
     Naive,
     /// Uniform sampling with the §3.1 sample size `O(1/(tau eps^2))`.
     Sampling { eps: f64, tau: f64 },
@@ -98,11 +159,13 @@ pub enum EstimatorKind {
 /// Configuration shared by the sampling primitives.
 #[derive(Clone, Copy, Debug)]
 pub struct KdeConfig {
+    /// Estimator family instantiated at every (non-leaf) tree node.
     pub kind: EstimatorKind,
     /// Ranges of at most this many points get exact (naive) estimators in
     /// the multi-level tree — the bottom levels are where accuracy matters
     /// most for edge sampling and exactness there is cheaper than sampling.
     pub leaf_cutoff: usize,
+    /// Seed for estimator-construction randomness (subsamples, hashes).
     pub seed: u64,
 }
 
@@ -117,6 +180,7 @@ impl Default for KdeConfig {
 }
 
 impl KdeConfig {
+    /// Exact (naive) estimators everywhere — the `eps = 0` test oracle.
     pub fn exact() -> Self {
         KdeConfig { kind: EstimatorKind::Naive, leaf_cutoff: 16, seed: 0x5EED }
     }

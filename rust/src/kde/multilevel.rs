@@ -9,37 +9,53 @@
 //! Cache misses are what the query counter counts; cache hits are free,
 //! matching the paper's accounting where a degree array is "computed once".
 //!
-//! The memo table is sharded across [`CACHE_SHARDS`] mutexes, which makes
+//! The memo table is sharded across `CACHE_SHARDS` mutexes, which makes
 //! the structure safely `Sync` (no `unsafe impl`) and keeps contention low
 //! when the coordinator or the batched pipeline queries it from several
 //! threads. Concurrent misses of the same key may compute twice, but the
 //! first insert wins and every caller observes that single value — the
 //! consistency property Algorithm 5.1 needs survives races.
 //!
-//! [`MultiLevelKde::query_points`] is the batched entry point: it dedups
-//! its index list against the cache and issues one `query_batch` to the
-//! node's oracle for all misses — one backend dispatch per (node, batch)
-//! instead of one per point, which is what makes a `t`-descent sampling
-//! round cost O(log n) backend calls (see `sampling::neighbor`).
+//! [`MultiLevelKde::query_points`] is the per-node batched entry point: it
+//! dedups its index list against the cache and resolves the misses with
+//! fused backend submissions instead of one dispatch per point.
+//! [`MultiLevelKde::query_points_multi`] is the *level-fused* entry the
+//! level-order walkers use: it coalesces the cache misses of **several
+//! nodes'** query groups into shared padded submissions (planned by
+//! [`plan_level_fusion`](crate::coordinator::batcher::plan_level_fusion),
+//! executed by `KernelBackend::sums_ranged` — one dispatch per B=64-row
+//! submission, each node's data packed as one segment with per-row
+//! ranges). That is what makes a whole sparsifier round cost O(log n)
+//! backend executions instead of one per tree node touched (pinned by
+//! `tests/fusion.rs`); oracles without a [`FusedView`] (HBE, partition
+//! tree) fall back to their own `query_batch`, one dispatch per group.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::util::fxhash::FxHashMap;
 
+use crate::coordinator::batcher::{plan_level_fusion, FuseJob};
 use crate::kde::hbe::HbeKde;
-use crate::kde::{EstimatorKind, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
+use crate::kde::{EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
+use crate::runtime::pjrt::{AOT_B, AOT_M};
 use crate::util::rng::Rng;
 
 /// Number of independent mutex-protected cache shards.
 const CACHE_SHARDS: usize = 16;
 
+/// One tree node: a contiguous index range `[lo, hi)` of the dataset.
 #[derive(Clone, Copy, Debug)]
 pub struct Node {
+    /// First dataset index of the node's range.
     pub lo: usize,
+    /// One past the last dataset index of the node's range.
     pub hi: usize,
+    /// Left child id (`None` for single-point leaves).
     pub left: Option<usize>,
+    /// Right child id (`None` for single-point leaves).
     pub right: Option<usize>,
 }
 
@@ -82,13 +98,23 @@ impl ShardedCache {
     }
 }
 
+/// The multi-level KDE structure (Algorithm 4.1); see the module docs.
 pub struct MultiLevelKde {
+    /// The dataset the tree is built over.
     pub ds: Arc<Dataset>,
+    /// Kernel shared by every node oracle.
     pub kernel: Kernel,
     nodes: Vec<Node>,
     oracles: Vec<Box<dyn Kde>>,
     cache: ShardedCache,
     leaf_cutoff: usize,
+    /// The backend fused submissions dispatch through (the same one the
+    /// node oracles were built over).
+    backend: Arc<dyn KernelBackend>,
+    /// Level fusion on/off (on by default; the off switch exists for
+    /// fused-vs-unfused parity tests and dispatch-count A/Bs).
+    fuse: AtomicBool,
+    /// Shared KDE-query accounting (cache misses only).
     pub counters: Arc<KdeCounters>,
 }
 
@@ -115,6 +141,8 @@ impl MultiLevelKde {
             oracles,
             cache: ShardedCache::new(),
             leaf_cutoff: cfg.leaf_cutoff,
+            backend,
+            fuse: AtomicBool::new(true),
             counters,
         }
     }
@@ -201,16 +229,39 @@ impl MultiLevelKde {
         id
     }
 
+    /// Id of the root node (covers the whole dataset).
     pub fn root(&self) -> usize {
         0
     }
 
+    /// The node with id `id`.
     pub fn node(&self, id: usize) -> Node {
         self.nodes[id]
     }
 
+    /// Total number of tree nodes (`2n - 1` for a full binary split).
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Enable/disable level fusion (on by default). Off routes every query
+    /// group through its node oracle's `query_batch` — one backend dispatch
+    /// per (node, level) group, the pre-fusion evaluation shape — kept for
+    /// fused-vs-unfused parity tests and dispatch-count A/Bs. Answers are
+    /// bit-identical either way on `CpuBackend` and single-threaded
+    /// `TiledBackend`; multi-threaded `TiledBackend` matches except for
+    /// miss groups small enough that the *unfused* dispatch would take its
+    /// data-split shape (`b < threads`), which regroups f64 additions —
+    /// the same last-ULP caveat that path already carries unfused. Either
+    /// way the memo cache keeps every caller consistent (first writer
+    /// wins).
+    pub fn set_fusion(&self, enabled: bool) {
+        self.fuse.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Whether level fusion is enabled.
+    pub fn fusion(&self) -> bool {
+        self.fuse.load(Ordering::Relaxed)
     }
 
     /// The config's leaf cutoff: ranges of at most this size carry exact
@@ -233,43 +284,177 @@ impl MultiLevelKde {
     }
 
     /// Batched [`query_point`](Self::query_point): answers for every index
-    /// in `idx` against node `id`, deduping repeats and cache hits so the
-    /// misses cost ONE oracle `query_batch` (one backend dispatch for the
-    /// backend-based estimators). Returned values are the memoized ones —
-    /// later `query_point` calls observe exactly these answers.
+    /// in `idx` against node `id`, deduping repeats and cache hits so only
+    /// the misses hit the backend (in at most `ceil(misses / 64)` fused
+    /// submissions for fusable oracles, one `query_batch` otherwise).
+    /// Returned values are the memoized ones — later `query_point` calls
+    /// observe exactly these answers.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use kde_matrix::kde::{KdeConfig, KdeCounters, MultiLevelKde};
+    /// use kde_matrix::kernel::{dataset::gaussian_mixture, Kernel};
+    /// use kde_matrix::runtime::CpuBackend;
+    /// use kde_matrix::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(11);
+    /// let ds = Arc::new(gaussian_mixture(24, 3, 2, 1.0, 0.5, &mut rng));
+    /// let tree = MultiLevelKde::build(
+    ///     ds, Kernel::Laplacian, &KdeConfig::exact(), CpuBackend::new(), KdeCounters::new(),
+    /// );
+    /// // Batched node answers dedup repeats and memoize: later single-point
+    /// // queries observe exactly the same values, bit for bit.
+    /// let vals = tree.query_points(tree.root(), &[3, 7, 3]);
+    /// assert_eq!(vals[0].to_bits(), vals[2].to_bits());
+    /// assert_eq!(vals[1].to_bits(), tree.query_point(tree.root(), 7).to_bits());
+    /// ```
     pub fn query_points(&self, id: usize, idx: &[usize]) -> Vec<f64> {
-        // One shard lookup per DISTINCT index; answers resolve through a
-        // local map so the final pass is lock-free (and immune to a racing
-        // clear_cache between fill and readback).
-        let mut resolved: FxHashMap<u32, Option<f64>> = FxHashMap::default();
-        let mut missing: Vec<usize> = Vec::new();
-        for &i in idx {
-            let k = i as u32;
-            resolved.entry(k).or_insert_with(|| {
-                let cached = self.cache.get((id as u32, k));
-                if cached.is_none() {
-                    missing.push(i);
+        self.query_points_multi(&[(id, idx)]).pop().expect("one group in, one group out")
+    }
+
+    /// Level-fused [`query_points`](Self::query_points) over several
+    /// `(node, indices)` groups at once — the entry point the level-order
+    /// walkers (`NeighborSampler::sample_batch` / `neighbor_prob_batch`)
+    /// use. Per group, repeats and cache hits are deduped exactly like
+    /// `query_points`; the remaining cache misses of every group whose
+    /// oracle exposes a [`FusedView`] are coalesced into shared padded
+    /// submissions (B = 64 rows, each node's data packed as one segment,
+    /// per-row ranges) and executed through one
+    /// `KernelBackend::sums_ranged` dispatch each. Groups without a fused
+    /// view — and every group while [`set_fusion`](Self::set_fusion) is
+    /// off — go through their oracle's `query_batch` in input order.
+    ///
+    /// Answers equal the unfused path's bit for bit (same per-row
+    /// accumulation order, same scale application) on every backend whose
+    /// unfused dispatch also walks rows in order — see
+    /// [`set_fusion`](Self::set_fusion) for the one multi-threaded-tiled
+    /// caveat — and are memoized identically either way, so consistency
+    /// across the sampling descent and later probability recomputation
+    /// survives fusion.
+    pub fn query_points_multi(&self, groups: &[(usize, &[usize])]) -> Vec<Vec<f64>> {
+        // Pass 1: per-group dedup + cache probe. One shard lookup per
+        // DISTINCT index; answers resolve through local maps so the final
+        // readback is lock-free (and immune to a racing clear_cache
+        // between fill and readback).
+        let mut resolved: Vec<FxHashMap<u32, Option<f64>>> = Vec::with_capacity(groups.len());
+        let mut missing: Vec<Vec<usize>> = Vec::with_capacity(groups.len());
+        for &(id, idx) in groups {
+            let mut res: FxHashMap<u32, Option<f64>> = FxHashMap::default();
+            let mut miss: Vec<usize> = Vec::new();
+            for &i in idx {
+                let k = i as u32;
+                res.entry(k).or_insert_with(|| {
+                    let cached = self.cache.get((id as u32, k));
+                    if cached.is_none() {
+                        miss.push(i);
+                    }
+                    cached
+                });
+            }
+            resolved.push(res);
+            missing.push(miss);
+        }
+        // Pass 2: resolve misses. Groups with a FusedView are deferred to
+        // the shared fused plan; the rest run their oracle's native batch
+        // in input order (HBE-style stateful oracles keep a reproducible
+        // first-query order).
+        let d = self.ds.d;
+        let fuse = self.fuse.load(Ordering::Relaxed);
+        let mut fused: Vec<(usize, FusedView<'_>)> = Vec::new();
+        for (gi, &(id, _)) in groups.iter().enumerate() {
+            if missing[gi].is_empty() {
+                continue;
+            }
+            let view = if fuse { self.oracles[id].fused_view() } else { None };
+            match view {
+                Some(v) => fused.push((gi, v)),
+                None => {
+                    let miss = &missing[gi];
+                    let mut ys = Vec::with_capacity(miss.len() * d);
+                    for &i in miss {
+                        ys.extend_from_slice(self.ds.point(i));
+                    }
+                    // The oracle records its own query count.
+                    let vals = self.oracles[id].query_batch(&ys);
+                    self.commit(id, miss, &vals, &mut resolved[gi]);
                 }
-                cached
-            });
-        }
-        if !missing.is_empty() {
-            let d = self.ds.d;
-            let mut ys = Vec::with_capacity(missing.len() * d);
-            for &i in &missing {
-                ys.extend_from_slice(self.ds.point(i));
-            }
-            let vals = self.oracles[id].query_batch(&ys);
-            for (&i, &v) in missing.iter().zip(&vals) {
-                // First writer wins under concurrent misses; report what
-                // actually ended up cached so callers stay consistent.
-                let stored = self.cache.insert_or_get((id as u32, i as u32), v);
-                resolved.insert(i as u32, Some(stored));
             }
         }
-        idx.iter()
-            .map(|&i| resolved[&(i as u32)].expect("every index resolved above"))
+        if !fused.is_empty() {
+            let jobs: Vec<FuseJob> = fused
+                .iter()
+                .map(|&(gi, v)| FuseJob { rows: missing[gi].len(), seg_rows: v.data.len() / d })
+                .collect();
+            // Fused misses bypass the oracles, so record their query count
+            // here (exactly what the oracles' query_batch would record).
+            self.counters.record_queries(jobs.iter().map(|j| j.rows as u64).sum());
+            for sub in plan_level_fusion(&jobs, AOT_B, AOT_M) {
+                // Pack each segment once, remembering its row range. A
+                // single-segment submission (every row from one node —
+                // e.g. each chunk of the root degree scan) borrows the
+                // view's buffer directly instead of copying it.
+                let mut seg_range: FxHashMap<usize, (usize, usize)> = FxHashMap::default();
+                let mut packed: Vec<f32> = Vec::new();
+                let data: &[f32] = if sub.segments.len() == 1 {
+                    let fj = sub.segments[0];
+                    let (_, view) = fused[fj];
+                    seg_range.insert(fj, (0, view.data.len() / d));
+                    view.data
+                } else {
+                    for &fj in &sub.segments {
+                        let (_, view) = fused[fj];
+                        let lo = packed.len() / d;
+                        packed.extend_from_slice(view.data);
+                        seg_range.insert(fj, (lo, packed.len() / d));
+                    }
+                    &packed
+                };
+                let mut queries: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
+                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(sub.rows.len());
+                for &(fj, r) in &sub.rows {
+                    let (gi, _) = fused[fj];
+                    queries.extend_from_slice(self.ds.point(missing[gi][r]));
+                    ranges.push(seg_range[&fj]);
+                }
+                let raw = self.backend.sums_ranged(self.kernel, &queries, data, d, &ranges);
+                for (&(fj, r), &v) in sub.rows.iter().zip(&raw) {
+                    let (gi, view) = fused[fj];
+                    let id = groups[gi].0;
+                    let i = missing[gi][r];
+                    // First writer wins under concurrent misses; report
+                    // what actually ended up cached (consistency).
+                    let stored = self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
+                    resolved[gi].insert(i as u32, Some(stored));
+                }
+            }
+        }
+        // Pass 3: readback in input order.
+        groups
+            .iter()
+            .enumerate()
+            .map(|(gi, &(_, idx))| {
+                idx.iter()
+                    .map(|&i| resolved[gi][&(i as u32)].expect("every index resolved above"))
+                    .collect()
+            })
             .collect()
+    }
+
+    /// Memoize `vals` for `miss` against node `id` and mirror the stored
+    /// (first-writer) values into the local resolution map.
+    fn commit(
+        &self,
+        id: usize,
+        miss: &[usize],
+        vals: &[f64],
+        resolved: &mut FxHashMap<u32, Option<f64>>,
+    ) {
+        for (&i, &v) in miss.iter().zip(vals) {
+            let stored = self.cache.insert_or_get((id as u32, i as u32), v);
+            resolved.insert(i as u32, Some(stored));
+        }
     }
 
     /// Un-memoized query for an arbitrary vector (serving path).
@@ -388,6 +573,120 @@ mod tests {
         assert_eq!(got[0].to_bits(), got[4].to_bits());
         for (pos, &i) in idx.iter().enumerate() {
             assert_eq!(got[pos].to_bits(), tree.query_point(1, i).to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_and_unfused_node_answers_are_bit_identical() {
+        // Twin trees (identical build), one with fusion disabled: every
+        // node's batched answers must agree bit for bit.
+        let (_, fused) = build_exact(40, 75);
+        let (_, plain) = build_exact(40, 75);
+        assert!(fused.fusion(), "fusion defaults on");
+        plain.set_fusion(false);
+        let idx: Vec<usize> = (0..40).chain([3, 9, 9]).collect();
+        for id in 0..fused.num_nodes() {
+            let a = fused.query_points(id, &idx);
+            let b = plain.query_points(id, &idx);
+            for (pos, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {id} pos {pos}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn query_points_multi_fuses_a_level_into_one_submission() {
+        // Two sibling nodes' groups, both small: the planner packs them
+        // into ONE fused backend dispatch; answers match per-node queries.
+        let mut rng = Rng::new(77);
+        let ds = Arc::new(gaussian_mixture(64, 4, 2, 1.0, 0.5, &mut rng));
+        let be = CpuBackend::new();
+        let tree = MultiLevelKde::build(
+            ds,
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            be.clone(),
+            KdeCounters::new(),
+        );
+        let (l, r) = {
+            let root = tree.node(tree.root());
+            (root.left.unwrap(), root.right.unwrap())
+        };
+        let idx: Vec<usize> = (0..20).collect();
+        let before = be.calls();
+        let answers = tree.query_points_multi(&[(l, &idx), (r, &idx)]);
+        assert_eq!(be.calls() - before, 1, "two sibling groups fuse into one dispatch");
+        // Parity against the single-point memoized path.
+        for (gi, id) in [l, r].into_iter().enumerate() {
+            for (pos, &i) in idx.iter().enumerate() {
+                assert_eq!(answers[gi][pos].to_bits(), tree.query_point(id, i).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn single_group_fusion_does_not_regress_dispatch_count() {
+        // A <= 64-miss single-node group costs exactly one backend call
+        // (what the unfused query_batch path paid), and an all-warm group
+        // or an empty index list costs zero.
+        let mut rng = Rng::new(79);
+        let ds = Arc::new(gaussian_mixture(96, 4, 2, 1.0, 0.5, &mut rng));
+        let be = CpuBackend::new();
+        let tree = MultiLevelKde::build(
+            ds,
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            be.clone(),
+            KdeCounters::new(),
+        );
+        let idx: Vec<usize> = (0..50).collect();
+        let before = be.calls();
+        tree.query_points(1, &idx);
+        assert_eq!(be.calls() - before, 1, "one fused submission for <= 64 misses");
+        let before = be.calls();
+        let warm = tree.query_points(1, &idx);
+        assert_eq!(be.calls() - before, 0, "warm cache dispatches nothing");
+        assert_eq!(warm.len(), idx.len());
+        let before = be.calls();
+        assert!(tree.query_points(1, &[]).is_empty());
+        assert!(tree.query_points_multi(&[]).is_empty());
+        let empty: [usize; 0] = [];
+        let multi = tree.query_points_multi(&[(1, &empty[..]), (2, &empty[..])]);
+        assert_eq!(multi, vec![Vec::<f64>::new(), Vec::<f64>::new()]);
+        assert_eq!(be.calls() - before, 0, "empty miss sets dispatch nothing");
+    }
+
+    #[test]
+    fn sampling_tree_fusion_is_bit_identical_too() {
+        // SamplingKde nodes fuse through their gathered subsample buffers
+        // with the |S|/|R| scale; fused and unfused must still agree
+        // bit for bit (same scale multiplication on both paths).
+        let cfg = KdeConfig {
+            kind: crate::kde::EstimatorKind::Sampling { eps: 0.4, tau: 0.15 },
+            leaf_cutoff: 8,
+            seed: 0x91,
+        };
+        let build = |seed| {
+            let mut rng = Rng::new(seed);
+            let ds = Arc::new(gaussian_mixture(72, 4, 2, 1.0, 0.5, &mut rng));
+            MultiLevelKde::build(
+                ds,
+                Kernel::Gaussian,
+                &cfg,
+                CpuBackend::new(),
+                KdeCounters::new(),
+            )
+        };
+        let fused = build(81);
+        let plain = build(81);
+        plain.set_fusion(false);
+        let idx: Vec<usize> = (0..72).step_by(3).collect();
+        for id in 0..fused.num_nodes() {
+            let a = fused.query_points(id, &idx);
+            let b = plain.query_points(id, &idx);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {id}");
+            }
         }
     }
 

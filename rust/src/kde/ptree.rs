@@ -28,6 +28,7 @@ struct PNode {
     right: Option<usize>,
 }
 
+/// Deterministic space-partition-tree estimator; see the module docs.
 pub struct PartitionTreeKde {
     ds: Arc<Dataset>,
     kernel: Kernel,
@@ -43,6 +44,8 @@ pub struct PartitionTreeKde {
 }
 
 impl PartitionTreeKde {
+    /// KD-tree with bounding boxes over `ds[lo..hi)`, per-query relative
+    /// accuracy target `eps` (0 = exact).
     pub fn new(
         ds: Arc<Dataset>,
         kernel: Kernel,
@@ -174,10 +177,12 @@ impl PartitionTreeKde {
         }
     }
 
+    /// Exact leaf kernel evaluations spent so far.
     pub fn kernel_evals(&self) -> u64 {
         self.evals.load(std::sync::atomic::Ordering::Relaxed)
     }
 
+    /// Ranges of at most this size are evaluated exactly.
     pub fn leaf_size(&self) -> usize {
         self.leaf_size
     }

@@ -21,6 +21,62 @@ pub trait KernelBackend: Send + Sync {
     /// `out[q*m + j] = k(queries[q], data[j])` — the dense block primitive.
     fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32>;
 
+    /// Fused multi-range KDE sums — the level-fusion primitive:
+    /// `out[q] = sum_{j in ranges[q].0 .. ranges[q].1} k(queries[q], data[j])`,
+    /// i.e. each query row attends only to its own contiguous row range of
+    /// the shared `data` buffer. This is what lets the batched tree
+    /// pipeline pack *several nodes'* query groups (each node's data
+    /// packed as one segment of `data`) into a single backend dispatch;
+    /// see `coordinator::batcher::plan_level_fusion` and
+    /// `docs/ARCHITECTURE.md`.
+    ///
+    /// Contract:
+    /// * `ranges.len() == queries.len() / d`; each `(lo, hi)` is in row
+    ///   units with `lo <= hi <= data.len() / d`; `lo == hi` yields `0.0`.
+    /// * Row `q`'s sum accumulates `data[lo*d..hi*d]` in index order with
+    ///   a dedicated f64 accumulator — the same order a `sums` call uses
+    ///   for that row on its per-row paths — so fused and unfused tree
+    ///   evaluation memoize **bit-identical** values wherever the unfused
+    ///   dispatch also walks rows in order ([`CpuBackend`] always;
+    ///   `TiledBackend` except its data-split shape, `b < threads`, whose
+    ///   unfused folding is itself only reproducible up to f64 rounding —
+    ///   see `runtime::tiled`'s determinism note).
+    /// * A backend that implements this natively counts the whole call as
+    ///   ONE dispatch in [`calls`](Self::calls) (PJRT additionally counts
+    ///   its padded grid executions). The provided implementation falls
+    ///   back to one [`sums`](Self::sums) call per run of consecutive rows
+    ///   sharing a range — correct for any backend, but without the
+    ///   single-dispatch accounting.
+    fn sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f64> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        assert_eq!(ranges.len(), b, "one range per query row");
+        let mut out = vec![0.0f64; b];
+        let mut q0 = 0usize;
+        while q0 < b {
+            let (lo, hi) = ranges[q0];
+            assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+            let mut q1 = q0 + 1;
+            while q1 < b && ranges[q1] == (lo, hi) {
+                q1 += 1;
+            }
+            if hi > lo {
+                let part = self.sums(kernel, &queries[q0 * d..q1 * d], &data[lo * d..hi * d], d);
+                out[q0..q1].copy_from_slice(&part);
+            }
+            q0 = q1;
+        }
+        out
+    }
+
     /// Logical kernel evaluations performed so far (b*m per call).
     fn kernel_evals(&self) -> u64;
 
@@ -54,6 +110,7 @@ pub struct CpuBackend {
 }
 
 impl CpuBackend {
+    /// Fresh backend with zeroed counters.
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }
@@ -96,6 +153,38 @@ impl KernelBackend for CpuBackend {
                 row[j] = kernel.eval(q, x);
             }
         }
+        out
+    }
+
+    fn sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f64> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        assert_eq!(ranges.len(), b, "one range per query row");
+        // One dispatch for the whole fused submission.
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut pairs = 0u64;
+        let mut out = vec![0.0f64; b];
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let (lo, hi) = ranges[qi];
+            assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+            pairs += (hi - lo) as u64;
+            // Same per-row accumulation order as `sums` over the sub-slice,
+            // so fused answers are bit-identical to the unfused path.
+            let mut acc = 0.0f64;
+            for x in data[lo * d..hi * d].chunks_exact(d) {
+                acc += kernel.eval(q, x) as f64;
+            }
+            out[qi] = acc;
+        }
+        self.evals.fetch_add(pairs, Ordering::Relaxed);
         out
     }
 
@@ -153,5 +242,90 @@ mod tests {
         be.block(Kernel::Gaussian, &q, &x, 2);
         assert_eq!(be.kernel_evals(), 30);
         assert_eq!(be.calls(), 2);
+    }
+
+    #[test]
+    fn sums_ranged_matches_per_range_sums_bitwise() {
+        forall(16, |rng, _| {
+            let d = 1 + rng.below(8);
+            let m = 2 + rng.below(48);
+            let b = 1 + rng.below(6);
+            let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+            let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let ranges: Vec<(usize, usize)> = (0..b)
+                .map(|_| {
+                    let lo = rng.below(m);
+                    let hi = lo + rng.below(m - lo + 1);
+                    (lo, hi)
+                })
+                .collect();
+            let be = CpuBackend::new();
+            for k in ALL_KERNELS {
+                let fused = be.sums_ranged(k, &queries, &data, d, &ranges);
+                for (q, &(lo, hi)) in ranges.iter().enumerate() {
+                    let want = if hi > lo {
+                        be.sums(k, &queries[q * d..(q + 1) * d], &data[lo * d..hi * d], d)[0]
+                    } else {
+                        0.0
+                    };
+                    assert_eq!(
+                        fused[q].to_bits(),
+                        want.to_bits(),
+                        "{:?} row {q} range ({lo},{hi}): fused {} vs sums {want}",
+                        k,
+                        fused[q]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn sums_ranged_counts_one_call_and_ranged_pairs() {
+        let be = CpuBackend::new();
+        let q = vec![0.0f32; 3 * 2]; // b=3, d=2
+        let x = vec![0.5f32; 5 * 2]; // m=5
+        let ranges = [(0usize, 5usize), (1, 3), (4, 4)];
+        be.sums_ranged(Kernel::Gaussian, &q, &x, 2, &ranges);
+        assert_eq!(be.calls(), 1, "a fused submission is one dispatch");
+        assert_eq!(be.kernel_evals(), 5 + 2, "empty range costs nothing");
+    }
+
+    #[test]
+    fn default_sums_ranged_impl_is_correct() {
+        // A minimal backend that only provides the required methods, to
+        // exercise the trait's provided `sums_ranged` (the path third-party
+        // backends get for free).
+        struct Minimal(CpuBackend);
+        impl KernelBackend for Minimal {
+            fn sums(&self, k: Kernel, q: &[f32], x: &[f32], d: usize) -> Vec<f64> {
+                self.0.sums(k, q, x, d)
+            }
+            fn block(&self, k: Kernel, q: &[f32], x: &[f32], d: usize) -> Vec<f32> {
+                self.0.block(k, q, x, d)
+            }
+            fn kernel_evals(&self) -> u64 {
+                self.0.kernel_evals()
+            }
+            fn name(&self) -> &'static str {
+                "minimal"
+            }
+        }
+        let mut rng = crate::util::rng::Rng::new(271);
+        let d = 3;
+        let (b, m) = (5usize, 20usize);
+        let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        // Consecutive equal ranges, a distinct range, and an empty range.
+        let ranges = [(0usize, 8usize), (0, 8), (3, 20), (6, 6), (2, 9)];
+        let be = Minimal(CpuBackend::default());
+        let native = CpuBackend::new();
+        for k in ALL_KERNELS {
+            let got = be.sums_ranged(k, &queries, &data, d, &ranges);
+            let want = native.sums_ranged(k, &queries, &data, d, &ranges);
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{:?}", k);
+            }
+        }
     }
 }

@@ -3,6 +3,13 @@
 //! microkernel layer, and the PJRT engine that loads the AOT HLO-text
 //! artifacts produced by `python/compile/aot.py` (`make artifacts`;
 //! requires the `xla` feature).
+//!
+//! Every backend implements the same two bulk primitives (`sums`,
+//! `block`) plus the fused multi-range entry (`sums_ranged`) behind the
+//! batched tree pipeline's level fusion, and reports a uniform dispatch
+//! count through `calls()` — see `docs/ARCHITECTURE.md` for the
+//! dispatch-counting contract shared by all backends.
+#![warn(missing_docs)]
 
 pub mod backend;
 pub mod pjrt;

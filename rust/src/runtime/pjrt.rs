@@ -12,7 +12,16 @@
 //!   coordinate 1e6 ("far points") whose kernel mass underflows to 0.0 in
 //!   f32 (verified in python/tests/test_kernel.py and here);
 //! * feature dimension must be <= D; columns are zero-padded (distances
-//!   are unaffected).
+//!   are unaffected);
+//! * the fused level entry (`sums_ranged`) executes the
+//!   `kde_sums_ranged_*` artifacts, which take per-row `[lo, hi)` data
+//!   ranges as i32 operands and mask each query row's sum to its own
+//!   contiguous slice of the data input — that is what lets one B=64
+//!   execution serve query groups of *several* tree nodes at once, with
+//!   each node's data packed as one segment of the M-row input. Grid
+//!   cells (query chunk x data tile) where every row's clamped range is
+//!   empty are skipped entirely, so a well-packed level costs O(1)
+//!   executions instead of one per node.
 //!
 //! The engine itself is gated behind the `xla` cargo feature because the
 //! *real* `xla` crate only exists in the internal offline registry.
@@ -28,9 +37,11 @@
 //! internal builds swap the path dependency for the registry crate to get
 //! the real runtime.
 
-/// AOT interface shapes — keep in sync with python/compile/model.py.
+/// AOT query-batch rows (B) — keep in sync with python/compile/model.py.
 pub const AOT_B: usize = 64;
+/// AOT data-tile rows (M) — keep in sync with python/compile/model.py.
 pub const AOT_M: usize = 1024;
+/// AOT feature columns (D) — keep in sync with python/compile/model.py.
 pub const AOT_D: usize = 64;
 /// Far-point coordinate used for data padding.
 pub const FAR: f32 = 1.0e6;
@@ -76,6 +87,8 @@ mod engine {
     enum Entry {
         Sums(Kernel),
         Block(Kernel),
+        /// Per-row range-masked sums: the level-fusion artifact.
+        SumsRanged(Kernel),
     }
 
     impl Entry {
@@ -83,6 +96,7 @@ mod engine {
             match self {
                 Entry::Sums(k) => format!("kde_sums_{}", k.name()),
                 Entry::Block(k) => format!("kernel_block_{}", k.name()),
+                Entry::SumsRanged(k) => format!("kde_sums_ranged_{}", k.name()),
             }
         }
     }
@@ -92,6 +106,7 @@ mod engine {
         client: xla::PjRtClient,
         artifacts_dir: std::path::PathBuf,
         exes: Mutex<HashMap<Entry, xla::PjRtLoadedExecutable>>,
+        /// Artifact executions so far (one per padded grid cell run).
         pub executions: AtomicU64,
     }
 
@@ -120,14 +135,19 @@ mod engine {
             })
         }
 
+        /// Platform name of the underlying PJRT client.
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
-        fn run_entry(&self, entry: Entry, queries: &[f32], data: &[f32]) -> Result<Vec<f32>> {
-            debug_assert_eq!(queries.len(), AOT_B * AOT_D);
-            debug_assert_eq!(data.len(), AOT_M * AOT_D);
-            let mut exes = self.exes.lock().unwrap();
+        /// Parse + compile `entry`'s artifact on first use; returns the
+        /// cached executable afterwards. Callers hold the `exes` lock for
+        /// the whole compile-and-execute, serializing executions.
+        fn ensure_compiled<'a>(
+            &self,
+            exes: &'a mut HashMap<Entry, xla::PjRtLoadedExecutable>,
+            entry: Entry,
+        ) -> Result<&'a xla::PjRtLoadedExecutable> {
             if !exes.contains_key(&entry) {
                 let path = self
                     .artifacts_dir
@@ -143,12 +163,49 @@ mod engine {
                     .with_context(|| format!("compiling {}", path.display()))?;
                 exes.insert(entry, exe);
             }
-            let exe = exes.get(&entry).unwrap();
+            Ok(exes.get(&entry).unwrap())
+        }
+
+        fn run_entry(&self, entry: Entry, queries: &[f32], data: &[f32]) -> Result<Vec<f32>> {
+            debug_assert_eq!(queries.len(), AOT_B * AOT_D);
+            debug_assert_eq!(data.len(), AOT_M * AOT_D);
+            let mut exes = self.exes.lock().unwrap();
+            let exe = self.ensure_compiled(&mut exes, entry)?;
             let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
             let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
             let result = exe.execute::<xla::Literal>(&[q, x])?[0][0].to_literal_sync()?;
             self.executions.fetch_add(1, Ordering::Relaxed);
             // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+
+        /// Execute the range-masked sums artifact on one padded (B, M)
+        /// tile: `out[q] = sum_{j in [lo[q], hi[q])} k(queries[q], data[j])`
+        /// with `lo`/`hi` in tile-local row units. Padding rows get the
+        /// empty range `[0, 0)` and FAR data rows sit outside every live
+        /// range, so neither perturbs the sums.
+        fn run_entry_ranged(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            lo: &[i32],
+            hi: &[i32],
+        ) -> Result<Vec<f32>> {
+            debug_assert_eq!(queries.len(), AOT_B * AOT_D);
+            debug_assert_eq!(data.len(), AOT_M * AOT_D);
+            debug_assert_eq!(lo.len(), AOT_B);
+            debug_assert_eq!(hi.len(), AOT_B);
+            let mut exes = self.exes.lock().unwrap();
+            let exe = self.ensure_compiled(&mut exes, Entry::SumsRanged(kernel))?;
+            let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
+            let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
+            let lo_l = xla::Literal::vec1(lo);
+            let hi_l = xla::Literal::vec1(hi);
+            let result =
+                exe.execute::<xla::Literal>(&[q, x, lo_l, hi_l])?[0][0].to_literal_sync()?;
+            self.executions.fetch_add(1, Ordering::Relaxed);
             let out = result.to_tuple1()?;
             Ok(out.to_vec::<f32>()?)
         }
@@ -163,6 +220,8 @@ mod engine {
     }
 
     impl PjrtBackend {
+        /// Engine + backend over an artifacts directory; fails without a
+        /// built `manifest.json` (callers degrade to the CPU backends).
         pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::Arc<Self>> {
             Ok(std::sync::Arc::new(PjrtBackend {
                 engine: PjrtEngine::new(artifacts_dir)?,
@@ -171,6 +230,8 @@ mod engine {
             }))
         }
 
+        /// Artifact executions so far (one per padded (B, M) grid cell —
+        /// the cost metric level fusion minimizes).
         pub fn executions(&self) -> u64 {
             self.engine.executions.load(Ordering::Relaxed)
         }
@@ -232,6 +293,65 @@ mod engine {
             out
         }
 
+        fn sums_ranged(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            d: usize,
+            ranges: &[(usize, usize)],
+        ) -> Vec<f64> {
+            assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
+            assert!(queries.len() % d == 0 && data.len() % d == 0);
+            let b = queries.len() / d;
+            let m = data.len() / d;
+            assert_eq!(ranges.len(), b, "one range per query row");
+            let mut pairs = 0u64;
+            for &(lo, hi) in ranges {
+                assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+                pairs += (hi - lo) as u64;
+            }
+            self.evals.fetch_add(pairs, Ordering::Relaxed);
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = vec![0.0f64; b];
+            for (qc, qchunk) in queries.chunks(AOT_B * d).enumerate() {
+                let bq = qchunk.len() / d;
+                let qpad = pad(qchunk, bq, d, AOT_B, 0.0);
+                for (xc, xchunk) in data.chunks(AOT_M * d).enumerate() {
+                    let mx = xchunk.len() / d;
+                    let base = xc * AOT_M;
+                    // Clamp every row's range to this data tile; skip the
+                    // execution entirely when no row overlaps it — that is
+                    // the block-diagonal structure a packed level has.
+                    let mut lo_v = [0i32; AOT_B];
+                    let mut hi_v = [0i32; AOT_B];
+                    let mut live = false;
+                    for q in 0..bq {
+                        let (lo, hi) = ranges[qc * AOT_B + q];
+                        let lo_c = lo.saturating_sub(base).min(mx);
+                        let hi_c = hi.saturating_sub(base).min(mx);
+                        if hi_c > lo_c {
+                            lo_v[q] = lo_c as i32;
+                            hi_v[q] = hi_c as i32;
+                            live = true;
+                        }
+                    }
+                    if !live {
+                        continue;
+                    }
+                    let xpad = pad(xchunk, mx, d, AOT_M, FAR);
+                    let sums = self
+                        .engine
+                        .run_entry_ranged(kernel, &qpad, &xpad, &lo_v, &hi_v)
+                        .expect("PJRT execution failed");
+                    for q in 0..bq {
+                        out[qc * AOT_B + q] += sums[q] as f64;
+                    }
+                }
+            }
+            out
+        }
+
         fn kernel_evals(&self) -> u64 {
             self.evals.load(Ordering::Relaxed)
         }
@@ -285,10 +405,12 @@ mod stub {
     }
 
     impl PjrtEngine {
+        /// Always fails: this build carries no PJRT runtime.
         pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
             Err(unavailable(artifacts_dir.into()))
         }
 
+        /// Placeholder platform name (unreachable in practice).
         pub fn platform(&self) -> String {
             "unavailable".to_string()
         }
@@ -300,10 +422,12 @@ mod stub {
     }
 
     impl PjrtBackend {
+        /// Always fails: this build carries no PJRT runtime.
         pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<std::sync::Arc<Self>> {
             Err(unavailable(artifacts_dir.into()))
         }
 
+        /// Artifact execution count (always 0 for the stub).
         pub fn executions(&self) -> u64 {
             0
         }
@@ -315,6 +439,17 @@ mod stub {
         }
 
         fn block(&self, _kernel: Kernel, _queries: &[f32], _data: &[f32], _d: usize) -> Vec<f32> {
+            unreachable!("PjrtBackend cannot be constructed without the `xla` feature")
+        }
+
+        fn sums_ranged(
+            &self,
+            _kernel: Kernel,
+            _queries: &[f32],
+            _data: &[f32],
+            _d: usize,
+            _ranges: &[(usize, usize)],
+        ) -> Vec<f64> {
             unreachable!("PjrtBackend cannot be constructed without the `xla` feature")
         }
 

@@ -60,6 +60,7 @@ pub enum Isa {
 }
 
 impl Isa {
+    /// Lower-case name used in bench JSON and reports.
     pub fn name(self) -> &'static str {
         match self {
             Isa::Avx2 => "avx2",
@@ -74,12 +75,16 @@ impl Isa {
 pub enum SimdMode {
     /// Best ISA the host supports (the default).
     Auto,
+    /// Force the AVX2+FMA vtable (errors on non-supporting hosts).
     Avx2,
+    /// Force the NEON vtable (errors on non-aarch64 builds).
     Neon,
+    /// Force the portable scalar vtable (the A/B baseline).
     Scalar,
 }
 
 impl SimdMode {
+    /// Parse a `--simd` argument; `None` for unknown names.
     pub fn from_name(s: &str) -> Option<SimdMode> {
         Some(match s {
             "auto" => SimdMode::Auto,
@@ -90,6 +95,7 @@ impl SimdMode {
         })
     }
 
+    /// The name [`from_name`](Self::from_name) round-trips.
     pub fn name(self) -> &'static str {
         match self {
             SimdMode::Auto => "auto",
@@ -100,6 +106,7 @@ impl SimdMode {
     }
 }
 
+/// Every dispatch mode, for CLI help and round-trip tests.
 pub const ALL_MODES: [SimdMode; 4] =
     [SimdMode::Auto, SimdMode::Avx2, SimdMode::Neon, SimdMode::Scalar];
 
@@ -107,6 +114,7 @@ pub const ALL_MODES: [SimdMode; 4] =
 /// at backend construction; the tile loops call through it with zero
 /// per-tile branching.
 pub struct MicroKernel {
+    /// Instruction set these function pointers were built for.
     pub isa: Isa,
     /// `sum_i x[i] * y[i]`.
     pub dot: fn(&[f32], &[f32]) -> f32,

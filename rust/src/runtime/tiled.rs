@@ -10,7 +10,7 @@
 //!    inner loop is a pure dot product (one fma per element instead of
 //!    sub + fma). The Laplacian kernel keeps a dedicated L1 tile loop —
 //!    there is no norm decomposition for L1 distances.
-//! 2. **Cache tiling** — data is processed in tiles of [`DTILE`] rows so a
+//! 2. **Cache tiling** — data is processed in tiles of `DTILE` rows so a
 //!    tile stays resident in L1/L2 across all query rows of a chunk, and
 //!    per-tile distances land in a stack buffer that the kernel map then
 //!    consumes. Batching the kernel map over the tile keeps the
@@ -97,6 +97,7 @@ impl TiledBackend {
             .unwrap_or(1)
     }
 
+    /// Configured worker count.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -323,6 +324,89 @@ impl KernelBackend for TiledBackend {
         out
     }
 
+    fn sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f64> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        assert_eq!(ranges.len(), b, "one range per query row");
+        for &(lo, hi) in ranges {
+            assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+        }
+        // One dispatch for the whole fused submission.
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut out = vec![0.0f64; b];
+        if b == 0 {
+            return out;
+        }
+        let l2 = kernel != Kernel::Laplacian;
+        let mk = self.mk;
+        // Norms over the whole packed buffer, computed once and sliced per
+        // row, so the L2 norm-trick cost matches the unfused path even when
+        // many rows share a segment.
+        let qn = if l2 { row_sq_norms(mk, queries, d) } else { Vec::new() };
+        let xn = if l2 { row_sq_norms(mk, data, d) } else { Vec::new() };
+        let qn_s: &[f32] = &qn;
+        let xn_s: &[f32] = &xn;
+        let evals = &self.evals;
+        // Runs of consecutive rows sharing a range (a fused submission
+        // keeps each node's rows adjacent) evaluate as ONE multi-row
+        // sums_rows call, so a data tile stays cache-resident across the
+        // whole run exactly like an unfused dispatch. Per row the walk is
+        // the row's own range in DTILE chunks from its start — identical
+        // for any worker count, and bit-identical to the unfused dispatch
+        // except when that dispatch would take the data-split shape
+        // (b < threads), whose partial-sum folding regroups the same
+        // additions (module determinism note).
+        let run_rows = |row0: usize, out_chunk: &mut [f64]| {
+            let mut pairs = 0u64;
+            let mut k = 0usize;
+            while k < out_chunk.len() {
+                let (lo, hi) = ranges[row0 + k];
+                let mut k1 = k + 1;
+                while k1 < out_chunk.len() && ranges[row0 + k1] == (lo, hi) {
+                    k1 += 1;
+                }
+                if hi > lo {
+                    pairs += ((k1 - k) * (hi - lo)) as u64;
+                    let q = &queries[(row0 + k) * d..(row0 + k1) * d];
+                    let qn_run = if l2 { &qn_s[row0 + k..row0 + k1] } else { qn_s };
+                    let xn_run = if l2 { &xn_s[lo..hi] } else { xn_s };
+                    sums_rows(
+                        mk,
+                        kernel,
+                        q,
+                        &data[lo * d..hi * d],
+                        d,
+                        qn_run,
+                        xn_run,
+                        &mut out_chunk[k..k1],
+                    );
+                }
+                k = k1;
+            }
+            evals.fetch_add(pairs, Ordering::Relaxed);
+        };
+        if self.threads == 1 || b == 1 {
+            run_rows(0, &mut out);
+        } else {
+            let chunk_rows = (b + self.threads - 1) / self.threads;
+            std::thread::scope(|s| {
+                for (ci, out_chunk) in out.chunks_mut(chunk_rows).enumerate() {
+                    let run = &run_rows;
+                    s.spawn(move || run(ci * chunk_rows, out_chunk));
+                }
+            });
+        }
+        out
+    }
+
     fn kernel_evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
     }
@@ -447,6 +531,53 @@ mod tests {
                 assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{:?}: {x} vs {y}", k);
             }
         }
+    }
+
+    #[test]
+    fn sums_ranged_matches_unfused_subslice_bitwise() {
+        // Each fused row must reproduce the unfused per-node dispatch over
+        // its sub-slice bit-for-bit, and the result must be independent of
+        // the worker count (rows are worker-disjoint).
+        let mut rng = Rng::new(819);
+        let (b, m, d) = (7usize, 300usize, 11usize);
+        let queries = rand_buf(&mut rng, b * d, 1.0);
+        let data = rand_buf(&mut rng, m * d, 1.0);
+        // Ranges straddling DTILE boundaries, plus empty and full ranges;
+        // rows 1-2 share a range so the equal-range run grouping (one
+        // multi-row sums_rows call) is exercised too.
+        let ranges: [(usize, usize); 7] =
+            [(0, 300), (0, 128), (0, 128), (5, 5), (127, 129), (250, 300), (0, 1)];
+        let t1 = TiledBackend::with_threads(1);
+        let t4 = TiledBackend::with_threads(4);
+        for k in ALL_KERNELS {
+            let f1 = t1.sums_ranged(k, &queries, &data, d, &ranges);
+            let f4 = t4.sums_ranged(k, &queries, &data, d, &ranges);
+            for (q, &(lo, hi)) in ranges.iter().enumerate() {
+                let want = if hi > lo {
+                    t1.sums(k, &queries[q * d..(q + 1) * d], &data[lo * d..hi * d], d)[0]
+                } else {
+                    0.0
+                };
+                assert_eq!(
+                    f1[q].to_bits(),
+                    want.to_bits(),
+                    "{:?} row {q}: fused {} vs unfused {want}",
+                    k,
+                    f1[q]
+                );
+                assert_eq!(f1[q].to_bits(), f4[q].to_bits(), "{:?} thread-dependent", k);
+            }
+        }
+    }
+
+    #[test]
+    fn sums_ranged_counters() {
+        let be = TiledBackend::with_threads(2);
+        let q = vec![0.0f32; 3 * 2];
+        let x = vec![0.5f32; 5 * 2];
+        be.sums_ranged(Kernel::Gaussian, &q, &x, 2, &[(0, 5), (1, 3), (4, 4)]);
+        assert_eq!(be.calls(), 1, "a fused submission is one dispatch");
+        assert_eq!(be.kernel_evals(), 7, "pairs fold across workers");
     }
 
     #[test]

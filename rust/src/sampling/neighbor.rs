@@ -24,14 +24,18 @@
 //!   depth the batched path synchronizes over shrinks by
 //!   log2(leaf_cutoff) levels. `neighbor_prob` applies the same single
 //!   factor, keeping reported probabilities bit-identical.
-//! * **Level-order batching.** [`NeighborSampler::sample_batch`] runs many
-//!   descents in lock-step: per level it groups walkers by node and
-//!   fetches both children's answers for the whole group through
-//!   [`MultiLevelKde::query_points`] — one backend dispatch per (node,
-//!   side) instead of one per (walker, node, side). Each walker draws from
-//!   its own forked RNG stream, so a batched round produces *exactly* the
-//!   samples the sequential path produces from the same forked streams
-//!   (verified in tests/batched_pipeline.rs).
+//! * **Level-order batching with level fusion.**
+//!   [`NeighborSampler::sample_batch`] runs many descents in lock-step:
+//!   per level it groups walkers by node and resolves *every* group's two
+//!   child answers in one [`MultiLevelKde::query_points_multi`] call,
+//!   which coalesces all the level's cache misses across nodes into fused
+//!   padded backend submissions (B = 64 rows, one packed data segment per
+//!   node) — O(1) dispatches per level instead of one per (node, side),
+//!   so a whole sampling round costs O(log n) backend executions
+//!   (asserted in tests/fusion.rs). Each walker draws from its own forked
+//!   RNG stream, so a batched round produces *exactly* the samples the
+//!   sequential path produces from the same forked streams (verified in
+//!   tests/batched_pipeline.rs).
 
 use std::sync::Arc;
 
@@ -233,9 +237,55 @@ impl NeighborSampler {
         }
     }
 
+    /// Group the level's sorted walkers into per-node `(id, g0, g1)` runs.
+    fn level_groups(active: &[(usize, usize, f64)]) -> Vec<(usize, usize, usize)> {
+        let mut bounds = Vec::new();
+        let mut g0 = 0usize;
+        while g0 < active.len() {
+            let id = active[g0].1;
+            let mut g1 = g0;
+            while g1 < active.len() && active[g1].1 == id {
+                g1 += 1;
+            }
+            bounds.push((id, g0, g1));
+            g0 = g1;
+        }
+        bounds
+    }
+
+    /// Collect both children's query groups for every internal-node run
+    /// and resolve the WHOLE level through one
+    /// [`MultiLevelKde::query_points_multi`] call (the level-fused
+    /// dispatch). Returns the per-group answers, two consecutive entries
+    /// (left, right) per internal group in `bounds` order.
+    fn level_answers(
+        &self,
+        bounds: &[(usize, usize, usize)],
+        active: &[(usize, usize, f64)],
+        source_of: impl Fn(usize) -> usize,
+        finish: usize,
+    ) -> Vec<Vec<f64>> {
+        let mut qgroups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for &(id, g0, g1) in bounds {
+            let node = self.tree.node(id);
+            if node.hi - node.lo > finish {
+                let srcs: Vec<usize> =
+                    active[g0..g1].iter().map(|&(w, _, _)| source_of(w)).collect();
+                let l = node.left.expect("internal node");
+                let r = node.right.expect("internal node");
+                qgroups.push((l, srcs.clone()));
+                qgroups.push((r, srcs));
+            }
+        }
+        let refs: Vec<(usize, &[usize])> =
+            qgroups.iter().map(|(id, v)| (*id, v.as_slice())).collect();
+        self.tree.query_points_multi(&refs)
+    }
+
     /// Batched Algorithm 4.11: run one descent per entry of `sources` in
-    /// level-order lock-step, grouping same-node walkers so every level
-    /// costs one [`MultiLevelKde::query_points`] call per (node, side).
+    /// level-order lock-step, grouping walkers by node and resolving every
+    /// level's child answers in ONE fused multi-group call — O(1) backend
+    /// dispatches per level instead of one per (node, side).
     ///
     /// Each walker draws from its own stream forked off `rng` in source
     /// order, so the result is *identical* to calling [`Self::sample`]
@@ -256,14 +306,11 @@ impl NeighborSampler {
             // Group by node id; deterministic order so HBE-style stateful
             // oracles see a reproducible first-query order.
             active.sort_by_key(|&(w, id, _)| (id, w));
+            let bounds = Self::level_groups(&active);
+            let answers = self.level_answers(&bounds, &active, |w| sources[w], finish);
             let mut next: Vec<(usize, usize, f64)> = Vec::with_capacity(active.len());
-            let mut g0 = 0usize;
-            while g0 < active.len() {
-                let id = active[g0].1;
-                let mut g1 = g0;
-                while g1 < active.len() && active[g1].1 == id {
-                    g1 += 1;
-                }
+            let mut qi = 0usize;
+            for &(id, g0, g1) in &bounds {
                 let group = &active[g0..g1];
                 let node = self.tree.node(id);
                 if node.hi - node.lo <= finish {
@@ -275,11 +322,10 @@ impl NeighborSampler {
                             .map(|(j, p)| NeighborSample { neighbor: j, prob: prob * p });
                     }
                 } else {
-                    let srcs: Vec<usize> = group.iter().map(|&(w, _, _)| sources[w]).collect();
                     let l = node.left.expect("internal node");
                     let r = node.right.expect("internal node");
-                    let raw_l = self.tree.query_points(l, &srcs);
-                    let raw_r = self.tree.query_points(r, &srcs);
+                    let (raw_l, raw_r) = (&answers[qi], &answers[qi + 1]);
+                    qi += 2;
                     for (gi, &(w, _, prob)) in group.iter().enumerate() {
                         let i = sources[w];
                         let a = self.side_mass_value(l, i, raw_l[gi]);
@@ -290,7 +336,6 @@ impl NeighborSampler {
                         }
                     }
                 }
-                g0 = g1;
             }
             active = next;
         }
@@ -336,8 +381,9 @@ impl NeighborSampler {
     }
 
     /// Batched [`Self::neighbor_prob`] over `(source, target)` pairs, with
-    /// the same level-order grouping as `sample_batch` (the descents are
-    /// deterministic — no RNG — so this is purely a dispatch-shape win).
+    /// the same level-order grouping and level fusion as `sample_batch`
+    /// (the descents are deterministic — no RNG — so this is purely a
+    /// dispatch-shape win).
     pub fn neighbor_prob_batch(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
         let n = pairs.len();
         let mut out = vec![0.0f64; n];
@@ -355,14 +401,11 @@ impl NeighborSampler {
             .collect();
         while !active.is_empty() {
             active.sort_by_key(|&(w, id, _)| (id, w));
+            let bounds = Self::level_groups(&active);
+            let answers = self.level_answers(&bounds, &active, |w| pairs[w].0, finish);
             let mut next: Vec<(usize, usize, f64)> = Vec::with_capacity(active.len());
-            let mut g0 = 0usize;
-            while g0 < active.len() {
-                let id = active[g0].1;
-                let mut g1 = g0;
-                while g1 < active.len() && active[g1].1 == id {
-                    g1 += 1;
-                }
+            let mut qi = 0usize;
+            for &(id, g0, g1) in &bounds {
                 let group = &active[g0..g1];
                 let node = self.tree.node(id);
                 if node.hi - node.lo <= finish {
@@ -371,11 +414,10 @@ impl NeighborSampler {
                         out[w] = prob * self.leaf_prob_factor(id, i, j);
                     }
                 } else {
-                    let srcs: Vec<usize> = group.iter().map(|&(w, _, _)| pairs[w].0).collect();
                     let l = node.left.expect("internal node");
                     let r = node.right.expect("internal node");
-                    let raw_l = self.tree.query_points(l, &srcs);
-                    let raw_r = self.tree.query_points(r, &srcs);
+                    let (raw_l, raw_r) = (&answers[qi], &answers[qi + 1]);
+                    qi += 2;
                     let nl = self.tree.node(l);
                     let nr = self.tree.node(r);
                     for (gi, &(w, _, prob)) in group.iter().enumerate() {
@@ -407,7 +449,6 @@ impl NeighborSampler {
                         next.push((w, if goes_left { l } else { r }, prob * factor));
                     }
                 }
-                g0 = g1;
             }
             active = next;
         }

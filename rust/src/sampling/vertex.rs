@@ -70,7 +70,8 @@ pub struct DegreeSampler {
 impl DegreeSampler {
     /// Run Algorithm 4.3 against the multi-level KDE's root oracle: n KDE
     /// queries, executed once — batched through `query_points`, so the
-    /// whole degree array costs ONE backend dispatch instead of n.
+    /// whole degree array costs `ceil(n / 64)` fused backend submissions
+    /// (the AOT B=64 batch shape) instead of n singleton dispatches.
     pub fn build(tree: &Arc<MultiLevelKde>) -> Self {
         let n = tree.ds.n;
         let before = tree.counters.queries();

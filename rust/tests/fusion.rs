@@ -1,0 +1,205 @@
+//! Level fusion: fused vs unfused parity and the O(log n) dispatch bound.
+//!
+//! The level-order batched pipeline coalesces every tree level's cache
+//! misses across nodes into padded fused submissions (B = 64 query rows,
+//! per-row data ranges — `KernelBackend::sums_ranged`). Contracts pinned
+//! here:
+//!
+//! 1. A batched sparsifier round at n = 4096 issues O(log n) backend
+//!    dispatches total (counted at the backend's execution counter — on
+//!    the CPU backends one `calls()` per fused submission, the same unit
+//!    a PJRT artifact run pays per padded execution grid).
+//! 2. Fused and unfused rounds produce bit-identical sample
+//!    probabilities, reverse probabilities and sparsifier graphs.
+//! 3. Ragged edges: levels whose rows are not a multiple of B = 64,
+//!    single-node levels, trees below the leaf cutoff, and warm-cache
+//!    (empty miss set) rounds.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::sparsify::sparsify_batched;
+use kde_matrix::kde::{KdeConfig, KdeCounters, MultiLevelKde};
+use kde_matrix::kernel::{dataset::gaussian_mixture, Dataset, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::sampling::{NeighborSample, NeighborSampler, Primitives};
+use kde_matrix::util::rng::Rng;
+
+/// A sampler plus its own call-counting backend.
+type Rig = (NeighborSampler, Arc<CpuBackend>);
+/// (samples, reverse probs, backend dispatches) of one round.
+type Round = (Vec<Option<NeighborSample>>, Vec<f64>, u64);
+
+/// Twin samplers over the SAME dataset: independently built (no shared
+/// memo cache), one with level fusion disabled, each with its own
+/// call-counting backend.
+fn twin_samplers(ds: &Arc<Dataset>, cfg: &KdeConfig) -> (Rig, Rig) {
+    let mk = |fused: bool| {
+        let be = CpuBackend::new();
+        let tree = Arc::new(MultiLevelKde::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            cfg,
+            be.clone(),
+            KdeCounters::new(),
+        ));
+        tree.set_fusion(fused);
+        (NeighborSampler::new(tree), be)
+    };
+    (mk(true), mk(false))
+}
+
+/// One sampling round + reverse probabilities; returns (samples, reverse
+/// probs, backend dispatches spent).
+fn run_round(s: &NeighborSampler, be: &CpuBackend, sources: &[usize], seed: u64) -> Round {
+    let before = be.calls();
+    let samples = s.sample_batch(sources, &mut Rng::new(seed));
+    let pairs: Vec<(usize, usize)> = samples
+        .iter()
+        .enumerate()
+        .filter_map(|(w, smp)| smp.as_ref().map(|smp| (smp.neighbor, sources[w])))
+        .collect();
+    let probs = s.neighbor_prob_batch(&pairs);
+    (samples, probs, be.calls() - before)
+}
+
+fn assert_rounds_bit_identical(a: &Round, b: &Round) {
+    assert_eq!(a.0.len(), b.0.len());
+    for (w, (x, y)) in a.0.iter().zip(&b.0).enumerate() {
+        match (x, y) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.neighbor, y.neighbor, "walker {w} diverged");
+                assert_eq!(
+                    x.prob.to_bits(),
+                    y.prob.to_bits(),
+                    "walker {w}: fused prob {} vs unfused {}",
+                    x.prob,
+                    y.prob
+                );
+            }
+            (None, None) => {}
+            (x, y) => panic!("walker {w}: fused {x:?} vs unfused {y:?}"),
+        }
+    }
+    assert_eq!(a.1.len(), b.1.len());
+    for (k, (x, y)) in a.1.iter().zip(&b.1).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "reverse prob {k}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn n4096_round_is_olog_n_executions_and_bit_identical() {
+    // The acceptance shape: one batched sampling round (descents + reverse
+    // probabilities) over n = 4096 must cost O(log n) fused dispatches,
+    // while reproducing the unfused path bit for bit.
+    let n = 4096usize;
+    let t = 64usize;
+    let mut rng = Rng::new(2101);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+    let ((fused_s, fused_be), (plain_s, plain_be)) = twin_samplers(&ds, &KdeConfig::exact());
+    let sources: Vec<usize> = (0..t).map(|k| (k * 61) % n).collect();
+
+    let fused = run_round(&fused_s, &fused_be, &sources, 11);
+    let plain = run_round(&plain_s, &plain_be, &sources, 11);
+    assert_rounds_bit_identical(&fused, &plain);
+
+    let log2n = (usize::BITS - n.leading_zeros() - 1) as u64; // 12
+    let (fused_calls, plain_calls) = (fused.2, plain.2);
+    assert!(fused_calls > 0, "round must hit the backend");
+    assert!(
+        fused_calls <= 10 * log2n,
+        "fused round used {fused_calls} dispatches; O(log n) bound is {}",
+        10 * log2n
+    );
+    assert!(
+        fused_calls * 2 <= plain_calls,
+        "fusion won too little: {plain_calls} unfused -> {fused_calls} fused"
+    );
+}
+
+#[test]
+fn n4096_sparsifier_round_parity_and_execution_count() {
+    // Full sparsify_batched round: identical graphs (same RNG stream, same
+    // memoized answers) and the same O(log n) dispatch accounting.
+    let n = 4096usize;
+    let t = 64usize;
+    let mut rng = Rng::new(2203);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+    let run = |fused: bool| {
+        let be = CpuBackend::new();
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+        prims.tree.set_fusion(fused);
+        let before = be.calls();
+        let r = sparsify_batched(&prims, t, &mut Rng::new(17));
+        (r, be.calls() - before)
+    };
+    let (rf, calls_f) = run(true);
+    let (rp, calls_p) = run(false);
+    assert_eq!(rf.samples, rp.samples);
+    assert_eq!(rf.distinct_edges, rp.distinct_edges);
+    // Identical edge multisets -> identical Laplacian quadratic forms,
+    // bit for bit (same construction order on both paths).
+    let x: Vec<f64> = (0..n).map(|i| ((i * 37) % 101) as f64 / 101.0 - 0.5).collect();
+    assert_eq!(
+        rf.graph.laplacian_quadratic(&x).to_bits(),
+        rp.graph.laplacian_quadratic(&x).to_bits(),
+        "fused sparsifier diverged from unfused"
+    );
+    let log2n = (usize::BITS - n.leading_zeros() - 1) as u64;
+    assert!(calls_f > 0 && calls_f <= 10 * log2n, "sparsifier round: {calls_f} dispatches");
+    assert!(calls_f * 2 <= calls_p, "fusion won too little: {calls_p} -> {calls_f}");
+}
+
+#[test]
+fn ragged_rows_and_sampling_estimator_parity() {
+    // t = 37 walkers (rows never a multiple of B = 64) over exact AND
+    // noisy-estimator trees: fused == unfused bit for bit.
+    let mut rng = Rng::new(2301);
+    let ds = Arc::new(gaussian_mixture(96, 4, 3, 1.2, 0.5, &mut rng));
+    for cfg in [
+        KdeConfig::exact(),
+        KdeConfig {
+            kind: kde_matrix::kde::EstimatorKind::Sampling { eps: 0.4, tau: 0.2 },
+            leaf_cutoff: 8,
+            seed: 0x77,
+        },
+    ] {
+        let ((fused_s, fused_be), (plain_s, plain_be)) = twin_samplers(&ds, &cfg);
+        let sources: Vec<usize> = (0..37).map(|k| (k * 13) % 96).collect();
+        let fused = run_round(&fused_s, &fused_be, &sources, 4242);
+        let plain = run_round(&plain_s, &plain_be, &sources, 4242);
+        assert_rounds_bit_identical(&fused, &plain);
+        assert!(fused.2 <= plain.2, "fusion must never dispatch more");
+    }
+}
+
+#[test]
+fn tiny_tree_round_dispatches_nothing() {
+    // n <= leaf_cutoff: every descent is a single categorical finish
+    // (direct rescan, no oracle) — zero backend dispatches either way.
+    let mut rng = Rng::new(2401);
+    let ds = Arc::new(gaussian_mixture(12, 3, 2, 1.0, 0.5, &mut rng));
+    let ((fused_s, fused_be), _) = twin_samplers(&ds, &KdeConfig::exact());
+    let sources: Vec<usize> = (0..30).map(|k| k % 12).collect();
+    let (samples, _, calls) = run_round(&fused_s, &fused_be, &sources, 5);
+    assert_eq!(calls, 0, "leaf-finish rounds need no backend");
+    for (w, s) in samples.iter().enumerate() {
+        let s = s.expect("n > 1 always samples");
+        assert_ne!(s.neighbor, sources[w]);
+    }
+}
+
+#[test]
+fn warm_cache_round_dispatches_nothing() {
+    // Replaying the same round against a warm memo cache resolves every
+    // level from cache hits: the fused plan sees only empty miss sets.
+    let mut rng = Rng::new(2501);
+    let ds = Arc::new(gaussian_mixture(256, 4, 2, 1.0, 0.5, &mut rng));
+    let ((s, be), _) = twin_samplers(&ds, &KdeConfig::exact());
+    let sources: Vec<usize> = (0..48).map(|k| (k * 7) % 256).collect();
+    let first = run_round(&s, &be, &sources, 99);
+    assert!(first.2 > 0);
+    let second = run_round(&s, &be, &sources, 99);
+    assert_rounds_bit_identical(&first, &second);
+    assert_eq!(second.2, 0, "warm replay must not dispatch");
+}
