@@ -12,6 +12,7 @@ Artifacts written:
   artifacts/kde_sums_<kind>.hlo.txt         (B,D),(M,D) -> ((B,),)
   artifacts/kde_sums_ranged_<kind>.hlo.txt  (B,D),(M,D),(B,)i32,(B,)i32 -> ((B,),)
   artifacts/kernel_block_<kind>.hlo.txt     (B,D),(M,D) -> ((B,M),)
+  artifacts/kde_block_ranged_<kind>.hlo.txt (B,D),(M,D),(B,)i32,(B,)i32 -> ((B,M),)
   artifacts/manifest.json                   shapes + kernel list for Rust
 """
 
@@ -58,6 +59,7 @@ def main() -> None:
             ("kde_sums", model.kde_sums_fn, model.example_args()),
             ("kde_sums_ranged", model.kde_sums_ranged_fn, model.example_args_ranged()),
             ("kernel_block", model.kernel_block_fn, model.example_args()),
+            ("kde_block_ranged", model.kde_block_ranged_fn, model.example_args_ranged()),
         ):
             text = lower_entry(builder(kind), entry_args)
             path = os.path.join(args.out_dir, f"{name}_{kind}.hlo.txt")

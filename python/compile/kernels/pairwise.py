@@ -126,6 +126,46 @@ def make_kde_sums_ranged(kind, b, m, d, dtype=jnp.float32):
     )
 
 
+def make_kde_block_ranged(kind, b, m, d, dtype=jnp.float32):
+    """Build the range-masked kernel-block function for fixed shapes.
+
+    Returns f(queries (b, d), data (m, d), lo (b,) i32, hi (b,) i32) ->
+    K (b, m), where ``K[q, j] = k(queries[q], data[j])`` for ``j`` in
+    ``[lo[q], hi[q])`` and exactly 0.0 outside.  This is the LRA
+    row-construction entry: the Rust runtime chunks the sampled rows into
+    (b, m) executions, each row carrying its own data range, and gathers
+    the masked rows into a ragged buffer.  Rows whose range is empty
+    (``lo == hi``) — including the B-padding rows — contribute all-zero
+    output that the runtime never reads.
+    """
+    if kind not in KERNELS:
+        raise ValueError(f"unknown kernel kind: {kind}")
+    tm = _pick_tile(m)
+    grid = (m // tm,)
+
+    def kernel(q_ref, d_ref, lo_ref, hi_ref, o_ref):
+        j = pl.program_id(0)
+        vals = _kernel_values(kind, q_ref[...], d_ref[...])
+        # Global data-row index of each column of this (b, tm) tile.
+        rows = jax.lax.broadcasted_iota(jnp.int32, (q_ref.shape[0], tm), 1) + j * tm
+        mask = (rows >= lo_ref[...][:, None]) & (rows < hi_ref[...][:, None])
+        o_ref[...] = jnp.where(mask, vals, 0.0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((tm, d), lambda j: (j, 0)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+            pl.BlockSpec((b,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b, tm), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, m), dtype),
+        interpret=True,
+    )
+
+
 def make_kernel_block(kind, b, m, d, dtype=jnp.float32):
     """Build the tiled kernel-block function for fixed shapes.
 

@@ -47,3 +47,11 @@ def kde_sums_ranged(kind, queries, data, lo, hi):
     rows = jnp.arange(data.shape[0])[None, :]
     mask = (rows >= lo[:, None]) & (rows < hi[:, None])
     return jnp.sum(jnp.where(mask, vals, 0.0), axis=1)
+
+
+def kde_block_ranged(kind, queries, data, lo, hi):
+    """Reference range-masked block: K[b, m] masked to [lo[b], hi[b])."""
+    vals = pairwise_kernel(kind, queries, data)
+    rows = jnp.arange(data.shape[0])[None, :]
+    mask = (rows >= lo[:, None]) & (rows < hi[:, None])
+    return jnp.where(mask, vals, 0.0)

@@ -13,6 +13,9 @@ Three entry points per kernel type:
     The level-fusion entry — the Rust runtime packs several tree nodes'
     query groups into one execution, one data segment per node.
   * ``kernel_block``    (B, D), (M, D) -> (B, M)   explicit kernel rows
+  * ``kde_block_ranged`` (B, D), (M, D), (B,) i32, (B,) i32 -> (B, M)
+    range-masked kernel rows (0.0 outside [lo[q], hi[q])) — the LRA
+    row-construction entry, executed in planner-sized chunks.
 
 AOT shapes (must match ``rust/src/runtime``):  B = 64, M = 1024, D = 64.
 The Rust side pads queries/data to these shapes; padding *data* rows are
@@ -56,6 +59,16 @@ def kernel_block_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
 
     def f(queries, data):
         return (inner(queries, data),)
+
+    return f
+
+
+def kde_block_ranged_fn(kind, b=AOT_B, m=AOT_M, d=AOT_D):
+    """Range-masked kernel block graph (the LRA row-construction entry)."""
+    inner = pairwise.make_kde_block_ranged(kind, b, m, d)
+
+    def f(queries, data, lo, hi):
+        return (inner(queries, data, lo, hi),)
 
     return f
 

@@ -31,6 +31,32 @@ def test_lowered_ranged_hlo_text_parses(kind):
     assert "s32[8]" in text, "per-row range operands missing"
 
 
+@pytest.mark.parametrize("kind", ref.KERNELS)
+def test_lowered_block_ranged_hlo_text_parses(kind):
+    b, m, d = 8, 64, 4
+    args = model.example_args_ranged(b=b, m=m, d=d)
+    text = aot.lower_entry(model.kde_block_ranged_fn(kind, b=b, m=m, d=d), args)
+    assert "HloModule" in text
+    assert "f32[8,4]" in text and "f32[64,4]" in text
+    assert "s32[8]" in text, "per-row range operands missing"
+    assert "f32[8,64]" in text, "block output shape missing"
+
+
+def test_lowered_block_ranged_entry_computes_correctly():
+    """Round-trip the block-ranged module through XLA's own compile+run."""
+    b, m, d = 8, 64, 4
+    fn = model.kde_block_ranged_fn("gaussian", b=b, m=m, d=d)
+    lowered = jax.jit(fn).lower(*model.example_args_ranged(b=b, m=m, d=d))
+    r = np.random.default_rng(3)
+    q = r.normal(size=(b, d)).astype(np.float32)
+    x = r.normal(size=(m, d)).astype(np.float32)
+    lo = r.integers(0, m // 2, size=b).astype(np.int32)
+    hi = (lo + r.integers(0, m, size=b)).clip(max=m).astype(np.int32)
+    got = lowered.compile()(q, x, lo, hi)[0]
+    want = ref.kde_block_ranged("gaussian", q, x, jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
 def test_lowered_ranged_entry_computes_correctly():
     """Round-trip the ranged module through XLA's own compile+run."""
     b, m, d = 8, 64, 4

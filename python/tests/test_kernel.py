@@ -82,6 +82,46 @@ def test_kde_sums_ranged_matches_ref(kind, b, m, d):
         assert float(got[1]) == 0.0
 
 
+@pytest.mark.parametrize("kind", KERNELS)
+@pytest.mark.parametrize("b,m,d", [(1, 8, 1), (3, 16, 5), (8, 64, 16), (64, 1024, 64)])
+def test_kde_block_ranged_matches_ref(kind, b, m, d):
+    """Range-masked block: row q's entries live only in [lo, hi)."""
+    q, x = _rand(b * 4000 + m + d, b, m, d)
+    r = RNG(b * 2 + m + d)
+    lo = r.integers(0, m, size=b).astype(np.int32)
+    hi = (lo + r.integers(0, m, size=b)).clip(max=m).astype(np.int32)
+    # Exercise the edges: one full row, one empty row (when b allows).
+    lo[0], hi[0] = 0, m
+    if b > 1:
+        lo[1], hi[1] = m // 2, m // 2
+    got = pairwise.make_kde_block_ranged(kind, b, m, d)(q, x, lo, hi)
+    want = ref.kde_block_ranged(kind, q, x, jnp.asarray(lo), jnp.asarray(hi))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+    # Full range reduces to the unmasked block; empty range is all-zero.
+    full = pairwise.make_kernel_block(kind, b, m, d)(q, x)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(full)[0], rtol=2e-5, atol=1e-6)
+    if b > 1:
+        assert float(np.abs(np.asarray(got)[1]).max()) == 0.0
+    # Entries outside every row's range are exactly 0.0 (the Rust runtime
+    # scatters only the in-range slice, but the artifact contract is exact).
+    cols = np.arange(m)[None, :]
+    outside = (cols < lo[:, None]) | (cols >= hi[:, None])
+    assert float(np.abs(np.asarray(got)[outside]).max() if outside.any() else 0.0) == 0.0
+
+
+def test_kde_block_ranged_rows_match_unmasked_slices():
+    """Each masked row equals the plain block over its own sub-slice."""
+    kind = "laplacian"
+    b, m, d = 4, 256, 8
+    q, x = _rand(23, b, m, d)
+    lo = np.array([0, 100, 255, 17], dtype=np.int32)
+    hi = np.array([1, 156, 256, 200], dtype=np.int32)
+    got = np.asarray(pairwise.make_kde_block_ranged(kind, b, m, d)(q, x, lo, hi))
+    for row in range(b):
+        want = np.asarray(ref.pairwise_kernel(kind, q[row : row + 1], x[lo[row] : hi[row]]))[0]
+        np.testing.assert_allclose(got[row, lo[row] : hi[row]], want, rtol=2e-5, atol=1e-6)
+
+
 def test_kde_sums_ranged_tile_straddling_ranges():
     """Ranges that start/end mid-tile must mask exactly at the boundary."""
     kind = "laplacian"

@@ -67,6 +67,99 @@ fn fusion_series(rng: &mut Rng) -> String {
     )
 }
 
+/// Frontier-walk dispatch series: one `same_cluster`-shaped walk load
+/// (W = 32 walkers x T = 8 steps from two start vertices) at n = 4096,
+/// frontier-batched (`RandomWalker::walk_batch`, cross-level packing on)
+/// vs sequential walks, counted at the backend dispatch counter. Emitted
+/// as the `walk_fusion` object of `BENCH_backend.json`;
+/// `scripts/compare_bench.py` gates the O(T log n) bound and the >= 2x
+/// win over sequential (tests/fusion.rs pins the same contract).
+fn walk_fusion_series(rng: &mut Rng) -> String {
+    let (n, t, samples, d) = (4096usize, 8usize, 16usize, 16usize);
+    let ds = Arc::new(dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng));
+    let (calls_batched, us_batched) = {
+        let be = CpuBackend::new();
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+        let mut starts = vec![0usize; samples];
+        starts.resize(2 * samples, 1usize);
+        let before = be.calls();
+        let start = Instant::now();
+        let ends = prims.walker.walk_batch(&starts, t, &mut Rng::new(17));
+        let us = start.elapsed().as_micros();
+        assert_eq!(ends.len(), 2 * samples);
+        (be.calls() - before, us)
+    };
+    let (calls_seq, us_seq) = {
+        let be = CpuBackend::new();
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+        let before = be.calls();
+        let start = Instant::now();
+        let mut r = Rng::new(17);
+        for _ in 0..samples {
+            std::hint::black_box(prims.walker.walk(0, t, &mut r));
+            std::hint::black_box(prims.walker.walk(1, t, &mut r));
+        }
+        (be.calls() - before, start.elapsed().as_micros())
+    };
+    let log2n = usize::BITS - n.leading_zeros() - 1;
+    format!(
+        "{{\"n\": {n}, \"t\": {t}, \"walkers\": {}, \"log2_n\": {log2n}, \
+         \"dispatches_batched\": {calls_batched}, \"dispatches_sequential\": {calls_seq}, \
+         \"walk_us_batched\": {us_batched}, \"walk_us_sequential\": {us_seq}}}",
+        2 * samples
+    )
+}
+
+/// Fused block-row series: LRA-shaped row construction (s = 160 sampled
+/// rows against n = 4096 data rows) through planner-chunked
+/// `KernelBackend::block_ranged` submissions vs the monolithic `s x n`
+/// `block` call. The chunked path holds at most B x n block floats per
+/// dispatch (vs s x n) at ceil(s / B) dispatches. Emitted as the
+/// `block_fusion` object of `BENCH_backend.json` and gated by
+/// `scripts/compare_bench.py` (peak-chunk bound + dispatch shape).
+fn block_fusion_series(rng: &mut Rng) -> String {
+    use kde_matrix::coordinator::batcher::{plan_level_fusion, FuseJob};
+    let (n, s, d) = (4096usize, 160usize, 16usize);
+    let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
+    let flat = ds.flat();
+    let picks: Vec<usize> = (0..s).map(|k| (k * 97) % n).collect();
+    let mut queries: Vec<f32> = Vec::with_capacity(s * d);
+    for &i in &picks {
+        queries.extend_from_slice(ds.point(i));
+    }
+    let be_mono = CpuBackend::new();
+    let start = Instant::now();
+    let block = be_mono.block(Kernel::Laplacian, &queries, flat, d);
+    let us_monolithic = start.elapsed().as_micros();
+    let calls_monolithic = be_mono.calls();
+    assert_eq!(block.len(), s * n);
+    let be_chunk = CpuBackend::new();
+    let start = Instant::now();
+    let mut peak_rows = 0usize;
+    let mut checksum = 0.0f64;
+    for sub in plan_level_fusion(&[FuseJob { rows: s, seg_rows: n }], 64, 1024) {
+        let mut q: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
+        for &(_, row) in &sub.rows {
+            q.extend_from_slice(ds.point(picks[row]));
+        }
+        let ranges: Vec<(usize, usize)> = vec![(0, n); sub.rows.len()];
+        let part = be_chunk.block_ranged(Kernel::Laplacian, &q, flat, d, &ranges);
+        peak_rows = peak_rows.max(sub.rows.len());
+        checksum += part.iter().map(|&v| v as f64).sum::<f64>();
+    }
+    let us_chunked = start.elapsed().as_micros();
+    let calls_chunked = be_chunk.calls();
+    std::hint::black_box(checksum);
+    format!(
+        "{{\"n\": {n}, \"s\": {s}, \"d\": {d}, \
+         \"dispatches_chunked\": {calls_chunked}, \"dispatches_monolithic\": {calls_monolithic}, \
+         \"peak_rows_chunked\": {peak_rows}, \"peak_rows_monolithic\": {s}, \
+         \"block_us_chunked\": {us_chunked}, \"block_us_monolithic\": {us_monolithic}}}"
+    )
+}
+
 fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     let (n, d) = (4096usize, 64usize);
     let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
@@ -106,10 +199,15 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     }
     let fusion = fusion_series(rng);
     suite.note(&format!("fusion series: {fusion}"));
+    let walk_fusion = walk_fusion_series(rng);
+    suite.note(&format!("walk_fusion series: {walk_fusion}"));
+    let block_fusion = block_fusion_series(rng);
+    suite.note(&format!("block_fusion series: {block_fusion}"));
     let json = format!(
         "{{\n  \"bench\": \"backend_sums\",\n  \"n\": {n},\n  \"d\": {d},\n  \
          \"threads_available\": {threads},\n  \"isa_detected\": \"{}\",\n  \
          \"baseline\": \"measured\",\n  \"fusion\": {fusion},\n  \
+         \"walk_fusion\": {walk_fusion},\n  \"block_fusion\": {block_fusion},\n  \
          \"results\": [\n{}\n  ]\n}}\n",
         MicroKernel::detect().isa.name(),
         rows.join(",\n")

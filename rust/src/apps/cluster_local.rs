@@ -71,6 +71,13 @@ pub fn inner_product_estimate(a: &[usize], b: &[usize], n: usize) -> f64 {
 }
 
 /// Algorithm 6.1: decide whether u and w share a cluster.
+///
+/// The `2 * samples` T-step walks run through the frontier-batched walk
+/// engine ([`RandomWalker::walk_batch`](crate::sampling::RandomWalker::walk_batch)):
+/// one batch advances every walker in lockstep, so each step's neighbor
+/// descents coalesce into fused backend submissions and the whole query
+/// costs O(T · log n) backend executions instead of the sequential
+/// O(samples · T · log n) (pinned in `tests/fusion.rs`).
 pub fn same_cluster(
     prims: &Primitives,
     u: usize,
@@ -80,12 +87,11 @@ pub fn same_cluster(
 ) -> LocalClusterOutcome {
     let n = prims.n();
     let before = prims.counters.queries();
-    let mut ends_u = Vec::with_capacity(params.samples);
-    let mut ends_w = Vec::with_capacity(params.samples);
-    for _ in 0..params.samples {
-        ends_u.push(prims.walker.walk(u, params.walk_len, rng));
-        ends_w.push(prims.walker.walk(w, params.walk_len, rng));
-    }
+    let mut starts = Vec::with_capacity(2 * params.samples);
+    starts.resize(params.samples, u);
+    starts.resize(2 * params.samples, w);
+    let mut ends_u = prims.walker.walk_batch(&starts, params.walk_len, rng);
+    let ends_w = ends_u.split_off(params.samples);
     let pp = l2_norm_sq_estimate(&ends_u, n);
     let qq = l2_norm_sq_estimate(&ends_w, n);
     let pq = inner_product_estimate(&ends_u, &ends_w, n);

@@ -6,16 +6,22 @@
 //! The KDE algorithm touches only `n` KDE queries + `s x n` explicit kernel
 //! entries for the sampled rows (`s = rows_factor * rank`, paper uses 25k);
 //! both baselines must materialize all `n^2` entries — that gap is the
-//! paper's Fig. 3 headline (9x fewer kernel evaluations).
+//! paper's Fig. 3 headline (9x fewer kernel evaluations). Row construction
+//! goes through planner-chunked `KernelBackend::block_ranged` submissions
+//! of at most B = 64 query rows each ("one query-batch per chunk"), so the
+//! peak per-dispatch block is `B x n` instead of `s x n` while every value
+//! stays bit-identical to the monolithic call.
 
 use std::sync::Arc;
 
+use crate::coordinator::batcher::{plan_level_fusion, FuseJob};
 use crate::kde::{KdeConfig, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::linalg::eigen::{block_power, jacobi_eigen};
 use crate::linalg::mat::Mat;
 use crate::linalg::sketch::CountSketch;
 use crate::runtime::backend::KernelBackend;
+use crate::runtime::pjrt::{AOT_B, AOT_M};
 use crate::sampling::rownorm::RowNormSampler;
 use crate::util::rng::Rng;
 
@@ -23,8 +29,14 @@ use crate::util::rng::Rng;
 /// approximation is `B = K V^T V`.
 pub struct LraResult {
     pub v: Mat,
+    /// ACHIEVED rank (`v.rows`): at most the requested rank, lower when
+    /// fewer rows were sampled than the rank asked for (`s < k`) or the
+    /// sampled rows' spectrum degenerates below the eigenvalue floor.
     pub rank: usize,
     pub sampled_rows: usize,
+    /// Most query rows any single row-construction dispatch carried
+    /// (bounded by the planner's B = 64 submission cap).
+    pub peak_block_rows: usize,
     pub kde_queries: u64,
     /// Kernel evaluations performed BY THE ALGORITHM (row construction +
     /// estimator samples), not by any evaluation harness.
@@ -33,18 +45,24 @@ pub struct LraResult {
     pub floats_stored: u64,
 }
 
-/// FKV top-k right factors from sampled, rescaled rows.
+/// FKV top-k right factors from sampled, rescaled rows. The returned
+/// matrix has the ACHIEVED rank as its row count: at most `k.min(r.rows)`,
+/// further truncated to the eigenvalues above the 1e-12 floor — a
+/// degenerate spectrum yields fewer usable directions than requested, and
+/// reporting phantom all-zero rows as rank overstated it.
 fn fkv_factors(r: &Mat, k: usize) -> Mat {
     // W = R R^T (s x s), exact eigendecomposition, top-k.
     let w = r.gram_rows();
     let (vals, vecs) = jacobi_eigen(&w, 100);
     let n = r.cols;
-    let mut v = Mat::zeros(k.min(r.rows), n);
-    for j in 0..v.rows {
+    let cap = k.min(r.rows);
+    let mut achieved = 0usize;
+    while achieved < cap && vals[achieved].max(0.0) > 1e-12 {
+        achieved += 1;
+    }
+    let mut v = Mat::zeros(achieved, n);
+    for j in 0..achieved {
         let lam = vals[j].max(0.0);
-        if lam <= 1e-12 {
-            break;
-        }
         let scale = 1.0 / lam.sqrt();
         // v_j = R^T q_j / sqrt(lambda_j)
         for i in 0..r.rows {
@@ -60,6 +78,47 @@ fn fkv_factors(r: &Mat, k: usize) -> Mat {
         }
     }
     v
+}
+
+/// Build the rescaled sampled-row matrix `R` (`s x n`) through
+/// planner-chunked [`KernelBackend::block_ranged`] submissions — one
+/// query-batch of at most B = 64 rows per dispatch instead of one
+/// monolithic `s x n` block call. Peak per-dispatch block memory drops
+/// from `s x n` to `B x n` f32s, on PJRT each chunk is one padded
+/// artifact submission, and every value is bit-identical to the
+/// monolithic call (block entries are pure per-pair functions). Returns
+/// `(R, peak_rows_per_dispatch)`.
+fn construct_rows(
+    ds: &Dataset,
+    kernel: Kernel,
+    picks: &[(usize, f64)],
+    backend: &Arc<dyn KernelBackend>,
+) -> (Mat, usize) {
+    let s = picks.len();
+    let n = ds.n;
+    let d = ds.d;
+    let flat = ds.flat();
+    let mut r = Mat::zeros(s, n);
+    let mut peak = 0usize;
+    for sub in plan_level_fusion(&[FuseJob { rows: s, seg_rows: n }], AOT_B, AOT_M) {
+        let mut queries: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
+        for &(_, row) in &sub.rows {
+            queries.extend_from_slice(ds.point(picks[row].0));
+        }
+        let ranges: Vec<(usize, usize)> = vec![(0, n); sub.rows.len()];
+        let block = backend.block_ranged(kernel, &queries, flat, d, &ranges);
+        peak = peak.max(sub.rows.len());
+        // Rescale rows: row / sqrt(s * p_i).
+        for (bi, &(_, row)) in sub.rows.iter().enumerate() {
+            let scale = 1.0 / (s as f64 * picks[row].1).sqrt();
+            let src = &block[bi * n..(bi + 1) * n];
+            let dst = r.row_mut(row);
+            for c in 0..n {
+                dst[c] = src[c] as f64 * scale;
+            }
+        }
+    }
+    (r, peak)
 }
 
 /// Algorithm 5.15: KDE row-norm sampling + FKV.
@@ -85,27 +144,14 @@ pub fn lra_kde(
         picks.push(rn.sample(rng));
     }
     // Construct the sampled rows explicitly (s x n kernel evaluations)
-    // through the backend block primitive, one query-batch per chunk.
-    let d = ds.d;
-    let mut queries: Vec<f32> = Vec::with_capacity(s * d);
-    for &(i, _) in &picks {
-        queries.extend_from_slice(ds.point(i));
-    }
-    let block = backend.block(kernel, &queries, ds.flat(), d);
-    // Rescale rows: row / sqrt(s * p_i).
-    let mut r = Mat::zeros(s, n);
-    for (si, &(_, p)) in picks.iter().enumerate() {
-        let scale = 1.0 / (s as f64 * p).sqrt();
-        let src = &block[si * n..(si + 1) * n];
-        let dst = r.row_mut(si);
-        for c in 0..n {
-            dst[c] = src[c] as f64 * scale;
-        }
-    }
+    // through the fused block primitive, one <= B-row query-batch per
+    // planner chunk (see `construct_rows`).
+    let (r, peak_block_rows) = construct_rows(ds, kernel, &picks, &backend);
     let v = fkv_factors(&r, rank);
     LraResult {
-        rank,
+        rank: v.rows,
         sampled_rows: s,
+        peak_block_rows,
         kde_queries: counters.queries(),
         kernel_evals: backend.kernel_evals() - evals_before,
         floats_stored: (s * n) as u64,
@@ -138,16 +184,19 @@ pub fn lra_countsketch(kmat: &Mat, rank: usize, sketch_rows: usize, rng: &mut Rn
 }
 
 fn fkv_factors_from_sketch(sk: &Mat, rank: usize) -> Mat {
+    // Same achieved-rank truncation as `fkv_factors`: a degenerate sketch
+    // spectrum must not report phantom all-zero factor rows.
     let w = sk.gram_rows();
     let (vals, vecs) = jacobi_eigen(&w, 100);
     let n = sk.cols;
-    let k = rank.min(sk.rows);
-    let mut v = Mat::zeros(k, n);
-    for j in 0..k {
+    let cap = rank.min(sk.rows);
+    let mut achieved = 0usize;
+    while achieved < cap && vals[achieved].max(0.0) > 1e-12 {
+        achieved += 1;
+    }
+    let mut v = Mat::zeros(achieved, n);
+    for j in 0..achieved {
         let lam = vals[j].max(0.0);
-        if lam <= 1e-12 {
-            break;
-        }
         let scale = 1.0 / lam.sqrt();
         for i in 0..sk.rows {
             let q = vecs[(i, j)] * scale;
@@ -180,9 +229,10 @@ pub fn lra_error(kmat: &Mat, v: &Mat) -> f64 {
     // P = K V^T  (n x k), B = P V (n x n) — compute the error without
     // materializing B: ||K - P V||_F^2 = ||K||_F^2 - 2<K, PV> + ||PV||_F^2.
     let p = kmat.matmul(&v.transpose()); // n x k
-    // <K, PV> = sum_ij K_ij (PV)_ij = trace(K^T P V) = <K V^T, P>
-    let kv = kmat.matmul(&v.transpose()); // n x k (same as p since K sym)
-    let inner: f64 = kv.data.iter().zip(&p.data).map(|(a, b)| a * b).sum();
+    // <K, PV> = sum_ij K_ij (PV)_ij = trace(K^T P V) = <K V^T, P>, and
+    // K V^T is exactly the `p` already in hand (K symmetric) — so the
+    // inner product is ||P||_F^2, with no second O(n^2 k) matmul.
+    let inner: f64 = p.data.iter().map(|a| a * a).sum();
     // ||PV||_F^2 = trace(V^T P^T P V) = ||P (V V^T)^{1/2}||... compute via
     // G = V V^T (k x k): ||PV||_F^2 = trace(P^T P G)
     let g = v.gram_rows(); // k x k
@@ -284,6 +334,106 @@ mod tests {
         let opt = optimal_error(&kmat, rank);
         let frob = kmat.frob_norm_sq();
         assert!(err <= opt + 0.3 * frob, "IS err {err}, opt {opt}, frob {frob}");
+    }
+
+    #[test]
+    fn lra_error_matches_legacy_formula_bitwise() {
+        // The fix dropped the duplicate `kv = K V^T` matmul; reusing `p`
+        // must reproduce the legacy value bit for bit (kv was computed by
+        // the identical matmul, so a*b == a*a bitwise).
+        let (_, kmat, mut rng) = setup(32, 201);
+        for rank in [1usize, 3, 5] {
+            let v = lra_svd(&kmat, rank, 300, &mut rng);
+            let got = lra_error(&kmat, &v);
+            // Legacy formula, second matmul included.
+            let p = kmat.matmul(&v.transpose());
+            let kv = kmat.matmul(&v.transpose());
+            let inner: f64 = kv.data.iter().zip(&p.data).map(|(a, b)| a * b).sum();
+            let g = v.gram_rows();
+            let ptp = p.transpose().matmul(&p);
+            let mut pv_norm = 0.0;
+            for i in 0..g.rows {
+                for j in 0..g.cols {
+                    pv_norm += ptp[(i, j)] * g[(j, i)];
+                }
+            }
+            let legacy = (kmat.frob_norm_sq() - 2.0 * inner + pv_norm).max(0.0);
+            assert_eq!(got.to_bits(), legacy.to_bits(), "rank {rank}: {got} vs {legacy}");
+        }
+    }
+
+    #[test]
+    fn chunked_row_construction_matches_monolithic_bitwise() {
+        // `construct_rows` replaces the monolithic s x n `block` call with
+        // planner-chunked `block_ranged` submissions: bit-identical rows,
+        // one dispatch per <= B-row chunk, peak chunk bounded by B.
+        let mut rng = Rng::new(203);
+        let ds = Arc::new(gaussian_mixture(40, 4, 3, 2.0, 0.4, &mut rng));
+        let s = 70usize; // > B = 64 forces two chunks
+        let picks: Vec<(usize, f64)> = (0..s)
+            .map(|k| ((k * 7) % 40, 0.01 + ((k % 9) as f64) / 10.0))
+            .collect();
+        let be: Arc<dyn KernelBackend> = CpuBackend::new();
+        let calls_before = be.calls();
+        let (r, peak) = construct_rows(&ds, Kernel::Laplacian, &picks, &be);
+        let chunk_calls = be.calls() - calls_before;
+        assert_eq!(chunk_calls, 2, "ceil(70 / 64) planner chunks");
+        assert_eq!(peak, 64, "peak chunk is the B = 64 submission cap");
+        // Monolithic legacy construction.
+        let d = ds.d;
+        let mut queries: Vec<f32> = Vec::with_capacity(s * d);
+        for &(i, _) in &picks {
+            queries.extend_from_slice(ds.point(i));
+        }
+        let block = be.block(Kernel::Laplacian, &queries, ds.flat(), d);
+        for (si, &(_, p)) in picks.iter().enumerate() {
+            let scale = 1.0 / (s as f64 * p).sqrt();
+            for c in 0..40 {
+                let want = block[si * 40 + c] as f64 * scale;
+                assert_eq!(
+                    r.row(si)[c].to_bits(),
+                    want.to_bits(),
+                    "row {si} col {c}: chunked {} vs monolithic {want}",
+                    r.row(si)[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fkv_reports_achieved_rank_on_degenerate_spectrum() {
+        // Three rows, one an exact duplicate: the gram matrix has rank 2,
+        // so asking for k = 3 must achieve 2 factor rows (not a phantom
+        // all-zero third row).
+        let mut r = Mat::zeros(3, 5);
+        r.row_mut(0).copy_from_slice(&[1.0, 0.5, 0.0, 2.0, -1.0]);
+        r.row_mut(1).copy_from_slice(&[0.0, 1.0, 3.0, -0.5, 0.25]);
+        let dup: Vec<f64> = r.row(0).to_vec();
+        r.row_mut(2).copy_from_slice(&dup);
+        let v = fkv_factors(&r, 3);
+        assert_eq!(v.rows, 2, "duplicate row must not count toward rank");
+    }
+
+    #[test]
+    fn lra_kde_reports_achieved_rank_when_s_below_k() {
+        // s = clamp(rows_factor * rank, 1, n) = 6 < rank = 8: the
+        // requested rank is unreachable and LraResult must say so.
+        let mut rng = Rng::new(205);
+        let ds = Arc::new(gaussian_mixture(6, 3, 2, 2.0, 0.4, &mut rng));
+        let r = lra_kde(
+            &ds,
+            Kernel::Laplacian,
+            8,
+            1,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            &mut rng,
+        );
+        assert_eq!(r.sampled_rows, 6);
+        assert_eq!(r.rank, r.v.rows, "reported rank is the factor row count");
+        assert!(r.rank <= 6, "rank {} cannot exceed sampled rows", r.rank);
+        assert!(r.rank >= 1, "a positive-mass kernel yields at least one factor");
+        assert!(r.peak_block_rows <= 64 && r.peak_block_rows >= 1);
     }
 
     #[test]

@@ -81,6 +81,12 @@ pub fn project_simplex(v: &mut [f64]) {
 }
 
 /// Estimate walk-matrix moments m_1..m_L by collision walks.
+///
+/// Per moment order, all `vertices * reps` walk pairs run as two
+/// frontier-batched [`walk_batch`](crate::sampling::RandomWalker::walk_batch)
+/// calls (one per half-length), so a whole moment's descents coalesce into
+/// fused backend submissions instead of `2 * vertices * reps` sequential
+/// walks.
 pub fn estimate_moments(
     prims: &Primitives,
     params: &SpectrumParams,
@@ -94,21 +100,23 @@ pub fn estimate_moments(
     for l in 1..=params.max_moment {
         let a = l / 2;
         let b = l - a;
-        let mut acc = 0.0;
-        let mut count = 0usize;
+        let mut starts = Vec::with_capacity(params.vertices * params.reps);
         for _ in 0..params.vertices {
             let u = rng.below(n);
             for _ in 0..params.reps {
-                let v1 = prims.walker.walk(u, a, rng);
-                let v2 = prims.walker.walk(u, b, rng);
-                walks += 2;
-                if v1 == v2 {
-                    acc += degrees[u] / degrees[v1].max(1e-300);
-                }
-                count += 1;
+                starts.push(u);
             }
         }
-        moments[l] = acc / count as f64;
+        let v1s = prims.walker.walk_batch(&starts, a, rng);
+        let v2s = prims.walker.walk_batch(&starts, b, rng);
+        walks += 2 * starts.len() as u64;
+        let mut acc = 0.0;
+        for ((&u, &v1), &v2) in starts.iter().zip(&v1s).zip(&v2s) {
+            if v1 == v2 {
+                acc += degrees[u] / degrees[v1].max(1e-300);
+            }
+        }
+        moments[l] = acc / starts.len() as f64;
     }
     (moments, walks)
 }

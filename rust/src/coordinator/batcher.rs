@@ -19,6 +19,11 @@
 //! submissions shaped like the AOT artifact (B = 64 query rows, M = 1024
 //! packed data rows), which `MultiLevelKde::query_points_multi` then
 //! executes through one `KernelBackend::sums_ranged` dispatch each.
+//! [`plan_level_fusion_adaptive`] is its cross-level extension: identical
+//! invariants, but segments are admitted largest-first so that groups from
+//! *different tree levels* (the frontier-batched walk engine's shape, with
+//! per-level row counts far below B) share padded submissions instead of
+//! closing one at every level boundary.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
@@ -74,11 +79,57 @@ pub fn plan_level_fusion(
     max_rows: usize,
     max_data_rows: usize,
 ) -> Vec<FuseSubmission> {
+    let order: Vec<usize> = (0..jobs.len()).collect();
+    plan_greedy(jobs, &order, max_rows, max_data_rows)
+}
+
+/// Cross-level variant of [`plan_level_fusion`] — the adaptive planner the
+/// frontier-batched walk engine runs on.
+///
+/// Same packing rules and invariants (rows never split, segments packed
+/// once per submission, row/data caps, oversize-alone), but jobs are
+/// admitted in order of **decreasing segment size** (ties by job index,
+/// deterministic) instead of input order. When the jobs of one
+/// `query_points_multi` call come from *several tree levels* — the
+/// frontier walk engine's shape, where W < B walkers sit at different
+/// depths of interleaved descents — input order alternates large
+/// (shallow-node) and small (deep-node) segments, and the in-order greedy
+/// closes a submission at nearly every boundary. Sorting clusters the
+/// small deep-level segments so they share padded submissions: in the
+/// tiny-walker regime (per-level row counts below B = 64) a whole mixed-
+/// level frontier round packs into O(ceil(rows / B) + ceil(data / M))
+/// submissions instead of one per level.
+///
+/// Values are unaffected by the ordering: every row accumulates its own
+/// segment range with its own f64 accumulator, so fused answers stay
+/// bit-identical to [`plan_level_fusion`]'s regardless of which rows
+/// share a submission.
+pub fn plan_level_fusion_adaptive(
+    jobs: &[FuseJob],
+    max_rows: usize,
+    max_data_rows: usize,
+) -> Vec<FuseSubmission> {
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&j| (std::cmp::Reverse(jobs[j].seg_rows), j));
+    plan_greedy(jobs, &order, max_rows, max_data_rows)
+}
+
+/// Greedy packing core shared by the in-order and adaptive planners:
+/// consume jobs in `order`, close a submission at `max_rows` query rows or
+/// when admitting a new segment would exceed `max_data_rows` (an oversize
+/// segment is still admitted alone — the backend tiles internally).
+fn plan_greedy(
+    jobs: &[FuseJob],
+    order: &[usize],
+    max_rows: usize,
+    max_data_rows: usize,
+) -> Vec<FuseSubmission> {
     assert!(max_rows >= 1 && max_data_rows >= 1);
     let mut subs: Vec<FuseSubmission> = Vec::new();
     let mut cur = FuseSubmission::default();
     let mut cur_data = 0usize;
-    for (j, job) in jobs.iter().enumerate() {
+    for &j in order {
+        let job = &jobs[j];
         for r in 0..job.rows {
             if cur.rows.len() == max_rows {
                 subs.push(std::mem::take(&mut cur));
@@ -501,6 +552,25 @@ mod tests {
     /// excepted).
     fn check_plan(jobs: &[FuseJob], max_rows: usize, max_data: usize) -> Vec<FuseSubmission> {
         let plan = plan_level_fusion(jobs, max_rows, max_data);
+        verify_plan(plan, jobs, max_rows, max_data)
+    }
+
+    /// Same invariants for the adaptive (segment-size-sorted) planner.
+    fn check_plan_adaptive(
+        jobs: &[FuseJob],
+        max_rows: usize,
+        max_data: usize,
+    ) -> Vec<FuseSubmission> {
+        let plan = plan_level_fusion_adaptive(jobs, max_rows, max_data);
+        verify_plan(plan, jobs, max_rows, max_data)
+    }
+
+    fn verify_plan(
+        plan: Vec<FuseSubmission>,
+        jobs: &[FuseJob],
+        max_rows: usize,
+        max_data: usize,
+    ) -> Vec<FuseSubmission> {
         let mut seen = std::collections::HashSet::new();
         for sub in &plan {
             assert!(!sub.rows.is_empty());
@@ -583,6 +653,53 @@ mod tests {
                 .map(|_| job(rng.below(100), 1 + rng.below(2000)))
                 .collect();
             check_plan(&jobs, 64, 1024);
+        });
+    }
+
+    #[test]
+    fn adaptive_planner_packs_mixed_level_jobs_tighter() {
+        // A frontier-walk shape: small deep-level segments interleaved
+        // with large shallow-level ones. In-order greedy closes a
+        // submission at nearly every large/small boundary; the adaptive
+        // planner clusters the small segments into shared submissions.
+        let jobs: Vec<FuseJob> = vec![
+            job(2, 1000),
+            job(2, 30),
+            job(2, 1000),
+            job(2, 30),
+            job(2, 1000),
+            job(2, 30),
+            job(2, 1000),
+            job(2, 30),
+        ];
+        // In-order: 1000 + 30 > 1024 closes at every boundary -> 8 subs.
+        let in_order = check_plan(&jobs, 64, 1024);
+        assert_eq!(in_order.len(), 8);
+        // Adaptive: the four 1000-row segments go alone, the four 30-row
+        // segments share one submission.
+        let adaptive = check_plan_adaptive(&jobs, 64, 1024);
+        assert_eq!(adaptive.len(), 5);
+    }
+
+    #[test]
+    fn adaptive_planner_tiny_walker_regime_is_one_submission() {
+        // Per-level row counts far below B across many levels: everything
+        // fits one padded submission when the data budget allows.
+        let jobs: Vec<FuseJob> = (0..10).map(|l| job(2, 1 << (9 - l).min(6))).collect();
+        let plan = check_plan_adaptive(&jobs, 64, 1024);
+        assert_eq!(plan.len(), 1, "tiny mixed-level frontier packs into one");
+        assert_eq!(plan[0].rows.len(), 20);
+    }
+
+    #[test]
+    fn adaptive_planner_ragged_property() {
+        // Random ragged job mixes keep every invariant under the sorted
+        // admission order too (rows never lost/split, caps hold).
+        crate::util::prop::forall(12, |rng, _| {
+            let jobs: Vec<FuseJob> = (0..1 + rng.below(20))
+                .map(|_| job(rng.below(100), 1 + rng.below(2000)))
+                .collect();
+            check_plan_adaptive(&jobs, 64, 1024);
         });
     }
 

@@ -19,14 +19,18 @@
 //! `Arc<dyn Kde>` oracles (`start_with_oracles`): raw datasets served
 //! exactly (`start`), sampling/HBE estimators, or multi-level-tree nodes.
 //!
-//! The module also hosts the offline pipeline's level-fusion planner
-//! ([`plan_level_fusion`]): the same B = 64 packing discipline, applied to
-//! whole tree levels instead of request queues.
+//! The module also hosts the offline pipeline's level-fusion planners
+//! ([`plan_level_fusion`] and its cross-level extension
+//! [`plan_level_fusion_adaptive`], which admits segments largest-first so
+//! the frontier walk engine's mixed-level rounds share submissions): the
+//! same B = 64 packing discipline, applied to whole tree levels instead of
+//! request queues.
 
 pub mod batcher;
 pub mod metrics;
 
 pub use batcher::{
-    plan_level_fusion, BatcherConfig, FuseJob, FuseSubmission, KdeService, QueryRequest,
+    plan_level_fusion, plan_level_fusion_adaptive, BatcherConfig, FuseJob, FuseSubmission,
+    KdeService, QueryRequest,
 };
 pub use metrics::ServiceMetrics;

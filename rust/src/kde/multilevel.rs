@@ -22,10 +22,12 @@
 //! [`MultiLevelKde::query_points_multi`] is the *level-fused* entry the
 //! level-order walkers use: it coalesces the cache misses of **several
 //! nodes'** query groups into shared padded submissions (planned by
-//! [`plan_level_fusion`](crate::coordinator::batcher::plan_level_fusion),
-//! executed by `KernelBackend::sums_ranged` — one dispatch per B=64-row
-//! submission, each node's data packed as one segment with per-row
-//! ranges). That is what makes a whole sparsifier round cost O(log n)
+//! [`plan_level_fusion_adaptive`](crate::coordinator::batcher::plan_level_fusion_adaptive),
+//! which admits segments largest-first so that groups from *different
+//! tree levels* — the frontier-batched walk engine's shape — share
+//! submissions too; executed by `KernelBackend::sums_ranged` — one
+//! dispatch per B=64-row submission, each node's data packed as one
+//! segment with per-row ranges). That is what makes a whole sparsifier round cost O(log n)
 //! backend executions instead of one per tree node touched (pinned by
 //! `tests/fusion.rs`); oracles without a [`FusedView`] (HBE, partition
 //! tree) fall back to their own `query_batch`, one dispatch per group.
@@ -35,7 +37,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::util::fxhash::FxHashMap;
 
-use crate::coordinator::batcher::{plan_level_fusion, FuseJob};
+use crate::coordinator::batcher::{plan_level_fusion_adaptive, FuseJob};
 use crate::kde::hbe::HbeKde;
 use crate::kde::{EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
 use crate::kernel::{Dataset, Kernel};
@@ -390,7 +392,7 @@ impl MultiLevelKde {
             // Fused misses bypass the oracles, so record their query count
             // here (exactly what the oracles' query_batch would record).
             self.counters.record_queries(jobs.iter().map(|j| j.rows as u64).sum());
-            for sub in plan_level_fusion(&jobs, AOT_B, AOT_M) {
+            for sub in plan_level_fusion_adaptive(&jobs, AOT_B, AOT_M) {
                 // Pack each segment once, remembering its row range. A
                 // single-segment submission (every row from one node —
                 // e.g. each chunk of the root degree scan) borrows the

@@ -303,8 +303,16 @@ fn cmd_lra(a: &Args) {
         &mut rng,
     );
     println!(
-        "n={} rank={} sampled_rows={} kde_queries={} kernel_evals={} floats_stored={}",
-        ds.n, rank, r.sampled_rows, r.kde_queries, r.kernel_evals, r.floats_stored
+        "n={} rank_requested={} rank_achieved={} sampled_rows={} peak_block_rows={} \
+         kde_queries={} kernel_evals={} floats_stored={}",
+        ds.n,
+        rank,
+        r.rank,
+        r.sampled_rows,
+        r.peak_block_rows,
+        r.kde_queries,
+        r.kernel_evals,
+        r.floats_stored
     );
     if a.bool("check") {
         let kmat = apps::lra::materialize_kernel_matrix(&ds, kernel);

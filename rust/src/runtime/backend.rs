@@ -77,6 +77,62 @@ pub trait KernelBackend: Send + Sync {
         out
     }
 
+    /// Fused multi-range dense block — the LRA row-construction primitive
+    /// (`block`'s counterpart to [`sums_ranged`](Self::sums_ranged)):
+    /// query row `q` contributes the `hi - lo` values
+    /// `k(queries[q], data[j])` for `j in ranges[q].0 .. ranges[q].1`,
+    /// concatenated in row order into one ragged buffer. Row `q`'s values
+    /// start at `sum_{p < q} (ranges[p].1 - ranges[p].0)`.
+    ///
+    /// Contract:
+    /// * `ranges.len() == queries.len() / d`; each `(lo, hi)` is in row
+    ///   units with `lo <= hi <= data.len() / d`; `lo == hi` contributes
+    ///   nothing.
+    /// * Every value equals the one a plain [`block`](Self::block) call
+    ///   over the row's sub-slice produces, **bit for bit** — block
+    ///   entries are pure per-pair functions, so chunked LRA row
+    ///   construction reproduces the monolithic `s x n` call exactly
+    ///   (pinned in `apps/lra.rs` tests).
+    /// * A backend that implements this natively counts the whole call as
+    ///   ONE dispatch in [`calls`](Self::calls). The provided
+    ///   implementation falls back to one [`block`](Self::block) call per
+    ///   run of consecutive rows sharing a range — correct for any
+    ///   third-party backend, without the single-dispatch accounting.
+    fn block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f32> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        assert_eq!(ranges.len(), b, "one range per query row");
+        let mut total = 0usize;
+        for &(lo, hi) in ranges {
+            assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+            total += hi - lo;
+        }
+        let mut out = Vec::with_capacity(total);
+        let mut q0 = 0usize;
+        while q0 < b {
+            let (lo, hi) = ranges[q0];
+            let mut q1 = q0 + 1;
+            while q1 < b && ranges[q1] == (lo, hi) {
+                q1 += 1;
+            }
+            if hi > lo {
+                let part =
+                    self.block(kernel, &queries[q0 * d..q1 * d], &data[lo * d..hi * d], d);
+                out.extend_from_slice(&part);
+            }
+            q0 = q1;
+        }
+        out
+    }
+
     /// Logical kernel evaluations performed so far (b*m per call).
     fn kernel_evals(&self) -> u64;
 
@@ -188,6 +244,38 @@ impl KernelBackend for CpuBackend {
         out
     }
 
+    fn block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f32> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        assert_eq!(ranges.len(), b, "one range per query row");
+        // One dispatch for the whole fused submission.
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut pairs = 0u64;
+        let mut total = 0usize;
+        for &(lo, hi) in ranges {
+            assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+            total += hi - lo;
+        }
+        let mut out = Vec::with_capacity(total);
+        for (qi, q) in queries.chunks_exact(d).enumerate() {
+            let (lo, hi) = ranges[qi];
+            pairs += (hi - lo) as u64;
+            for x in data[lo * d..hi * d].chunks_exact(d) {
+                out.push(kernel.eval(q, x));
+            }
+        }
+        self.evals.fetch_add(pairs, Ordering::Relaxed);
+        out
+    }
+
     fn kernel_evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
     }
@@ -292,6 +380,62 @@ mod tests {
     }
 
     #[test]
+    fn block_ranged_matches_per_row_block_bitwise() {
+        forall(16, |rng, _| {
+            let d = 1 + rng.below(8);
+            let m = 2 + rng.below(48);
+            let b = 1 + rng.below(6);
+            let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+            let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+            let ranges: Vec<(usize, usize)> = (0..b)
+                .map(|_| {
+                    let lo = rng.below(m);
+                    let hi = lo + rng.below(m - lo + 1);
+                    (lo, hi)
+                })
+                .collect();
+            let be = CpuBackend::new();
+            for k in ALL_KERNELS {
+                let fused = be.block_ranged(k, &queries, &data, d, &ranges);
+                let total: usize = ranges.iter().map(|&(lo, hi)| hi - lo).sum();
+                assert_eq!(fused.len(), total);
+                let mut off = 0usize;
+                for (q, &(lo, hi)) in ranges.iter().enumerate() {
+                    if hi > lo {
+                        let want = be.block(
+                            k,
+                            &queries[q * d..(q + 1) * d],
+                            &data[lo * d..hi * d],
+                            d,
+                        );
+                        for (j, w) in want.iter().enumerate() {
+                            assert_eq!(
+                                fused[off + j].to_bits(),
+                                w.to_bits(),
+                                "{:?} row {q} col {j}",
+                                k
+                            );
+                        }
+                        off += hi - lo;
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn block_ranged_counts_one_call_and_ranged_pairs() {
+        let be = CpuBackend::new();
+        let q = vec![0.0f32; 3 * 2]; // b=3, d=2
+        let x = vec![0.5f32; 5 * 2]; // m=5
+        let ranges = [(0usize, 5usize), (1, 3), (4, 4)];
+        let out = be.block_ranged(Kernel::Gaussian, &q, &x, 2, &ranges);
+        assert_eq!(out.len(), 5 + 2);
+        assert_eq!(be.calls(), 1, "a fused block submission is one dispatch");
+        assert_eq!(be.kernel_evals(), 5 + 2, "empty range costs nothing");
+    }
+
+    #[test]
     fn default_sums_ranged_impl_is_correct() {
         // A minimal backend that only provides the required methods, to
         // exercise the trait's provided `sums_ranged` (the path third-party
@@ -325,6 +469,14 @@ mod tests {
             let want = native.sums_ranged(k, &queries, &data, d, &ranges);
             for (g, w) in got.iter().zip(&want) {
                 assert_eq!(g.to_bits(), w.to_bits(), "{:?}", k);
+            }
+            // The provided block_ranged (grouped-rows fallback) must also
+            // reproduce the native ragged block bit for bit.
+            let got_b = be.block_ranged(k, &queries, &data, d, &ranges);
+            let want_b = native.block_ranged(k, &queries, &data, d, &ranges);
+            assert_eq!(got_b.len(), want_b.len());
+            for (g, w) in got_b.iter().zip(&want_b) {
+                assert_eq!(g.to_bits(), w.to_bits(), "{:?} block_ranged", k);
             }
         }
     }

@@ -21,7 +21,11 @@
 //!   each node's data packed as one segment of the M-row input. Grid
 //!   cells (query chunk x data tile) where every row's clamped range is
 //!   empty are skipped entirely, so a well-packed level costs O(1)
-//!   executions instead of one per node.
+//!   executions instead of one per node;
+//! * the fused block entry (`block_ranged`) executes the
+//!   `kde_block_ranged_*` artifacts the same way — per-row ranges, dead
+//!   grid cells skipped — and scatters each row's masked (B, M) slice
+//!   into the ragged output the LRA row-construction path consumes.
 //!
 //! The engine itself is gated behind the `xla` cargo feature because the
 //! *real* `xla` crate only exists in the internal offline registry.
@@ -89,6 +93,9 @@ mod engine {
         Block(Kernel),
         /// Per-row range-masked sums: the level-fusion artifact.
         SumsRanged(Kernel),
+        /// Per-row range-masked dense block: the LRA row-construction
+        /// artifact (entries outside a row's range are exactly 0.0).
+        BlockRanged(Kernel),
     }
 
     impl Entry {
@@ -97,6 +104,7 @@ mod engine {
                 Entry::Sums(k) => format!("kde_sums_{}", k.name()),
                 Entry::Block(k) => format!("kernel_block_{}", k.name()),
                 Entry::SumsRanged(k) => format!("kde_sums_ranged_{}", k.name()),
+                Entry::BlockRanged(k) => format!("kde_block_ranged_{}", k.name()),
             }
         }
     }
@@ -180,14 +188,17 @@ mod engine {
             Ok(out.to_vec::<f32>()?)
         }
 
-        /// Execute the range-masked sums artifact on one padded (B, M)
-        /// tile: `out[q] = sum_{j in [lo[q], hi[q])} k(queries[q], data[j])`
-        /// with `lo`/`hi` in tile-local row units. Padding rows get the
-        /// empty range `[0, 0)` and FAR data rows sit outside every live
-        /// range, so neither perturbs the sums.
+        /// Execute a range-masked artifact (`SumsRanged` or `BlockRanged`)
+        /// on one padded (B, M) tile with per-row `[lo, hi)` ranges in
+        /// tile-local row units: sums yield
+        /// `out[q] = sum_{j in [lo[q], hi[q])} k(queries[q], data[j])`,
+        /// blocks yield the (B, M) kernel values with entries outside a
+        /// row's range masked to exactly 0.0. Padding rows get the empty
+        /// range `[0, 0)` and FAR data rows sit outside every live range,
+        /// so neither perturbs the output.
         fn run_entry_ranged(
             &self,
-            kernel: Kernel,
+            entry: Entry,
             queries: &[f32],
             data: &[f32],
             lo: &[i32],
@@ -198,7 +209,7 @@ mod engine {
             debug_assert_eq!(lo.len(), AOT_B);
             debug_assert_eq!(hi.len(), AOT_B);
             let mut exes = self.exes.lock().unwrap();
-            let exe = self.ensure_compiled(&mut exes, Entry::SumsRanged(kernel))?;
+            let exe = self.ensure_compiled(&mut exes, entry)?;
             let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
             let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
             let lo_l = xla::Literal::vec1(lo);
@@ -342,10 +353,83 @@ mod engine {
                     let xpad = pad(xchunk, mx, d, AOT_M, FAR);
                     let sums = self
                         .engine
-                        .run_entry_ranged(kernel, &qpad, &xpad, &lo_v, &hi_v)
+                        .run_entry_ranged(Entry::SumsRanged(kernel), &qpad, &xpad, &lo_v, &hi_v)
                         .expect("PJRT execution failed");
                     for q in 0..bq {
                         out[qc * AOT_B + q] += sums[q] as f64;
+                    }
+                }
+            }
+            out
+        }
+
+        fn block_ranged(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            d: usize,
+            ranges: &[(usize, usize)],
+        ) -> Vec<f32> {
+            assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
+            assert!(queries.len() % d == 0 && data.len() % d == 0);
+            let b = queries.len() / d;
+            let m = data.len() / d;
+            assert_eq!(ranges.len(), b, "one range per query row");
+            // Per-row offsets into the ragged output concatenation.
+            let mut offsets = Vec::with_capacity(b + 1);
+            let mut total = 0usize;
+            offsets.push(0usize);
+            for &(lo, hi) in ranges {
+                assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+                total += hi - lo;
+                offsets.push(total);
+            }
+            self.evals.fetch_add(total as u64, Ordering::Relaxed);
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            let mut out = vec![0.0f32; total];
+            for (qc, qchunk) in queries.chunks(AOT_B * d).enumerate() {
+                let bq = qchunk.len() / d;
+                let qpad = pad(qchunk, bq, d, AOT_B, 0.0);
+                for (xc, xchunk) in data.chunks(AOT_M * d).enumerate() {
+                    let mx = xchunk.len() / d;
+                    let base = xc * AOT_M;
+                    // Clamp every row's range to this data tile; skip dead
+                    // grid cells entirely (the block-diagonal win).
+                    let mut lo_v = [0i32; AOT_B];
+                    let mut hi_v = [0i32; AOT_B];
+                    let mut live = false;
+                    for q in 0..bq {
+                        let (lo, hi) = ranges[qc * AOT_B + q];
+                        let lo_c = lo.saturating_sub(base).min(mx);
+                        let hi_c = hi.saturating_sub(base).min(mx);
+                        if hi_c > lo_c {
+                            lo_v[q] = lo_c as i32;
+                            hi_v[q] = hi_c as i32;
+                            live = true;
+                        }
+                    }
+                    if !live {
+                        continue;
+                    }
+                    let xpad = pad(xchunk, mx, d, AOT_M, FAR);
+                    let blk = self
+                        .engine
+                        .run_entry_ranged(Entry::BlockRanged(kernel), &qpad, &xpad, &lo_v, &hi_v)
+                        .expect("PJRT execution failed");
+                    // Scatter each row's live tile-local slice into its
+                    // ragged output segment.
+                    for q in 0..bq {
+                        let (lo_c, hi_c) = (lo_v[q] as usize, hi_v[q] as usize);
+                        if hi_c <= lo_c {
+                            continue;
+                        }
+                        let row = qc * AOT_B + q;
+                        let (lo, _) = ranges[row];
+                        let dst0 = offsets[row] + base + lo_c - lo;
+                        for k in 0..hi_c - lo_c {
+                            out[dst0 + k] = blk[q * AOT_M + lo_c + k];
+                        }
                     }
                 }
             }
@@ -450,6 +534,17 @@ mod stub {
             _d: usize,
             _ranges: &[(usize, usize)],
         ) -> Vec<f64> {
+            unreachable!("PjrtBackend cannot be constructed without the `xla` feature")
+        }
+
+        fn block_ranged(
+            &self,
+            _kernel: Kernel,
+            _queries: &[f32],
+            _data: &[f32],
+            _d: usize,
+            _ranges: &[(usize, usize)],
+        ) -> Vec<f32> {
             unreachable!("PjrtBackend cannot be constructed without the `xla` feature")
         }
 

@@ -407,6 +407,91 @@ impl KernelBackend for TiledBackend {
         out
     }
 
+    fn block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f32> {
+        assert!(d > 0 && queries.len() % d == 0 && data.len() % d == 0);
+        let b = queries.len() / d;
+        let m = data.len() / d;
+        assert_eq!(ranges.len(), b, "one range per query row");
+        // One dispatch for the whole fused submission; per-row output
+        // offsets into the ragged concatenation.
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut offsets = Vec::with_capacity(b + 1);
+        let mut total = 0usize;
+        offsets.push(0usize);
+        for &(lo, hi) in ranges {
+            assert!(lo <= hi && hi <= m, "range ({lo}, {hi}) out of bounds for m={m}");
+            total += hi - lo;
+            offsets.push(total);
+        }
+        let mut out = vec![0.0f32; total];
+        if b == 0 || total == 0 {
+            return out;
+        }
+        let l2 = kernel != Kernel::Laplacian;
+        let mk = self.mk;
+        let qn = if l2 { row_sq_norms(mk, queries, d) } else { Vec::new() };
+        let xn = if l2 { row_sq_norms(mk, data, d) } else { Vec::new() };
+        let qn_s: &[f32] = &qn;
+        let xn_s: &[f32] = &xn;
+        let evals = &self.evals;
+        let offsets_s: &[usize] = &offsets;
+        // Runs of consecutive rows sharing a range (the planner keeps a
+        // chunk's rows adjacent) evaluate as ONE multi-row block_rows call
+        // with the run's range length as the output row stride; each value
+        // is a pure per-pair function, so the ragged block is bit-identical
+        // to per-row `block` calls for any worker count.
+        let run_rows = |row0: usize, row1: usize, out_chunk: &mut [f32]| {
+            let base = offsets_s[row0];
+            let mut pairs = 0u64;
+            let mut k = row0;
+            while k < row1 {
+                let (lo, hi) = ranges[k];
+                let mut k1 = k + 1;
+                while k1 < row1 && ranges[k1] == (lo, hi) {
+                    k1 += 1;
+                }
+                if hi > lo {
+                    let m_run = hi - lo;
+                    pairs += ((k1 - k) * m_run) as u64;
+                    let q = &queries[k * d..k1 * d];
+                    let qn_run = if l2 { &qn_s[k..k1] } else { qn_s };
+                    let xn_run = if l2 { &xn_s[lo..hi] } else { xn_s };
+                    let dst = &mut out_chunk[offsets_s[k] - base..offsets_s[k1] - base];
+                    block_rows(mk, kernel, q, &data[lo * d..hi * d], d, qn_run, xn_run, dst, m_run);
+                }
+                k = k1;
+            }
+            evals.fetch_add(pairs, Ordering::Relaxed);
+        };
+        if self.threads == 1 || b == 1 {
+            run_rows(0, b, &mut out);
+        } else {
+            // Query split over disjoint ragged output chunks.
+            let chunk_rows = (b + self.threads - 1) / self.threads;
+            std::thread::scope(|s| {
+                let run = &run_rows;
+                let mut rest: &mut [f32] = &mut out;
+                let mut r0 = 0usize;
+                while r0 < b {
+                    let r1 = (r0 + chunk_rows).min(b);
+                    let len = offsets_s[r1] - offsets_s[r0];
+                    let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                    rest = tail;
+                    s.spawn(move || run(r0, r1, chunk));
+                    r0 = r1;
+                }
+            });
+        }
+        out
+    }
+
     fn kernel_evals(&self) -> u64 {
         self.evals.load(Ordering::Relaxed)
     }
@@ -568,6 +653,57 @@ mod tests {
                 assert_eq!(f1[q].to_bits(), f4[q].to_bits(), "{:?} thread-dependent", k);
             }
         }
+    }
+
+    #[test]
+    fn block_ranged_matches_unfused_block_bitwise() {
+        // Every fused row must reproduce the per-row `block` dispatch over
+        // its sub-slice bit for bit, independent of the worker count.
+        let mut rng = Rng::new(821);
+        let (b, m, d) = (7usize, 300usize, 11usize);
+        let queries = rand_buf(&mut rng, b * d, 1.0);
+        let data = rand_buf(&mut rng, m * d, 1.0);
+        // Ranges straddling DTILE boundaries, plus empty/full ranges and
+        // an equal-range run (rows 1-2).
+        let ranges: [(usize, usize); 7] =
+            [(0, 300), (0, 128), (0, 128), (5, 5), (127, 129), (250, 300), (0, 1)];
+        let t1 = TiledBackend::with_threads(1);
+        let t4 = TiledBackend::with_threads(4);
+        for k in ALL_KERNELS {
+            let f1 = t1.block_ranged(k, &queries, &data, d, &ranges);
+            let f4 = t4.block_ranged(k, &queries, &data, d, &ranges);
+            assert_eq!(f1.len(), f4.len());
+            let mut off = 0usize;
+            for (q, &(lo, hi)) in ranges.iter().enumerate() {
+                if hi == lo {
+                    continue;
+                }
+                let want = t1.block(k, &queries[q * d..(q + 1) * d], &data[lo * d..hi * d], d);
+                for (j, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        f1[off + j].to_bits(),
+                        w.to_bits(),
+                        "{:?} row {q} col {j}: fused {} vs block {w}",
+                        k,
+                        f1[off + j]
+                    );
+                    assert_eq!(f1[off + j].to_bits(), f4[off + j].to_bits(), "{:?} threads", k);
+                }
+                off += hi - lo;
+            }
+            assert_eq!(off, f1.len());
+        }
+    }
+
+    #[test]
+    fn block_ranged_counters() {
+        let be = TiledBackend::with_threads(2);
+        let q = vec![0.0f32; 3 * 2];
+        let x = vec![0.5f32; 5 * 2];
+        let out = be.block_ranged(Kernel::Gaussian, &q, &x, 2, &[(0, 5), (1, 3), (4, 4)]);
+        assert_eq!(out.len(), 7);
+        assert_eq!(be.calls(), 1, "a fused block submission is one dispatch");
+        assert_eq!(be.kernel_evals(), 7, "pairs fold across workers");
     }
 
     #[test]

@@ -35,7 +35,11 @@
 //!   (asserted in tests/fusion.rs). Each walker draws from its own forked
 //!   RNG stream, so a batched round produces *exactly* the samples the
 //!   sequential path produces from the same forked streams (verified in
-//!   tests/batched_pipeline.rs).
+//!   tests/batched_pipeline.rs). The frontier-batched walk engine
+//!   (`RandomWalker::walk_batch`) drives the same descent primitives
+//!   (`branch`, `leaf_finish`, `side_mass_value`) with *persistent*
+//!   per-walker streams across T steps, coalescing every round's queries
+//!   across whatever mix of tree levels its walkers occupy.
 
 use std::sync::Arc;
 
@@ -62,12 +66,15 @@ impl NeighborSampler {
     }
 
     /// Node size at which the descent switches to the categorical finish.
-    fn finish_size(&self) -> usize {
+    /// `pub(crate)` so the frontier-batched walk engine
+    /// (`RandomWalker::walk_batch`) can drive the same descent primitives
+    /// level by level.
+    pub(crate) fn finish_size(&self) -> usize {
         self.tree.leaf_cutoff().max(1)
     }
 
     /// Self-exclude and clamp a raw node answer for source `i`.
-    fn side_mass_value(&self, id: usize, i: usize, raw: f64) -> f64 {
+    pub(crate) fn side_mass_value(&self, id: usize, i: usize, raw: f64) -> f64 {
         let n = self.tree.node(id);
         let mut v = raw;
         if n.lo <= i && i < n.hi {
@@ -81,10 +88,10 @@ impl NeighborSampler {
         self.side_mass_value(id, i, self.tree.query_point(id, i))
     }
 
-    /// One branching step shared by the sequential and batched descents:
-    /// child masses `a`/`b` -> (chosen child, branch probability). `None`
-    /// only if both subtrees are empty of candidates.
-    fn branch(
+    /// One branching step shared by the sequential, batched and frontier
+    /// descents: child masses `a`/`b` -> (chosen child, branch
+    /// probability). `None` only if both subtrees are empty of candidates.
+    pub(crate) fn branch(
         &self,
         l: usize,
         r: usize,
@@ -141,7 +148,7 @@ impl NeighborSampler {
     /// range (excluding `i`) with `Pr[j] = k(x_i, x_j) / mass`, returning
     /// `(j, that factor)`. The node's subtree oracles are exact, so this
     /// equals the distribution of descending the remaining levels.
-    fn leaf_finish(&self, id: usize, i: usize, rng: &mut Rng) -> Option<(usize, f64)> {
+    pub(crate) fn leaf_finish(&self, id: usize, i: usize, rng: &mut Rng) -> Option<(usize, f64)> {
         let node = self.tree.node(id);
         let mass = self.leaf_mass(id, i);
         if mass <= 0.0 {

@@ -3,16 +3,67 @@
 //! A T-step walk is T sequential neighbor samples; each step costs
 //! O(log n) KDE queries (cache-cold) and the endpoint distribution is
 //! within O(T eps) TV of the true walk distribution.
+//!
+//! Two evaluation shapes:
+//!
+//! * **Sequential** ([`RandomWalker::walk`] / [`RandomWalker::trajectory`]):
+//!   one descent at a time, each resolved through the memoized tree —
+//!   O(log n) dispatches per cache-cold step. Both paths advance through
+//!   one shared step function, so an `exact()` walker's trajectory applies
+//!   the same Theorem 4.12 rejection correction its endpoints do.
+//! * **Frontier-batched** ([`RandomWalker::walk_batch`] /
+//!   [`RandomWalker::trajectory_batch`]): all W walkers advance in
+//!   lockstep rounds. Every round groups the frontier's walkers by their
+//!   current descent node and resolves the *whole* round's child answers
+//!   in one [`MultiLevelKde`](crate::kde::multilevel::MultiLevelKde)
+//!   `query_points_multi` call, so the misses of every node the frontier
+//!   touches — across tree levels, once walkers desync through ragged
+//!   leaf-finish depths or exact-mode rejections — coalesce into shared
+//!   fused `sums_ranged` submissions (planned by
+//!   `plan_level_fusion_adaptive`, which packs mixed-level segments
+//!   largest-first). A W-walker, T-step batch therefore costs
+//!   O(T · log n · ceil(distinct_sources / B)) backend executions instead
+//!   of the sequential O(W · T · log n), and cache warm-up drives late
+//!   rounds toward zero dispatches (pinned in `tests/fusion.rs`).
+//!
+//! Each frontier walker draws from its own RNG stream forked off the
+//! caller's `rng` in `starts` order, so a batch reproduces — **bit for
+//! bit** — the endpoints the sequential walker produces from the same
+//! forked streams (oracle answers are deterministic and memoized), while
+//! the *distribution* is identical to walking with any stream.
 
 use std::sync::Arc;
 
 use crate::sampling::neighbor::NeighborSampler;
 use crate::util::rng::Rng;
 
+/// Rejection proposals an exact-mode step attempts before falling back to
+/// the plain descent sample (Theorem 4.12's `O(1)` expected rounds).
+const EXACT_PROPOSALS: usize = 16;
+
 pub struct RandomWalker {
     pub neighbors: Arc<NeighborSampler>,
     /// If true, apply Theorem 4.12's rejection correction at every step.
     pub exact_steps: bool,
+}
+
+/// One walker's in-flight state in the frontier engine: which vertex it
+/// stands on, how many steps remain, and where its current descent is.
+struct Frontier {
+    /// Current vertex (the descent source).
+    pos: usize,
+    /// Walk steps still to take (including the one in flight).
+    steps_left: usize,
+    /// Current node of the in-flight descent.
+    node: usize,
+    /// Accumulated branch probability of the in-flight descent.
+    prob: f64,
+    /// Accept-tested proposals spent on the in-flight step (exact mode).
+    proposals_used: usize,
+    /// This walker's private stream (forked from the caller's in order).
+    rng: Rng,
+    /// Recorded trajectory (`Some` only for `trajectory_batch`).
+    path: Option<Vec<usize>>,
 }
 
 impl RandomWalker {
@@ -24,37 +75,270 @@ impl RandomWalker {
         RandomWalker { neighbors, exact_steps: true }
     }
 
+    /// One walk step from `v`: the exact (rejection-corrected) or plain
+    /// neighbor sample, shared by `walk` AND `trajectory` so both honor
+    /// `exact_steps`. A `None` from the sampler (degenerate n <= 1, or an
+    /// all-zero-mass leaf) leaves the walker in place.
+    fn step(&self, v: usize, rng: &mut Rng) -> usize {
+        if self.exact_steps {
+            match self.neighbors.sample_exact(v, rng, EXACT_PROPOSALS) {
+                Some((j, _)) => j,
+                None => v,
+            }
+        } else {
+            match self.neighbors.sample(v, rng) {
+                Some(s) => s.neighbor,
+                None => v,
+            }
+        }
+    }
+
     /// Run a `t`-step walk from `start`; returns the endpoint.
     pub fn walk(&self, start: usize, t: usize, rng: &mut Rng) -> usize {
         let mut v = start;
         for _ in 0..t {
-            v = if self.exact_steps {
-                match self.neighbors.sample_exact(v, rng, 16) {
-                    Some((j, _)) => j,
-                    None => v,
-                }
-            } else {
-                match self.neighbors.sample(v, rng) {
-                    Some(s) => s.neighbor,
-                    None => v,
-                }
-            };
+            v = self.step(v, rng);
         }
         v
     }
 
     /// Run a walk and return the full trajectory including the start.
+    /// Routes through the same step function as [`walk`](Self::walk), so
+    /// an `exact()` walker records rejection-corrected positions.
     pub fn trajectory(&self, start: usize, t: usize, rng: &mut Rng) -> Vec<usize> {
         let mut path = Vec::with_capacity(t + 1);
         let mut v = start;
         path.push(v);
         for _ in 0..t {
-            if let Some(s) = self.neighbors.sample(v, rng) {
-                v = s.neighbor;
-            }
+            v = self.step(v, rng);
             path.push(v);
         }
         path
+    }
+
+    /// Frontier-batched [`walk`](Self::walk): advance all `starts.len()`
+    /// walkers in lockstep, resolving every round's neighbor-descent
+    /// queries through one fused multi-group tree call. Returns the
+    /// endpoints in `starts` order.
+    ///
+    /// Walker `k` draws from the `k`-th stream forked off `rng`, so the
+    /// result equals calling `walk(starts[k], t, &mut fork_k)`
+    /// sequentially with those forks — bit for bit, since oracle answers
+    /// are deterministic and memoized — while the whole batch's backend
+    /// dispatches collapse into O(per-round submissions) instead of one
+    /// descent at a time.
+    pub fn walk_batch(&self, starts: &[usize], t: usize, rng: &mut Rng) -> Vec<usize> {
+        self.run_frontier(starts, t, rng, false)
+            .into_iter()
+            .map(|(end, _)| end)
+            .collect()
+    }
+
+    /// Frontier-batched [`trajectory`](Self::trajectory): full paths
+    /// (start included) for all walkers, same engine and RNG semantics as
+    /// [`walk_batch`](Self::walk_batch).
+    pub fn trajectory_batch(&self, starts: &[usize], t: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+        self.run_frontier(starts, t, rng, true)
+            .into_iter()
+            .map(|(_, path)| path.expect("recording was requested"))
+            .collect()
+    }
+
+    /// The frontier engine: one entry per walker, advanced round by round.
+    /// Each round touches every active walker's current descent node once;
+    /// all of the round's child-mass (and exact-mode denominator) queries
+    /// resolve through ONE `query_points_multi` call whose misses the
+    /// adaptive planner packs into shared padded submissions across
+    /// whatever mix of tree levels the frontier occupies.
+    fn run_frontier(
+        &self,
+        starts: &[usize],
+        t: usize,
+        rng: &mut Rng,
+        record: bool,
+    ) -> Vec<(usize, Option<Vec<usize>>)> {
+        let ns = &self.neighbors;
+        let tree = &ns.tree;
+        let root = tree.root();
+        let mut ws: Vec<Frontier> = starts
+            .iter()
+            .map(|&s| Frontier {
+                pos: s,
+                steps_left: t,
+                node: root,
+                prob: 1.0,
+                proposals_used: 0,
+                rng: rng.fork(),
+                path: if record {
+                    let mut p = Vec::with_capacity(t + 1);
+                    p.push(s);
+                    Some(p)
+                } else {
+                    None
+                },
+            })
+            .collect();
+        let root_node = tree.node(root);
+        if root_node.hi - root_node.lo <= 1 {
+            // Degenerate n <= 1: every sampler call returns None, so every
+            // step stays put (mirrors the sequential paths).
+            for w in &mut ws {
+                if let Some(p) = &mut w.path {
+                    for _ in 0..t {
+                        p.push(w.pos);
+                    }
+                }
+            }
+            return ws.into_iter().map(|w| (w.pos, w.path)).collect();
+        }
+        let finish = ns.finish_size();
+        let mut active: Vec<usize> = if t > 0 { (0..ws.len()).collect() } else { Vec::new() };
+        while !active.is_empty() {
+            // Group the frontier by descent node (deterministic order).
+            active.sort_by_key(|&w| (ws[w].node, w));
+            let mut runs: Vec<(usize, usize, usize)> = Vec::new();
+            let mut a0 = 0usize;
+            while a0 < active.len() {
+                let id = ws[active[a0]].node;
+                let mut a1 = a0;
+                while a1 < active.len() && ws[active[a1]].node == id {
+                    a1 += 1;
+                }
+                runs.push((id, a0, a1));
+                a0 = a1;
+            }
+            // Collect the WHOLE round's query groups — both children of
+            // every internal run, plus the root-mass denominators exact
+            // mode needs — and resolve them in one fused multi call.
+            let mut qgroups: Vec<(usize, Vec<usize>)> = Vec::new();
+            for &(id, a0, a1) in &runs {
+                let srcs: Vec<usize> = active[a0..a1].iter().map(|&w| ws[w].pos).collect();
+                if self.exact_steps && id == root {
+                    qgroups.push((root, srcs.clone()));
+                }
+                let node = tree.node(id);
+                if node.hi - node.lo > finish {
+                    let l = node.left.expect("internal node");
+                    let r = node.right.expect("internal node");
+                    qgroups.push((l, srcs.clone()));
+                    qgroups.push((r, srcs));
+                }
+            }
+            let refs: Vec<(usize, &[usize])> =
+                qgroups.iter().map(|(id, v)| (*id, v.as_slice())).collect();
+            let answers = tree.query_points_multi(&refs);
+            // Advance every walker one level (or finish its step).
+            let mut next: Vec<usize> = Vec::with_capacity(active.len());
+            let mut qi = 0usize;
+            for &(id, a0, a1) in &runs {
+                if self.exact_steps && id == root {
+                    // Denominator group: consumed from the cache at accept
+                    // time; resolving it here kept the round fused.
+                    qi += 1;
+                }
+                let node = tree.node(id);
+                if node.hi - node.lo <= finish {
+                    for &wi in &active[a0..a1] {
+                        let (pos, prob) = (ws[wi].pos, ws[wi].prob);
+                        match ns.leaf_finish(id, pos, &mut ws[wi].rng) {
+                            Some((j, p)) => {
+                                let prop = prob * p;
+                                self.resolve_proposal(&mut ws[wi], j, prop, root, wi, &mut next);
+                            }
+                            None => Self::complete_step(&mut ws[wi], None, root, wi, &mut next),
+                        }
+                    }
+                } else {
+                    let l = node.left.expect("internal node");
+                    let r = node.right.expect("internal node");
+                    let (raw_l, raw_r) = (&answers[qi], &answers[qi + 1]);
+                    qi += 2;
+                    for (gi, &wi) in active[a0..a1].iter().enumerate() {
+                        let i = ws[wi].pos;
+                        let a = ns.side_mass_value(l, i, raw_l[gi]);
+                        let b = ns.side_mass_value(r, i, raw_r[gi]);
+                        match ns.branch(l, r, i, a, b, &mut ws[wi].rng) {
+                            Some((nid, p)) => {
+                                ws[wi].node = nid;
+                                ws[wi].prob *= p;
+                                next.push(wi);
+                            }
+                            None => Self::complete_step(&mut ws[wi], None, root, wi, &mut next),
+                        }
+                    }
+                }
+            }
+            active = next;
+        }
+        ws.into_iter().map(|w| (w.pos, w.path)).collect()
+    }
+
+    /// A completed descent proposed neighbor `j` with full descent
+    /// probability `prob`. Plain mode takes the step; exact mode runs
+    /// Theorem 4.12's accept test (the same draws, in the same stream
+    /// order, as the sequential `sample_exact`), restarting the descent on
+    /// rejection and falling back to an unconditional proposal after
+    /// [`EXACT_PROPOSALS`] rejections.
+    fn resolve_proposal(
+        &self,
+        w: &mut Frontier,
+        j: usize,
+        prob: f64,
+        root: usize,
+        wi: usize,
+        next: &mut Vec<usize>,
+    ) {
+        if !self.exact_steps {
+            Self::complete_step(w, Some(j), root, wi, next);
+            return;
+        }
+        if w.proposals_used < EXACT_PROPOSALS {
+            w.proposals_used += 1;
+            let tree = &self.neighbors.tree;
+            let i = w.pos;
+            // Same normalizer as the sequential path: the memoized root
+            // answer (a cache hit — the round that started this step
+            // resolved it through the fused call), minus the self-term.
+            let denom = (tree.query_point(root, i) - 1.0).max(1e-12);
+            let true_w = tree.kernel.eval(tree.ds.point(i), tree.ds.point(j)) as f64;
+            let ratio = (true_w / denom) / (2.0 * prob);
+            if w.rng.f64() < ratio.min(1.0) {
+                Self::complete_step(w, Some(j), root, wi, next);
+            } else {
+                // Rejected: restart the descent for the same step.
+                w.node = root;
+                w.prob = 1.0;
+                next.push(wi);
+            }
+        } else {
+            // Fallback proposal after EXACT_PROPOSALS rejections: taken
+            // unconditionally, no accept draw (mirrors `sample_exact`).
+            Self::complete_step(w, Some(j), root, wi, next);
+        }
+    }
+
+    /// Finish walker `wi`'s current step at `to` (or in place on `None`),
+    /// record the trajectory point, and re-arm the next step's descent.
+    fn complete_step(
+        w: &mut Frontier,
+        to: Option<usize>,
+        root: usize,
+        wi: usize,
+        next: &mut Vec<usize>,
+    ) {
+        if let Some(j) = to {
+            w.pos = j;
+        }
+        if let Some(p) = &mut w.path {
+            p.push(w.pos);
+        }
+        w.steps_left -= 1;
+        if w.steps_left > 0 {
+            w.node = root;
+            w.prob = 1.0;
+            w.proposals_used = 0;
+            next.push(wi);
+        }
     }
 }
 
@@ -69,12 +353,20 @@ mod tests {
     use crate::runtime::backend::CpuBackend;
 
     fn build(n: usize, seed: u64) -> (RandomWalker, Arc<crate::kernel::Dataset>) {
+        build_cfg(n, seed, KdeConfig::exact())
+    }
+
+    fn build_cfg(
+        n: usize,
+        seed: u64,
+        cfg: KdeConfig,
+    ) -> (RandomWalker, Arc<crate::kernel::Dataset>) {
         let mut rng = Rng::new(seed);
         let ds = Arc::new(gaussian_mixture(n, 3, 2, 1.2, 0.5, &mut rng));
         let tree = Arc::new(MultiLevelKde::build(
             ds.clone(),
             Kernel::Laplacian,
-            &KdeConfig::exact(),
+            &cfg,
             CpuBackend::new(),
             KdeCounters::new(),
         ));
@@ -134,5 +426,152 @@ mod tests {
         let (w, _) = build(8, 129);
         let mut rng = Rng::new(131);
         assert_eq!(w.walk(5, 0, &mut rng), 5);
+    }
+
+    #[test]
+    fn exact_trajectory_last_matches_exact_walk_same_seed() {
+        // The satellite regression: `trajectory` must route through the
+        // SAME step function as `walk`, so from identical rng streams an
+        // exact() walker's trajectory endpoint equals its walk endpoint.
+        // (Before the fix, trajectory silently recorded approximate steps.)
+        let (plain, _) = build(31, 133);
+        let exact = RandomWalker::exact(plain.neighbors.clone());
+        for seed in [1u64, 7, 991] {
+            let path = exact.trajectory(3, 12, &mut Rng::new(seed));
+            let end = exact.walk(3, 12, &mut Rng::new(seed));
+            assert_eq!(*path.last().unwrap(), end, "seed {seed}");
+            let ppath = plain.trajectory(3, 12, &mut Rng::new(seed));
+            let pend = plain.walk(3, 12, &mut Rng::new(seed));
+            assert_eq!(*ppath.last().unwrap(), pend, "plain seed {seed}");
+        }
+    }
+
+    #[test]
+    fn exact_trajectory_replays_sample_exact() {
+        // An exact walker's trajectory is exactly the sequence of
+        // `sample_exact` outcomes from the same stream.
+        let (plain, _) = build(29, 135);
+        let exact = RandomWalker::exact(plain.neighbors.clone());
+        let got = exact.trajectory(5, 15, &mut Rng::new(777));
+        let mut rng = Rng::new(777);
+        let mut v = 5usize;
+        let mut want = vec![v];
+        for _ in 0..15 {
+            if let Some((j, _)) = exact.neighbors.sample_exact(v, &mut rng, 16) {
+                v = j;
+            }
+            want.push(v);
+        }
+        assert_eq!(got, want, "trajectory must apply the rejection correction");
+    }
+
+    #[test]
+    fn exact_and_plain_trajectories_diverge() {
+        // The rejection correction consumes accept draws (ratio ~ 1/2 with
+        // the c = 2 slack), so from the same seed the exact and plain
+        // streams diverge essentially immediately; identical 20-step
+        // trajectories would mean exact_steps is being ignored.
+        let (plain, _) = build(31, 137);
+        let exact = RandomWalker::exact(plain.neighbors.clone());
+        let a = exact.trajectory(0, 20, &mut Rng::new(42));
+        let b = plain.trajectory(0, 20, &mut Rng::new(42));
+        assert_ne!(a, b, "exact trajectory ignored the rejection correction");
+    }
+
+    #[test]
+    fn walk_batch_matches_sequential_forked_streams() {
+        // The frontier engine's contract: walker k's endpoint equals the
+        // sequential walk driven by the k-th stream forked off the same
+        // rng — bit for bit (deterministic memoized oracles).
+        let (w, _) = build(60, 139);
+        let starts: Vec<usize> = (0..37).map(|k| (k * 13) % 60).collect();
+        let t = 9;
+        let got = w.walk_batch(&starts, t, &mut Rng::new(5151));
+        let mut seq_rng = Rng::new(5151);
+        let forks: Vec<Rng> = starts.iter().map(|_| seq_rng.fork()).collect();
+        for (k, mut fork) in forks.into_iter().enumerate() {
+            let want = w.walk(starts[k], t, &mut fork);
+            assert_eq!(got[k], want, "walker {k} diverged from its stream");
+        }
+    }
+
+    #[test]
+    fn exact_walk_batch_matches_sequential_forked_streams() {
+        // Same contract in exact mode: the frontier's rejection rounds
+        // consume the per-walker streams exactly like `sample_exact`.
+        let (plain, _) = build_cfg(
+            48,
+            141,
+            KdeConfig {
+                kind: crate::kde::EstimatorKind::Sampling { eps: 0.4, tau: 0.2 },
+                leaf_cutoff: 8,
+                seed: 0x33,
+            },
+        );
+        let w = RandomWalker::exact(plain.neighbors.clone());
+        let starts: Vec<usize> = (0..21).map(|k| (k * 5) % 48).collect();
+        let t = 6;
+        let got = w.walk_batch(&starts, t, &mut Rng::new(616));
+        let mut seq_rng = Rng::new(616);
+        let forks: Vec<Rng> = starts.iter().map(|_| seq_rng.fork()).collect();
+        for (k, mut fork) in forks.into_iter().enumerate() {
+            let want = w.walk(starts[k], t, &mut fork);
+            assert_eq!(got[k], want, "exact walker {k} diverged from its stream");
+        }
+    }
+
+    #[test]
+    fn trajectory_batch_matches_sequential_and_walk_batch() {
+        let (w, _) = build(40, 143);
+        let starts = [0usize, 17, 17, 39, 5];
+        let t = 7;
+        let paths = w.trajectory_batch(&starts, t, &mut Rng::new(808));
+        let ends = w.walk_batch(&starts, t, &mut Rng::new(808));
+        let mut seq_rng = Rng::new(808);
+        let forks: Vec<Rng> = starts.iter().map(|_| seq_rng.fork()).collect();
+        for (k, mut fork) in forks.into_iter().enumerate() {
+            let want = w.trajectory(starts[k], t, &mut fork);
+            assert_eq!(paths[k], want, "walker {k} path diverged");
+            assert_eq!(paths[k].len(), t + 1);
+            assert_eq!(paths[k][0], starts[k]);
+            assert_eq!(*paths[k].last().unwrap(), ends[k]);
+        }
+    }
+
+    #[test]
+    fn walk_batch_edges() {
+        let (w, _) = build(16, 145);
+        // Zero steps: endpoints are the starts, trajectories length 1.
+        let starts = [3usize, 9];
+        assert_eq!(w.walk_batch(&starts, 0, &mut Rng::new(1)), vec![3, 9]);
+        let paths = w.trajectory_batch(&starts, 0, &mut Rng::new(1));
+        assert_eq!(paths, vec![vec![3], vec![9]]);
+        // Empty batch.
+        assert!(w.walk_batch(&[], 5, &mut Rng::new(2)).is_empty());
+        // Single walker (W = 1) still works through the frontier.
+        let got = w.walk_batch(&[7], 4, &mut Rng::new(3));
+        let mut seq = Rng::new(3);
+        let mut fork = seq.fork();
+        assert_eq!(got[0], w.walk(7, 4, &mut fork));
+    }
+
+    #[test]
+    fn walk_batch_endpoint_distribution_matches_markov_chain() {
+        // Statistical sanity on top of the bit-level stream equivalence.
+        let (w, ds) = build(12, 147);
+        let (start, t) = (4usize, 3usize);
+        let want = exact_walk_dist(&ds, start, t);
+        let mut rng = Rng::new(149);
+        let trials = 60_000usize;
+        let mut counts = vec![0f64; ds.n];
+        let batch = 2_000;
+        for _ in 0..trials / batch {
+            let starts = vec![start; batch];
+            for end in w.walk_batch(&starts, t, &mut rng) {
+                counts[end] += 1.0;
+            }
+        }
+        let tv = crate::util::stats::tv_distance(&counts, &want);
+        assert!(tv < 0.03, "batched walk endpoint TV {tv}");
     }
 }

@@ -14,9 +14,16 @@
 //! 3. Ragged edges: levels whose rows are not a multiple of B = 64,
 //!    single-node levels, trees below the leaf cutoff, and warm-cache
 //!    (empty miss set) rounds.
+//! 4. The frontier-batched walk engine (`RandomWalker::walk_batch`): a
+//!    `cluster_local::same_cluster` query at n = 4096 resolves its
+//!    W-walker, T-step walks in O(T · log n) backend executions (not the
+//!    sequential O(W · T · log n)), with endpoints bit-identical to the
+//!    sequential walker on the same forked streams and TV-close to the
+//!    exact Markov chain; W = 1 / warm-cache / tiny-tree edges.
 
 use std::sync::Arc;
 
+use kde_matrix::apps::cluster_local::{same_cluster, LocalClusterParams};
 use kde_matrix::apps::sparsify::sparsify_batched;
 use kde_matrix::kde::{KdeConfig, KdeCounters, MultiLevelKde};
 use kde_matrix::kernel::{dataset::gaussian_mixture, Dataset, Kernel};
@@ -186,6 +193,158 @@ fn tiny_tree_round_dispatches_nothing() {
     for (w, s) in samples.iter().enumerate() {
         let s = s.expect("n > 1 always samples");
         assert_ne!(s.neighbor, sources[w]);
+    }
+}
+
+#[test]
+fn n4096_cluster_local_walks_are_ot_log_n_executions() {
+    // The acceptance shape: one `same_cluster` query (2 * samples walkers,
+    // walk_len steps each) through the frontier-batched walk engine must
+    // cost O(T · log n) backend dispatches — NOT the sequential
+    // O(samples · T · log n) — while its endpoint draws stay the exact
+    // per-stream walks (verified bit for bit below).
+    let n = 4096usize;
+    let mut rng = Rng::new(2601);
+    let ds = Arc::new(gaussian_mixture(n, 3, 4, 1.2, 0.5, &mut rng));
+    let params = LocalClusterParams {
+        walk_len: 8,
+        samples: 16, // W = 32 walkers
+        threshold_scale: 1.0,
+    };
+    let (u, w) = (0usize, 1usize);
+
+    // Frontier-batched query on its own counting backend.
+    let be = CpuBackend::new();
+    let prims =
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+    let before = be.calls();
+    let _ = same_cluster(&prims, u, w, &params, &mut Rng::new(31));
+    let fused_calls = be.calls() - before;
+
+    // Sequential twin (fresh tree + backend, pre-batching shape): one
+    // descent at a time, walks in the old interleaved order.
+    let be_seq = CpuBackend::new();
+    let prims_seq =
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_seq.clone());
+    let before = be_seq.calls();
+    let mut seq_rng = Rng::new(31);
+    for _ in 0..params.samples {
+        let _ = prims_seq.walker.walk(u, params.walk_len, &mut seq_rng);
+        let _ = prims_seq.walker.walk(w, params.walk_len, &mut seq_rng);
+    }
+    let plain_calls = be_seq.calls() - before;
+
+    let log2n = (usize::BITS - n.leading_zeros() - 1) as u64; // 12
+    let bound = 10 * params.walk_len as u64 * log2n;
+    assert!(fused_calls > 0, "the walks must hit the backend");
+    assert!(
+        fused_calls <= bound,
+        "frontier walks used {fused_calls} dispatches; O(T log n) bound is {bound}"
+    );
+    assert!(
+        fused_calls * 4 <= plain_calls,
+        "frontier batching won too little: {plain_calls} sequential -> {fused_calls} fused"
+    );
+
+    // Bit-level endpoint equivalence on the SAME tree: walker k of a batch
+    // equals the sequential walk driven by the k-th forked stream.
+    let starts: Vec<usize> = (0..48).map(|k| (k * 127) % n).collect();
+    let got = prims.walker.walk_batch(&starts, 6, &mut Rng::new(57));
+    let mut fork_src = Rng::new(57);
+    let forks: Vec<Rng> = starts.iter().map(|_| fork_src.fork()).collect();
+    for (k, mut fork) in forks.into_iter().enumerate() {
+        assert_eq!(
+            got[k],
+            prims.walker.walk(starts[k], 6, &mut fork),
+            "walker {k} diverged from its stream"
+        );
+    }
+}
+
+#[test]
+fn walk_batch_endpoint_tv_matches_exact_chain() {
+    // Statistical acceptance: batched endpoints are TV-indistinguishable
+    // from the exact t-step Markov chain (and therefore from the
+    // sequential walker, which samples the same chain).
+    let n = 256usize;
+    let (start, t) = (5usize, 3usize);
+    let mut rng = Rng::new(2701);
+    let ds = Arc::new(gaussian_mixture(n, 3, 4, 2.0, 0.4, &mut rng));
+    let ((s, _), _) = twin_samplers(&ds, &KdeConfig::exact());
+    let walker = kde_matrix::sampling::RandomWalker::new(Arc::new(s));
+    // Exact chain: column-stochastic M = A D^{-1}, t applications.
+    let mut m = kde_matrix::linalg::Mat::zeros(n, n);
+    for j in 0..n {
+        let deg = ds.exact_degree(Kernel::Laplacian, j);
+        for i in 0..n {
+            if i != j {
+                m[(i, j)] = Kernel::Laplacian.eval(ds.point(i), ds.point(j)) as f64 / deg;
+            }
+        }
+    }
+    let mut want = vec![0.0f64; n];
+    want[start] = 1.0;
+    for _ in 0..t {
+        want = m.matvec(&want);
+    }
+    let mut counts = vec![0f64; n];
+    let mut wrng = Rng::new(2703);
+    let (batch, rounds) = (2_000usize, 30usize);
+    for _ in 0..rounds {
+        let starts = vec![start; batch];
+        for end in walker.walk_batch(&starts, t, &mut wrng) {
+            counts[end] += 1.0;
+        }
+    }
+    let tv = kde_matrix::util::stats::tv_distance(&counts, &want);
+    assert!(tv < 0.03, "batched endpoint TV {tv} vs exact chain");
+}
+
+#[test]
+fn walk_batch_edges_single_walker_and_warm_cache() {
+    // W = 1 (ragged n = 97 tree): the frontier engine degenerates to the
+    // sequential walk, bit for bit, at no worse a dispatch count than one
+    // fused submission per descent level.
+    let mut rng = Rng::new(2801);
+    let ds = Arc::new(gaussian_mixture(97, 4, 3, 1.2, 0.5, &mut rng));
+    let ((s, be), _) = twin_samplers(&ds, &KdeConfig::exact());
+    let walker = kde_matrix::sampling::RandomWalker::new(Arc::new(s));
+    let t = 5usize;
+    let before = be.calls();
+    let got = walker.walk_batch(&[13], t, &mut Rng::new(71));
+    let calls_batch = be.calls() - before;
+    let mut fork_src = Rng::new(71);
+    let mut fork = fork_src.fork();
+    assert_eq!(got[0], walker.walk(13, t, &mut fork), "W = 1 diverged");
+    // log2(97) < 7 internal levels, one fused submission each, t steps.
+    assert!(
+        calls_batch <= (t * 2 * 7) as u64,
+        "W = 1 batch used {calls_batch} dispatches"
+    );
+    // Warm cache: replaying the same batch (same seed) re-walks the same
+    // descents from the memo cache — zero dispatches, same endpoints.
+    let starts: Vec<usize> = (0..23).map(|k| (k * 11) % 97).collect();
+    let first = walker.walk_batch(&starts, t, &mut Rng::new(73));
+    let before = be.calls();
+    let second = walker.walk_batch(&starts, t, &mut Rng::new(73));
+    assert_eq!(be.calls() - before, 0, "warm replay must not dispatch");
+    assert_eq!(first, second);
+}
+
+#[test]
+fn walk_batch_tiny_tree_dispatches_nothing() {
+    // n <= leaf_cutoff: every step of every walker is a categorical
+    // leaf finish — the whole batch never touches the backend.
+    let mut rng = Rng::new(2901);
+    let ds = Arc::new(gaussian_mixture(12, 3, 2, 1.0, 0.5, &mut rng));
+    let ((s, be), _) = twin_samplers(&ds, &KdeConfig::exact());
+    let walker = kde_matrix::sampling::RandomWalker::new(Arc::new(s));
+    let starts: Vec<usize> = (0..30).map(|k| k % 12).collect();
+    let before = be.calls();
+    let ends = walker.walk_batch(&starts, 6, &mut Rng::new(79));
+    assert_eq!(be.calls() - before, 0, "leaf-finish walks need no backend");
+    for (k, &e) in ends.iter().enumerate() {
+        assert!(e < 12, "walker {k} endpoint out of range");
     }
 }
 

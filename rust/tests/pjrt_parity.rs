@@ -146,6 +146,49 @@ fn sums_ranged_parity_and_tile_skipping() {
 }
 
 #[test]
+fn block_ranged_parity_and_tile_skipping() {
+    // The LRA row-construction entry: ragged per-row blocks across B- and
+    // M-tile boundaries must match the CPU reference, and dead grid cells
+    // must not execute.
+    let Some(pjrt) = pjrt() else { return };
+    let cpu = CpuBackend::new();
+    let mut rng = Rng::new(313);
+    let d = 6usize;
+    let (b, m) = (70usize, 2500usize); // ceil(70/64)=2 x ceil(2500/1024)=3 grid
+    let queries: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let mut ranges = Vec::with_capacity(b);
+    for q in 0..b {
+        let lo = (q * 41) % m;
+        let hi = (lo + 1 + (q * 97) % (m - lo)).min(m);
+        ranges.push(if q % 11 == 0 { (lo, lo) } else { (lo, hi) });
+    }
+    let before = pjrt.executions();
+    let got = pjrt.block_ranged(Kernel::Gaussian, &queries, &data, d, &ranges);
+    assert!(
+        pjrt.executions() - before <= 6,
+        "at most one execution per (query chunk, data tile) grid cell"
+    );
+    let want = cpu.block_ranged(Kernel::Gaussian, &queries, &data, d, &ranges);
+    assert_eq!(got.len(), want.len(), "ragged layout mismatch");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-4 * (1.0 + w.abs()),
+            "ragged block entry {i}: pjrt {g} vs cpu {w}"
+        );
+    }
+    // Rows confined to the first M-tile must not execute the later tiles.
+    let confined: Vec<(usize, usize)> = (0..b).map(|q| (q % 500, 500 + q % 500)).collect();
+    let before = pjrt.executions();
+    let _ = pjrt.block_ranged(Kernel::Gaussian, &queries, &data, d, &confined);
+    assert_eq!(
+        pjrt.executions() - before,
+        2,
+        "only the two (query chunk, first tile) cells are live"
+    );
+}
+
+#[test]
 fn kde_estimator_runs_on_pjrt_backend() {
     // The same estimator code must run against the artifact path.
     let Some(pjrt) = pjrt() else { return };

@@ -17,7 +17,16 @@ bench_kde`) against the committed baseline and fails on
     (one batched sparsifier round at n = 4096) must stay within the
     O(log n) bound `dispatches_fused <= 10 * log2_n` and must beat the
     unfused dispatch count by at least 2x — the same contract
-    rust/tests/fusion.rs pins, re-checked on the measured series.
+    rust/tests/fusion.rs pins, re-checked on the measured series;
+  * a frontier-walk dispatch regression: the fresh `walk_fusion` object
+    (W = 32 walkers x T = 8 steps at n = 4096 through
+    `RandomWalker::walk_batch`) must stay within
+    `dispatches_batched <= 10 * t * log2_n` and beat the sequential walk
+    dispatch count by at least 2x;
+  * a fused-block regression: the fresh `block_fusion` object (LRA-shaped
+    row construction through planner-chunked `block_ranged`) must keep
+    `peak_rows_chunked <= 64` (the B-row submission cap) and
+    `dispatches_chunked <= ceil(s / 64)`.
 
 Baseline provenance is the `"baseline"` field: `"measured"` (written by
 every `cargo bench --bench bench_kde` run) arms the full per-series
@@ -105,6 +114,46 @@ def main(argv):
                 f"the unfused round ({unfused}) by 2x")
     else:
         failures.append("fresh run is missing the `fusion` series")
+
+    # 3b. Frontier-batched walks must stay O(T log n) and beat sequential.
+    walk = fresh.get("walk_fusion")
+    if walk:
+        batched = walk["dispatches_batched"]
+        sequential = walk["dispatches_sequential"]
+        bound = 10 * walk["t"] * walk["log2_n"]
+        print(f"walk_fusion (n={walk['n']}, W={walk['walkers']}, t={walk['t']}): "
+              f"{sequential} sequential -> {batched} frontier-batched dispatches "
+              f"(O(T log n) bound {bound})")
+        if batched > bound:
+            failures.append(
+                f"walk-fusion regression: {batched} dispatches exceeds the "
+                f"O(T log n) bound {bound}")
+        if batched * 2 > sequential:
+            failures.append(
+                f"walk-fusion regression: batched walks ({batched}) no longer "
+                f"beat sequential walks ({sequential}) by 2x")
+    else:
+        failures.append("fresh run is missing the `walk_fusion` series")
+
+    # 3c. Fused block rows must keep the planner's chunk shape.
+    blk = fresh.get("block_fusion")
+    if blk:
+        peak = blk["peak_rows_chunked"]
+        chunked = blk["dispatches_chunked"]
+        chunk_bound = (blk["s"] + 63) // 64
+        print(f"block_fusion (n={blk['n']}, s={blk['s']}): "
+              f"{chunked} chunked dispatches (bound {chunk_bound}), "
+              f"peak chunk {peak} rows (monolithic {blk['peak_rows_monolithic']})")
+        if peak > 64:
+            failures.append(
+                f"block-fusion regression: peak chunk {peak} rows exceeds the "
+                f"B = 64 submission cap")
+        if chunked > chunk_bound:
+            failures.append(
+                f"block-fusion regression: {chunked} chunked dispatches exceeds "
+                f"ceil(s/64) = {chunk_bound}")
+    else:
+        failures.append("fresh run is missing the `block_fusion` series")
 
     # 4. Per-series throughput vs the baseline. Absolute pairs/sec only
     # compares meaningfully between like hosts: shared CI runners are
