@@ -112,6 +112,52 @@ fn walk_fusion_series(rng: &mut Rng) -> String {
     )
 }
 
+/// Edge-frontier dispatch series: one batched Theorem 6.17 triangle
+/// estimate (edge_pool = 64 pooled edges x reps = 8 neighbor draws) at
+/// n = 4096 through `triangle_weight_estimate_batched` (all descents in
+/// one frontier batch) vs the sequential estimator on a twin tree,
+/// counted at the backend dispatch counter. Emitted as the `edge_fusion`
+/// object of `BENCH_backend.json`; `scripts/compare_bench.py` gates the
+/// O(log n) bound and the >= 2x win over sequential (tests/fusion.rs
+/// pins the same contract plus bit-identical estimates).
+fn edge_fusion_series(rng: &mut Rng) -> String {
+    use kde_matrix::apps::triangles::{
+        triangle_weight_estimate, triangle_weight_estimate_batched, TriangleParams,
+    };
+    let (n, d) = (4096usize, 16usize);
+    let params = TriangleParams { edge_pool: 64, reps: 8 };
+    let ds = Arc::new(dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng));
+    let (calls_batched, us_batched) = {
+        let be = CpuBackend::new();
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+        let before = be.calls();
+        let start = Instant::now();
+        let r = triangle_weight_estimate_batched(&prims, &params, &mut Rng::new(17));
+        let us = start.elapsed().as_micros();
+        std::hint::black_box(r.estimate);
+        (be.calls() - before, us)
+    };
+    let (calls_seq, us_seq) = {
+        let be = CpuBackend::new();
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+        let before = be.calls();
+        let start = Instant::now();
+        let r = triangle_weight_estimate(&prims, &params, &mut Rng::new(17));
+        let us = start.elapsed().as_micros();
+        std::hint::black_box(r.estimate);
+        (be.calls() - before, us)
+    };
+    let log2n = usize::BITS - n.leading_zeros() - 1;
+    format!(
+        "{{\"n\": {n}, \"pool\": {}, \"reps\": {}, \"log2_n\": {log2n}, \
+         \"dispatches_batched\": {calls_batched}, \"dispatches_sequential\": {calls_seq}, \
+         \"est_us_batched\": {us_batched}, \"est_us_sequential\": {us_seq}}}",
+        params.edge_pool, params.reps
+    )
+}
+
 /// Fused block-row series: LRA-shaped row construction (s = 160 sampled
 /// rows against n = 4096 data rows) through planner-chunked
 /// `KernelBackend::block_ranged` submissions vs the monolithic `s x n`
@@ -201,13 +247,16 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     suite.note(&format!("fusion series: {fusion}"));
     let walk_fusion = walk_fusion_series(rng);
     suite.note(&format!("walk_fusion series: {walk_fusion}"));
+    let edge_fusion = edge_fusion_series(rng);
+    suite.note(&format!("edge_fusion series: {edge_fusion}"));
     let block_fusion = block_fusion_series(rng);
     suite.note(&format!("block_fusion series: {block_fusion}"));
     let json = format!(
         "{{\n  \"bench\": \"backend_sums\",\n  \"n\": {n},\n  \"d\": {d},\n  \
          \"threads_available\": {threads},\n  \"isa_detected\": \"{}\",\n  \
          \"baseline\": \"measured\",\n  \"fusion\": {fusion},\n  \
-         \"walk_fusion\": {walk_fusion},\n  \"block_fusion\": {block_fusion},\n  \
+         \"walk_fusion\": {walk_fusion},\n  \"edge_fusion\": {edge_fusion},\n  \
+         \"block_fusion\": {block_fusion},\n  \
          \"results\": [\n{}\n  ]\n}}\n",
         MicroKernel::detect().isa.name(),
         rows.join(",\n")

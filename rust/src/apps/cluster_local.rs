@@ -15,6 +15,7 @@
 use crate::sampling::Primitives;
 use crate::util::rng::Rng;
 
+/// Tuning knobs of the Algorithm 6.1 same-cluster tester.
 #[derive(Clone, Copy, Debug)]
 pub struct LocalClusterParams {
     /// Walk length t (paper: c log n / phi_in^2).
@@ -27,6 +28,8 @@ pub struct LocalClusterParams {
 }
 
 impl LocalClusterParams {
+    /// Paper-shaped defaults for an n-vertex graph (log-length walks,
+    /// `O(sqrt n)` samples per distribution).
     pub fn for_n(n: usize) -> Self {
         let walk_len = (3.0 * (n as f64).ln()).ceil() as usize;
         let samples = (20.0 * (n as f64).sqrt()).ceil() as usize;
@@ -34,10 +37,13 @@ impl LocalClusterParams {
     }
 }
 
+/// One same-cluster decision with its evidence and cost.
 pub struct LocalClusterOutcome {
+    /// The tester's verdict (distance below the threshold).
     pub same_cluster: bool,
     /// The collision-estimated squared l2 distance.
     pub distance_sq: f64,
+    /// Logical KDE queries spent (cache misses).
     pub kde_queries: u64,
 }
 

@@ -22,6 +22,7 @@ use crate::runtime::backend::KernelBackend;
 use crate::sampling::Primitives;
 use crate::util::rng::Rng;
 
+/// Top-eigenpair estimate plus cost accounting of one Theorem 5.22 run.
 pub struct EigenTopResult {
     /// Estimated top eigenvalue of the FULL n x n kernel matrix.
     pub lambda: f64,
@@ -29,7 +30,10 @@ pub struct EigenTopResult {
     pub support: Vec<usize>,
     /// Eigenvector values on the support (unit norm).
     pub vector: Vec<f64>,
+    /// Side length t of the sampled principal submatrix.
     pub submatrix_size: usize,
+    /// Logical KDE queries spent (cache misses; zero for the direct
+    /// variant, which never touches an oracle).
     pub kde_queries: u64,
 }
 

@@ -28,15 +28,19 @@ use crate::util::rng::Rng;
 /// A rank-k factor `V` (k x n, approximately orthonormal rows): the
 /// approximation is `B = K V^T V`.
 pub struct LraResult {
+    /// The factor `V` itself (achieved-rank x n).
     pub v: Mat,
     /// ACHIEVED rank (`v.rows`): at most the requested rank, lower when
     /// fewer rows were sampled than the rank asked for (`s < k`) or the
     /// sampled rows' spectrum degenerates below the eigenvalue floor.
     pub rank: usize,
+    /// Rows sampled by squared row norm (`s = rows_factor * rank`,
+    /// clamped to `[1, n]`).
     pub sampled_rows: usize,
     /// Most query rows any single row-construction dispatch carried
     /// (bounded by the planner's B = 64 submission cap).
     pub peak_block_rows: usize,
+    /// Logical KDE queries spent (cache misses; exactly n here).
     pub kde_queries: u64,
     /// Kernel evaluations performed BY THE ALGORITHM (row construction +
     /// estimator samples), not by any evaluation harness.

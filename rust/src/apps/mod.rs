@@ -1,6 +1,9 @@
 //! The paper's applications (§5 linear algebra, §6 graphs), each built
 //! strictly on the §4 primitives + KDE black box, with exact baselines for
-//! every experiment.
+//! every experiment. `docs/ALGORITHMS.md` maps every module here to its
+//! paper theorem and the test that pins it.
+
+#![warn(missing_docs)]
 
 pub mod arboricity;
 pub mod cluster_local;

@@ -24,12 +24,15 @@ use crate::util::rng::Rng;
 
 /// Result of one sparsification run with full cost accounting.
 pub struct SparsifyResult {
+    /// The reweighted sparsifier `G'` with `E[L_{G'}] = L_G`.
     pub graph: WGraph,
     /// Edges sampled (with multiplicity) = `t`.
     pub samples: usize,
     /// Distinct edges in the sparsifier.
     pub distinct_edges: usize,
+    /// Logical KDE queries spent (cache misses).
     pub kde_queries: u64,
+    /// Explicit kernel evaluations spent on edge weights.
     pub kernel_evals: u64,
 }
 

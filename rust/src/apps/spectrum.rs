@@ -17,12 +17,15 @@
 use crate::sampling::Primitives;
 use crate::util::rng::Rng;
 
+/// Recovered spectrum plus cost accounting of one Theorem 5.17 run.
 pub struct SpectrumResult {
     /// n recovered eigenvalues of the normalized Laplacian, in [0, 2].
     pub eigenvalues: Vec<f64>,
     /// Estimated moments of the walk-matrix spectrum (index = length l).
     pub moments: Vec<f64>,
+    /// Logical KDE queries spent (cache misses).
     pub kde_queries: u64,
+    /// Random walks simulated across all moment orders.
     pub walks: u64,
 }
 

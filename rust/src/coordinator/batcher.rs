@@ -152,6 +152,62 @@ fn plan_greedy(
     subs
 }
 
+/// Double-buffered pack/execute submission queue: overlap the *packing*
+/// of fused submission `r + 1` (query gather + data-segment concatenation
+/// — the planner's memcpy-bound tail) with the *backend execution* of
+/// submission `r` (the compute-bound head).
+///
+/// `pack` runs on a dedicated packer thread feeding a bounded channel of
+/// capacity 1, so at any moment at most two packed submissions exist —
+/// one executing, one buffered (plus one in flight inside `pack`): the
+/// classic double buffer, with bounded memory no matter how long the
+/// plan is. `execute` runs on the **calling** thread, in plan order, so
+/// everything the executor touches (`&mut` result tables, memo-cache
+/// commits, dispatch counters) behaves exactly as in the sequential
+/// loop: same submissions, same order, same values — overlap changes
+/// wall-clock only. With `overlap` false (the sequential fallback, see
+/// `MultiLevelKde::set_overlap`) or fewer than two items, no thread is
+/// spawned and the loop runs inline.
+///
+/// Scoped threads make borrowed data (`&[f32]` views into oracle
+/// buffers) safe to pack on the worker without cloning.
+pub fn run_double_buffered<T, P, R, F, G>(
+    items: Vec<T>,
+    overlap: bool,
+    pack: F,
+    mut execute: G,
+) -> Vec<R>
+where
+    T: Send,
+    P: Send,
+    F: Fn(T) -> P + Sync,
+    G: FnMut(P) -> R,
+{
+    if !overlap || items.len() < 2 {
+        return items.into_iter().map(|t| execute(pack(t))).collect();
+    }
+    let expected = items.len();
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::sync_channel::<P>(1);
+        let pack_ref = &pack;
+        s.spawn(move || {
+            for t in items {
+                // A send error means the executor hung up (it cannot in
+                // the current callers, which drain the channel fully);
+                // stop packing rather than panic.
+                if tx.send(pack_ref(t)).is_err() {
+                    return;
+                }
+            }
+        });
+        let mut out = Vec::with_capacity(expected);
+        for p in rx {
+            out.push(execute(p));
+        }
+        out
+    })
+}
+
 /// One KDE query in flight.
 pub struct QueryRequest {
     pub shard: usize,
@@ -701,6 +757,63 @@ mod tests {
                 .collect();
             check_plan_adaptive(&jobs, 64, 1024);
         });
+    }
+
+    #[test]
+    fn double_buffered_queue_preserves_order_and_values() {
+        // Overlapped and sequential runs must produce the same results in
+        // the same order; the executor must observe plan order even
+        // though packing runs ahead on another thread.
+        let items: Vec<usize> = (0..57).collect();
+        let run = |overlap: bool| {
+            let mut seen = Vec::new();
+            let out = run_double_buffered(
+                items.clone(),
+                overlap,
+                |t| t * 10 + 1,
+                |p| {
+                    seen.push(p);
+                    p + 1
+                },
+            );
+            (out, seen)
+        };
+        let (seq_out, seq_seen) = run(false);
+        let (ovl_out, ovl_seen) = run(true);
+        assert_eq!(seq_out, ovl_out);
+        assert_eq!(seq_seen, ovl_seen);
+        assert_eq!(ovl_out, (0..57).map(|t| t * 10 + 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn double_buffered_queue_edge_sizes() {
+        // Empty and single-item inputs take the inline path either way.
+        for overlap in [false, true] {
+            let empty: Vec<u64> = Vec::new();
+            assert!(run_double_buffered(empty, overlap, |t| t, |p: u64| p).is_empty());
+            let one = run_double_buffered(vec![41u64], overlap, |t| t + 1, |p| p);
+            assert_eq!(one, vec![42]);
+        }
+    }
+
+    #[test]
+    fn double_buffered_queue_executes_on_calling_thread() {
+        // The executor closure mutates caller-local state without any
+        // synchronization — only sound because execute runs inline on the
+        // calling thread (the contract MultiLevelKde's cache commits and
+        // resolution maps rely on).
+        let caller = std::thread::current().id();
+        let mut executed_on = Vec::new();
+        let _ = run_double_buffered(
+            (0..8).collect::<Vec<usize>>(),
+            true,
+            |t| t,
+            |p| {
+                executed_on.push(std::thread::current().id());
+                p
+            },
+        );
+        assert!(executed_on.iter().all(|&id| id == caller));
     }
 
     #[test]

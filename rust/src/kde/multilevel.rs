@@ -31,13 +31,21 @@
 //! backend executions instead of one per tree node touched (pinned by
 //! `tests/fusion.rs`); oracles without a [`FusedView`] (HBE, partition
 //! tree) fall back to their own `query_batch`, one dispatch per group.
+//! When a fused plan spans several submissions, packing and execution are
+//! pipelined through the double-buffered submission queue
+//! ([`run_double_buffered`]): submission r + 1's rows and data segments
+//! are gathered on a packer thread while the backend runs submission r —
+//! same submissions, same order, same values; wall-clock only
+//! ([`MultiLevelKde::set_overlap`] is the sequential fallback switch).
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::util::fxhash::FxHashMap;
 
-use crate::coordinator::batcher::{plan_level_fusion_adaptive, FuseJob};
+use crate::coordinator::batcher::{
+    plan_level_fusion_adaptive, run_double_buffered, FuseJob, FuseSubmission,
+};
 use crate::kde::hbe::HbeKde;
 use crate::kde::{EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
 use crate::kernel::{Dataset, Kernel};
@@ -116,6 +124,9 @@ pub struct MultiLevelKde {
     /// Level fusion on/off (on by default; the off switch exists for
     /// fused-vs-unfused parity tests and dispatch-count A/Bs).
     fuse: AtomicBool,
+    /// Overlapped pack/execute pipelining of fused submissions (on by
+    /// default; off is the strictly sequential fallback).
+    overlap: AtomicBool,
     /// Shared KDE-query accounting (cache misses only).
     pub counters: Arc<KdeCounters>,
 }
@@ -145,6 +156,7 @@ impl MultiLevelKde {
             leaf_cutoff: cfg.leaf_cutoff,
             backend,
             fuse: AtomicBool::new(true),
+            overlap: AtomicBool::new(true),
             counters,
         }
     }
@@ -264,6 +276,27 @@ impl MultiLevelKde {
     /// Whether level fusion is enabled.
     pub fn fusion(&self) -> bool {
         self.fuse.load(Ordering::Relaxed)
+    }
+
+    /// Enable/disable the overlapped submission pipeline (on by default).
+    /// When on, a fused plan with two or more submissions runs through
+    /// the double-buffered pack/execute queue
+    /// ([`run_double_buffered`](crate::coordinator::batcher::run_double_buffered)):
+    /// a packer thread gathers submission `r + 1`'s query rows and data
+    /// segments while the backend executes submission `r` on the calling
+    /// thread. Execution order, dispatch counts and every value are
+    /// unchanged — the backend still sees the same submissions in the
+    /// same order, and cache commits still happen on the calling thread —
+    /// so answers are bit-identical with overlap on or off (pinned in
+    /// `tests/fusion.rs`); off is the strictly sequential fallback for
+    /// A/Bs and single-threaded environments.
+    pub fn set_overlap(&self, enabled: bool) {
+        self.overlap.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Whether the overlapped submission pipeline is enabled.
+    pub fn overlap(&self) -> bool {
+        self.overlap.load(Ordering::Relaxed)
     }
 
     /// The config's leaf cutoff: ranges of at most this size carry exact
@@ -392,45 +425,83 @@ impl MultiLevelKde {
             // Fused misses bypass the oracles, so record their query count
             // here (exactly what the oracles' query_batch would record).
             self.counters.record_queries(jobs.iter().map(|j| j.rows as u64).sum());
-            for sub in plan_level_fusion_adaptive(&jobs, AOT_B, AOT_M) {
-                // Pack each segment once, remembering its row range. A
-                // single-segment submission (every row from one node —
-                // e.g. each chunk of the root degree scan) borrows the
-                // view's buffer directly instead of copying it.
-                let mut seg_range: FxHashMap<usize, (usize, usize)> = FxHashMap::default();
-                let mut packed: Vec<f32> = Vec::new();
-                let data: &[f32] = if sub.segments.len() == 1 {
-                    let fj = sub.segments[0];
-                    let (_, view) = fused[fj];
-                    seg_range.insert(fj, (0, view.data.len() / d));
-                    view.data
-                } else {
-                    for &fj in &sub.segments {
-                        let (_, view) = fused[fj];
-                        let lo = packed.len() / d;
-                        packed.extend_from_slice(view.data);
-                        seg_range.insert(fj, (lo, packed.len() / d));
-                    }
-                    &packed
-                };
-                let mut queries: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
-                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(sub.rows.len());
-                for &(fj, r) in &sub.rows {
-                    let (gi, _) = fused[fj];
-                    queries.extend_from_slice(self.ds.point(missing[gi][r]));
-                    ranges.push(seg_range[&fj]);
-                }
-                let raw = self.backend.sums_ranged(self.kernel, &queries, data, d, &ranges);
-                for (&(fj, r), &v) in sub.rows.iter().zip(&raw) {
-                    let (gi, view) = fused[fj];
-                    let id = groups[gi].0;
-                    let i = missing[gi][r];
-                    // First writer wins under concurrent misses; report
-                    // what actually ended up cached (consistency).
-                    let stored = self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
-                    resolved[gi].insert(i as u32, Some(stored));
-                }
+            let plan = plan_level_fusion_adaptive(&jobs, AOT_B, AOT_M);
+
+            /// A fused submission's shared data buffer: borrowed straight
+            /// from the oracle's view when the submission carries one
+            /// segment (e.g. each chunk of the root degree scan), owned
+            /// when several segments were concatenated.
+            enum PackedData<'v> {
+                Borrowed(&'v [f32]),
+                Owned(Vec<f32>),
             }
+            /// One packed submission, ready for `sums_ranged`.
+            struct PackedSub<'v> {
+                rows: Vec<(usize, usize)>,
+                queries: Vec<f32>,
+                ranges: Vec<(usize, usize)>,
+                data: PackedData<'v>,
+            }
+            let fused_ref = &fused;
+            let missing_ref = &missing;
+            let resolved_ref = &mut resolved;
+            let overlap = self.overlap.load(Ordering::Relaxed);
+            run_double_buffered(
+                plan,
+                overlap,
+                // Pack stage: gather one submission's query rows and data
+                // segments (each segment once, remembering its row
+                // range). Runs on the packer thread when overlap is on.
+                |sub: FuseSubmission| {
+                    let mut seg_range: FxHashMap<usize, (usize, usize)> = FxHashMap::default();
+                    let data = if sub.segments.len() == 1 {
+                        let fj = sub.segments[0];
+                        let (_, view) = fused_ref[fj];
+                        seg_range.insert(fj, (0, view.data.len() / d));
+                        PackedData::Borrowed(view.data)
+                    } else {
+                        let mut packed: Vec<f32> = Vec::new();
+                        for &fj in &sub.segments {
+                            let (_, view) = fused_ref[fj];
+                            let lo = packed.len() / d;
+                            packed.extend_from_slice(view.data);
+                            seg_range.insert(fj, (lo, packed.len() / d));
+                        }
+                        PackedData::Owned(packed)
+                    };
+                    let mut queries: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
+                    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(sub.rows.len());
+                    for &(fj, r) in &sub.rows {
+                        let (gi, _) = fused_ref[fj];
+                        queries.extend_from_slice(self.ds.point(missing_ref[gi][r]));
+                        ranges.push(seg_range[&fj]);
+                    }
+                    PackedSub { rows: sub.rows, queries, ranges, data }
+                },
+                // Execute stage: one backend dispatch + cache commit per
+                // submission, always on the calling thread and in plan
+                // order (so dispatch counting, memoization and answers
+                // are identical with or without overlap).
+                |p| {
+                    let data: &[f32] = match &p.data {
+                        PackedData::Borrowed(b) => *b,
+                        PackedData::Owned(v) => v.as_slice(),
+                    };
+                    let raw =
+                        self.backend.sums_ranged(self.kernel, &p.queries, data, d, &p.ranges);
+                    for (&(fj, r), &v) in p.rows.iter().zip(&raw) {
+                        let (gi, view) = fused_ref[fj];
+                        let id = groups[gi].0;
+                        let i = missing_ref[gi][r];
+                        // First writer wins under concurrent misses;
+                        // report what actually ended up cached
+                        // (consistency).
+                        let stored =
+                            self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
+                        resolved_ref[gi].insert(i as u32, Some(stored));
+                    }
+                },
+            );
         }
         // Pass 3: readback in input order.
         groups
@@ -688,6 +759,43 @@ mod tests {
             let b = plain.query_points(id, &idx);
             for (x, y) in a.iter().zip(&b) {
                 assert_eq!(x.to_bits(), y.to_bits(), "node {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_pipeline_is_bit_identical_and_dispatch_neutral() {
+        // Twin trees, one with the overlapped submission queue disabled:
+        // identical answers (bit for bit) and identical dispatch counts —
+        // overlap changes wall-clock only, never the evaluation.
+        let mk = |overlap: bool| {
+            let mut rng = Rng::new(85);
+            let ds = Arc::new(gaussian_mixture(96, 4, 2, 1.0, 0.5, &mut rng));
+            let be = CpuBackend::new();
+            let tree = MultiLevelKde::build(
+                ds,
+                Kernel::Laplacian,
+                &KdeConfig::exact(),
+                be.clone(),
+                KdeCounters::new(),
+            );
+            tree.set_overlap(overlap);
+            (tree, be)
+        };
+        let (ovl, be_o) = mk(true);
+        let (seq, be_s) = mk(false);
+        assert!(ovl.overlap(), "overlap defaults on");
+        assert!(!seq.overlap());
+        let idx: Vec<usize> = (0..96).collect();
+        // A multi-group call whose fused plan spans several submissions
+        // (96 misses per node > B = 64 rows).
+        let groups = [(1usize, &idx[..]), (2usize, &idx[..])];
+        let a = ovl.query_points_multi(&groups);
+        let b = seq.query_points_multi(&groups);
+        assert_eq!(be_o.calls(), be_s.calls(), "overlap must not change dispatches");
+        for (gi, (ga, gb)) in a.iter().zip(&b).enumerate() {
+            for (pos, (x, y)) in ga.iter().zip(gb).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "group {gi} pos {pos}: {x} vs {y}");
             }
         }
     }

@@ -63,7 +63,15 @@ impl Args {
     }
 
     fn bool(&self, key: &str) -> bool {
-        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+        self.bool_or(key, false)
+    }
+
+    /// Boolean flag with an explicit default: absent -> `default`,
+    /// `--key` / `--key true` -> true, `--key false` -> false. Used by
+    /// the default-on `--batched` flags so `--batched false` selects the
+    /// sequential path.
+    fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(default)
     }
 }
 
@@ -180,8 +188,10 @@ fn cmd_info() {
     println!("  spectrum   --n               EMD spectrum (Thm 5.17)");
     println!("  cluster    --data nested     spectral clustering on sparsifier (§6.2)");
     println!("  local      --n               local clustering (Thm 6.9)");
-    println!("  arboricity --n --m           arboricity estimation (Thm 6.15)");
-    println!("  triangles  --n               weighted triangle total (Thm 6.17)");
+    println!("  arboricity --n --m [--batched false]  arboricity estimation (Thm 6.15;");
+    println!("                               frontier-batched edge draws by default)");
+    println!("  triangles  --n [--batched false]      weighted triangle total (Thm 6.17;");
+    println!("                               frontier-batched descents by default)");
     println!();
     println!("common flags: --kernel laplacian|gaussian|exponential|rational_quadratic");
     println!("              --estimator sampling|naive|hbe  --backend tiled|tiled1|cpu|pjrt");
@@ -420,10 +430,15 @@ fn cmd_arboricity(a: &Args) {
     let kernel = Kernel::from_name(&a.str("kernel", "laplacian")).unwrap();
     let prims = Primitives::build(ds.clone(), kernel, &config_from_args(a), backend_from_args(a));
     let m = a.usize("m", 20 * ds.n);
-    let r = apps::arboricity::arboricity_estimate(&prims, m, !a.bool("greedy"), &mut rng);
+    let batched = a.bool_or("batched", true);
+    let r = if batched {
+        apps::arboricity::arboricity_estimate_batched(&prims, m, !a.bool("greedy"), &mut rng)
+    } else {
+        apps::arboricity::arboricity_estimate(&prims, m, !a.bool("greedy"), &mut rng)
+    };
     println!(
-        "n={} m={} density_est={:.4} sample_edges={} kde_queries={}",
-        ds.n, m, r.density, r.subsampled_graph_edges, r.kde_queries
+        "n={} m={} batched={} density_est={:.4} sample_edges={} kde_queries={}",
+        ds.n, m, batched, r.density, r.subsampled_graph_edges, r.kde_queries
     );
     if a.bool("check") {
         let g = WGraph::complete_kernel_graph(&ds, kernel);
@@ -445,10 +460,15 @@ fn cmd_triangles(a: &Args) {
         edge_pool: a.usize("pool", 512),
         reps: a.usize("reps", 32),
     };
-    let r = apps::triangles::triangle_weight_estimate(&prims, &params, &mut rng);
+    let batched = a.bool_or("batched", true);
+    let r = if batched {
+        apps::triangles::triangle_weight_estimate_batched(&prims, &params, &mut rng)
+    } else {
+        apps::triangles::triangle_weight_estimate(&prims, &params, &mut rng)
+    };
     println!(
-        "n={} estimate={:.4e} kde_queries={} kernel_evals={}",
-        ds.n, r.estimate, r.kde_queries, r.kernel_evals
+        "n={} batched={} estimate={:.4e} kde_queries={} kernel_evals={}",
+        ds.n, batched, r.estimate, r.kde_queries, r.kernel_evals
     );
     if a.bool("check") {
         let g = WGraph::complete_kernel_graph(&ds, kernel);

@@ -3,6 +3,21 @@
 //! An edge `(u, v)` is drawn by composing degree sampling (Alg 4.6) with
 //! neighbor sampling (Alg 4.11); the resulting edge probability is
 //! `p_u q_{uv} + p_v q_{vu} ~ 2 k(u,v) / W` — proportional to its weight.
+//!
+//! **Frontier-batched evaluation shape.** [`EdgeSampler::sample_batch`]
+//! / [`EdgeSampler::sample_one_sided_batch`] draw many edges at once:
+//! every edge owns a stream forked off the caller's RNG in draw order,
+//! the degree draws consume those streams up front
+//! ([`DegreeSampler::sample_batch`] — a pure prefix-tree walk, no backend
+//! traffic), and all the neighbor descents then advance in level-order
+//! lock-step on the *same* streams
+//! ([`NeighborSampler::sample_batch_with_streams`]), each descent round's
+//! cache misses coalescing into fused padded backend submissions. A batch
+//! of `m` edges therefore costs O(log n) backend dispatches total instead
+//! of the sequential O(m log n) — the evaluation shape Theorems 6.15
+//! (arboricity) and 6.17 (triangles) assume — while edge `k` is
+//! bit-identical to `sample(&mut fork_k)` on the k-th forked stream
+//! (pinned in `tests/fusion.rs`).
 
 use std::sync::Arc;
 
@@ -10,22 +25,30 @@ use crate::sampling::neighbor::NeighborSampler;
 use crate::sampling::vertex::DegreeSampler;
 use crate::util::rng::Rng;
 
+/// Algorithm 4.13 edge sampler: degree sampling composed with neighbor
+/// sampling over one shared multi-level KDE tree.
 pub struct EdgeSampler {
+    /// Degree-proportional vertex sampler (Algorithm 4.6).
     pub degrees: Arc<DegreeSampler>,
+    /// Weighted neighbor sampler (Algorithm 4.11).
     pub neighbors: Arc<NeighborSampler>,
 }
 
 /// One sampled edge with its exact (memoized-oracle) sampling probability.
 #[derive(Clone, Copy, Debug)]
 pub struct EdgeSample {
+    /// Degree-sampled source vertex.
     pub u: usize,
+    /// Neighbor-sampled endpoint (never equals `u`).
     pub v: usize,
     /// `p_u * q_uv + p_v * q_vu` — the two-sided edge sampling probability
-    /// (Algorithm 5.1 steps (c)-(d)).
+    /// (Algorithm 5.1 steps (c)-(d)). One-sided draws report `p_u * q_uv`.
     pub prob: f64,
 }
 
 impl EdgeSampler {
+    /// Compose a degree sampler and a neighbor sampler into an edge
+    /// sampler (they must share the same underlying tree).
     pub fn new(degrees: Arc<DegreeSampler>, neighbors: Arc<NeighborSampler>) -> Self {
         EdgeSampler { degrees, neighbors }
     }
@@ -43,11 +66,107 @@ impl EdgeSampler {
     }
 
     /// One-sided fast path: just `(u, v)` with the forward probability
-    /// (used where only proportionality matters, e.g. arboricity).
+    /// (used where only proportionality matters, e.g. the one-sided bound
+    /// inside Algorithm 6.14's upper-bound sampling).
     pub fn sample_one_sided(&self, rng: &mut Rng) -> Option<EdgeSample> {
         let (u, p_u) = self.degrees.sample(rng);
         let ns = self.neighbors.sample(u, rng)?;
         Some(EdgeSample { u, v: ns.neighbor, prob: p_u * ns.prob })
+    }
+
+    /// Frontier-batched [`Self::sample`]: draw `count` weighted edges with
+    /// O(log n) backend dispatches total instead of one descent at a time.
+    ///
+    /// Edge `k` draws from the `k`-th stream forked off `rng` — first its
+    /// degree sample, then its neighbor descent on the *same* stream — so
+    /// the result equals calling [`Self::sample`] sequentially with those
+    /// forks, bit for bit (deterministic memoized oracles; the reverse
+    /// probabilities `q_vu` are RNG-free descents resolved by one batched
+    /// probe). The descents advance in level-order lock-step and every
+    /// level's cache misses are coalesced into fused padded submissions
+    /// (`MultiLevelKde::query_points_multi`).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use kde_matrix::kde::{KdeConfig, KdeCounters, MultiLevelKde};
+    /// use kde_matrix::kernel::{dataset::gaussian_mixture, Kernel};
+    /// use kde_matrix::runtime::CpuBackend;
+    /// use kde_matrix::sampling::{DegreeSampler, EdgeSampler, NeighborSampler};
+    /// use kde_matrix::util::rng::Rng;
+    ///
+    /// let mut rng = Rng::new(7);
+    /// let ds = Arc::new(gaussian_mixture(32, 3, 2, 1.0, 0.5, &mut rng));
+    /// let tree = Arc::new(MultiLevelKde::build(
+    ///     ds, Kernel::Laplacian, &KdeConfig::exact(), CpuBackend::new(), KdeCounters::new(),
+    /// ));
+    /// let edges = EdgeSampler::new(
+    ///     Arc::new(DegreeSampler::build(&tree)),
+    ///     Arc::new(NeighborSampler::new(tree.clone())),
+    /// );
+    /// // A batch replays the sequential draws on the same forked streams.
+    /// let batch = edges.sample_batch(4, &mut Rng::new(11));
+    /// let mut seed = Rng::new(11);
+    /// for b in batch {
+    ///     let mut fork = seed.fork();
+    ///     let want = edges.sample(&mut fork).unwrap();
+    ///     let got = b.unwrap();
+    ///     assert_eq!((got.u, got.v), (want.u, want.v));
+    ///     assert_eq!(got.prob.to_bits(), want.prob.to_bits());
+    /// }
+    /// ```
+    pub fn sample_batch(&self, count: usize, rng: &mut Rng) -> Vec<Option<EdgeSample>> {
+        self.batch_impl(count, rng, true)
+    }
+
+    /// Frontier-batched [`Self::sample_one_sided`]: same engine, stream
+    /// discipline and bit-identity contract as [`Self::sample_batch`],
+    /// but each edge reports only the forward probability `p_u * q_uv`
+    /// (no reverse-probability probe at all — the cheapest batch shape
+    /// when only proportionality matters).
+    pub fn sample_one_sided_batch(&self, count: usize, rng: &mut Rng) -> Vec<Option<EdgeSample>> {
+        self.batch_impl(count, rng, false)
+    }
+
+    /// Shared frontier-batch body: fork the per-edge streams, degree-draw
+    /// from each, run every descent in lock-step on the same streams, and
+    /// (two-sided only) resolve all reverse probabilities in one batched
+    /// RNG-free probe.
+    fn batch_impl(&self, count: usize, rng: &mut Rng, two_sided: bool) -> Vec<Option<EdgeSample>> {
+        let mut rngs: Vec<Rng> = (0..count).map(|_| rng.fork()).collect();
+        let degree = self.degrees.sample_batch(&mut rngs);
+        let sources: Vec<usize> = degree.iter().map(|&(u, _)| u).collect();
+        let samples = self.neighbors.sample_batch_with_streams(&sources, &mut rngs);
+        let mut out: Vec<Option<EdgeSample>> = vec![None; count];
+        if two_sided {
+            // Reverse descent probabilities q_{vu}: deterministic, so one
+            // batched probe resolves every kept edge's factor.
+            let mut pairs = Vec::with_capacity(count);
+            let mut keep = Vec::with_capacity(count);
+            for (k, s) in samples.iter().enumerate() {
+                if let Some(s) = s {
+                    pairs.push((s.neighbor, sources[k]));
+                    keep.push(k);
+                }
+            }
+            let q_vu = self.neighbors.neighbor_prob_batch(&pairs);
+            for (ki, &k) in keep.iter().enumerate() {
+                let (u, p_u) = degree[k];
+                let s = samples[k].expect("kept samples are Some");
+                let v = s.neighbor;
+                let p_v = self.degrees.prob(v);
+                out[k] = Some(EdgeSample { u, v, prob: p_u * s.prob + p_v * q_vu[ki] });
+            }
+        } else {
+            for (k, s) in samples.iter().enumerate() {
+                if let Some(s) = s {
+                    let (u, p_u) = degree[k];
+                    out[k] = Some(EdgeSample { u, v: s.neighbor, prob: p_u * s.prob });
+                }
+            }
+        }
+        out
     }
 }
 
@@ -72,6 +191,47 @@ mod tests {
         ));
         let deg = Arc::new(DegreeSampler::build(&tree));
         EdgeSampler::new(deg, Arc::new(NeighborSampler::new(tree)))
+    }
+
+    #[test]
+    fn batches_replay_sequential_forked_streams() {
+        // The frontier-batch contract: edge k of a batch equals the
+        // sequential draw on the k-th stream forked off the same rng —
+        // bit for bit, including the reported probability — for both the
+        // two-sided and one-sided entries.
+        let s = build(40, 211);
+        for two_sided in [true, false] {
+            let got = if two_sided {
+                s.sample_batch(23, &mut Rng::new(213))
+            } else {
+                s.sample_one_sided_batch(23, &mut Rng::new(213))
+            };
+            let mut seed = Rng::new(213);
+            for (k, g) in got.iter().enumerate() {
+                let mut fork = seed.fork();
+                let seq = if two_sided {
+                    s.sample(&mut fork)
+                } else {
+                    s.sample_one_sided(&mut fork)
+                };
+                let want = seq.expect("n > 1 always samples");
+                let g = g.expect("batched edge must sample too");
+                assert_eq!((g.u, g.v), (want.u, want.v), "edge {k} diverged");
+                assert_eq!(g.prob.to_bits(), want.prob.to_bits(), "edge {k} prob");
+            }
+        }
+    }
+
+    #[test]
+    fn single_edge_batch_and_empty_batch() {
+        let s = build(24, 215);
+        assert!(s.sample_batch(0, &mut Rng::new(1)).is_empty());
+        let got = s.sample_batch(1, &mut Rng::new(3));
+        let mut seed = Rng::new(3);
+        let mut fork = seed.fork();
+        let want = s.sample(&mut fork).unwrap();
+        let g = got[0].unwrap();
+        assert_eq!((g.u, g.v, g.prob.to_bits()), (want.u, want.v, want.prob.to_bits()));
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //!
 //! A [`Primitives`] bundle wires them together for the applications.
 
+#![warn(missing_docs)]
+
 pub mod edge;
 pub mod neighbor;
 pub mod rownorm;
@@ -32,15 +34,25 @@ use crate::runtime::backend::KernelBackend;
 
 /// Ready-to-use bundle of all §4 primitives over one kernel graph.
 pub struct Primitives {
+    /// The multi-level KDE tree every primitive descends.
     pub tree: Arc<MultiLevelKde>,
+    /// Degree-proportional vertex sampler (Algorithm 4.6).
     pub degrees: Arc<DegreeSampler>,
+    /// Weighted neighbor sampler (Algorithm 4.11).
     pub neighbors: Arc<NeighborSampler>,
+    /// Weighted edge sampler (Algorithm 4.13), sequential and
+    /// frontier-batched entries.
     pub edges: EdgeSampler,
+    /// Random walker (Algorithm 4.16), sequential and frontier-batched
+    /// entries.
     pub walker: RandomWalker,
+    /// Shared logical-KDE-query accounting (cache misses only).
     pub counters: Arc<KdeCounters>,
 }
 
 impl Primitives {
+    /// Build the tree and every sampler over one `(dataset, kernel)`
+    /// pair; all primitives share the tree's memo cache and counters.
     pub fn build(
         ds: Arc<Dataset>,
         kernel: Kernel,
@@ -62,10 +74,12 @@ impl Primitives {
         Primitives { tree, degrees, neighbors, edges, walker, counters }
     }
 
+    /// Number of vertices of the kernel graph (= dataset points).
     pub fn n(&self) -> usize {
         self.tree.ds.n
     }
 
+    /// Logical KDE queries issued so far (cache misses only).
     pub fn kde_queries(&self) -> u64 {
         self.counters.queries()
     }

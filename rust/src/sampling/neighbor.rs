@@ -46,7 +46,10 @@ use std::sync::Arc;
 use crate::kde::multilevel::MultiLevelKde;
 use crate::util::rng::Rng;
 
+/// Algorithm 4.11 neighbor sampler over a multi-level KDE tree (see the
+/// module docs for the descent and its two batched evaluation shapes).
 pub struct NeighborSampler {
+    /// The multi-level KDE tree whose node oracles drive the descent.
     pub tree: Arc<MultiLevelKde>,
 }
 
@@ -61,6 +64,7 @@ pub struct NeighborSample {
 }
 
 impl NeighborSampler {
+    /// Wrap a multi-level KDE tree as a neighbor sampler.
     pub fn new(tree: Arc<MultiLevelKde>) -> Self {
         NeighborSampler { tree }
     }
@@ -300,6 +304,24 @@ impl NeighborSampler {
     /// while issuing a small fraction of the backend dispatches.
     pub fn sample_batch(&self, sources: &[usize], rng: &mut Rng) -> Vec<Option<NeighborSample>> {
         let mut rngs: Vec<Rng> = sources.iter().map(|_| rng.fork()).collect();
+        self.sample_batch_with_streams(sources, &mut rngs)
+    }
+
+    /// [`Self::sample_batch`] with caller-owned per-walker streams: walker
+    /// `k` draws from `rngs[k]`, exactly as `sample(sources[k], &mut
+    /// rngs[k])` would, so the batch is bit-identical to those sequential
+    /// calls while the descents advance in fused lock-step. This is the
+    /// entry the frontier-batched edge engine
+    /// ([`EdgeSampler::sample_batch`](crate::sampling::EdgeSampler::sample_batch))
+    /// uses: each edge's stream has already consumed its degree draw, and
+    /// the descent must continue on that same stream for the batched edge
+    /// to replay the sequential one.
+    pub fn sample_batch_with_streams(
+        &self,
+        sources: &[usize],
+        rngs: &mut [Rng],
+    ) -> Vec<Option<NeighborSample>> {
+        assert_eq!(sources.len(), rngs.len(), "one stream per walker");
         let n = sources.len();
         let mut out: Vec<Option<NeighborSample>> = vec![None; n];
         let root = self.tree.root();
@@ -698,6 +720,24 @@ mod tests {
         let tv = crate::util::stats::tv_distance(&counts, &want);
         want[i] = 0.0;
         assert!(tv < 0.03, "leaf-finish TV {tv}");
+    }
+
+    #[test]
+    fn sample_batch_with_streams_replays_sequential_per_stream() {
+        // The caller-owned-streams contract: walker k's batched draw is
+        // bit-identical to `sample(sources[k], &mut rngs[k])`.
+        let s = build(48, 119, KdeConfig::exact());
+        let sources: Vec<usize> = (0..29).map(|k| (k * 11) % 48).collect();
+        let mut seed = Rng::new(121);
+        let mut batch_rngs: Vec<Rng> = sources.iter().map(|_| seed.fork()).collect();
+        let mut seq_rngs = batch_rngs.clone();
+        let got = s.sample_batch_with_streams(&sources, &mut batch_rngs);
+        for (k, &src) in sources.iter().enumerate() {
+            let want = s.sample(src, &mut seq_rngs[k]).expect("n > 1 samples");
+            let g = got[k].expect("batched walker must sample too");
+            assert_eq!(g.neighbor, want.neighbor, "walker {k} diverged");
+            assert_eq!(g.prob.to_bits(), want.prob.to_bits(), "walker {k} prob");
+        }
     }
 
     #[test]

@@ -14,10 +14,12 @@ use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
 use crate::sampling::vertex::PrefixSampler;
 
+/// §5.2 squared-row-norm sampler over the kernel matrix (the `cX` trick).
 pub struct RowNormSampler {
     /// Estimated squared row norms of K (including the diagonal term).
     pub row_norms_sq: Vec<f64>,
     sampler: PrefixSampler,
+    /// KDE queries spent building the row-norm array (exactly n).
     pub build_queries: u64,
 }
 
@@ -58,6 +60,7 @@ impl RowNormSampler {
         (i, self.sampler.prob(i))
     }
 
+    /// Probability this sampler assigns to row `i`.
     pub fn prob(&self, i: usize) -> f64 {
         self.sampler.prob(i)
     }

@@ -18,6 +18,8 @@ pub struct PrefixSampler {
 }
 
 impl PrefixSampler {
+    /// Build the prefix-sum tree over nonnegative `weights` (at least one
+    /// must be positive).
     pub fn new(weights: &[f64]) -> Self {
         assert!(!weights.is_empty());
         assert!(weights.iter().all(|&w| w >= 0.0), "negative weight");
@@ -32,6 +34,7 @@ impl PrefixSampler {
         PrefixSampler { prefix }
     }
 
+    /// Sum of all weights.
     pub fn total(&self) -> f64 {
         *self.prefix.last().unwrap()
     }
@@ -61,6 +64,8 @@ impl PrefixSampler {
 /// Algorithm 4.3 + 4.6: approximate-degree array + degree-proportional
 /// vertex sampling over the kernel graph.
 pub struct DegreeSampler {
+    /// Approximate degree of every vertex (self term removed, floored at a
+    /// tiny positive value).
     pub degrees: Vec<f64>,
     sampler: PrefixSampler,
     /// KDE queries spent building the degree array (exactly n).
@@ -101,11 +106,26 @@ impl DegreeSampler {
         (i, self.sampler.prob(i))
     }
 
+    /// Batched [`Self::sample`] over caller-owned per-draw streams: draw
+    /// `k` comes from `rngs[k]`, exactly as `sample(&mut rngs[k])` would.
+    /// Degree sampling is a pure prefix-tree walk — zero KDE queries and
+    /// zero backend dispatches per draw — so this batch entry exists for
+    /// the *stream discipline*, not for fusion: the frontier-batched edge
+    /// engine ([`EdgeSampler::sample_batch`](crate::sampling::EdgeSampler::sample_batch))
+    /// draws every edge's source vertex from that edge's own forked
+    /// stream, then continues the same stream into the neighbor descent,
+    /// which is what makes a batched edge replay its sequential draw bit
+    /// for bit.
+    pub fn sample_batch(&self, rngs: &mut [Rng]) -> Vec<(usize, f64)> {
+        rngs.iter_mut().map(|r| self.sample(r)).collect()
+    }
+
     /// Probability this sampler assigns to vertex `i`.
     pub fn prob(&self, i: usize) -> f64 {
         self.sampler.prob(i)
     }
 
+    /// Total degree mass (the normalizer of the sampling distribution).
     pub fn total(&self) -> f64 {
         self.sampler.total()
     }
@@ -192,6 +212,21 @@ mod tests {
         let tree = build_tree(33, 75, KdeConfig::exact());
         let sampler = DegreeSampler::build(&tree);
         assert_eq!(sampler.build_queries, 33, "Theorem 4.9: n queries upfront");
+    }
+
+    #[test]
+    fn sample_batch_replays_sequential_per_stream() {
+        let tree = build_tree(48, 81, KdeConfig::exact());
+        let sampler = DegreeSampler::build(&tree);
+        let mut seed = crate::util::rng::Rng::new(83);
+        let mut batch_rngs: Vec<_> = (0..17).map(|_| seed.fork()).collect();
+        let mut seq_rngs = batch_rngs.clone();
+        let got = sampler.sample_batch(&mut batch_rngs);
+        for (k, (u, p)) in got.into_iter().enumerate() {
+            let (wu, wp) = sampler.sample(&mut seq_rngs[k]);
+            assert_eq!(u, wu, "draw {k} diverged");
+            assert_eq!(p.to_bits(), wp.to_bits(), "draw {k} prob");
+        }
     }
 
     #[test]

@@ -41,7 +41,10 @@ use crate::util::rng::Rng;
 /// the plain descent sample (Theorem 4.12's `O(1)` expected rounds).
 const EXACT_PROPOSALS: usize = 16;
 
+/// Algorithm 4.16 random walker (see the module docs for the sequential
+/// and frontier-batched evaluation shapes).
 pub struct RandomWalker {
+    /// The neighbor sampler each step draws from.
     pub neighbors: Arc<NeighborSampler>,
     /// If true, apply Theorem 4.12's rejection correction at every step.
     pub exact_steps: bool,
@@ -67,10 +70,13 @@ struct Frontier {
 }
 
 impl RandomWalker {
+    /// Plain walker: every step is one Algorithm 4.11 neighbor sample.
     pub fn new(neighbors: Arc<NeighborSampler>) -> Self {
         RandomWalker { neighbors, exact_steps: false }
     }
 
+    /// Exact-mode walker: every step applies Theorem 4.12's rejection
+    /// correction against true kernel weights.
     pub fn exact(neighbors: Arc<NeighborSampler>) -> Self {
         RandomWalker { neighbors, exact_steps: true }
     }

@@ -20,11 +20,25 @@
 //!    sequential O(W · T · log n)), with endpoints bit-identical to the
 //!    sequential walker on the same forked streams and TV-close to the
 //!    exact Markov chain; W = 1 / warm-cache / tiny-tree edges.
+//! 5. The frontier-batched edge engine (`EdgeSampler::sample_batch`) and
+//!    the applications on top of it: batched `triangle_weight_estimate`
+//!    and `arboricity_estimate` at n = 4096 cost <= 10 · log₂n fused
+//!    dispatches for the WHOLE estimate (not O(pool · reps · log n) /
+//!    O(m · log n)) and reproduce the sequential estimators bit for bit
+//!    from the same seed; W = 1 / tiny-tree / warm-cache edges.
+//! 6. The overlapped submission pipeline (`MultiLevelKde::set_overlap`):
+//!    double-buffered pack/execute changes wall-clock only — dispatch
+//!    counts, samples, probabilities and estimates are bit-identical
+//!    with overlap on (default) or off.
 
 use std::sync::Arc;
 
+use kde_matrix::apps::arboricity::{arboricity_estimate, arboricity_estimate_batched};
 use kde_matrix::apps::cluster_local::{same_cluster, LocalClusterParams};
 use kde_matrix::apps::sparsify::sparsify_batched;
+use kde_matrix::apps::triangles::{
+    triangle_weight_estimate, triangle_weight_estimate_batched, TriangleParams,
+};
 use kde_matrix::kde::{KdeConfig, KdeCounters, MultiLevelKde};
 use kde_matrix::kernel::{dataset::gaussian_mixture, Dataset, Kernel};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
@@ -259,6 +273,180 @@ fn n4096_cluster_local_walks_are_ot_log_n_executions() {
             "walker {k} diverged from its stream"
         );
     }
+}
+
+#[test]
+fn n4096_batched_triangles_is_olog_n_executions_and_bit_identical() {
+    // The acceptance shape for the edge-sampling frontier: one batched
+    // Theorem 6.17 estimate at n = 4096 resolves ALL of its
+    // edge_pool x reps weighted-neighbor descents in <= 10 * log2(n)
+    // fused backend dispatches — not the sequential
+    // O(pool * reps * log n) — while reproducing the sequential
+    // estimator bit for bit from the same seed.
+    let n = 4096usize;
+    let mut rng = Rng::new(3101);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+    let params = TriangleParams { edge_pool: 32, reps: 4 };
+
+    let be_b = CpuBackend::new();
+    let prims_b =
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_b.clone());
+    let before = be_b.calls();
+    let batched = triangle_weight_estimate_batched(&prims_b, &params, &mut Rng::new(47));
+    let calls_batched = be_b.calls() - before;
+
+    let be_s = CpuBackend::new();
+    let prims_s =
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_s.clone());
+    let before = be_s.calls();
+    let sequential = triangle_weight_estimate(&prims_s, &params, &mut Rng::new(47));
+    let calls_seq = be_s.calls() - before;
+
+    assert_eq!(
+        batched.estimate.to_bits(),
+        sequential.estimate.to_bits(),
+        "batched triangles diverged: {} vs {}",
+        batched.estimate,
+        sequential.estimate
+    );
+    assert_eq!(batched.kernel_evals, sequential.kernel_evals);
+    let log2n = (usize::BITS - n.leading_zeros() - 1) as u64; // 12
+    assert!(calls_batched > 0, "the estimate must hit the backend");
+    assert!(
+        calls_batched <= 10 * log2n,
+        "batched triangles used {calls_batched} dispatches; O(log n) bound is {}",
+        10 * log2n
+    );
+    assert!(
+        calls_batched * 2 <= calls_seq,
+        "edge-frontier batching won too little: {calls_seq} sequential -> {calls_batched}"
+    );
+
+    // Warm-cache replay: the same seed re-walks the same descents purely
+    // from the memo cache — zero dispatches, identical estimate.
+    let before = be_b.calls();
+    let replay = triangle_weight_estimate_batched(&prims_b, &params, &mut Rng::new(47));
+    assert_eq!(be_b.calls() - before, 0, "warm replay must not dispatch");
+    assert_eq!(replay.estimate.to_bits(), batched.estimate.to_bits());
+}
+
+#[test]
+fn n4096_batched_arboricity_is_olog_n_executions_and_bit_identical() {
+    // Same acceptance shape for Algorithm 6.14: one batched m-edge draw
+    // at n = 4096 costs <= 10 * log2(n) fused dispatches and reproduces
+    // the sequential estimate (density, subsample, densest set) bit for
+    // bit from the same seed.
+    let n = 4096usize;
+    let m = 64usize;
+    let mut rng = Rng::new(3201);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+
+    let be_b = CpuBackend::new();
+    let prims_b =
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_b.clone());
+    let before = be_b.calls();
+    let batched = arboricity_estimate_batched(&prims_b, m, false, &mut Rng::new(53));
+    let calls_batched = be_b.calls() - before;
+
+    let be_s = CpuBackend::new();
+    let prims_s =
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_s.clone());
+    let before = be_s.calls();
+    let sequential = arboricity_estimate(&prims_s, m, false, &mut Rng::new(53));
+    let calls_seq = be_s.calls() - before;
+
+    assert_eq!(
+        batched.density.to_bits(),
+        sequential.density.to_bits(),
+        "batched arboricity diverged: {} vs {}",
+        batched.density,
+        sequential.density
+    );
+    assert_eq!(batched.subsampled_graph_edges, sequential.subsampled_graph_edges);
+    assert_eq!(batched.densest_set, sequential.densest_set);
+    let log2n = (usize::BITS - n.leading_zeros() - 1) as u64; // 12
+    assert!(calls_batched > 0, "the draw must hit the backend");
+    assert!(
+        calls_batched <= 10 * log2n,
+        "batched arboricity used {calls_batched} dispatches; O(log n) bound is {}",
+        10 * log2n
+    );
+    assert!(
+        calls_batched * 2 <= calls_seq,
+        "edge-frontier batching won too little: {calls_seq} sequential -> {calls_batched}"
+    );
+}
+
+#[test]
+fn edge_batch_w1_and_tiny_tree_edges() {
+    // W = 1: a single-edge batch degenerates to the sequential draw (bit
+    // for bit, pinned in sampling/edge.rs units) at no worse than a few
+    // fused submissions per descent level.
+    let mut rng = Rng::new(3301);
+    let ds = Arc::new(gaussian_mixture(97, 4, 3, 1.2, 0.5, &mut rng));
+    let be = CpuBackend::new();
+    let prims = Primitives::build(ds, Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+    let before = be.calls();
+    let got = prims.edges.sample_batch(1, &mut Rng::new(61));
+    let calls = be.calls() - before;
+    assert!(got[0].is_some());
+    // log2(97) < 7 levels; forward descent + reverse probe, one fused
+    // submission each per level.
+    assert!(calls <= 2 * 7, "W = 1 edge batch used {calls} dispatches");
+
+    // Tiny tree (n <= leaf_cutoff): every descent is a categorical leaf
+    // finish and the reverse probes are leaf factors — zero dispatches.
+    let mut rng = Rng::new(3302);
+    let ds = Arc::new(gaussian_mixture(12, 3, 2, 1.0, 0.5, &mut rng));
+    let be = CpuBackend::new();
+    let prims = Primitives::build(ds, Kernel::Laplacian, &KdeConfig::exact(), be.clone());
+    let before = be.calls();
+    let batch = prims.edges.sample_batch(40, &mut Rng::new(67));
+    assert_eq!(be.calls() - before, 0, "leaf-finish edge batch needs no backend");
+    for (k, e) in batch.iter().enumerate() {
+        let e = e.expect("n > 1 always samples");
+        assert_ne!(e.u, e.v, "edge {k} is a self-loop");
+        assert!(e.prob > 0.0);
+    }
+}
+
+#[test]
+fn overlap_toggle_round_is_bit_identical() {
+    // The double-buffered submission queue must change wall-clock only:
+    // same dispatches, same samples, same probabilities, bit for bit,
+    // with overlap on (default) or off (the sequential fallback).
+    let mut rng = Rng::new(3401);
+    let ds = Arc::new(gaussian_mixture(512, 4, 3, 1.2, 0.5, &mut rng));
+    let mk = |overlap: bool| {
+        let be = CpuBackend::new();
+        let tree = Arc::new(MultiLevelKde::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            be.clone(),
+            KdeCounters::new(),
+        ));
+        tree.set_overlap(overlap);
+        (NeighborSampler::new(tree), be)
+    };
+    let (s_on, be_on) = mk(true);
+    let (s_off, be_off) = mk(false);
+    assert!(s_on.tree.overlap() && !s_off.tree.overlap());
+    let sources: Vec<usize> = (0..96).map(|k| (k * 5) % 512).collect();
+    let on = run_round(&s_on, &be_on, &sources, 41);
+    let off = run_round(&s_off, &be_off, &sources, 41);
+    assert_rounds_bit_identical(&on, &off);
+    assert_eq!(on.2, off.2, "overlap must not change the dispatch count");
+
+    // The batched apps ride the same queue: overlap off reproduces the
+    // batched triangles estimate exactly.
+    let ovl = Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_on);
+    let seq = Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be_off);
+    seq.tree.set_overlap(false);
+    let params = TriangleParams { edge_pool: 16, reps: 4 };
+    let a = triangle_weight_estimate_batched(&ovl, &params, &mut Rng::new(71));
+    let b = triangle_weight_estimate_batched(&seq, &params, &mut Rng::new(71));
+    assert_eq!(a.estimate.to_bits(), b.estimate.to_bits());
 }
 
 #[test]

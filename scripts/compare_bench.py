@@ -23,6 +23,11 @@ bench_kde`) against the committed baseline and fails on
     `RandomWalker::walk_batch`) must stay within
     `dispatches_batched <= 10 * t * log2_n` and beat the sequential walk
     dispatch count by at least 2x;
+  * an edge-frontier dispatch regression: the fresh `edge_fusion` object
+    (one batched triangle estimate, edge_pool = 64 x reps = 8, at
+    n = 4096 through `triangle_weight_estimate_batched`) must stay
+    within `dispatches_batched <= 10 * log2_n` and beat the sequential
+    estimator's dispatch count by at least 2x;
   * a fused-block regression: the fresh `block_fusion` object (LRA-shaped
     row construction through planner-chunked `block_ranged`) must keep
     `peak_rows_chunked <= 64` (the B-row submission cap) and
@@ -134,6 +139,27 @@ def main(argv):
                 f"beat sequential walks ({sequential}) by 2x")
     else:
         failures.append("fresh run is missing the `walk_fusion` series")
+
+    # 3b'. Frontier-batched edge sampling must stay O(log n) per estimate
+    # and beat the sequential draws.
+    edge = fresh.get("edge_fusion")
+    if edge:
+        batched = edge["dispatches_batched"]
+        sequential = edge["dispatches_sequential"]
+        bound = 10 * edge["log2_n"]
+        print(f"edge_fusion (n={edge['n']}, pool={edge['pool']}, reps={edge['reps']}): "
+              f"{sequential} sequential -> {batched} frontier-batched dispatches "
+              f"(O(log n) bound {bound})")
+        if batched > bound:
+            failures.append(
+                f"edge-fusion regression: {batched} dispatches exceeds the "
+                f"O(log n) bound {bound}")
+        if batched * 2 > sequential:
+            failures.append(
+                f"edge-fusion regression: batched edge draws ({batched}) no "
+                f"longer beat sequential draws ({sequential}) by 2x")
+    else:
+        failures.append("fresh run is missing the `edge_fusion` series")
 
     # 3c. Fused block rows must keep the planner's chunk shape.
     blk = fresh.get("block_fusion")
