@@ -2,11 +2,18 @@
 //!
 //!     make artifacts && cargo run --release --example kde_server
 //!
-//! Starts the coordinator (router + dynamic batcher + worker pool) over
-//! two dataset shards, fires concurrent client threads at it, and reports
-//! throughput, latency percentiles and batch occupancy — demonstrating
-//! the serving path where the AOT artifact's native batch shape (B = 64)
-//! is filled by the batcher rather than padded per query.
+//! Phase 1 starts the coordinator (router + dynamic batcher + worker
+//! pool) over two dataset shards, fires concurrent client threads at it,
+//! and reports throughput, latency percentiles and batch occupancy —
+//! demonstrating the serving path where the AOT artifact's native batch
+//! shape (B = 64) is filled by the batcher rather than padded per query.
+//!
+//! Phase 2 deliberately overloads the service — a burst far larger than
+//! the bounded queue, every request carrying a tight deadline — and
+//! reports the failure-model counters next to the latency percentiles:
+//! `Overloaded` rejections (backpressure instead of unbounded queueing)
+//! and `Timeout` replies (expired requests dropped from the batch plan),
+//! with every accepted request still answered exactly once.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -15,6 +22,7 @@ use std::time::{Duration, Instant};
 use kde_matrix::coordinator::{BatcherConfig, KdeService};
 use kde_matrix::kernel::{dataset, Kernel};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::error::BackendError;
 use kde_matrix::runtime::pjrt::PjrtBackend;
 use kde_matrix::util::rng::Rng;
 
@@ -43,9 +51,11 @@ fn main() {
             max_batch: 64,
             max_wait: Duration::from_micros(800),
             workers: 4,
+            queue_cap: 1024,
         },
     ));
 
+    // ---- Phase 1: well-behaved concurrent load ------------------------
     let clients = 8usize;
     let per_client = 400usize;
     let done = Arc::new(AtomicU64::new(0));
@@ -71,7 +81,7 @@ fn main() {
                 outstanding.push_back(svc.submit(shard, ds.point(i).to_vec()));
                 if outstanding.len() >= window || r + 1 == per_client {
                     while let Some(rx) = outstanding.pop_front() {
-                        let ans = rx.recv().expect("dropped");
+                        let ans = rx.recv().expect("dropped").expect("error reply");
                         assert!(ans.is_finite() && ans >= 0.0);
                         done.fetch_add(1, Ordering::Relaxed);
                     }
@@ -91,4 +101,41 @@ fn main() {
         "batch occupancy {occ:.1}/64 — {}",
         if occ > 4.0 { "batching effective" } else { "low concurrency" }
     );
+
+    // ---- Phase 2: deliberate overload with deadlines ------------------
+    // One client firing a burst far larger than the bounded queue, each
+    // request with a 500us deadline and no pipelining discipline.
+    let burst = 20_000usize;
+    let deadline = Duration::from_micros(500);
+    let mut overloaded = 0u64;
+    let mut rxs = Vec::new();
+    let mut rng = Rng::new(31);
+    let t1 = Instant::now();
+    for _ in 0..burst {
+        let i = rng.below(shard0.n);
+        match svc.try_submit_deadline(0, shard0.point(i).to_vec(), deadline) {
+            Ok(rx) => rxs.push(rx),
+            Err(BackendError::Overloaded) => overloaded += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    let (mut served, mut timeouts) = (0u64, 0u64);
+    for rx in rxs {
+        match rx.recv().expect("accepted request must be answered") {
+            Ok(_) => served += 1,
+            Err(BackendError::Timeout) => timeouts += 1,
+            Err(BackendError::Overloaded) => overloaded += 1,
+            Err(e) => panic!("unexpected reply: {e}"),
+        }
+    }
+    let wall2 = t1.elapsed().as_secs_f64();
+    println!(
+        "overload burst: {burst} submits in {wall2:.2}s -> served={served} \
+         timeouts={timeouts} overloaded={overloaded} \
+         (p50={:.0}us p99={:.0}us)",
+        svc.metrics.latency_percentile_us(50.0),
+        svc.metrics.latency_percentile_us(99.0),
+    );
+    println!("metrics: {}", svc.metrics.summary());
+    assert_eq!(served + timeouts + overloaded, burst as u64, "every request accounted for");
 }

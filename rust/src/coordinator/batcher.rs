@@ -13,6 +13,20 @@
 //! so the serving layer batches over the same oracle abstraction the
 //! algorithms use.
 //!
+//! ## Failure hardening
+//!
+//! The service enforces the failure model of docs/ARCHITECTURE.md
+//! §"Failure model": the ingress queue is **bounded** (`queue_cap`) and a
+//! full queue rejects with [`BackendError::Overloaded`] instead of
+//! buffering without bound; requests may carry a **deadline**, and an
+//! expired request is dropped from the batch plan and answered with
+//! [`BackendError::Timeout`]; a panicking shard oracle is caught at the
+//! worker's isolation boundary, every in-flight client of the batch gets
+//! a typed error reply (never a hang), and a worker that dies anyway is
+//! respawned by the router. Every reply channel carries
+//! `Result<f64, BackendError>`; the panicking `submit`/`query` entry
+//! points remain as thin wrappers over `try_submit`/`try_query`.
+//!
 //! This module also hosts [`plan_level_fusion`], the static planner behind
 //! the batched tree pipeline's level fusion: it packs the cache-miss query
 //! groups of *several* tree nodes at one level into padded fused
@@ -26,8 +40,8 @@
 //! closing one at every level boundary.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
@@ -35,6 +49,7 @@ use crate::kde::estimators::NaiveKde;
 use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
+use crate::runtime::error::{catch_panic, BackendError};
 
 /// One fusable query group handed to [`plan_level_fusion`]: `rows`
 /// cache-miss query rows that all attend to the same `seg_rows`-row data
@@ -152,6 +167,80 @@ fn plan_greedy(
     subs
 }
 
+/// Fallible double-buffered pack/execute submission queue — the overlap
+/// engine behind [`run_double_buffered`], with a typed failure channel.
+///
+/// Semantics on success are identical to [`run_double_buffered`]: `pack`
+/// runs on a dedicated packer thread feeding a bounded channel of
+/// capacity 1, `execute` runs on the **calling** thread in plan order.
+/// Failure semantics:
+///
+/// * A panic inside `pack` is caught on the packer thread and surfaces as
+///   `Err(BackendError::Panicked)`; the packer stops after reporting it.
+/// * The first `Err` returned by `execute` aborts the run; pending packed
+///   submissions are discarded.
+/// * In both cases the channel endpoints drop on the way out, so the
+///   packer thread can never stay blocked on a full channel — the scope
+///   join completes and the caller gets the error instead of a hang
+///   (pinned in `tests/faults.rs`).
+pub fn try_run_double_buffered<T, P, R, F, G>(
+    items: Vec<T>,
+    overlap: bool,
+    pack: F,
+    mut execute: G,
+) -> Result<Vec<R>, BackendError>
+where
+    T: Send,
+    P: Send,
+    F: Fn(T) -> P + Sync,
+    G: FnMut(P) -> Result<R, BackendError>,
+{
+    if !overlap || items.len() < 2 {
+        let mut out = Vec::with_capacity(items.len());
+        for t in items {
+            let p = catch_panic(|| pack(t))?;
+            out.push(catch_panic(|| execute(p)).and_then(|r| r)?);
+        }
+        return Ok(out);
+    }
+    let expected = items.len();
+    std::thread::scope(|s| {
+        let (tx, rx) = mpsc::sync_channel::<Result<P, BackendError>>(1);
+        let pack_ref = &pack;
+        s.spawn(move || {
+            for t in items {
+                let packed = catch_panic(|| pack_ref(t));
+                let failed = packed.is_err();
+                // A send error means the executor hung up (error abort);
+                // stop packing rather than panic. After reporting a pack
+                // failure there is nothing sound left to pack either.
+                if tx.send(packed).is_err() || failed {
+                    return;
+                }
+            }
+        });
+        let mut out = Vec::with_capacity(expected);
+        let mut failure: Option<BackendError> = None;
+        for packed in rx.iter() {
+            let ran = packed.and_then(|p| catch_panic(|| execute(p)).and_then(|r| r));
+            match ran {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        // `rx` drops when this closure returns — before the scope joins —
+        // so a packer blocked mid-`send` wakes with a send error and
+        // exits; the join cannot hang.
+        match failure {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
+    })
+}
+
 /// Double-buffered pack/execute submission queue: overlap the *packing*
 /// of fused submission `r + 1` (query gather + data-segment concatenation
 /// — the planner's memcpy-bound tail) with the *backend execution* of
@@ -170,7 +259,9 @@ fn plan_greedy(
 /// spawned and the loop runs inline.
 ///
 /// Scoped threads make borrowed data (`&[f32]` views into oracle
-/// buffers) safe to pack on the worker without cloning.
+/// buffers) safe to pack on the worker without cloning. This entry
+/// panics if packing panics; fallible callers use
+/// [`try_run_double_buffered`], which this is a thin wrapper over.
 pub fn run_double_buffered<T, P, R, F, G>(
     items: Vec<T>,
     overlap: bool,
@@ -183,44 +274,40 @@ where
     F: Fn(T) -> P + Sync,
     G: FnMut(P) -> R,
 {
-    if !overlap || items.len() < 2 {
-        return items.into_iter().map(|t| execute(pack(t))).collect();
+    match try_run_double_buffered(items, overlap, pack, |p| Ok(execute(p))) {
+        Ok(out) => out,
+        Err(e) => panic!("overlap pipeline failed: {e}"),
     }
-    let expected = items.len();
-    std::thread::scope(|s| {
-        let (tx, rx) = mpsc::sync_channel::<P>(1);
-        let pack_ref = &pack;
-        s.spawn(move || {
-            for t in items {
-                // A send error means the executor hung up (it cannot in
-                // the current callers, which drain the channel fully);
-                // stop packing rather than panic.
-                if tx.send(pack_ref(t)).is_err() {
-                    return;
-                }
-            }
-        });
-        let mut out = Vec::with_capacity(expected);
-        for p in rx {
-            out.push(execute(p));
-        }
-        out
-    })
 }
 
 /// One KDE query in flight.
 pub struct QueryRequest {
+    /// Target shard index.
     pub shard: usize,
+    /// The query point (must match the shard's `dim()`).
     pub point: Vec<f32>,
-    pub respond: SyncSender<f64>,
+    /// Per-request reply channel: the answer or a typed error.
+    pub respond: SyncSender<Result<f64, BackendError>>,
+    /// When the request was admitted (end-to-end latency accounting).
     pub enqueued_at: Instant,
+    /// Optional deadline: once passed, the request is dropped from the
+    /// batch plan and answered with [`BackendError::Timeout`].
+    pub deadline: Option<Instant>,
 }
 
+/// Router/worker-pool tuning knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
+    /// Max queries per dispatched batch (64 = AOT_B).
     pub max_batch: usize,
+    /// Max time the oldest pending request waits before a flush.
     pub max_wait: Duration,
+    /// Worker threads executing batches.
     pub workers: usize,
+    /// Bound on the ingress channel AND each shard's pending queue.
+    /// Admission past either bound is refused with
+    /// [`BackendError::Overloaded`] (backpressure, not unbounded memory).
+    pub queue_cap: usize,
 }
 
 impl Default for BatcherConfig {
@@ -229,6 +316,7 @@ impl Default for BatcherConfig {
             max_batch: 64, // = AOT_B
             max_wait: Duration::from_micros(500),
             workers: 2,
+            queue_cap: 1024,
         }
     }
 }
@@ -240,8 +328,9 @@ enum Control {
 
 /// Handle to a running KDE query service.
 pub struct KdeService {
-    ingress: Sender<Control>,
+    ingress: SyncSender<Control>,
     router: Option<std::thread::JoinHandle<()>>,
+    /// Shared service metrics (counters + latency percentiles).
     pub metrics: Arc<ServiceMetrics>,
     shards_len: usize,
 }
@@ -279,7 +368,7 @@ impl KdeService {
         assert!(!shards.is_empty());
         let metrics = Arc::new(ServiceMetrics::new());
         let shards_len = shards.len();
-        let (tx, rx) = mpsc::channel::<Control>();
+        let (tx, rx) = mpsc::sync_channel::<Control>(cfg.queue_cap.max(1));
         let m = metrics.clone();
         let router = std::thread::spawn(move || {
             run_router(rx, shards, cfg, m);
@@ -287,27 +376,152 @@ impl KdeService {
         KdeService { ingress: tx, router: Some(router), metrics, shards_len }
     }
 
-    /// Async submit: returns a receiver for the answer.
-    pub fn submit(&self, shard: usize, point: Vec<f32>) -> Receiver<f64> {
-        assert!(shard < self.shards_len, "unknown shard {shard}");
+    /// Fallible async submit: returns a receiver for the typed reply, or
+    /// [`BackendError::UnknownShard`] / [`BackendError::Overloaded`] /
+    /// a permanent error if the service has stopped.
+    pub fn try_submit(
+        &self,
+        shard: usize,
+        point: Vec<f32>,
+    ) -> Result<Receiver<Result<f64, BackendError>>, BackendError> {
+        self.enqueue(shard, point, None)
+    }
+
+    /// [`try_submit`](Self::try_submit) with a deadline `timeout` from
+    /// now: if the request is still waiting (in the pending queue or a
+    /// worker's inbox) when the deadline passes, it is dropped from the
+    /// batch plan and answered with [`BackendError::Timeout`].
+    pub fn try_submit_deadline(
+        &self,
+        shard: usize,
+        point: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<Receiver<Result<f64, BackendError>>, BackendError> {
+        self.enqueue(shard, point, Some(Instant::now() + timeout))
+    }
+
+    fn enqueue(
+        &self,
+        shard: usize,
+        point: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<f64, BackendError>>, BackendError> {
+        if shard >= self.shards_len {
+            return Err(BackendError::UnknownShard { shard, shards: self.shards_len });
+        }
         let (tx, rx) = mpsc::sync_channel(1);
-        self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
-        self.ingress
-            .send(Control::Request(QueryRequest {
-                shard,
-                point,
-                respond: tx,
-                enqueued_at: Instant::now(),
-            }))
-            .expect("service stopped");
-        rx
+        let req = QueryRequest {
+            shard,
+            point,
+            respond: tx,
+            enqueued_at: Instant::now(),
+            deadline,
+        };
+        match self.ingress.try_send(Control::Request(req)) {
+            Ok(()) => {
+                self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(BackendError::Overloaded)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(BackendError::permanent_failure("service stopped"))
+            }
+        }
     }
 
-    /// Blocking query.
+    /// Async submit: returns a receiver for the typed reply. Panics where
+    /// [`try_submit`](Self::try_submit) would return an error.
+    pub fn submit(&self, shard: usize, point: Vec<f32>) -> Receiver<Result<f64, BackendError>> {
+        match self.try_submit(shard, point) {
+            Ok(rx) => rx,
+            Err(e) => panic!("KDE service submit failed: {e}"),
+        }
+    }
+
+    /// Fallible blocking query: the answer, or the typed error the
+    /// service replied with. A dropped reply channel (a worker dying
+    /// between respawns) surfaces as [`BackendError::Panicked`], never a
+    /// panic or a hang.
+    pub fn try_query(&self, shard: usize, point: Vec<f32>) -> Result<f64, BackendError> {
+        let rx = self.try_submit(shard, point)?;
+        match rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => Err(BackendError::Panicked {
+                message: "service dropped request (worker died before replying)".to_string(),
+            }),
+        }
+    }
+
+    /// Fallible blocking query with a deadline: combines
+    /// [`try_submit_deadline`](Self::try_submit_deadline) with a
+    /// client-side wait bounded at `timeout` plus a generous grace period
+    /// (the service answers expired requests with `Timeout` itself; the
+    /// client-side bound is a belt-and-braces guarantee against hangs).
+    pub fn try_query_deadline(
+        &self,
+        shard: usize,
+        point: Vec<f32>,
+        timeout: Duration,
+    ) -> Result<f64, BackendError> {
+        let rx = self.try_submit_deadline(shard, point, timeout)?;
+        match rx.recv_timeout(timeout.saturating_add(Duration::from_secs(30))) {
+            Ok(reply) => reply,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(BackendError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(BackendError::Panicked {
+                message: "service dropped request (worker died before replying)".to_string(),
+            }),
+        }
+    }
+
+    /// Fallible batch query: submits every point, then collects every
+    /// reply. The first error (submission or reply) is returned.
+    pub fn try_query_batch(
+        &self,
+        shard: usize,
+        points: &[Vec<f32>],
+    ) -> Result<Vec<f64>, BackendError> {
+        let mut rxs = Vec::with_capacity(points.len());
+        for p in points {
+            rxs.push(self.try_submit(shard, p.clone())?);
+        }
+        let mut out = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            match rx.recv() {
+                Ok(reply) => out.push(reply?),
+                Err(_) => {
+                    return Err(BackendError::Panicked {
+                        message: "service dropped request (worker died before replying)"
+                            .to_string(),
+                    })
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Blocking query. Panics where [`try_query`](Self::try_query) would
+    /// return an error.
     pub fn query(&self, shard: usize, point: Vec<f32>) -> f64 {
-        self.submit(shard, point).recv().expect("service dropped request")
+        match self.try_query(shard, point) {
+            Ok(v) => v,
+            Err(e) => panic!("KDE service query failed: {e}"),
+        }
     }
 
+    /// Blocking batch query. Panics where
+    /// [`try_query_batch`](Self::try_query_batch) would return an error.
+    pub fn query_batch(&self, shard: usize, points: &[Vec<f32>]) -> Vec<f64> {
+        match self.try_query_batch(shard, points) {
+            Ok(v) => v,
+            Err(e) => panic!("KDE service batch query failed: {e}"),
+        }
+    }
+
+    /// Stop the router and workers; pending admitted requests are flushed
+    /// first.
     pub fn shutdown(mut self) {
         let _ = self.ingress.send(Control::Shutdown);
         if let Some(h) = self.router.take() {
@@ -325,6 +539,43 @@ impl Drop for KdeService {
     }
 }
 
+type SharedBatchRx = Arc<Mutex<Receiver<Vec<QueryRequest>>>>;
+
+/// Spawn one batch-executing worker over the shared batch channel. The
+/// worker loop is panic-isolated per batch (`execute_batch` catches the
+/// oracle's panic and replies typed errors), so a worker death is
+/// exceptional — the router still watches for it and respawns.
+fn spawn_worker(
+    batch_rx: &SharedBatchRx,
+    shards: &Arc<Vec<Arc<dyn Kde>>>,
+    metrics: &Arc<ServiceMetrics>,
+    stop: &Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    let rx = batch_rx.clone();
+    let sh = shards.clone();
+    let m = metrics.clone();
+    let stop_flag = stop.clone();
+    std::thread::spawn(move || loop {
+        let batch = {
+            // A poisoned lock means a sibling worker panicked while
+            // *holding the receiver* (between recv and unlock); the
+            // channel itself is still consistent — recover and serve.
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+            match guard.recv_timeout(Duration::from_millis(20)) {
+                Ok(b) => b,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop_flag.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        execute_batch(batch, sh.as_slice(), &m);
+    })
+}
+
 fn run_router(
     rx: Receiver<Control>,
     shards: Vec<Arc<dyn Kde>>,
@@ -334,30 +585,11 @@ fn run_router(
     let shards = Arc::new(shards);
     // Worker pool: batches travel over a crossbeam-free mpsc + mutex'd rx.
     let (batch_tx, batch_rx) = mpsc::channel::<Vec<QueryRequest>>();
-    let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+    let batch_rx: SharedBatchRx = Arc::new(Mutex::new(batch_rx));
     let stop = Arc::new(AtomicBool::new(false));
     let mut workers = Vec::new();
     for _ in 0..cfg.workers.max(1) {
-        let rx = batch_rx.clone();
-        let sh = shards.clone();
-        let m = metrics.clone();
-        let stop_flag = stop.clone();
-        workers.push(std::thread::spawn(move || loop {
-            let batch = {
-                let guard = rx.lock().unwrap();
-                match guard.recv_timeout(Duration::from_millis(20)) {
-                    Ok(b) => b,
-                    Err(mpsc::RecvTimeoutError::Timeout) => {
-                        if stop_flag.load(Ordering::Relaxed) {
-                            return;
-                        }
-                        continue;
-                    }
-                    Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                }
-            };
-            execute_batch(batch, sh.as_slice(), &m);
-        }));
+        workers.push(spawn_worker(&batch_rx, &shards, &metrics, &stop));
     }
 
     // Pending per-shard queues. `pending_since[s]` is when the oldest
@@ -368,6 +600,7 @@ fn run_router(
     // `batching actually batches` tests pin down).
     let mut pending: Vec<Vec<QueryRequest>> = (0..shards.len()).map(|_| Vec::new()).collect();
     let mut pending_since: Vec<Option<Instant>> = vec![None; shards.len()];
+    let queue_cap = cfg.queue_cap.max(1);
     let mut running = true;
     while running {
         // Wait for at least one request (or shutdown), with a deadline if
@@ -384,6 +617,16 @@ fn run_router(
             match ctl {
                 Control::Request(req) => {
                     let s = req.shard;
+                    // The bounded ingress channel throttles the client
+                    // side; this bounds the router's own buffer so a slow
+                    // worker pool cannot grow pending without limit
+                    // either. Past the cap, the request is answered
+                    // `Overloaded` instead of queued.
+                    if pending[s].len() >= queue_cap {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.respond.send(Err(BackendError::Overloaded));
+                        return;
+                    }
                     if pending_since[s].is_none() {
                         pending_since[s] = Some(Instant::now());
                     }
@@ -402,7 +645,10 @@ fn run_router(
         while let Ok(ctl) = rx.try_recv() {
             absorb(ctl, &mut pending, &mut pending_since, &mut running);
         }
-        // Flush policy: size or pending-age.
+        // Flush policy: size or pending-age. Requests whose deadline
+        // already passed are answered `Timeout` here instead of occupying
+        // batch slots (workers re-check at execution time for requests
+        // that expire later, while queued behind a slow batch).
         for s in 0..pending.len() {
             let flush = pending[s].len() >= cfg.max_batch
                 || (!pending[s].is_empty()
@@ -411,18 +657,42 @@ fn run_router(
                         .unwrap_or(false));
             if flush {
                 let take = pending[s].len().min(cfg.max_batch);
-                let batch: Vec<QueryRequest> = pending[s].drain(..take).collect();
+                let drained: Vec<QueryRequest> = pending[s].drain(..take).collect();
                 pending_since[s] = if pending[s].is_empty() {
                     None
                 } else {
                     Some(Instant::now())
                 };
-                metrics.record_batch(batch.len());
-                let _ = batch_tx.send(batch);
+                let now = Instant::now();
+                let mut batch = Vec::with_capacity(drained.len());
+                for req in drained {
+                    if req.deadline.is_some_and(|dl| dl <= now) {
+                        metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.respond.send(Err(BackendError::Timeout));
+                    } else {
+                        batch.push(req);
+                    }
+                }
+                if !batch.is_empty() {
+                    metrics.record_batch(batch.len());
+                    let _ = batch_tx.send(batch);
+                }
+            }
+        }
+        // Respawn any worker that died despite per-batch isolation, so
+        // the pool never silently shrinks to zero.
+        for w in workers.iter_mut() {
+            if w.is_finished() {
+                let old = std::mem::replace(w, spawn_worker(&batch_rx, &shards, &metrics, &stop));
+                if old.join().is_err() {
+                    metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                }
+                metrics.worker_respawns.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
-    // Drain everything left, then stop workers.
+    // Drain everything left, then stop workers (execute_batch re-checks
+    // deadlines, so late requests still get Timeout over an answer).
     for s in 0..pending.len() {
         while !pending[s].is_empty() {
             let take = pending[s].len().min(cfg.max_batch);
@@ -442,23 +712,77 @@ fn execute_batch(batch: Vec<QueryRequest>, shards: &[Arc<dyn Kde>], metrics: &Se
     if batch.is_empty() {
         return;
     }
-    let shard = &shards[batch[0].shard];
-    let d = shard.dim();
-    let mut queries = Vec::with_capacity(batch.len() * d);
-    for req in &batch {
-        assert_eq!(req.point.len(), d, "query dim mismatch");
-        queries.extend_from_slice(&req.point);
+    // Deadline re-check at execution time: a batch can age in the worker
+    // queue behind a slow predecessor, and an expired request must get
+    // `Timeout`, not a late answer.
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.deadline.is_some_and(|dl| dl <= now) {
+            metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(Err(BackendError::Timeout));
+        } else {
+            live.push(req);
+        }
     }
-    let sums = shard.query_batch(&queries);
-    for (req, &ans) in batch.iter().zip(&sums) {
-        // Record BEFORE responding: once `send` lands the client may check
-        // the completed counter, and recording after would race it.
-        metrics.record_latency_us(req.enqueued_at.elapsed().as_micros() as f64);
-        let _ = req.respond.send(ans);
+    let Some(first) = live.first() else {
+        return;
+    };
+    let shard = &shards[first.shard];
+    let d = shard.dim();
+    let mut queries = Vec::with_capacity(live.len() * d);
+    let mut runnable = Vec::with_capacity(live.len());
+    for req in live {
+        if req.point.len() == d {
+            queries.extend_from_slice(&req.point);
+            runnable.push(req);
+        } else {
+            metrics.error_replies.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(Err(BackendError::permanent_failure(format!(
+                "query dim {} does not match shard dim {d}",
+                req.point.len()
+            ))));
+        }
+    }
+    if runnable.is_empty() {
+        return;
+    }
+    match catch_panic(|| shard.query_batch(&queries)) {
+        Ok(sums) if sums.len() == runnable.len() => {
+            for (req, &ans) in runnable.iter().zip(&sums) {
+                // Record BEFORE responding: once `send` lands the client
+                // may check the completed counter, and recording after
+                // would race it.
+                metrics.record_latency_us(req.enqueued_at.elapsed().as_micros() as f64);
+                let _ = req.respond.send(Ok(ans));
+            }
+        }
+        Ok(sums) => {
+            let err = BackendError::permanent_failure(format!(
+                "oracle returned {} answers for {} queries",
+                sums.len(),
+                runnable.len()
+            ));
+            for req in &runnable {
+                metrics.error_replies.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(err.clone()));
+            }
+        }
+        Err(e) => {
+            // Panic isolation boundary: the worker thread survives and
+            // every in-flight client of this batch gets a typed reply
+            // instead of a dropped channel.
+            metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            for req in &runnable {
+                metrics.error_replies.fetch_add(1, Ordering::Relaxed);
+                let _ = req.respond.send(Err(e.clone()));
+            }
+        }
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;
@@ -498,6 +822,7 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_micros(200),
             workers: 3,
+            ..BatcherConfig::default()
         });
         let mut rxs = Vec::new();
         for i in 0..200 {
@@ -505,7 +830,10 @@ mod tests {
             rxs.push((i % 48, svc.submit(0, y)));
         }
         for (idx, rx) in rxs {
-            let got = rx.recv_timeout(Duration::from_secs(10)).expect("dropped");
+            let got = rx
+                .recv_timeout(Duration::from_secs(10))
+                .expect("dropped")
+                .expect("error reply");
             let want = exact(&ds, ds.point(idx));
             assert!(
                 (got - want).abs() < 1e-6 * (1.0 + want),
@@ -526,13 +854,14 @@ mod tests {
             max_batch: 16,
             max_wait: Duration::from_millis(20),
             workers: 1,
+            ..BatcherConfig::default()
         });
         let mut rxs = Vec::new();
         for i in 0..64 {
             rxs.push(svc.submit(0, ds.point(i % 32).to_vec()));
         }
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap();
         }
         let occ = svc.metrics.mean_batch_occupancy();
         assert!(occ > 2.0, "mean occupancy {occ} — batcher not batching");
@@ -592,10 +921,94 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "unknown shard")]
-    fn unknown_shard_rejected() {
+    fn unknown_shard_is_typed_error() {
         let (svc, _) = service(8, BatcherConfig::default());
-        let _ = svc.submit(3, vec![0.0; 4]);
+        match svc.try_submit(3, vec![0.0; 4]) {
+            Err(BackendError::UnknownShard { shard: 3, shards: 1 }) => {}
+            Err(e) => panic!("want UnknownShard, got {e:?}"),
+            Ok(_) => panic!("unknown shard must be rejected"),
+        }
+        match svc.try_query(9, vec![0.0; 4]) {
+            Err(BackendError::UnknownShard { shard: 9, shards: 1 }) => {}
+            other => panic!("want UnknownShard, got {other:?}"),
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_gets_timeout_reply() {
+        let (svc, ds) = service(16, BatcherConfig::default());
+        // A zero deadline is already expired when the router flushes it.
+        for i in 0..8 {
+            let got =
+                svc.try_query_deadline(0, ds.point(i).to_vec(), Duration::ZERO);
+            assert_eq!(got, Err(BackendError::Timeout), "request {i}");
+        }
+        assert!(svc.metrics.timeouts.load(Ordering::Relaxed) >= 8);
+        // The service keeps serving normal requests afterwards.
+        let y = ds.point(0).to_vec();
+        let got = svc.try_query(0, y.clone()).expect("service still healthy");
+        let want = exact(&ds, &y);
+        assert!((got - want).abs() < 1e-6 * (1.0 + want));
+        svc.shutdown();
+    }
+
+    /// A Kde oracle that panics on every batch — the chaos stand-in for a
+    /// shard whose backend blows up at execution time.
+    struct PanickingKde {
+        dim: usize,
+    }
+
+    impl Kde for PanickingKde {
+        fn query(&self, _y: &[f32]) -> f64 {
+            panic!("oracle exploded")
+        }
+        fn query_batch(&self, _ys: &[f32]) -> Vec<f64> {
+            panic!("oracle exploded")
+        }
+        fn subset_len(&self) -> usize {
+            1
+        }
+        fn dim(&self) -> usize {
+            self.dim
+        }
+    }
+
+    #[test]
+    fn worker_panic_becomes_typed_reply_and_service_survives() {
+        let mut rng = Rng::new(267);
+        let ds = Arc::new(gaussian_mixture(24, 3, 2, 1.0, 0.5, &mut rng));
+        let counters = crate::kde::KdeCounters::new();
+        let healthy: Arc<dyn Kde> = Arc::new(NaiveKde::new(
+            ds.clone(),
+            Kernel::Laplacian,
+            0,
+            24,
+            CpuBackend::new(),
+            counters,
+        ));
+        let broken: Arc<dyn Kde> = Arc::new(PanickingKde { dim: 3 });
+        let svc =
+            KdeService::start_with_oracles(vec![healthy, broken], BatcherConfig::default());
+        // Batches on the broken shard reply with Panicked — no hang, no
+        // process abort.
+        for _ in 0..3 {
+            match svc.try_query(1, vec![0.0; 3]) {
+                Err(BackendError::Panicked { message }) => {
+                    assert!(message.contains("oracle exploded"), "got: {message}")
+                }
+                other => panic!("want Panicked, got {other:?}"),
+            }
+        }
+        assert!(svc.metrics.worker_panics.load(Ordering::Relaxed) >= 3);
+        // The healthy shard still answers on the same worker pool.
+        let y = ds.point(1).to_vec();
+        let got = svc.try_query(0, y.clone()).expect("healthy shard serves");
+        let want: f64 = (0..24)
+            .map(|j| Kernel::Laplacian.eval(ds.point(j), &y) as f64)
+            .sum();
+        assert!((got - want).abs() < 1e-6 * (1.0 + want));
+        svc.shutdown();
     }
 
     fn job(rows: usize, seg_rows: usize) -> FuseJob {
@@ -817,6 +1230,50 @@ mod tests {
     }
 
     #[test]
+    fn try_double_buffered_packer_panic_is_typed_and_does_not_hang() {
+        for overlap in [false, true] {
+            let got = try_run_double_buffered(
+                (0..32).collect::<Vec<usize>>(),
+                overlap,
+                |t| {
+                    if t == 3 {
+                        panic!("pack exploded at {t}")
+                    }
+                    t
+                },
+                |p| Ok::<usize, BackendError>(p),
+            );
+            match got {
+                Err(BackendError::Panicked { message }) => {
+                    assert!(message.contains("pack exploded"), "got: {message}")
+                }
+                other => panic!("overlap={overlap}: want Panicked, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn try_double_buffered_execute_error_aborts_cleanly() {
+        for overlap in [false, true] {
+            let mut executed = 0usize;
+            let got = try_run_double_buffered(
+                (0..32).collect::<Vec<usize>>(),
+                overlap,
+                |t| t,
+                |p| {
+                    if p == 5 {
+                        return Err(BackendError::transient_failure("execute refused"));
+                    }
+                    executed += 1;
+                    Ok(p)
+                },
+            );
+            assert!(got.is_err(), "overlap={overlap}");
+            assert_eq!(executed, 5, "execution stops at the first error");
+        }
+    }
+
+    #[test]
     fn property_random_loads_all_answered() {
         crate::util::prop::forall(6, |rng, _| {
             let n = 8 + rng.below(32);
@@ -829,6 +1286,7 @@ mod tests {
                     max_batch: 1 + rng.below(16),
                     max_wait: Duration::from_micros(100 + rng.below(500) as u64),
                     workers: 1 + rng.below(3),
+                    ..BatcherConfig::default()
                 },
             );
             let reqs = 1 + rng.below(60);
@@ -837,7 +1295,10 @@ mod tests {
                 rxs.push((i % n, svc.submit(0, ds.point(i % n).to_vec())));
             }
             for (idx, rx) in rxs {
-                let got = rx.recv_timeout(Duration::from_secs(10)).expect("dropped");
+                let got = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .expect("dropped")
+                    .expect("error reply");
                 let want: f64 = (0..n)
                     .map(|j| Kernel::Laplacian.eval(ds.point(j), ds.point(idx)) as f64)
                     .sum();

@@ -1,30 +1,63 @@
-//! Service metrics: queue depth, batch occupancy, latency percentiles.
+//! Service metrics: queue depth, batch occupancy, latency percentiles,
+//! failure/backpressure counters, and the resilience (retry/failover)
+//! counters exported by `runtime::resilient`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, PoisonError};
 
+/// Counters and latency samples for one [`KdeService`] instance.
+///
+/// The failure-path counters (`rejected`, `timeouts`, `error_replies`,
+/// `worker_panics`, `worker_respawns`) record the serving contracts of the
+/// failure model (docs/ARCHITECTURE.md): every admitted request gets
+/// exactly one reply — an answer, a `Timeout`, or a typed error — and a
+/// crashed worker is respawned rather than silently shrinking the pool.
+///
+/// [`KdeService`]: crate::coordinator::batcher::KdeService
 #[derive(Default)]
 pub struct ServiceMetrics {
+    /// Requests admitted into the bounded queue.
     pub enqueued: AtomicU64,
+    /// Requests answered with an `Ok` value.
     pub completed: AtomicU64,
+    /// Requests refused at the bounded queue (`Overloaded` backpressure).
+    pub rejected: AtomicU64,
+    /// Requests whose deadline expired before execution (`Timeout` reply).
+    pub timeouts: AtomicU64,
+    /// Requests answered with a typed error other than `Timeout`.
+    pub error_replies: AtomicU64,
+    /// Panics caught at a worker's isolation boundary.
+    pub worker_panics: AtomicU64,
+    /// Worker threads respawned after dying.
+    pub worker_respawns: AtomicU64,
+    /// Batches dispatched to the worker pool.
     pub batches: AtomicU64,
+    /// Total queries across dispatched batches.
     pub batched_queries: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
 }
 
 impl ServiceMetrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one dispatched batch of `size` queries.
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_queries.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Record one completed request and its end-to-end latency.
     pub fn record_latency_us(&self, us: f64) {
         self.completed.fetch_add(1, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(us);
+        // A poisoned sample buffer (panicking pusher) still holds valid
+        // samples; recover the guard instead of cascading the panic.
+        self.latencies_us
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .push(us);
     }
 
     /// Mean queries per batch (batch occupancy; 64 is the AOT optimum).
@@ -36,19 +69,28 @@ impl ServiceMetrics {
         self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
     }
 
+    /// Latency percentile in microseconds over all completed requests.
     pub fn latency_percentile_us(&self, p: f64) -> f64 {
-        let l = self.latencies_us.lock().unwrap();
+        let l = self
+            .latencies_us
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
         if l.is_empty() {
             return 0.0;
         }
         crate::util::stats::percentile(&l, p)
     }
 
+    /// One-line human-readable snapshot.
     pub fn summary(&self) -> String {
         format!(
-            "enqueued={} completed={} batches={} occupancy={:.1} p50={:.0}us p95={:.0}us p99={:.0}us",
+            "enqueued={} completed={} rejected={} timeouts={} errors={} batches={} \
+             occupancy={:.1} p50={:.0}us p95={:.0}us p99={:.0}us",
             self.enqueued.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.timeouts.load(Ordering::Relaxed),
+            self.error_replies.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_occupancy(),
             self.latency_percentile_us(50.0),
@@ -58,7 +100,42 @@ impl ServiceMetrics {
     }
 }
 
+/// Retry/degradation counters for a `ResilientBackend`
+/// (`runtime::resilient`): how many primary attempts failed, how many were
+/// retried, whether the wrapper failed over, and how many calls the
+/// fallback has absorbed since.
+#[derive(Default)]
+pub struct ResilienceMetrics {
+    /// Primary-backend attempts that returned an error (or panicked).
+    pub primary_errors: AtomicU64,
+    /// Retries issued against the primary after a transient error.
+    pub retries: AtomicU64,
+    /// Permanent degradations to the fallback backend (0 or 1 per wrapper).
+    pub failovers: AtomicU64,
+    /// Calls served by the fallback backend after failover.
+    pub fallback_calls: AtomicU64,
+}
+
+impl ResilienceMetrics {
+    /// Fresh zeroed counters behind an `Arc` (shared with the wrapper).
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// One-line human-readable snapshot.
+    pub fn summary(&self) -> String {
+        format!(
+            "primary_errors={} retries={} failovers={} fallback_calls={}",
+            self.primary_errors.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
+            self.failovers.load(Ordering::Relaxed),
+            self.fallback_calls.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 
@@ -79,5 +156,18 @@ mod tests {
         assert_eq!(m.completed.load(Ordering::Relaxed), 100);
         assert!((m.latency_percentile_us(50.0) - 50.0).abs() <= 1.0);
         assert!(m.latency_percentile_us(95.0) >= 94.0);
+    }
+
+    #[test]
+    fn summaries_include_failure_counters() {
+        let m = ServiceMetrics::new();
+        m.rejected.fetch_add(3, Ordering::Relaxed);
+        m.timeouts.fetch_add(2, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("rejected=3"), "got: {s}");
+        assert!(s.contains("timeouts=2"), "got: {s}");
+        let r = ResilienceMetrics::new();
+        r.retries.fetch_add(5, Ordering::Relaxed);
+        assert!(r.summary().contains("retries=5"));
     }
 }

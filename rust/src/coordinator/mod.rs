@@ -19,18 +19,28 @@
 //! `Arc<dyn Kde>` oracles (`start_with_oracles`): raw datasets served
 //! exactly (`start`), sampling/HBE estimators, or multi-level-tree nodes.
 //!
+//! The serving path implements the failure model of docs/ARCHITECTURE.md
+//! §"Failure model": a bounded ingress queue that rejects with
+//! `Overloaded` under backpressure, per-request deadlines answered with
+//! `Timeout`, panic isolation at the worker boundary with typed error
+//! replies, and worker respawn. Production code in this tree must not
+//! `unwrap`/`expect` — failures travel as typed
+//! [`BackendError`](crate::runtime::BackendError)s (the clippy gate below
+//! is part of CI's `-D warnings` leg).
+//!
 //! The module also hosts the offline pipeline's level-fusion planners
 //! ([`plan_level_fusion`] and its cross-level extension
 //! [`plan_level_fusion_adaptive`], which admits segments largest-first so
 //! the frontier walk engine's mixed-level rounds share submissions): the
 //! same B = 64 packing discipline, applied to whole tree levels instead of
 //! request queues.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod batcher;
 pub mod metrics;
 
 pub use batcher::{
-    plan_level_fusion, plan_level_fusion_adaptive, BatcherConfig, FuseJob, FuseSubmission,
-    KdeService, QueryRequest,
+    plan_level_fusion, plan_level_fusion_adaptive, run_double_buffered,
+    try_run_double_buffered, BatcherConfig, FuseJob, FuseSubmission, KdeService, QueryRequest,
 };
-pub use metrics::ServiceMetrics;
+pub use metrics::{ResilienceMetrics, ServiceMetrics};

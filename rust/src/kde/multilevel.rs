@@ -33,10 +33,14 @@
 //! tree) fall back to their own `query_batch`, one dispatch per group.
 //! When a fused plan spans several submissions, packing and execution are
 //! pipelined through the double-buffered submission queue
-//! ([`run_double_buffered`]): submission r + 1's rows and data segments
-//! are gathered on a packer thread while the backend runs submission r —
-//! same submissions, same order, same values; wall-clock only
-//! ([`MultiLevelKde::set_overlap`] is the sequential fallback switch).
+//! ([`try_run_double_buffered`]): submission r + 1's rows and data
+//! segments are gathered on a packer thread while the backend runs
+//! submission r — same submissions, same order, same values; wall-clock
+//! only ([`MultiLevelKde::set_overlap`] is the sequential fallback
+//! switch). Dispatch failures (and packer panics) surface through
+//! [`MultiLevelKde::try_query_points_multi`] as typed
+//! [`BackendError`](crate::runtime::BackendError)s; the infallible
+//! entry points are thin panicking wrappers.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -44,12 +48,13 @@ use std::sync::{Arc, Mutex};
 use crate::util::fxhash::FxHashMap;
 
 use crate::coordinator::batcher::{
-    plan_level_fusion_adaptive, run_double_buffered, FuseJob, FuseSubmission,
+    plan_level_fusion_adaptive, try_run_double_buffered, FuseJob, FuseSubmission,
 };
 use crate::kde::hbe::HbeKde;
 use crate::kde::{EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
+use crate::runtime::error::{catch_panic, BackendError};
 use crate::runtime::pjrt::{AOT_B, AOT_M};
 use crate::util::rng::Rng;
 
@@ -369,6 +374,25 @@ impl MultiLevelKde {
     /// across the sampling descent and later probability recomputation
     /// survives fusion.
     pub fn query_points_multi(&self, groups: &[(usize, &[usize])]) -> Vec<Vec<f64>> {
+        match self.try_query_points_multi(groups) {
+            Ok(v) => v,
+            Err(e) => panic!("multi-level KDE dispatch failed: {e}"),
+        }
+    }
+
+    /// Fallible [`query_points_multi`](Self::query_points_multi): the same
+    /// dedup + fused-plan evaluation, but backend dispatch failures
+    /// (`KernelBackend::try_sums_ranged`), panicking oracles, and packer
+    /// panics in the overlapped queue surface as typed
+    /// [`BackendError`]s instead of unwinding. On error, every answer
+    /// committed before the failing submission stays memoized (first
+    /// writer wins as usual), so a retry — or a failover rerun through a
+    /// [`ResilientBackend`](crate::runtime::ResilientBackend)-wrapped
+    /// tree — only pays for the uncommitted remainder.
+    pub fn try_query_points_multi(
+        &self,
+        groups: &[(usize, &[usize])],
+    ) -> Result<Vec<Vec<f64>>, BackendError> {
         // Pass 1: per-group dedup + cache probe. One shard lookup per
         // DISTINCT index; answers resolve through local maps so the final
         // readback is lock-free (and immune to a racing clear_cache
@@ -411,8 +435,11 @@ impl MultiLevelKde {
                     for &i in miss {
                         ys.extend_from_slice(self.ds.point(i));
                     }
-                    // The oracle records its own query count.
-                    let vals = self.oracles[id].query_batch(&ys);
+                    // The oracle records its own query count. A panicking
+                    // oracle (chaos tests, poisoned estimator state)
+                    // becomes a typed error instead of unwinding through
+                    // the sampling descent.
+                    let vals = catch_panic(|| self.oracles[id].query_batch(&ys))?;
                     self.commit(id, miss, &vals, &mut resolved[gi]);
                 }
             }
@@ -446,7 +473,7 @@ impl MultiLevelKde {
             let missing_ref = &missing;
             let resolved_ref = &mut resolved;
             let overlap = self.overlap.load(Ordering::Relaxed);
-            run_double_buffered(
+            try_run_double_buffered(
                 plan,
                 overlap,
                 // Pack stage: gather one submission's query rows and data
@@ -487,8 +514,9 @@ impl MultiLevelKde {
                         PackedData::Borrowed(b) => *b,
                         PackedData::Owned(v) => v.as_slice(),
                     };
-                    let raw =
-                        self.backend.sums_ranged(self.kernel, &p.queries, data, d, &p.ranges);
+                    let raw = self
+                        .backend
+                        .try_sums_ranged(self.kernel, &p.queries, data, d, &p.ranges)?;
                     for (&(fj, r), &v) in p.rows.iter().zip(&raw) {
                         let (gi, view) = fused_ref[fj];
                         let id = groups[gi].0;
@@ -500,11 +528,12 @@ impl MultiLevelKde {
                             self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
                         resolved_ref[gi].insert(i as u32, Some(stored));
                     }
+                    Ok(())
                 },
-            );
+            )?;
         }
         // Pass 3: readback in input order.
-        groups
+        Ok(groups
             .iter()
             .enumerate()
             .map(|(gi, &(_, idx))| {
@@ -512,7 +541,7 @@ impl MultiLevelKde {
                     .map(|&i| resolved[gi][&(i as u32)].expect("every index resolved above"))
                     .collect()
             })
-            .collect()
+            .collect())
     }
 
     /// Memoize `vals` for `miss` against node `id` and mirror the stored

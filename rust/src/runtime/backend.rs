@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::kernel::Kernel;
+use crate::runtime::error::{catch_panic, BackendError};
 
 /// Batched kernel evaluation engine.
 ///
@@ -131,6 +132,66 @@ pub trait KernelBackend: Send + Sync {
             q0 = q1;
         }
         out
+    }
+
+    /// Fallible [`sums`](Self::sums): the provided implementation runs the
+    /// infallible path behind `catch_unwind` and converts a panic into
+    /// [`BackendError::Panicked`]. Backends with a native error channel
+    /// (PJRT) override this to surface their real engine errors instead.
+    ///
+    /// Failed calls leave no partial results behind — callers (the
+    /// [`resilient`](crate::runtime::resilient) wrapper, the serving
+    /// path) may retry or re-issue the identical call on a fallback
+    /// backend. Eval/dispatch counters may still have been bumped by the
+    /// failed attempt; they are monotone cost meters, not exact ledgers.
+    fn try_sums(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+    ) -> Result<Vec<f64>, BackendError> {
+        catch_panic(|| self.sums(kernel, queries, data, d))
+    }
+
+    /// Fallible [`block`](Self::block); same contract as
+    /// [`try_sums`](Self::try_sums).
+    fn try_block(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+    ) -> Result<Vec<f32>, BackendError> {
+        catch_panic(|| self.block(kernel, queries, data, d))
+    }
+
+    /// Fallible [`sums_ranged`](Self::sums_ranged); same contract as
+    /// [`try_sums`](Self::try_sums). This is the entry the fused batched
+    /// pipeline uses, so a mid-pipeline engine failure surfaces as a typed
+    /// error instead of unwinding through the overlap queue.
+    fn try_sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Vec<f64>, BackendError> {
+        catch_panic(|| self.sums_ranged(kernel, queries, data, d, ranges))
+    }
+
+    /// Fallible [`block_ranged`](Self::block_ranged); same contract as
+    /// [`try_sums`](Self::try_sums).
+    fn try_block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Vec<f32>, BackendError> {
+        catch_panic(|| self.block_ranged(kernel, queries, data, d, ranges))
     }
 
     /// Logical kernel evaluations performed so far (b*m per call).
@@ -294,10 +355,37 @@ impl KernelBackend for CpuBackend {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::ALL_KERNELS;
     use crate::util::prop::forall;
+
+    #[test]
+    fn default_try_entries_catch_panics_and_match_infallible() {
+        let be = CpuBackend::new();
+        let q = vec![0.0f32; 2 * 3]; // b=2, d=3
+        let x = vec![0.5f32; 4 * 3]; // m=4
+        let ranges = [(0usize, 4usize), (1, 3)];
+        let ok = be.try_sums(Kernel::Gaussian, &q, &x, 3).expect("cpu try_sums");
+        assert_eq!(ok, be.sums(Kernel::Gaussian, &q, &x, 3));
+        let okr = be
+            .try_sums_ranged(Kernel::Gaussian, &q, &x, 3, &ranges)
+            .expect("cpu try_sums_ranged");
+        assert_eq!(okr, be.sums_ranged(Kernel::Gaussian, &q, &x, 3, &ranges));
+        assert!(be.try_block(Kernel::Gaussian, &q, &x, 3).is_ok());
+        assert!(be.try_block_ranged(Kernel::Gaussian, &q, &x, 3, &ranges).is_ok());
+        // A contract violation panics on the infallible path; the try_*
+        // default converts it into a typed Panicked error.
+        match be.try_sums(Kernel::Gaussian, &q, &x, 5) {
+            Err(BackendError::Panicked { .. }) => {}
+            other => panic!("want Panicked, got {other:?}"),
+        }
+        match be.try_sums_ranged(Kernel::Gaussian, &q, &x, 3, &[(0, 99), (0, 1)]) {
+            Err(BackendError::Panicked { .. }) => {}
+            other => panic!("want Panicked, got {other:?}"),
+        }
+    }
 
     #[test]
     fn sums_match_block_row_sums() {

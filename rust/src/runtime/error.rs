@@ -1,0 +1,183 @@
+//! Typed failure taxonomy for the execution layer.
+//!
+//! Every fallible entry point in the runtime and the serving coordinator
+//! (`KernelBackend::try_*`, `KdeService::try_query`, the overlapped
+//! submission queue) reports one of the [`BackendError`] variants below
+//! instead of panicking. Each variant carries a **transient/permanent**
+//! tag ([`BackendError::transient`]): transient failures are worth a
+//! bounded retry (`runtime::resilient`), permanent ones trigger immediate
+//! degradation to a fallback backend or a typed client reply.
+//!
+//! The infallible APIs (`sums`, `query`, ...) remain available as thin
+//! wrappers that panic with the typed error's message — existing callers
+//! keep their contract, new callers get a real failure channel.
+
+use std::fmt;
+
+/// Convenience alias for results of fallible execution-layer calls.
+pub type BackendResult<T> = Result<T, BackendError>;
+
+/// A typed failure from the execution layer (backend or serving path).
+///
+/// See the module docs for the transient/permanent retry semantics and
+/// `docs/ARCHITECTURE.md` ("Failure model") for the end-to-end contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum BackendError {
+    /// The execution engine reported a failure (PJRT compile/execute
+    /// error, injected fault, ...). `transient` marks whether a retry of
+    /// the same call can plausibly succeed.
+    ExecutionFailed {
+        /// Human-readable failure description (engine error chain).
+        message: String,
+        /// Whether a bounded retry is worthwhile.
+        transient: bool,
+    },
+    /// Required AOT artifacts are missing or unreadable (permanent: no
+    /// retry can make `manifest.json` appear mid-run).
+    ArtifactMissing {
+        /// What was missing, including the path looked at.
+        detail: String,
+    },
+    /// A per-request deadline expired before the request was served. The
+    /// request was dropped from the batch plan, never executed.
+    Timeout,
+    /// The service's bounded request queue is full; the request was
+    /// rejected instead of buffered without bound (backpressure).
+    Overloaded,
+    /// A worker or backend panicked; the panic was caught at an isolation
+    /// boundary and converted into this error instead of taking the
+    /// process (or a waiting client) down.
+    Panicked {
+        /// The panic payload's message, when it carried one.
+        message: String,
+    },
+    /// A request was routed to a shard index the service does not have.
+    UnknownShard {
+        /// The shard index the caller asked for.
+        shard: usize,
+        /// How many shards the service actually serves.
+        shards: usize,
+    },
+}
+
+impl BackendError {
+    /// Whether a bounded retry of the same call is worthwhile.
+    ///
+    /// * `ExecutionFailed` — per its tag (engine hiccups are transient,
+    ///   structural failures are not).
+    /// * `Timeout` / `Overloaded` — transient: load subsides.
+    /// * `ArtifactMissing` / `Panicked` / `UnknownShard` — permanent:
+    ///   retrying the identical call deterministically fails again.
+    pub fn transient(&self) -> bool {
+        match self {
+            BackendError::ExecutionFailed { transient, .. } => *transient,
+            BackendError::Timeout | BackendError::Overloaded => true,
+            BackendError::ArtifactMissing { .. }
+            | BackendError::Panicked { .. }
+            | BackendError::UnknownShard { .. } => false,
+        }
+    }
+
+    /// Shorthand for a transient [`ExecutionFailed`](Self::ExecutionFailed).
+    pub fn transient_failure(message: impl Into<String>) -> Self {
+        BackendError::ExecutionFailed { message: message.into(), transient: true }
+    }
+
+    /// Shorthand for a permanent [`ExecutionFailed`](Self::ExecutionFailed).
+    pub fn permanent_failure(message: impl Into<String>) -> Self {
+        BackendError::ExecutionFailed { message: message.into(), transient: false }
+    }
+}
+
+impl fmt::Display for BackendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendError::ExecutionFailed { message, transient } => {
+                let kind = if *transient { "transient" } else { "permanent" };
+                write!(f, "execution failed ({kind}): {message}")
+            }
+            BackendError::ArtifactMissing { detail } => {
+                write!(f, "artifacts missing: {detail}")
+            }
+            BackendError::Timeout => {
+                write!(f, "deadline expired before the request was served")
+            }
+            BackendError::Overloaded => {
+                write!(f, "service overloaded: bounded request queue is full")
+            }
+            BackendError::Panicked { message } => {
+                write!(f, "worker panicked: {message}")
+            }
+            BackendError::UnknownShard { shard, shards } => {
+                write!(f, "unknown shard {shard} (service has {shards})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Run `f`, converting a panic into [`BackendError::Panicked`].
+///
+/// This is the isolation boundary the fallible default `try_*` backend
+/// entry points, the batcher's workers and the overlap queue's packer
+/// thread all share: a panicking computation becomes a typed error reply
+/// instead of a dead thread (and, for clients waiting on a channel, a
+/// hang). The closure is asserted unwind-safe — callers must tolerate
+/// partially-updated internal state behind a caught panic, which every
+/// call site here does (counters may over-count, memo caches keep only
+/// fully-committed entries).
+pub fn catch_panic<T>(f: impl FnOnce() -> T) -> BackendResult<T> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+        .map_err(|p| BackendError::Panicked { message: panic_message(p.as_ref()) })
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_tags() {
+        assert!(BackendError::transient_failure("x").transient());
+        assert!(!BackendError::permanent_failure("x").transient());
+        assert!(BackendError::Timeout.transient());
+        assert!(BackendError::Overloaded.transient());
+        assert!(!BackendError::ArtifactMissing { detail: "m".into() }.transient());
+        assert!(!BackendError::Panicked { message: "p".into() }.transient());
+        assert!(!BackendError::UnknownShard { shard: 3, shards: 1 }.transient());
+    }
+
+    #[test]
+    fn catch_panic_converts_payloads() {
+        let ok = catch_panic(|| 41 + 1);
+        assert_eq!(ok, Ok(42));
+        let err = catch_panic(|| -> u32 { panic!("boom {}", 7) });
+        match err {
+            Err(BackendError::Panicked { message }) => {
+                assert!(message.contains("boom 7"), "got: {message}")
+            }
+            other => panic!("want Panicked, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let e = BackendError::UnknownShard { shard: 5, shards: 2 };
+        let s = format!("{e}");
+        assert!(s.contains("unknown shard 5"), "got: {s}");
+        assert!(format!("{}", BackendError::Overloaded).contains("overloaded"));
+        assert!(format!("{}", BackendError::transient_failure("x")).contains("transient"));
+    }
+}

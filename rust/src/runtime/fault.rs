@@ -1,0 +1,355 @@
+//! Deterministic fault injection for chaos-testing the execution layer.
+//!
+//! [`FaultInjectingBackend`] wraps any [`KernelBackend`] and applies a
+//! seeded [`FaultPlan`] to every dispatch: fail call #k, fail every call
+//! from #k on, fail every p-th call, flip a deterministic coin per call,
+//! panic instead of erroring, and/or inject latency. Because the schedule
+//! is a pure function of the call index (plus the plan's own seeded RNG),
+//! a chaos scenario replays identically run after run — which is what
+//! lets `tests/faults.rs` pin bit-identical failover output.
+//!
+//! Faults fire *before* the wrapped backend is touched, so a failed call
+//! leaves no partial state behind and the identical call can be retried
+//! or re-issued on a fallback backend ([`crate::runtime::resilient`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::kernel::Kernel;
+use crate::runtime::backend::KernelBackend;
+use crate::runtime::error::BackendError;
+use crate::util::rng::Rng;
+
+/// How an injected fault manifests at the call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Return a transient [`BackendError::ExecutionFailed`] (retryable).
+    Transient,
+    /// Return a permanent [`BackendError::ExecutionFailed`] (fail over).
+    Permanent,
+    /// Panic, exercising the `catch_unwind` isolation boundaries.
+    Panic,
+}
+
+/// A deterministic failure schedule over the wrapped backend's dispatches.
+///
+/// Call indices are 0-based and count every `sums`/`block`/`*_ranged`
+/// dispatch (fallible or not) in arrival order. The individual triggers
+/// compose with OR: a call faults if *any* of them matches it.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Fail every call with index `>= k` (models an engine dying mid-run).
+    pub fail_from: Option<u64>,
+    /// Fail exactly these call indices.
+    pub fail_calls: Vec<u64>,
+    /// Fail every p-th call (indices p-1, 2p-1, ...). `Some(0)` never fires.
+    pub fail_every: Option<u64>,
+    /// Per-call failure probability from the plan's seeded coin (0 = off).
+    pub fail_prob: f64,
+    /// How a scheduled fault manifests.
+    pub mode: FaultMode,
+    /// Sleep this long at the top of every call (deadline/overload tests).
+    pub latency: Option<Duration>,
+    /// Seed for the `fail_prob` coin.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            fail_from: None,
+            fail_calls: Vec::new(),
+            fail_every: None,
+            fail_prob: 0.0,
+            mode: FaultMode::Transient,
+            latency: None,
+            seed: 0xFA17,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Schedule: every call with index `>= k` fails.
+    pub fn fail_from(k: u64) -> Self {
+        FaultPlan { fail_from: Some(k), ..FaultPlan::default() }
+    }
+
+    /// Schedule: exactly call #k fails.
+    pub fn fail_call(k: u64) -> Self {
+        FaultPlan { fail_calls: vec![k], ..FaultPlan::default() }
+    }
+
+    /// Schedule: every p-th call fails.
+    pub fn fail_every(p: u64) -> Self {
+        FaultPlan { fail_every: Some(p), ..FaultPlan::default() }
+    }
+
+    /// Schedule: no failures, only per-call latency (slow-backend model).
+    pub fn latency_only(latency: Duration) -> Self {
+        FaultPlan { latency: Some(latency), ..FaultPlan::default() }
+    }
+
+    /// Set how scheduled faults manifest.
+    pub fn with_mode(mut self, mode: FaultMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Add per-call latency on top of the failure schedule.
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = Some(latency);
+        self
+    }
+}
+
+/// A [`KernelBackend`] decorator that injects the plan's faults ahead of
+/// the wrapped backend; see the module docs.
+pub struct FaultInjectingBackend {
+    inner: Arc<dyn KernelBackend>,
+    plan: FaultPlan,
+    seen: AtomicU64,
+    injected: AtomicU64,
+    coin: Mutex<Rng>,
+}
+
+impl FaultInjectingBackend {
+    /// Wrap `inner` with the given failure schedule.
+    pub fn new(inner: Arc<dyn KernelBackend>, plan: FaultPlan) -> Arc<Self> {
+        let coin = Mutex::new(Rng::new(plan.seed));
+        Arc::new(FaultInjectingBackend {
+            inner,
+            plan,
+            seen: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+            coin,
+        })
+    }
+
+    /// Dispatches that reached this wrapper so far (faulted or not).
+    pub fn calls_seen(&self) -> u64 {
+        self.seen.load(Ordering::Relaxed)
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Apply the schedule for the next call index: sleep, then either
+    /// pass (`Ok`), fail typed, or panic, per the plan's mode.
+    fn gate(&self) -> Result<(), BackendError> {
+        let idx = self.seen.fetch_add(1, Ordering::Relaxed);
+        if let Some(latency) = self.plan.latency {
+            std::thread::sleep(latency);
+        }
+        let mut fault = self.plan.fail_calls.contains(&idx)
+            || self.plan.fail_from.is_some_and(|k| idx >= k)
+            || self.plan.fail_every.is_some_and(|p| p > 0 && (idx + 1) % p == 0);
+        if !fault && self.plan.fail_prob > 0.0 {
+            let mut coin = self
+                .coin
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            fault = coin.bernoulli(self.plan.fail_prob);
+        }
+        if !fault {
+            return Ok(());
+        }
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        match self.plan.mode {
+            FaultMode::Panic => panic!("injected fault: scheduled panic at backend call {idx}"),
+            FaultMode::Transient => Err(BackendError::ExecutionFailed {
+                message: format!("injected transient fault at backend call {idx}"),
+                transient: true,
+            }),
+            FaultMode::Permanent => Err(BackendError::ExecutionFailed {
+                message: format!("injected permanent fault at backend call {idx}"),
+                transient: false,
+            }),
+        }
+    }
+}
+
+impl KernelBackend for FaultInjectingBackend {
+    fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
+        match self.gate() {
+            Ok(()) => self.inner.sums(kernel, queries, data, d),
+            Err(e) => panic!("injected fault on the infallible path: {e}"),
+        }
+    }
+
+    fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
+        match self.gate() {
+            Ok(()) => self.inner.block(kernel, queries, data, d),
+            Err(e) => panic!("injected fault on the infallible path: {e}"),
+        }
+    }
+
+    fn sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f64> {
+        match self.gate() {
+            Ok(()) => self.inner.sums_ranged(kernel, queries, data, d, ranges),
+            Err(e) => panic!("injected fault on the infallible path: {e}"),
+        }
+    }
+
+    fn block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f32> {
+        match self.gate() {
+            Ok(()) => self.inner.block_ranged(kernel, queries, data, d, ranges),
+            Err(e) => panic!("injected fault on the infallible path: {e}"),
+        }
+    }
+
+    fn try_sums(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+    ) -> Result<Vec<f64>, BackendError> {
+        self.gate()?;
+        self.inner.try_sums(kernel, queries, data, d)
+    }
+
+    fn try_block(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+    ) -> Result<Vec<f32>, BackendError> {
+        self.gate()?;
+        self.inner.try_block(kernel, queries, data, d)
+    }
+
+    fn try_sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Vec<f64>, BackendError> {
+        self.gate()?;
+        self.inner.try_sums_ranged(kernel, queries, data, d, ranges)
+    }
+
+    fn try_block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Vec<f32>, BackendError> {
+        self.gate()?;
+        self.inner.try_block_ranged(kernel, queries, data, d, ranges)
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        self.inner.kernel_evals()
+    }
+
+    fn calls(&self) -> u64 {
+        self.inner.calls()
+    }
+
+    fn name(&self) -> &'static str {
+        "fault-injecting"
+    }
+
+    fn isa(&self) -> &'static str {
+        self.inner.isa()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::CpuBackend;
+
+    fn tiny() -> (Vec<f32>, Vec<f32>) {
+        (vec![0.0f32; 2 * 2], vec![0.5f32; 3 * 2])
+    }
+
+    #[test]
+    fn schedule_fires_deterministically() {
+        let (q, x) = tiny();
+        let be = FaultInjectingBackend::new(CpuBackend::new(), FaultPlan::fail_call(1));
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok());
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_err());
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok());
+        assert_eq!(be.calls_seen(), 3);
+        assert_eq!(be.injected(), 1);
+    }
+
+    #[test]
+    fn fail_every_period() {
+        let (q, x) = tiny();
+        let be = FaultInjectingBackend::new(CpuBackend::new(), FaultPlan::fail_every(3));
+        let outcomes: Vec<bool> = (0..6)
+            .map(|_| be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok())
+            .collect();
+        assert_eq!(outcomes, vec![true, true, false, true, true, false]);
+    }
+
+    #[test]
+    fn fail_from_fails_everything_after_k() {
+        let (q, x) = tiny();
+        let be = FaultInjectingBackend::new(
+            CpuBackend::new(),
+            FaultPlan::fail_from(2).with_mode(FaultMode::Permanent),
+        );
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok());
+        assert!(be.try_block(Kernel::Gaussian, &q, &x, 2).is_ok());
+        for _ in 0..3 {
+            match be.try_sums(Kernel::Gaussian, &q, &x, 2) {
+                Err(e) => assert!(!e.transient(), "permanent mode: {e}"),
+                Ok(_) => panic!("call past k must fail"),
+            }
+        }
+    }
+
+    #[test]
+    fn passing_calls_are_bit_identical_to_inner() {
+        let (q, x) = tiny();
+        let cpu = CpuBackend::new();
+        let want = cpu.sums(Kernel::Laplacian, &q, &x, 2);
+        let be = FaultInjectingBackend::new(CpuBackend::new(), FaultPlan::default());
+        let got = be.try_sums(Kernel::Laplacian, &q, &x, 2).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+
+    #[test]
+    fn panic_mode_panics_through_infallible_path() {
+        let (q, x) = tiny();
+        let be = FaultInjectingBackend::new(
+            CpuBackend::new(),
+            FaultPlan::fail_from(0).with_mode(FaultMode::Panic),
+        );
+        let err = crate::runtime::error::catch_panic(|| be.sums(Kernel::Gaussian, &q, &x, 2));
+        match err {
+            Err(BackendError::Panicked { message }) => {
+                assert!(message.contains("injected fault"), "got: {message}")
+            }
+            other => panic!("want Panicked, got {other:?}"),
+        }
+    }
+}

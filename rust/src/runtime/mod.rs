@@ -9,14 +9,30 @@
 //! batched tree pipeline's level fusion, and reports a uniform dispatch
 //! count through `calls()` — see `docs/ARCHITECTURE.md` for the
 //! dispatch-counting contract shared by all backends.
+//!
+//! The failure model (docs/ARCHITECTURE.md §"Failure model") spans four
+//! modules here: `error` defines the typed [`BackendError`] taxonomy and
+//! the fallible `try_*` entry points every backend carries; `resilient`
+//! composes retry-with-backoff and graceful degradation over any
+//! primary/fallback backend pair; `fault` is the deterministic chaos
+//! substrate that `tests/faults.rs` drives. Production code in this tree
+//! must not `unwrap`/`expect` — failures travel as typed errors (the
+//! clippy gate below is part of CI's `-D warnings` leg).
 #![warn(missing_docs)]
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod backend;
+pub mod error;
+pub mod fault;
 pub mod pjrt;
+pub mod resilient;
 pub mod simd;
 pub mod tiled;
 
 pub use backend::{CpuBackend, KernelBackend};
+pub use error::{BackendError, BackendResult};
+pub use fault::{FaultInjectingBackend, FaultMode, FaultPlan};
 pub use pjrt::{PjrtBackend, PjrtEngine};
+pub use resilient::{ResilientBackend, RetryPolicy};
 pub use simd::{Isa, MicroKernel, SimdMode};
 pub use tiled::TiledBackend;

@@ -85,6 +85,21 @@ mod engine {
     use super::{pad, AOT_B, AOT_D, AOT_M, FAR};
     use crate::kernel::Kernel;
     use crate::runtime::backend::KernelBackend;
+    use crate::runtime::error::BackendError;
+
+    /// Map an engine error chain onto the typed taxonomy: missing
+    /// artifacts are permanent (no retry makes `manifest.json` appear
+    /// mid-run); everything else — client construction, parse/compile,
+    /// execution — is tagged transient, worth one bounded retry before
+    /// the resilient wrapper degrades to a CPU backend.
+    fn backend_err(e: &anyhow::Error) -> BackendError {
+        let message = format!("{e:#}");
+        if message.contains("artifacts not built") {
+            BackendError::ArtifactMissing { detail: message }
+        } else {
+            BackendError::ExecutionFailed { message, transient: true }
+        }
+    }
 
     /// Which artifact entry to execute.
     #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -156,28 +171,36 @@ mod engine {
             exes: &'a mut HashMap<Entry, xla::PjRtLoadedExecutable>,
             entry: Entry,
         ) -> Result<&'a xla::PjRtLoadedExecutable> {
-            if !exes.contains_key(&entry) {
-                let path = self
-                    .artifacts_dir
-                    .join(format!("{}.hlo.txt", entry.file_stem()));
-                let proto = xla::HloModuleProto::from_text_file(
-                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-                )
-                .with_context(|| format!("parsing {}", path.display()))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = self
-                    .client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {}", path.display()))?;
-                exes.insert(entry, exe);
+            match exes.entry(entry) {
+                std::collections::hash_map::Entry::Occupied(o) => Ok(o.into_mut()),
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    let path = self
+                        .artifacts_dir
+                        .join(format!("{}.hlo.txt", entry.file_stem()));
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                    )
+                    .with_context(|| format!("parsing {}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = self
+                        .client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {}", path.display()))?;
+                    Ok(v.insert(exe))
+                }
             }
-            Ok(exes.get(&entry).unwrap())
         }
 
         fn run_entry(&self, entry: Entry, queries: &[f32], data: &[f32]) -> Result<Vec<f32>> {
             debug_assert_eq!(queries.len(), AOT_B * AOT_D);
             debug_assert_eq!(data.len(), AOT_M * AOT_D);
-            let mut exes = self.exes.lock().unwrap();
+            // A poisoned lock only means an earlier execution panicked
+            // mid-call; the executable cache itself is still consistent
+            // (entries are inserted fully compiled), so recover the guard.
+            let mut exes = self
+                .exes
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             let exe = self.ensure_compiled(&mut exes, entry)?;
             let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
             let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
@@ -208,7 +231,10 @@ mod engine {
             debug_assert_eq!(data.len(), AOT_M * AOT_D);
             debug_assert_eq!(lo.len(), AOT_B);
             debug_assert_eq!(hi.len(), AOT_B);
-            let mut exes = self.exes.lock().unwrap();
+            let mut exes = self
+                .exes
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             let exe = self.ensure_compiled(&mut exes, entry)?;
             let q = xla::Literal::vec1(queries).reshape(&[AOT_B as i64, AOT_D as i64])?;
             let x = xla::Literal::vec1(data).reshape(&[AOT_M as i64, AOT_D as i64])?;
@@ -250,6 +276,19 @@ mod engine {
 
     impl KernelBackend for PjrtBackend {
         fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
+            match self.try_sums(kernel, queries, data, d) {
+                Ok(v) => v,
+                Err(e) => panic!("PJRT execution failed: {e}"),
+            }
+        }
+
+        fn try_sums(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            d: usize,
+        ) -> Result<Vec<f64>, BackendError> {
             assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
             assert!(queries.len() % d == 0 && data.len() % d == 0);
             let b = queries.len() / d;
@@ -266,16 +305,29 @@ mod engine {
                     let sums = self
                         .engine
                         .run_entry(Entry::Sums(kernel), &qpad, &xpad)
-                        .expect("PJRT execution failed");
+                        .map_err(|e| backend_err(&e))?;
                     for q in 0..bq {
                         out[qc * AOT_B + q] += sums[q] as f64;
                     }
                 }
             }
-            out
+            Ok(out)
         }
 
         fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
+            match self.try_block(kernel, queries, data, d) {
+                Ok(v) => v,
+                Err(e) => panic!("PJRT execution failed: {e}"),
+            }
+        }
+
+        fn try_block(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            d: usize,
+        ) -> Result<Vec<f32>, BackendError> {
             assert!(d > 0 && d <= AOT_D);
             assert!(queries.len() % d == 0 && data.len() % d == 0);
             let b = queries.len() / d;
@@ -292,7 +344,7 @@ mod engine {
                     let blk = self
                         .engine
                         .run_entry(Entry::Block(kernel), &qpad, &xpad)
-                        .expect("PJRT execution failed");
+                        .map_err(|e| backend_err(&e))?;
                     for q in 0..bq {
                         let dst_row = qc * AOT_B + q;
                         for j in 0..mx {
@@ -301,7 +353,7 @@ mod engine {
                     }
                 }
             }
-            out
+            Ok(out)
         }
 
         fn sums_ranged(
@@ -312,6 +364,20 @@ mod engine {
             d: usize,
             ranges: &[(usize, usize)],
         ) -> Vec<f64> {
+            match self.try_sums_ranged(kernel, queries, data, d, ranges) {
+                Ok(v) => v,
+                Err(e) => panic!("PJRT execution failed: {e}"),
+            }
+        }
+
+        fn try_sums_ranged(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            d: usize,
+            ranges: &[(usize, usize)],
+        ) -> Result<Vec<f64>, BackendError> {
             assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
             assert!(queries.len() % d == 0 && data.len() % d == 0);
             let b = queries.len() / d;
@@ -354,13 +420,13 @@ mod engine {
                     let sums = self
                         .engine
                         .run_entry_ranged(Entry::SumsRanged(kernel), &qpad, &xpad, &lo_v, &hi_v)
-                        .expect("PJRT execution failed");
+                        .map_err(|e| backend_err(&e))?;
                     for q in 0..bq {
                         out[qc * AOT_B + q] += sums[q] as f64;
                     }
                 }
             }
-            out
+            Ok(out)
         }
 
         fn block_ranged(
@@ -371,6 +437,20 @@ mod engine {
             d: usize,
             ranges: &[(usize, usize)],
         ) -> Vec<f32> {
+            match self.try_block_ranged(kernel, queries, data, d, ranges) {
+                Ok(v) => v,
+                Err(e) => panic!("PJRT execution failed: {e}"),
+            }
+        }
+
+        fn try_block_ranged(
+            &self,
+            kernel: Kernel,
+            queries: &[f32],
+            data: &[f32],
+            d: usize,
+            ranges: &[(usize, usize)],
+        ) -> Result<Vec<f32>, BackendError> {
             assert!(d > 0 && d <= AOT_D, "feature dim {d} exceeds AOT_D {AOT_D}");
             assert!(queries.len() % d == 0 && data.len() % d == 0);
             let b = queries.len() / d;
@@ -416,7 +496,7 @@ mod engine {
                     let blk = self
                         .engine
                         .run_entry_ranged(Entry::BlockRanged(kernel), &qpad, &xpad, &lo_v, &hi_v)
-                        .expect("PJRT execution failed");
+                        .map_err(|e| backend_err(&e))?;
                     // Scatter each row's live tile-local slice into its
                     // ragged output segment.
                     for q in 0..bq {
@@ -433,7 +513,7 @@ mod engine {
                     }
                 }
             }
-            out
+            Ok(out)
         }
 
         fn kernel_evals(&self) -> u64 {
@@ -564,6 +644,7 @@ pub use stub::{PjrtBackend, PjrtEngine};
 // PJRT integration tests live in rust/tests/pjrt_parity.rs (they need the
 // artifacts built); unit tests here cover the pure padding logic.
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

@@ -1,0 +1,383 @@
+//! Retry + graceful degradation over any [`KernelBackend`].
+//!
+//! [`ResilientBackend`] wraps a primary backend (typically PJRT) and an
+//! optional fallback (typically a CPU backend) behind one composed
+//! policy:
+//!
+//! * **Transient** errors ([`BackendError::transient`]) are retried
+//!   against the primary under a bounded exponential backoff whose jitter
+//!   comes from the repo's deterministic [`util::rng`](crate::util::rng)
+//!   (seeded per wrapper, so a chaos run replays identically).
+//! * **Permanent** errors — and transient ones that exhaust the retry
+//!   budget — trip a sticky failover: this call and every later one go to
+//!   the fallback. A panicking primary is caught at this boundary and
+//!   treated as a permanent failure.
+//! * Failed calls leave no partial results (the injection/engine layers
+//!   fault before producing output), so the re-issued call computes the
+//!   same values the primary would have — with a [`CpuBackend`] fallback
+//!   the whole pipeline's output stays **bit-identical** to an all-CPU
+//!   run, pinned in `tests/faults.rs`.
+//!
+//! Retry and failover counts are exported through
+//! [`ResilienceMetrics`](crate::coordinator::metrics::ResilienceMetrics).
+//!
+//! [`CpuBackend`]: crate::runtime::backend::CpuBackend
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::coordinator::metrics::ResilienceMetrics;
+use crate::kernel::Kernel;
+use crate::runtime::backend::KernelBackend;
+use crate::runtime::error::{catch_panic, BackendError};
+use crate::util::rng::Rng;
+
+/// Bounded-exponential-backoff retry budget for transient failures.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries per submission after the first attempt (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before retry #1; doubles per retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling after doubling.
+    pub max_backoff: Duration,
+    /// Seed for the jitter RNG (deterministic chaos replays).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 2,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(100),
+            seed: 0xBAC0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy with no waiting between attempts — for tests that want
+    /// retry *logic* without wall-clock cost.
+    pub fn immediate(max_retries: u32) -> Self {
+        RetryPolicy {
+            max_retries,
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            ..RetryPolicy::default()
+        }
+    }
+}
+
+/// A [`KernelBackend`] that retries transient failures and degrades to a
+/// fallback backend on permanent ones; see the module docs.
+pub struct ResilientBackend {
+    primary: Arc<dyn KernelBackend>,
+    fallback: Option<Arc<dyn KernelBackend>>,
+    policy: RetryPolicy,
+    jitter: Mutex<Rng>,
+    failed_over: AtomicBool,
+    metrics: Arc<ResilienceMetrics>,
+}
+
+impl ResilientBackend {
+    /// Wrap `primary` with the given policy and optional fallback.
+    pub fn new(
+        primary: Arc<dyn KernelBackend>,
+        fallback: Option<Arc<dyn KernelBackend>>,
+        policy: RetryPolicy,
+    ) -> Arc<Self> {
+        let jitter = Mutex::new(Rng::new(policy.seed));
+        Arc::new(ResilientBackend {
+            primary,
+            fallback,
+            policy,
+            jitter,
+            failed_over: AtomicBool::new(false),
+            metrics: ResilienceMetrics::new(),
+        })
+    }
+
+    /// Wrap with the default policy and a fallback backend.
+    pub fn with_fallback(
+        primary: Arc<dyn KernelBackend>,
+        fallback: Arc<dyn KernelBackend>,
+    ) -> Arc<Self> {
+        Self::new(primary, Some(fallback), RetryPolicy::default())
+    }
+
+    /// Shared retry/failover counters.
+    pub fn metrics(&self) -> Arc<ResilienceMetrics> {
+        self.metrics.clone()
+    }
+
+    /// Whether the wrapper has (stickily) degraded to the fallback.
+    pub fn failed_over(&self) -> bool {
+        self.failed_over.load(Ordering::Acquire)
+    }
+
+    /// Sleep the bounded-exponential backoff before retry `attempt`
+    /// (1-based), jittered into `[0.5, 1.0]x` by the seeded RNG.
+    fn backoff(&self, attempt: u32) {
+        let doublings = (attempt - 1).min(16);
+        let exp = self.policy.base_backoff.saturating_mul(1u32 << doublings);
+        let capped = exp.min(self.policy.max_backoff);
+        if capped.is_zero() {
+            return;
+        }
+        let jitter = {
+            let mut rng = self
+                .jitter
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner);
+            0.5 + 0.5 * rng.f64()
+        };
+        std::thread::sleep(capped.mul_f64(jitter));
+    }
+
+    /// Run `op` under the composed retry + failover policy. Each attempt
+    /// is wrapped in [`catch_panic`], so a panicking backend is handled
+    /// like a permanent error instead of unwinding into the caller.
+    fn run<T>(
+        &self,
+        op: impl Fn(&dyn KernelBackend) -> Result<T, BackendError>,
+    ) -> Result<T, BackendError> {
+        if !self.failed_over.load(Ordering::Acquire) {
+            let mut attempt = 0u32;
+            let last_err = loop {
+                match catch_panic(|| op(self.primary.as_ref())).and_then(|r| r) {
+                    Ok(v) => return Ok(v),
+                    Err(e) => {
+                        self.metrics.primary_errors.fetch_add(1, Ordering::Relaxed);
+                        if e.transient() && attempt < self.policy.max_retries {
+                            attempt += 1;
+                            self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                            self.backoff(attempt);
+                            continue;
+                        }
+                        break e;
+                    }
+                }
+            };
+            if self.fallback.is_none() {
+                return Err(last_err);
+            }
+            // Sticky degradation: this call and all later ones go to the
+            // fallback. (Concurrent callers may each observe the trip;
+            // `failovers` counts trips observed, 1 in sequential use.)
+            if !self.failed_over.swap(true, Ordering::AcqRel) {
+                self.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        match &self.fallback {
+            Some(fb) => {
+                self.metrics.fallback_calls.fetch_add(1, Ordering::Relaxed);
+                catch_panic(|| op(fb.as_ref())).and_then(|r| r)
+            }
+            None => Err(BackendError::permanent_failure(
+                "resilient backend failed over with no fallback configured",
+            )),
+        }
+    }
+}
+
+impl KernelBackend for ResilientBackend {
+    fn sums(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f64> {
+        match self.try_sums(kernel, queries, data, d) {
+            Ok(v) => v,
+            Err(e) => panic!("resilient backend: primary and fallback both failed: {e}"),
+        }
+    }
+
+    fn block(&self, kernel: Kernel, queries: &[f32], data: &[f32], d: usize) -> Vec<f32> {
+        match self.try_block(kernel, queries, data, d) {
+            Ok(v) => v,
+            Err(e) => panic!("resilient backend: primary and fallback both failed: {e}"),
+        }
+    }
+
+    fn sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f64> {
+        match self.try_sums_ranged(kernel, queries, data, d, ranges) {
+            Ok(v) => v,
+            Err(e) => panic!("resilient backend: primary and fallback both failed: {e}"),
+        }
+    }
+
+    fn block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Vec<f32> {
+        match self.try_block_ranged(kernel, queries, data, d, ranges) {
+            Ok(v) => v,
+            Err(e) => panic!("resilient backend: primary and fallback both failed: {e}"),
+        }
+    }
+
+    fn try_sums(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+    ) -> Result<Vec<f64>, BackendError> {
+        self.run(|b| b.try_sums(kernel, queries, data, d))
+    }
+
+    fn try_block(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+    ) -> Result<Vec<f32>, BackendError> {
+        self.run(|b| b.try_block(kernel, queries, data, d))
+    }
+
+    fn try_sums_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Vec<f64>, BackendError> {
+        self.run(|b| b.try_sums_ranged(kernel, queries, data, d, ranges))
+    }
+
+    fn try_block_ranged(
+        &self,
+        kernel: Kernel,
+        queries: &[f32],
+        data: &[f32],
+        d: usize,
+        ranges: &[(usize, usize)],
+    ) -> Result<Vec<f32>, BackendError> {
+        self.run(|b| b.try_block_ranged(kernel, queries, data, d, ranges))
+    }
+
+    fn kernel_evals(&self) -> u64 {
+        self.primary.kernel_evals()
+            + self.fallback.as_ref().map_or(0, |f| f.kernel_evals())
+    }
+
+    fn calls(&self) -> u64 {
+        self.primary.calls() + self.fallback.as_ref().map_or(0, |f| f.calls())
+    }
+
+    fn name(&self) -> &'static str {
+        "resilient"
+    }
+
+    fn isa(&self) -> &'static str {
+        if self.failed_over() {
+            self.fallback.as_ref().map_or("generic", |f| f.isa())
+        } else {
+            self.primary.isa()
+        }
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::CpuBackend;
+    use crate::runtime::fault::{FaultInjectingBackend, FaultMode, FaultPlan};
+
+    fn tiny() -> (Vec<f32>, Vec<f32>) {
+        (vec![0.0f32; 2 * 2], vec![0.5f32; 3 * 2])
+    }
+
+    #[test]
+    fn transient_error_is_retried_without_failover() {
+        let (q, x) = tiny();
+        let primary = FaultInjectingBackend::new(CpuBackend::new(), FaultPlan::fail_call(0));
+        let be = ResilientBackend::new(primary, Some(CpuBackend::new()), RetryPolicy::immediate(2));
+        let want = CpuBackend::new().sums(Kernel::Gaussian, &q, &x, 2);
+        let got = be.try_sums(Kernel::Gaussian, &q, &x, 2).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+        assert!(!be.failed_over());
+        let m = be.metrics();
+        assert_eq!(m.retries.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failovers.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn permanent_error_fails_over_stickily() {
+        let (q, x) = tiny();
+        let primary = FaultInjectingBackend::new(
+            CpuBackend::new(),
+            FaultPlan::fail_from(0).with_mode(FaultMode::Permanent),
+        );
+        let be = ResilientBackend::new(
+            primary.clone(),
+            Some(CpuBackend::new()),
+            RetryPolicy::immediate(3),
+        );
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok());
+        assert!(be.failed_over());
+        let seen_after_failover = primary.calls_seen();
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok());
+        assert_eq!(
+            primary.calls_seen(),
+            seen_after_failover,
+            "failover is sticky: the primary is never consulted again"
+        );
+        let m = be.metrics();
+        assert_eq!(m.failovers.load(Ordering::Relaxed), 1);
+        assert_eq!(m.retries.load(Ordering::Relaxed), 0, "permanent errors skip retry");
+        assert_eq!(m.fallback_calls.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_degrades() {
+        let (q, x) = tiny();
+        let primary = FaultInjectingBackend::new(CpuBackend::new(), FaultPlan::fail_from(0));
+        let be = ResilientBackend::new(primary, Some(CpuBackend::new()), RetryPolicy::immediate(2));
+        assert!(be.try_sums(Kernel::Gaussian, &q, &x, 2).is_ok());
+        assert!(be.failed_over());
+        assert_eq!(be.metrics().retries.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn panicking_primary_is_contained() {
+        let (q, x) = tiny();
+        let primary = FaultInjectingBackend::new(
+            CpuBackend::new(),
+            FaultPlan::fail_from(0).with_mode(FaultMode::Panic),
+        );
+        let be = ResilientBackend::new(primary, Some(CpuBackend::new()), RetryPolicy::immediate(2));
+        let got = be.try_sums(Kernel::Gaussian, &q, &x, 2);
+        assert!(got.is_ok(), "panic must be absorbed by failover: {got:?}");
+        assert!(be.failed_over());
+    }
+
+    #[test]
+    fn no_fallback_surfaces_the_error() {
+        let (q, x) = tiny();
+        let primary = FaultInjectingBackend::new(
+            CpuBackend::new(),
+            FaultPlan::fail_from(0).with_mode(FaultMode::Permanent),
+        );
+        let be = ResilientBackend::new(primary, None, RetryPolicy::immediate(1));
+        match be.try_sums(Kernel::Gaussian, &q, &x, 2) {
+            Err(BackendError::ExecutionFailed { transient: false, .. }) => {}
+            other => panic!("want permanent ExecutionFailed, got {other:?}"),
+        }
+        assert!(!be.failed_over(), "nothing to fail over to");
+    }
+}

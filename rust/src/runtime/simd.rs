@@ -640,6 +640,7 @@ mod neon {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::ALL_KERNELS;

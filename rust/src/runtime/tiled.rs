@@ -73,7 +73,10 @@ impl TiledBackend {
 
     /// Fixed worker count (1 = tiling only, no thread spawns), best ISA.
     pub fn with_threads(threads: usize) -> Arc<Self> {
-        Self::with_simd(threads, SimdMode::Auto).expect("auto SIMD mode cannot fail")
+        match Self::with_simd(threads, SimdMode::Auto) {
+            Ok(be) => be,
+            Err(e) => unreachable!("auto SIMD mode cannot fail: {e}"),
+        }
     }
 
     /// Fixed worker count and explicit SIMD mode (`--simd` on the CLI).
@@ -273,7 +276,12 @@ impl KernelBackend for TiledBackend {
                     lo = hi;
                 }
                 for h in handles {
-                    let part = h.join().expect("tiled sums worker panicked");
+                    // Re-raise a worker panic on the calling thread so the
+                    // try_* isolation boundary sees the original payload.
+                    let part = match h.join() {
+                        Ok(part) => part,
+                        Err(payload) => std::panic::resume_unwind(payload),
+                    };
                     for (o, p) in out.iter_mut().zip(&part) {
                         *o += p;
                     }
@@ -510,6 +518,7 @@ impl KernelBackend for TiledBackend {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::ALL_KERNELS;

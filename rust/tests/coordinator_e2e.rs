@@ -25,6 +25,7 @@ fn concurrent_clients_all_served_correctly() {
             max_batch: 64,
             max_wait: Duration::from_micros(300),
             workers: 4,
+            ..BatcherConfig::default()
         },
     ));
     let mut handles = Vec::new();
@@ -98,6 +99,7 @@ fn throughput_improves_with_batching() {
                 max_batch,
                 max_wait: Duration::from_micros(200),
                 workers: 2,
+                ..BatcherConfig::default()
             },
         ));
         let t0 = std::time::Instant::now();
@@ -105,7 +107,7 @@ fn throughput_improves_with_batching() {
             .map(|i| svc.submit(0, ds.point(i % ds.n).to_vec()))
             .collect();
         for rx in rxs {
-            rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
         }
         t0.elapsed().as_secs_f64()
     };

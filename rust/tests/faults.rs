@@ -1,0 +1,328 @@
+//! Chaos suite: the fault-tolerant execution layer under deterministic
+//! failure schedules.
+//!
+//! Contracts pinned here (the failure model of docs/ARCHITECTURE.md):
+//!
+//! 1. **Graceful degradation is invisible in the output**: a full batched
+//!    sparsifier round whose primary backend permanently fails mid-run
+//!    (every call from #3 on) completes via CPU failover with results
+//!    bit-identical to an all-CPU run — zero client-visible panics, zero
+//!    hangs, exactly one failover.
+//! 2. **Transient faults are absorbed by bounded retry**: a backend that
+//!    fails every 5th call transiently never trips failover and still
+//!    reproduces the clean run bit for bit.
+//! 3. **Deadlines**: expired requests are answered with a typed
+//!    `Timeout`, never a late answer, and the service keeps serving.
+//! 4. **Backpressure**: a slow backend plus a bounded queue produces
+//!    typed `Overloaded` rejections, not unbounded queueing — and every
+//!    *accepted* request still gets exactly one reply.
+//! 5. **Panic isolation**: a panicking backend shard yields typed
+//!    `Panicked` replies (the worker pool survives, healthy shards keep
+//!    serving), a panicking packer drains the overlapped submission
+//!    queue cleanly, and an unwrapped failing tree dispatch surfaces as
+//!    a typed error through `try_query_points_multi`.
+//! 6. **Typed addressing errors**: an unknown shard is a typed
+//!    `UnknownShard` reply, not a panic.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use kde_matrix::apps::sparsify::sparsify_batched;
+use kde_matrix::coordinator::{try_run_double_buffered, BatcherConfig, KdeService};
+use kde_matrix::kde::{Kde, KdeConfig, KdeCounters, MultiLevelKde, NaiveKde};
+use kde_matrix::kernel::{dataset::gaussian_mixture, Dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::runtime::error::BackendError;
+use kde_matrix::runtime::fault::{FaultInjectingBackend, FaultMode, FaultPlan};
+use kde_matrix::runtime::resilient::{ResilientBackend, RetryPolicy};
+use kde_matrix::sampling::Primitives;
+use kde_matrix::util::rng::Rng;
+
+/// Deterministic probe vector for Laplacian quadratic-form comparisons.
+fn quad_probe(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 37) % 101) as f64 / 101.0 - 0.5).collect()
+}
+
+fn exact(ds: &Dataset, k: Kernel, y: &[f32]) -> f64 {
+    (0..ds.n).map(|j| k.eval(ds.point(j), y) as f64).sum()
+}
+
+#[test]
+fn sparsifier_round_fails_over_bit_identical_to_all_cpu() {
+    // The acceptance pin: primary permanently dies at backend call #3
+    // (mid-build), the round completes on the CPU fallback, and the
+    // sparsifier is bit-identical to an all-CPU run. Failed calls leave
+    // no partial state and CpuBackend is deterministic across instances,
+    // so the re-issued calls compute the very same values.
+    let n = 1024usize;
+    let t = 32usize;
+    let mut rng = Rng::new(3301);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+
+    let baseline = {
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), CpuBackend::new());
+        sparsify_batched(&prims, t, &mut Rng::new(17))
+    };
+
+    let primary = FaultInjectingBackend::new(
+        CpuBackend::new(),
+        FaultPlan::fail_from(3).with_mode(FaultMode::Permanent),
+    );
+    let resilient = ResilientBackend::new(
+        primary.clone(),
+        Some(CpuBackend::new()),
+        RetryPolicy::immediate(2),
+    );
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        resilient.clone(),
+    );
+    let degraded = sparsify_batched(&prims, t, &mut Rng::new(17));
+
+    assert!(resilient.failed_over(), "schedule must have tripped failover");
+    assert!(primary.injected() > 0, "the fault must actually have fired");
+    let m = resilient.metrics();
+    assert_eq!(m.failovers.load(Ordering::Relaxed), 1, "exactly one failover");
+    assert!(m.fallback_calls.load(Ordering::Relaxed) > 0);
+
+    assert_eq!(degraded.samples, baseline.samples);
+    assert_eq!(degraded.distinct_edges, baseline.distinct_edges);
+    assert_eq!(degraded.kde_queries, baseline.kde_queries, "same logical query traffic");
+    let x = quad_probe(n);
+    assert_eq!(
+        degraded.graph.laplacian_quadratic(&x).to_bits(),
+        baseline.graph.laplacian_quadratic(&x).to_bits(),
+        "failover run diverged from the all-CPU run"
+    );
+}
+
+#[test]
+fn periodic_transient_faults_are_retried_through_without_failover() {
+    let n = 512usize;
+    let t = 24usize;
+    let mut rng = Rng::new(3401);
+    let ds = Arc::new(gaussian_mixture(n, 4, 3, 1.2, 0.5, &mut rng));
+
+    let baseline = {
+        let prims =
+            Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), CpuBackend::new());
+        sparsify_batched(&prims, t, &mut Rng::new(29))
+    };
+
+    // Every 5th call fails transiently; the retry (a fresh call index)
+    // passes, so the bounded budget absorbs every fault.
+    let primary = FaultInjectingBackend::new(CpuBackend::new(), FaultPlan::fail_every(5));
+    let resilient = ResilientBackend::new(
+        primary.clone(),
+        Some(CpuBackend::new()),
+        RetryPolicy::immediate(2),
+    );
+    let prims = Primitives::build(
+        ds.clone(),
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        resilient.clone(),
+    );
+    let retried = sparsify_batched(&prims, t, &mut Rng::new(29));
+
+    assert!(!resilient.failed_over(), "transient faults must not degrade");
+    assert!(primary.injected() > 0, "the schedule must actually have fired");
+    let m = resilient.metrics();
+    assert!(m.retries.load(Ordering::Relaxed) > 0);
+    assert_eq!(m.failovers.load(Ordering::Relaxed), 0);
+
+    assert_eq!(retried.samples, baseline.samples);
+    assert_eq!(retried.distinct_edges, baseline.distinct_edges);
+    let x = quad_probe(n);
+    assert_eq!(
+        retried.graph.laplacian_quadratic(&x).to_bits(),
+        baseline.graph.laplacian_quadratic(&x).to_bits(),
+        "retried run diverged from the clean run"
+    );
+}
+
+#[test]
+fn tree_dispatch_failure_surfaces_as_typed_error() {
+    // No resilience wrapper: the fallible tree entry reports the backend
+    // failure instead of unwinding through the sampling stack.
+    let mut rng = Rng::new(3501);
+    let ds = Arc::new(gaussian_mixture(64, 3, 2, 1.0, 0.5, &mut rng));
+    let be = FaultInjectingBackend::new(
+        CpuBackend::new(),
+        FaultPlan::fail_from(0).with_mode(FaultMode::Permanent),
+    );
+    let tree = MultiLevelKde::build(
+        ds,
+        Kernel::Laplacian,
+        &KdeConfig::exact(),
+        be,
+        KdeCounters::new(),
+    );
+    let idx = [0usize, 1, 2];
+    match tree.try_query_points_multi(&[(tree.root(), &idx)]) {
+        Err(BackendError::ExecutionFailed { transient: false, .. }) => {}
+        other => panic!("want permanent ExecutionFailed, got {other:?}"),
+    }
+}
+
+#[test]
+fn expired_deadlines_get_timeout_replies_and_service_recovers() {
+    let mut rng = Rng::new(3601);
+    let ds = Arc::new(gaussian_mixture(32, 4, 2, 1.0, 0.5, &mut rng));
+    let svc = KdeService::start(
+        vec![(Kernel::Laplacian, ds.clone())],
+        CpuBackend::new(),
+        BatcherConfig::default(),
+    );
+    // A zero deadline is already expired when the router first sees it:
+    // the reply is deterministically Timeout, never a late answer.
+    for i in 0..6 {
+        let got = svc.try_query_deadline(0, ds.point(i).to_vec(), Duration::ZERO);
+        assert_eq!(got, Err(BackendError::Timeout), "request {i}");
+    }
+    assert!(svc.metrics.timeouts.load(Ordering::Relaxed) >= 6);
+    // The service keeps serving afterwards.
+    let y = ds.point(3).to_vec();
+    let got = svc.try_query(0, y.clone()).expect("service healthy after timeouts");
+    let want = exact(&ds, Kernel::Laplacian, &y);
+    assert!((got - want).abs() < 1e-6 * (1.0 + want));
+    svc.shutdown();
+}
+
+#[test]
+fn overload_rejects_with_typed_error_not_unbounded_queueing() {
+    let mut rng = Rng::new(3701);
+    let ds = Arc::new(gaussian_mixture(64, 4, 2, 1.0, 0.5, &mut rng));
+    // A slow backend (2ms per dispatch) behind a tiny bounded queue:
+    // flooding the service must produce Overloaded rejections while every
+    // accepted request still gets exactly one reply.
+    let slow = FaultInjectingBackend::new(
+        CpuBackend::new(),
+        FaultPlan::latency_only(Duration::from_millis(2)),
+    );
+    let svc = KdeService::start(
+        vec![(Kernel::Laplacian, ds.clone())],
+        slow,
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            workers: 1,
+            queue_cap: 4,
+        },
+    );
+    let mut accepted = Vec::new();
+    let mut overloaded = 0u64;
+    for i in 0..256 {
+        match svc.try_submit(0, ds.point(i % ds.n).to_vec()) {
+            Ok(rx) => accepted.push(rx),
+            Err(BackendError::Overloaded) => overloaded += 1,
+            Err(e) => panic!("unexpected submit error: {e:?}"),
+        }
+    }
+    let mut answered = 0u64;
+    for rx in accepted {
+        // Every accepted request must be answered — an answer or a typed
+        // error, never a dropped channel or a hang.
+        match rx.recv_timeout(Duration::from_secs(30)).expect("accepted request got no reply") {
+            Ok(_) => answered += 1,
+            Err(BackendError::Overloaded) => overloaded += 1,
+            Err(e) => panic!("unexpected reply: {e:?}"),
+        }
+    }
+    assert!(overloaded > 0, "backpressure never engaged under 64x overload");
+    assert!(answered > 0, "nothing was served under load");
+    assert_eq!(
+        svc.metrics.rejected.load(Ordering::Relaxed),
+        overloaded,
+        "every rejection is counted"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn panicking_backend_shard_yields_typed_replies_and_healthy_shard_serves() {
+    let mut rng = Rng::new(3801);
+    let ds = Arc::new(gaussian_mixture(24, 3, 2, 1.0, 0.5, &mut rng));
+    let healthy: Arc<dyn Kde> = Arc::new(NaiveKde::new(
+        ds.clone(),
+        Kernel::Laplacian,
+        0,
+        24,
+        CpuBackend::new(),
+        KdeCounters::new(),
+    ));
+    let panicking = FaultInjectingBackend::new(
+        CpuBackend::new(),
+        FaultPlan::fail_from(0).with_mode(FaultMode::Panic),
+    );
+    let broken: Arc<dyn Kde> = Arc::new(NaiveKde::new(
+        ds.clone(),
+        Kernel::Laplacian,
+        0,
+        24,
+        panicking,
+        KdeCounters::new(),
+    ));
+    let svc = KdeService::start_with_oracles(vec![healthy, broken], BatcherConfig::default());
+    // The broken shard's panics are caught at the worker's isolation
+    // boundary: typed replies, no hang, no process abort.
+    for _ in 0..3 {
+        match svc.try_query(1, ds.point(0).to_vec()) {
+            Err(BackendError::Panicked { message }) => {
+                assert!(message.contains("injected fault"), "got: {message}")
+            }
+            other => panic!("want Panicked, got {other:?}"),
+        }
+    }
+    assert!(svc.metrics.worker_panics.load(Ordering::Relaxed) >= 3);
+    // The worker pool survived: the healthy shard still answers.
+    let y = ds.point(5).to_vec();
+    let got = svc.try_query(0, y.clone()).expect("healthy shard must keep serving");
+    let want = exact(&ds, Kernel::Laplacian, &y);
+    assert!((got - want).abs() < 1e-6 * (1.0 + want));
+    svc.shutdown();
+}
+
+#[test]
+fn overlap_queue_packer_panic_is_contained() {
+    // A panic on the packer thread becomes a typed error on the calling
+    // thread; the scope join completes (no leaked blocked thread, pinned
+    // by this test returning at all).
+    let got = try_run_double_buffered(
+        (0..64).collect::<Vec<usize>>(),
+        true,
+        |t| {
+            if t == 7 {
+                panic!("chaos: pack died at item {t}")
+            }
+            t
+        },
+        |p| Ok::<usize, BackendError>(p),
+    );
+    match got {
+        Err(BackendError::Panicked { message }) => {
+            assert!(message.contains("chaos: pack died"), "got: {message}")
+        }
+        other => panic!("want Panicked, got {other:?}"),
+    }
+}
+
+#[test]
+fn unknown_shard_is_a_typed_error() {
+    let mut rng = Rng::new(3901);
+    let ds = Arc::new(gaussian_mixture(8, 3, 1, 0.0, 0.3, &mut rng));
+    let svc = KdeService::start(
+        vec![(Kernel::Gaussian, ds)],
+        CpuBackend::new(),
+        BatcherConfig::default(),
+    );
+    match svc.try_submit(5, vec![0.0; 3]) {
+        Err(BackendError::UnknownShard { shard: 5, shards: 1 }) => {}
+        other => panic!("want UnknownShard, got {other:?}"),
+    }
+    svc.shutdown();
+}
