@@ -14,19 +14,45 @@
 //! `Overloaded` rejections (backpressure instead of unbounded queueing)
 //! and `Timeout` replies (expired requests dropped from the batch plan),
 //! with every accepted request still answered exactly once.
+//!
+//! Phase 3 is the registry/coalescing server (`kde_matrix::server`): the
+//! same two datasets registered by *name* into an `OracleRegistry`, a
+//! `KdeServer` coalescing concurrent clients' point-index queries (mixed
+//! density + seeded neighbor-sample requests) into fused submissions,
+//! and the dispatches-per-query printout that shows the amortization —
+//! plus a bit-identity spot check against direct solo tree queries.
+//!
+//! Knobs (all optional, for CI smoke runs and experimentation):
+//! `KDE_SERVER_N` (dataset size, default 4096), `KDE_SERVER_CLIENTS`
+//! (default 8), `KDE_SERVER_PER_CLIENT` (requests per client, default
+//! 400), `KDE_SERVER_BURST` (phase 2 burst size, default 20000).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use kde_matrix::coordinator::{BatcherConfig, KdeService};
+use kde_matrix::kde::KdeConfig;
 use kde_matrix::kernel::{dataset, Kernel};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
 use kde_matrix::runtime::error::BackendError;
 use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::server::{KdeServer, OracleRegistry, ServerConfig, ServerReply};
 use kde_matrix::util::rng::Rng;
 
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(default)
+}
+
 fn main() {
+    let n = env_usize("KDE_SERVER_N", 4096);
+    let clients = env_usize("KDE_SERVER_CLIENTS", 8);
+    let per_client = env_usize("KDE_SERVER_PER_CLIENT", 400);
+    let burst = env_usize("KDE_SERVER_BURST", 20_000);
     let mut rng = Rng::new(11);
     let backend: Arc<dyn KernelBackend> = match PjrtBackend::new("artifacts") {
         Ok(b) => {
@@ -39,8 +65,8 @@ fn main() {
         }
     };
 
-    let shard0 = Arc::new(dataset::gaussian_mixture(4096, 32, 8, 1.5, 0.5, &mut rng));
-    let shard1 = Arc::new(dataset::heavy_tailed_mixture(2048, 32, 6, &mut rng));
+    let shard0 = Arc::new(dataset::gaussian_mixture(n, 32, 8, 1.5, 0.5, &mut rng));
+    let shard1 = Arc::new(dataset::heavy_tailed_mixture(n / 2, 32, 6, &mut rng));
     let svc = Arc::new(KdeService::start(
         vec![
             (Kernel::Laplacian, shard0.clone()),
@@ -56,8 +82,6 @@ fn main() {
     ));
 
     // ---- Phase 1: well-behaved concurrent load ------------------------
-    let clients = 8usize;
-    let per_client = 400usize;
     let done = Arc::new(AtomicU64::new(0));
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -105,7 +129,6 @@ fn main() {
     // ---- Phase 2: deliberate overload with deadlines ------------------
     // One client firing a burst far larger than the bounded queue, each
     // request with a 500us deadline and no pipelining discipline.
-    let burst = 20_000usize;
     let deadline = Duration::from_micros(500);
     let mut overloaded = 0u64;
     let mut rxs = Vec::new();
@@ -138,4 +161,119 @@ fn main() {
     );
     println!("metrics: {}", svc.metrics.summary());
     assert_eq!(served + timeouts + overloaded, burst as u64, "every request accounted for");
+
+    // ---- Phase 3: registry + cross-request coalescing server ----------
+    // The same two datasets, now registered by NAME: each is built once
+    // into a shared multi-level tree, and the KdeServer coalesces all
+    // clients' point-index queries per dataset into fused submissions.
+    // A fresh CpuBackend so its dispatch counter cleanly reads
+    // "fused submissions for this phase".
+    let be = CpuBackend::new();
+    let registry = OracleRegistry::new(be.clone());
+    registry.register("web", shard0.clone(), Kernel::Laplacian, &KdeConfig::exact());
+    registry.register("tail", shard1.clone(), Kernel::Gaussian, &KdeConfig::exact());
+    println!("\nregistry: {:?} registered", registry.names());
+    let server = KdeServer::start(
+        registry.clone(),
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(300),
+            queue_cap: 4096,
+        },
+    );
+    let dispatch_base = be.calls();
+    let t2 = Instant::now();
+    let densities = Arc::new(AtomicU64::new(0));
+    let neighbors = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let server = &server;
+            let densities = densities.clone();
+            let neighbors = neighbors.clone();
+            let (n0, n1) = (shard0.n, shard1.n);
+            s.spawn(move || {
+                let mut inflight = Vec::with_capacity(per_client);
+                for r in 0..per_client {
+                    if r % 4 == 3 {
+                        // Every 4th request: a seeded neighbor sample from
+                        // "tail" — the seed alone fixes the answer, so the
+                        // coalesced reply equals a solo draw bit for bit.
+                        let source = (c * per_client + r) % n1;
+                        let seed = 0x5EED_0000 + (c * per_client + r) as u64;
+                        inflight.push((
+                            false,
+                            server.try_submit_neighbor("tail", source, seed).expect("submit"),
+                        ));
+                    } else {
+                        // Distinct per-client index ranges: every density
+                        // query is a cold memo-cache miss, so the dispatch
+                        // counter below reads fused submissions per cold
+                        // query.
+                        let point = (c * per_client + r) % n0;
+                        inflight.push((
+                            true,
+                            server.try_submit_density("web", point).expect("submit"),
+                        ));
+                    }
+                }
+                for (is_density, rx) in inflight {
+                    match rx.recv().expect("server replies").expect("typed reply") {
+                        ServerReply::Density(v) => {
+                            assert!(is_density && v.is_finite() && v >= 0.0);
+                            densities.fetch_add(1, Ordering::Relaxed);
+                        }
+                        ServerReply::Neighbor(ns) => {
+                            assert!(!is_density);
+                            if let Some(ns) = ns {
+                                assert!(ns.neighbor < n1 && ns.prob > 0.0);
+                            }
+                            neighbors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let wall3 = t2.elapsed().as_secs_f64();
+    let dispatches = be.calls() - dispatch_base;
+    let served3 = densities.load(Ordering::Relaxed) + neighbors.load(Ordering::Relaxed);
+    println!(
+        "coalescing server: {served3} requests ({} density + {} neighbor) in {wall3:.2}s \
+         = {:.0} q/s",
+        densities.load(Ordering::Relaxed),
+        neighbors.load(Ordering::Relaxed),
+        served3 as f64 / wall3
+    );
+    println!(
+        "dispatches: {dispatches} fused submissions / {} queries = {:.3} dispatches/query \
+         (solo = 1 per cold query; mean flush occupancy {:.1})",
+        served3,
+        dispatches as f64 / served3 as f64,
+        server.metrics.mean_batch_occupancy()
+    );
+    println!(
+        "latency: p50={:.0}us p99={:.0}us | metrics: {}",
+        server.metrics.latency_percentile_us(50.0),
+        server.metrics.latency_percentile_us(99.0),
+        server.metrics.summary()
+    );
+
+    // Bit-identity spot check: a few served densities and one neighbor
+    // draw must equal direct solo queries on the registered trees.
+    let web = registry.get("web").expect("registered");
+    for i in [0usize, 1, 2] {
+        let solo = web.tree.query_point(web.tree.root(), i);
+        let served = server.try_query_density("web", i).expect("query");
+        assert_eq!(served.to_bits(), solo.to_bits(), "coalesced != solo for point {i}");
+    }
+    let tail = registry.get("tail").expect("registered");
+    let solo_ns = tail.sampler.sample(0, &mut Rng::new(0x5EED_0000 + 3));
+    let served_ns = server.try_sample_neighbor("tail", 0, 0x5EED_0000 + 3).expect("sample");
+    assert_eq!(
+        served_ns.map(|s| (s.neighbor, s.prob.to_bits())),
+        solo_ns.map(|s| (s.neighbor, s.prob.to_bits())),
+        "coalesced neighbor sample != solo draw on the same seed"
+    );
+    println!("bit-identity spot check vs solo tree queries: ok");
+    server.shutdown();
 }

@@ -1,0 +1,275 @@
+//! Serving-latency load bench for the coalescing KDE server
+//! (`kde_matrix::server`): an open-loop arrival process over mixed
+//! dataset keys, measured solo (one blocking client, zero-wait flush:
+//! one dispatch per query) vs coalesced (concurrent bursty clients
+//! behind the batch/age watermark). Emits `BENCH_serving.json` with the
+//! p50/p99 latency, throughput and dispatches-per-query series the CI
+//! serving leg gates through `scripts/compare_bench.py --serving`:
+//! latency/throughput regress against the cached same-ISA baseline, and
+//! the coalescing floor (solo dispatches-per-query must beat coalesced
+//! by >= 2x) is checked within the fresh run itself.
+//!
+//! Twin-registry discipline: the solo and coalesced phases each build
+//! their own registries (same seeds, so identical trees) over their own
+//! `CpuBackend`, and every request in a phase targets a *distinct* point
+//! index of its dataset — every density query is a cold memo-cache miss,
+//! so the dispatch counter cleanly reads "fused submissions per cold
+//! query" with no cross-phase cache contamination.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use kde_matrix::kde::KdeConfig;
+use kde_matrix::kernel::{dataset, Dataset, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::simd::MicroKernel;
+use kde_matrix::server::{KdeServer, OracleRegistry, ServerConfig};
+use kde_matrix::util::bench::{fmt_ns, BenchSuite};
+use kde_matrix::util::rng::Rng;
+use kde_matrix::util::stats::percentile;
+
+const N: usize = 4096;
+const D: usize = 16;
+const CLIENTS: usize = 8;
+const BURST: usize = 16;
+const BURSTS_PER_CLIENT: usize = 6;
+/// Total requests = CLIENTS * BURSTS_PER_CLIENT * BURST = 768; each
+/// dataset receives at most that many, comfortably under N so indices
+/// stay distinct (all cold).
+const REQUESTS: usize = CLIENTS * BURSTS_PER_CLIENT * BURST;
+/// Mean open-loop gap between a client's bursts.
+const MEAN_BURST_GAP: Duration = Duration::from_micros(1500);
+
+const DATASETS: [&str; 2] = ["web", "tail"];
+
+/// One scheduled request of the open-loop trace: fire at `at` (offset
+/// from the phase start), ask dataset `key` for point `point`.
+#[derive(Clone, Copy)]
+struct Arrival {
+    at: Duration,
+    key: &'static str,
+    point: usize,
+}
+
+/// Pre-generate each client's arrival trace: bursts of back-to-back
+/// requests with seeded-exponential gaps between bursts, mixed dataset
+/// keys, and globally distinct per-dataset point indices. The trace is
+/// fixed before the clock starts — arrival times never depend on reply
+/// times, which is what makes the load open-loop.
+fn schedule(seed: u64) -> Vec<Vec<Arrival>> {
+    let mut rng = Rng::new(seed);
+    let mut next_point = [0usize; DATASETS.len()];
+    let mut traces: Vec<Vec<Arrival>> = vec![Vec::new(); CLIENTS];
+    for trace in traces.iter_mut() {
+        let mut at = Duration::ZERO;
+        for _ in 0..BURSTS_PER_CLIENT {
+            at += MEAN_BURST_GAP.mul_f64(rng.exponential());
+            for _ in 0..BURST {
+                let k = rng.below(DATASETS.len());
+                let point = next_point[k];
+                next_point[k] += 1;
+                trace.push(Arrival { at, key: DATASETS[k], point });
+            }
+        }
+    }
+    assert!(next_point.iter().all(|&c| c <= N), "indices must stay distinct");
+    traces
+}
+
+fn build_registry(be: Arc<CpuBackend>) -> Arc<OracleRegistry> {
+    let reg = OracleRegistry::new(be);
+    let mut rng = Rng::new(4242);
+    let web: Arc<Dataset> = Arc::new(dataset::gaussian_mixture(N, D, 8, 0.3, 0.35, &mut rng));
+    let tail: Arc<Dataset> = Arc::new(dataset::heavy_tailed_mixture(N, D, 4, &mut rng));
+    reg.register("web", web, Kernel::Laplacian, &KdeConfig::exact());
+    reg.register("tail", tail, Kernel::Gaussian, &KdeConfig::exact());
+    reg
+}
+
+struct PhaseStats {
+    p50_us: f64,
+    p99_us: f64,
+    throughput_qps: f64,
+    dispatches: u64,
+    queries: usize,
+    mean_flush_occupancy: f64,
+}
+
+impl PhaseStats {
+    fn dispatches_per_query(&self) -> f64 {
+        self.dispatches as f64 / self.queries as f64
+    }
+}
+
+/// Replay the open-loop trace against a server: every client thread
+/// sleeps/spins to its scheduled arrival times, submits asynchronously,
+/// and collects its replies afterwards (submission never waits on a
+/// reply). Latency is submit-to-reply per request.
+fn run_coalesced(traces: &[Vec<Arrival>]) -> PhaseStats {
+    let be = CpuBackend::new();
+    let reg = build_registry(be.clone());
+    let cfg = ServerConfig {
+        max_batch: 64,
+        max_wait: Duration::from_micros(300),
+        queue_cap: 4096,
+    };
+    let srv = KdeServer::start(reg, cfg);
+    let dispatch_base = be.calls();
+    let t0 = Instant::now();
+    let latencies: Vec<f64> = std::thread::scope(|s| {
+        traces
+            .iter()
+            .map(|trace| {
+                let srv = &srv;
+                s.spawn(move || {
+                    let mut inflight = Vec::with_capacity(trace.len());
+                    for a in trace {
+                        // Hold the open-loop schedule: sleep coarsely,
+                        // spin the last stretch (sleep granularity is
+                        // far above the burst gaps).
+                        while t0.elapsed() + Duration::from_millis(1) < a.at {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        while t0.elapsed() < a.at {
+                            std::hint::spin_loop();
+                        }
+                        let sent = Instant::now();
+                        let rx = srv
+                            .try_submit_density(a.key, a.point)
+                            .expect("bench load stays under queue_cap");
+                        inflight.push((sent, rx));
+                    }
+                    inflight
+                        .into_iter()
+                        .map(|(sent, rx)| {
+                            let reply = rx.recv().expect("server replies to every request");
+                            reply.expect("bench queries are all valid");
+                            sent.elapsed().as_nanos() as f64 / 1e3
+                        })
+                        .collect::<Vec<f64>>()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .flat_map(|h| h.join().expect("client thread"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+    let stats = PhaseStats {
+        p50_us: percentile(&latencies, 50.0),
+        p99_us: percentile(&latencies, 99.0),
+        throughput_qps: latencies.len() as f64 / wall.as_secs_f64(),
+        dispatches: be.calls() - dispatch_base,
+        queries: latencies.len(),
+        mean_flush_occupancy: srv.metrics.mean_batch_occupancy(),
+    };
+    srv.shutdown();
+    stats
+}
+
+/// The solo baseline: the same request sequence, one blocking client,
+/// zero-wait flush (`max_wait = 0`, `max_batch = 1`) — every query is
+/// its own flush and its own fused dispatch, the cost the coalescing
+/// path amortizes away.
+fn run_solo(traces: &[Vec<Arrival>]) -> PhaseStats {
+    let be = CpuBackend::new();
+    let reg = build_registry(be.clone());
+    let cfg = ServerConfig {
+        max_batch: 1,
+        max_wait: Duration::ZERO,
+        queue_cap: 4096,
+    };
+    let srv = KdeServer::start(reg, cfg);
+    let dispatch_base = be.calls();
+    let mut latencies = Vec::with_capacity(REQUESTS);
+    let t0 = Instant::now();
+    for trace in traces {
+        for a in trace {
+            let sent = Instant::now();
+            srv.try_query_density(a.key, a.point)
+                .expect("bench queries are all valid");
+            latencies.push(sent.elapsed().as_nanos() as f64 / 1e3);
+        }
+    }
+    let wall = t0.elapsed();
+    let stats = PhaseStats {
+        p50_us: percentile(&latencies, 50.0),
+        p99_us: percentile(&latencies, 99.0),
+        throughput_qps: latencies.len() as f64 / wall.as_secs_f64(),
+        dispatches: be.calls() - dispatch_base,
+        queries: latencies.len(),
+        mean_flush_occupancy: srv.metrics.mean_batch_occupancy(),
+    };
+    srv.shutdown();
+    stats
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_serving (coalescing KDE server)");
+    let traces = schedule(777);
+    let total: usize = traces.iter().map(Vec::len).sum();
+    assert_eq!(total, REQUESTS);
+    suite.note(&format!(
+        "open-loop trace: {CLIENTS} clients x {BURSTS_PER_CLIENT} bursts x {BURST} requests \
+         over {} datasets (n = {N}, d = {D}), all points distinct (cold)",
+        DATASETS.len()
+    ));
+
+    let solo = run_solo(&traces);
+    suite.note(&format!(
+        "solo:      p50 {} | p99 {} | {:.0} q/s | {} dispatches / {} queries = {:.3} d/q",
+        fmt_ns(solo.p50_us * 1e3),
+        fmt_ns(solo.p99_us * 1e3),
+        solo.throughput_qps,
+        solo.dispatches,
+        solo.queries,
+        solo.dispatches_per_query()
+    ));
+
+    let coal = run_coalesced(&traces);
+    suite.note(&format!(
+        "coalesced: p50 {} | p99 {} | {:.0} q/s | {} dispatches / {} queries = {:.3} d/q \
+         (mean flush occupancy {:.1})",
+        fmt_ns(coal.p50_us * 1e3),
+        fmt_ns(coal.p99_us * 1e3),
+        coal.throughput_qps,
+        coal.dispatches,
+        coal.queries,
+        coal.dispatches_per_query(),
+        coal.mean_flush_occupancy
+    ));
+    let ratio = solo.dispatches_per_query() / coal.dispatches_per_query();
+    suite.note(&format!("coalescing ratio (solo d/q / coalesced d/q): {ratio:.1}x"));
+
+    let json = format!(
+        "{{\n  \"bench\": \"serving\",\n  \"baseline\": \"measured\",\n  \
+         \"isa_detected\": \"{}\",\n  \"serving\": {{\n    \
+         \"n\": {N}, \"d\": {D}, \"datasets\": {}, \"clients\": {CLIENTS}, \
+         \"requests\": {REQUESTS},\n    \
+         \"p50_us\": {:.2}, \"p99_us\": {:.2}, \"throughput_qps\": {:.1},\n    \
+         \"dispatches\": {}, \"queries\": {}, \"dispatches_per_query\": {:.4},\n    \
+         \"mean_flush_occupancy\": {:.2},\n    \
+         \"solo_p50_us\": {:.2}, \"solo_p99_us\": {:.2}, \"solo_throughput_qps\": {:.1},\n    \
+         \"solo_dispatches_per_query\": {:.4},\n    \
+         \"coalescing_ratio\": {:.2}\n  }}\n}}\n",
+        MicroKernel::detect().isa.name(),
+        DATASETS.len(),
+        coal.p50_us,
+        coal.p99_us,
+        coal.throughput_qps,
+        coal.dispatches,
+        coal.queries,
+        coal.dispatches_per_query(),
+        coal.mean_flush_occupancy,
+        solo.p50_us,
+        solo.p99_us,
+        solo.throughput_qps,
+        solo.dispatches_per_query(),
+        ratio
+    );
+    match std::fs::write("BENCH_serving.json", &json) {
+        Ok(()) => suite.note("wrote BENCH_serving.json"),
+        Err(e) => suite.note(&format!("could not write BENCH_serving.json: {e}")),
+    }
+    suite.finish();
+}

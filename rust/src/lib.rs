@@ -38,4 +38,5 @@ pub mod kernel;
 pub mod linalg;
 pub mod runtime;
 pub mod sampling;
+pub mod server;
 pub mod util;

@@ -58,6 +58,13 @@ pub enum BackendError {
         /// How many shards the service actually serves.
         shards: usize,
     },
+    /// A request named a dataset the serving registry has not registered
+    /// (permanent: retrying the identical request fails identically until
+    /// someone registers the dataset).
+    UnknownDataset {
+        /// The dataset name the caller asked for.
+        name: String,
+    },
 }
 
 impl BackendError {
@@ -66,15 +73,17 @@ impl BackendError {
     /// * `ExecutionFailed` — per its tag (engine hiccups are transient,
     ///   structural failures are not).
     /// * `Timeout` / `Overloaded` — transient: load subsides.
-    /// * `ArtifactMissing` / `Panicked` / `UnknownShard` — permanent:
-    ///   retrying the identical call deterministically fails again.
+    /// * `ArtifactMissing` / `Panicked` / `UnknownShard` /
+    ///   `UnknownDataset` — permanent: retrying the identical call
+    ///   deterministically fails again.
     pub fn transient(&self) -> bool {
         match self {
             BackendError::ExecutionFailed { transient, .. } => *transient,
             BackendError::Timeout | BackendError::Overloaded => true,
             BackendError::ArtifactMissing { .. }
             | BackendError::Panicked { .. }
-            | BackendError::UnknownShard { .. } => false,
+            | BackendError::UnknownShard { .. }
+            | BackendError::UnknownDataset { .. } => false,
         }
     }
 
@@ -110,6 +119,9 @@ impl fmt::Display for BackendError {
             }
             BackendError::UnknownShard { shard, shards } => {
                 write!(f, "unknown shard {shard} (service has {shards})")
+            }
+            BackendError::UnknownDataset { name } => {
+                write!(f, "unknown dataset {name:?} (not registered)")
             }
         }
     }
@@ -157,6 +169,7 @@ mod tests {
         assert!(!BackendError::ArtifactMissing { detail: "m".into() }.transient());
         assert!(!BackendError::Panicked { message: "p".into() }.transient());
         assert!(!BackendError::UnknownShard { shard: 3, shards: 1 }.transient());
+        assert!(!BackendError::UnknownDataset { name: "web".into() }.transient());
     }
 
     #[test]
@@ -179,5 +192,7 @@ mod tests {
         assert!(s.contains("unknown shard 5"), "got: {s}");
         assert!(format!("{}", BackendError::Overloaded).contains("overloaded"));
         assert!(format!("{}", BackendError::transient_failure("x")).contains("transient"));
+        let d = format!("{}", BackendError::UnknownDataset { name: "web".into() });
+        assert!(d.contains("unknown dataset") && d.contains("web"), "got: {d}");
     }
 }

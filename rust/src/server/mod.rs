@@ -1,0 +1,540 @@
+//! KDE-as-a-service: the cross-request coalescing server.
+//!
+//! The coordinator (`coordinator::KdeService`) batches *one* caller's
+//! raw-point queries per shard; this module is the production serving
+//! shape above it for **many concurrent clients against shared named
+//! datasets**:
+//!
+//! ```text
+//!   clients ──> KdeServer (bounded mpsc) ──> RequestStore ──────────────┐
+//!      │              router thread          per-dataset runs,          │
+//!      │                                     flush @ B=64 or max_wait   │
+//!      │                                                                v
+//!      │          OracleRegistry: name -> Arc<MultiLevelKde>   ONE fused
+//!      │          (built once, shared memo cache)              query_points_multi
+//!      │                                                       per dataset per flush
+//!      └───────<── per-request reply channels <────────────────────────┘
+//!                  Result<ServerReply, BackendError>
+//! ```
+//!
+//! * **Registry** ([`OracleRegistry`]): named datasets are built once
+//!   into `Arc<MultiLevelKde>` trees and shared across every client —
+//!   the paper's amortize-preprocessing-across-queries serving shape.
+//! * **Coalescing** ([`RequestStore`]): concurrent clients' point
+//!   queries accumulate per dataset and flush — at `max_batch` pending
+//!   or `max_wait` age — into **one**
+//!   [`MultiLevelKde::try_query_points_multi`] call per dataset, which
+//!   packs all cache misses into fused padded `sums_ranged` submissions
+//!   (B = 64 rows). Dispatches per query fall from 1 (solo cold query)
+//!   to `ceil(misses / 64) / flushed` — the coalescing win the serving
+//!   bench gates in CI.
+//! * **Determinism**: the store keeps a stable pack order (arrival
+//!   order within a dataset, first-arrival order across datasets), each
+//!   row of a fused submission accumulates its own segment range
+//!   independently, and every neighbor-sample request carries its own
+//!   seed evaluated through a private RNG stream
+//!   ([`NeighborSampler::sample_batch_with_streams`]) — so a coalesced
+//!   answer is **bit-identical** to the same request served solo, the
+//!   same discipline `walk_batch`/`sample_batch` pin
+//!   (`tests/serving.rs`).
+//! * **Failure model** (shared with the coordinator,
+//!   docs/ARCHITECTURE.md §"Failure model"): bounded ingress + per-
+//!   dataset pending caps reject with [`BackendError::Overloaded`];
+//!   per-request deadlines answer [`BackendError::Timeout`] (checked at
+//!   flush); unregistered names answer the typed
+//!   [`BackendError::UnknownDataset`]; oracle panics are caught at the
+//!   flush boundary and every in-flight request of the flush gets a
+//!   typed reply. Every admitted request gets exactly one reply.
+//!
+//! Flushes execute inline on the router thread: parallelism lives
+//! *inside* the backend (`TiledBackend` worker threads, PJRT), where it
+//! does not reorder replies; the bounded ingress channel provides
+//! backpressure while a flush runs.
+//!
+//! [`MultiLevelKde::try_query_points_multi`]: crate::kde::MultiLevelKde::try_query_points_multi
+//! [`NeighborSampler::sample_batch_with_streams`]: crate::sampling::NeighborSampler::sample_batch_with_streams
+#![warn(missing_docs)]
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod registry;
+pub mod store;
+
+pub use registry::{OracleRegistry, RegisteredDataset};
+pub use store::RequestStore;
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::ServiceMetrics;
+use crate::runtime::error::{catch_panic, BackendError};
+use crate::sampling::NeighborSample;
+use crate::util::rng::Rng;
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Pending-count flush watermark per dataset (64 = the AOT batch
+    /// shape). A trigger, not a cap: a flush drains everything pending.
+    pub max_batch: usize,
+    /// Age flush watermark: the oldest pending request of any dataset
+    /// waits at most this long before a flush. `Duration::ZERO` flushes
+    /// every router iteration (the solo/low-latency setting).
+    pub max_wait: Duration,
+    /// Bound on the ingress channel AND each dataset's pending run.
+    /// Admission past either bound is refused with
+    /// [`BackendError::Overloaded`].
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 64, // = AOT_B
+            max_wait: Duration::from_micros(500),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// A successful server reply.
+#[derive(Clone, Copy, Debug)]
+pub enum ServerReply {
+    /// Memoized KDE density of a dataset point against the whole dataset
+    /// (the tree root's answer, self-term included — same contract as
+    /// [`MultiLevelKde::query_point`](crate::kde::MultiLevelKde::query_point)).
+    Density(f64),
+    /// A weighted neighbor sample drawn from the request's own seeded
+    /// stream (`None` only for degenerate single-point datasets).
+    Neighbor(Option<NeighborSample>),
+}
+
+/// What a request asks for.
+enum RequestKind {
+    /// Density of dataset point `point` (tree-root query).
+    Density { point: usize },
+    /// Neighbor sample from `source` using stream `Rng::new(seed)`.
+    Neighbor { source: usize, seed: u64 },
+}
+
+/// One admitted request waiting in the store.
+struct Pending {
+    kind: RequestKind,
+    respond: SyncSender<Result<ServerReply, BackendError>>,
+    enqueued_at: Instant,
+    deadline: Option<Instant>,
+}
+
+struct Ingress {
+    dataset: Arc<RegisteredDataset>,
+    req: Pending,
+}
+
+enum Control {
+    Request(Ingress),
+    Shutdown,
+}
+
+/// Handle to a running coalescing KDE server; see the module docs.
+pub struct KdeServer {
+    registry: Arc<OracleRegistry>,
+    ingress: SyncSender<Control>,
+    router: Option<std::thread::JoinHandle<()>>,
+    /// Shared serving metrics (admission/flush/latency counters; a
+    /// "batch" here is one dataset's flushed run).
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl KdeServer {
+    /// Spawn the router over a registry. The registry stays shared:
+    /// datasets may be registered before or after the server starts, and
+    /// other servers (or offline pipelines) may use it concurrently.
+    pub fn start(registry: Arc<OracleRegistry>, cfg: ServerConfig) -> Self {
+        let metrics = Arc::new(ServiceMetrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Control>(cfg.queue_cap.max(1));
+        let m = metrics.clone();
+        let router = std::thread::spawn(move || run_router(rx, cfg, m));
+        KdeServer { registry, ingress: tx, router: Some(router), metrics }
+    }
+
+    /// The registry this server resolves dataset names through.
+    pub fn registry(&self) -> &Arc<OracleRegistry> {
+        &self.registry
+    }
+
+    /// Fallible async density query for dataset point `point` of
+    /// `dataset`: returns the reply receiver, or — synchronously —
+    /// [`BackendError::UnknownDataset`], an out-of-range error, or
+    /// [`BackendError::Overloaded`].
+    pub fn try_submit_density(
+        &self,
+        dataset: &str,
+        point: usize,
+    ) -> Result<Receiver<Result<ServerReply, BackendError>>, BackendError> {
+        self.enqueue(dataset, RequestKind::Density { point }, None)
+    }
+
+    /// [`try_submit_density`](Self::try_submit_density) with a deadline
+    /// `timeout` from now: a request still pending when it expires is
+    /// dropped from the flush and answered [`BackendError::Timeout`].
+    pub fn try_submit_density_deadline(
+        &self,
+        dataset: &str,
+        point: usize,
+        timeout: Duration,
+    ) -> Result<Receiver<Result<ServerReply, BackendError>>, BackendError> {
+        self.enqueue(
+            dataset,
+            RequestKind::Density { point },
+            Some(Instant::now() + timeout),
+        )
+    }
+
+    /// Fallible async neighbor-sample request: draw a weighted neighbor
+    /// of `source` (Algorithm 4.11) using the request's own stream
+    /// `Rng::new(seed)` — bit-identical to a solo
+    /// `NeighborSampler::sample(source, &mut Rng::new(seed))` on the
+    /// same tree, however the request gets coalesced.
+    pub fn try_submit_neighbor(
+        &self,
+        dataset: &str,
+        source: usize,
+        seed: u64,
+    ) -> Result<Receiver<Result<ServerReply, BackendError>>, BackendError> {
+        self.enqueue(dataset, RequestKind::Neighbor { source, seed }, None)
+    }
+
+    /// Blocking [`try_submit_density`](Self::try_submit_density): the
+    /// density, or the typed error the server replied with.
+    pub fn try_query_density(&self, dataset: &str, point: usize) -> Result<f64, BackendError> {
+        match self.try_submit_density(dataset, point)?.recv() {
+            Ok(Ok(ServerReply::Density(v))) => Ok(v),
+            Ok(Ok(_)) => Err(BackendError::permanent_failure(
+                "server sent a non-density reply to a density request",
+            )),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(dropped_reply()),
+        }
+    }
+
+    /// Blocking [`try_submit_neighbor`](Self::try_submit_neighbor).
+    pub fn try_sample_neighbor(
+        &self,
+        dataset: &str,
+        source: usize,
+        seed: u64,
+    ) -> Result<Option<NeighborSample>, BackendError> {
+        match self.try_submit_neighbor(dataset, source, seed)?.recv() {
+            Ok(Ok(ServerReply::Neighbor(s))) => Ok(s),
+            Ok(Ok(_)) => Err(BackendError::permanent_failure(
+                "server sent a non-neighbor reply to a neighbor request",
+            )),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(dropped_reply()),
+        }
+    }
+
+    fn enqueue(
+        &self,
+        dataset: &str,
+        kind: RequestKind,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<ServerReply, BackendError>>, BackendError> {
+        let entry = self.registry.get(dataset)?;
+        let n = entry.len();
+        let idx = match kind {
+            RequestKind::Density { point } => point,
+            RequestKind::Neighbor { source, .. } => source,
+        };
+        if idx >= n {
+            return Err(BackendError::permanent_failure(format!(
+                "point index {idx} out of range for dataset {dataset:?} (n = {n})"
+            )));
+        }
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = Pending { kind, respond: tx, enqueued_at: Instant::now(), deadline };
+        match self.ingress.try_send(Control::Request(Ingress { dataset: entry, req })) {
+            Ok(()) => {
+                self.metrics.enqueued.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(BackendError::Overloaded)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(BackendError::permanent_failure("server stopped"))
+            }
+        }
+    }
+
+    /// Stop the router; pending admitted requests are flushed first.
+    pub fn shutdown(mut self) {
+        let _ = self.ingress.send(Control::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for KdeServer {
+    fn drop(&mut self) {
+        let _ = self.ingress.send(Control::Shutdown);
+        if let Some(h) = self.router.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dropped_reply() -> BackendError {
+    BackendError::Panicked {
+        message: "server dropped request (router died before replying)".to_string(),
+    }
+}
+
+fn run_router(rx: Receiver<Control>, cfg: ServerConfig, metrics: Arc<ServiceMetrics>) {
+    let mut store: RequestStore<Pending> = RequestStore::new(cfg.max_batch, cfg.max_wait);
+    let mut datasets: HashMap<String, Arc<RegisteredDataset>> = HashMap::new();
+    let queue_cap = cfg.queue_cap.max(1);
+    let mut running = true;
+    while running {
+        // Wait for at least one request (or shutdown); while something is
+        // pending, wake exactly at the store's next age watermark.
+        let timeout = store
+            .next_flush_at()
+            .map(|at| at.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok(ctl) => absorb(ctl, &mut store, &mut datasets, &mut running, queue_cap, &metrics),
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => running = false,
+        }
+        // Greedily drain the ingress backlog so it becomes one large
+        // coalesced flush, not many singletons.
+        while let Ok(ctl) = rx.try_recv() {
+            absorb(ctl, &mut store, &mut datasets, &mut running, queue_cap, &metrics);
+        }
+        if store.ready(Instant::now()) || (!running && !store.is_empty()) {
+            for (name, batch) in store.drain() {
+                if let Some(ds) = datasets.get(&name) {
+                    flush_dataset(ds, batch, &metrics);
+                }
+            }
+        }
+    }
+    // Shutdown: flush whatever is still pending so every admitted request
+    // gets its one reply.
+    for (name, batch) in store.drain() {
+        if let Some(ds) = datasets.get(&name) {
+            flush_dataset(ds, batch, &metrics);
+        }
+    }
+}
+
+/// Admit one control message into the router's store (or begin
+/// shutdown). Past the per-dataset pending cap the request is refused
+/// with a typed `Overloaded` reply instead of buffering without bound
+/// behind a slow flush.
+fn absorb(
+    ctl: Control,
+    store: &mut RequestStore<Pending>,
+    datasets: &mut HashMap<String, Arc<RegisteredDataset>>,
+    running: &mut bool,
+    queue_cap: usize,
+    metrics: &ServiceMetrics,
+) {
+    match ctl {
+        Control::Request(ing) => {
+            let name = ing.dataset.name().to_string();
+            if store.key_len(&name) >= queue_cap {
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = ing.req.respond.send(Err(BackendError::Overloaded));
+                return;
+            }
+            datasets.entry(name.clone()).or_insert_with(|| ing.dataset.clone());
+            store.push(&name, ing.req, Instant::now());
+        }
+        Control::Shutdown => *running = false,
+    }
+}
+
+/// Flush one dataset's pending run: deadline-check, then resolve every
+/// density request through ONE fused `try_query_points_multi` call and
+/// every neighbor request through one `sample_batch_with_streams` call
+/// (per-request seeded streams, arrival order), replying per client.
+fn flush_dataset(ds: &Arc<RegisteredDataset>, batch: Vec<Pending>, metrics: &ServiceMetrics) {
+    // Deadline check at flush time: expired requests are dropped from the
+    // fused plan and answered Timeout, never answered late.
+    let now = Instant::now();
+    let mut live: Vec<Pending> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if req.deadline.is_some_and(|dl| dl <= now) {
+            metrics.timeouts.fetch_add(1, Ordering::Relaxed);
+            let _ = req.respond.send(Err(BackendError::Timeout));
+        } else {
+            live.push(req);
+        }
+    }
+    if live.is_empty() {
+        return;
+    }
+    metrics.record_batch(live.len());
+
+    // Split by kind, preserving arrival order within each kind (the
+    // stable pack order the bit-identity contract rides on).
+    let mut density: Vec<&Pending> = Vec::new();
+    let mut points: Vec<usize> = Vec::new();
+    let mut neighbor: Vec<&Pending> = Vec::new();
+    let mut sources: Vec<usize> = Vec::new();
+    let mut streams: Vec<Rng> = Vec::new();
+    for req in &live {
+        match req.kind {
+            RequestKind::Density { point } => {
+                density.push(req);
+                points.push(point);
+            }
+            RequestKind::Neighbor { source, seed } => {
+                neighbor.push(req);
+                sources.push(source);
+                streams.push(Rng::new(seed));
+            }
+        }
+    }
+
+    if !points.is_empty() {
+        // ONE fused submission chain for the whole flush's density
+        // queries: all points as one root group; the tree dedups repeats
+        // and cache hits, then packs the misses into ceil(misses / 64)
+        // fused dispatches.
+        let groups = [(ds.tree.root(), points.as_slice())];
+        let run = catch_panic(|| ds.tree.try_query_points_multi(&groups)).and_then(|r| r);
+        match run {
+            Ok(mut per_group) => {
+                let vals = per_group.pop().unwrap_or_default();
+                if vals.len() == points.len() {
+                    for (req, &v) in density.iter().zip(&vals) {
+                        metrics.record_latency_us(req.enqueued_at.elapsed().as_micros() as f64);
+                        let _ = req.respond.send(Ok(ServerReply::Density(v)));
+                    }
+                } else {
+                    let err = BackendError::permanent_failure(format!(
+                        "oracle returned {} answers for {} density queries",
+                        vals.len(),
+                        points.len()
+                    ));
+                    reply_error(&density, &err, metrics);
+                }
+            }
+            Err(e) => {
+                if matches!(e, BackendError::Panicked { .. }) {
+                    metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                }
+                reply_error(&density, &e, metrics);
+            }
+        }
+    }
+
+    if !sources.is_empty() {
+        // One lock-step descent batch for the flush's neighbor requests;
+        // each request draws only from its own stream, so the answers
+        // equal solo `sample(source, &mut Rng::new(seed))` calls bit for
+        // bit regardless of who else shared the flush.
+        let run = catch_panic(|| ds.sampler.sample_batch_with_streams(&sources, &mut streams));
+        match run {
+            Ok(samples) => {
+                for (req, &s) in neighbor.iter().zip(&samples) {
+                    metrics.record_latency_us(req.enqueued_at.elapsed().as_micros() as f64);
+                    let _ = req.respond.send(Ok(ServerReply::Neighbor(s)));
+                }
+            }
+            Err(e) => {
+                if matches!(e, BackendError::Panicked { .. }) {
+                    metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                }
+                reply_error(&neighbor, &e, metrics);
+            }
+        }
+    }
+}
+
+fn reply_error(reqs: &[&Pending], err: &BackendError, metrics: &ServiceMetrics) {
+    for req in reqs {
+        metrics.error_replies.fetch_add(1, Ordering::Relaxed);
+        let _ = req.respond.send(Err(err.clone()));
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::kde::KdeConfig;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::kernel::Kernel;
+    use crate::runtime::backend::CpuBackend;
+
+    fn serve(seed: u64, cfg: ServerConfig) -> (KdeServer, Arc<RegisteredDataset>) {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        let mut rng = Rng::new(seed);
+        let ds = Arc::new(gaussian_mixture(48, 3, 2, 1.0, 0.5, &mut rng));
+        let entry = reg.register("web", ds, Kernel::Laplacian, &KdeConfig::exact());
+        (KdeServer::start(reg, cfg), entry)
+    }
+
+    #[test]
+    fn density_reply_matches_direct_tree_query() {
+        let cfg = ServerConfig { max_wait: Duration::ZERO, ..ServerConfig::default() };
+        let (srv, entry) = serve(21, cfg);
+        for i in [0usize, 7, 31] {
+            let got = srv.try_query_density("web", i).unwrap();
+            let want = entry.tree.query_point(entry.tree.root(), i);
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn neighbor_reply_matches_solo_sample_on_same_stream() {
+        let cfg = ServerConfig { max_wait: Duration::ZERO, ..ServerConfig::default() };
+        let (srv, entry) = serve(23, cfg);
+        let got = srv.try_sample_neighbor("web", 5, 0xFEED).unwrap().unwrap();
+        let want = entry.sampler.sample(5, &mut Rng::new(0xFEED)).unwrap();
+        assert_eq!(got.neighbor, want.neighbor);
+        assert_eq!(got.prob.to_bits(), want.prob.to_bits());
+    }
+
+    #[test]
+    fn unknown_dataset_and_bad_index_fail_synchronously() {
+        let (srv, _) = serve(25, ServerConfig::default());
+        match srv.try_submit_density("nope", 0) {
+            Err(BackendError::UnknownDataset { name }) => assert_eq!(name, "nope"),
+            other => panic!("want UnknownDataset, got {:?}", other.map(|_| ())),
+        }
+        assert!(srv.try_submit_density("web", 48).is_err(), "out-of-range index");
+    }
+
+    #[test]
+    fn shutdown_flushes_pending_requests() {
+        let cfg = ServerConfig { max_wait: Duration::from_secs(3600), ..Default::default() };
+        let (srv, entry) = serve(27, cfg);
+        // With an hour-long age watermark these can only be answered by
+        // the shutdown flush.
+        let rx0 = srv.try_submit_density("web", 1).unwrap();
+        let rx1 = srv.try_submit_density("web", 2).unwrap();
+        srv.shutdown();
+        let v0 = rx0.recv().unwrap().unwrap();
+        let v1 = rx1.recv().unwrap().unwrap();
+        let (want0, want1) = (
+            entry.tree.query_point(entry.tree.root(), 1),
+            entry.tree.query_point(entry.tree.root(), 2),
+        );
+        match (v0, v1) {
+            (ServerReply::Density(a), ServerReply::Density(b)) => {
+                assert_eq!(a.to_bits(), want0.to_bits());
+                assert_eq!(b.to_bits(), want1.to_bits());
+            }
+            other => panic!("want density replies, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Per-dataset oracle registry: named datasets, each built **once** into a
+//! shared [`MultiLevelKde`] + [`NeighborSampler`] pair that every client
+//! of the serving layer queries through.
+//!
+//! The registry is the server-side answer to the paper's amortization
+//! argument (Definition 1.1): preprocessing — building the multi-level
+//! tree and its node estimators — is paid once per dataset, after which
+//! every query is sub-linear. Registration is **idempotent and
+//! first-writer-wins** (the same discipline as the tree's memo cache):
+//! concurrent `register` calls for one name may build twice, but exactly
+//! one build is kept and every caller gets that one, so all clients share
+//! one memo cache and one set of estimators. Lookups of unregistered
+//! names fail with the typed
+//! [`BackendError::UnknownDataset`] — a *permanent* error (retrying
+//! cannot make a dataset appear).
+
+use std::collections::HashMap;
+use std::sync::{Arc, PoisonError, RwLock};
+
+use crate::kde::multilevel::MultiLevelKde;
+use crate::kde::{KdeConfig, KdeCounters};
+use crate::kernel::{Dataset, Kernel};
+use crate::runtime::backend::KernelBackend;
+use crate::runtime::error::BackendError;
+use crate::sampling::NeighborSampler;
+
+/// One registered dataset: the tree built over it, the neighbor sampler
+/// wrapping that tree, and the dataset's own KDE-query accounting. All
+/// clients resolving this name share this one instance (one memo cache,
+/// one estimator build).
+pub struct RegisteredDataset {
+    name: String,
+    /// The multi-level KDE tree built once over the dataset.
+    pub tree: Arc<MultiLevelKde>,
+    /// Neighbor sampler (Algorithm 4.11) over [`tree`](Self::tree) —
+    /// serves the server's neighbor-sample requests.
+    pub sampler: NeighborSampler,
+    /// Logical KDE queries (memo-cache misses) charged to this dataset.
+    pub counters: Arc<KdeCounters>,
+}
+
+impl RegisteredDataset {
+    /// The name this dataset was registered under.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of points in the registered dataset.
+    pub fn len(&self) -> usize {
+        self.tree.ds.n
+    }
+
+    /// Whether the registered dataset is empty.
+    pub fn is_empty(&self) -> bool {
+        self.tree.ds.n == 0
+    }
+}
+
+/// Named-dataset oracle registry shared by every client of a
+/// [`KdeServer`](crate::server::KdeServer); see the module docs.
+pub struct OracleRegistry {
+    backend: Arc<dyn KernelBackend>,
+    entries: RwLock<HashMap<String, Arc<RegisteredDataset>>>,
+}
+
+impl OracleRegistry {
+    /// Empty registry over one shared execution backend (every registered
+    /// dataset's tree dispatches through it, so its `calls()` counter is
+    /// the server-wide dispatch count).
+    pub fn new(backend: Arc<dyn KernelBackend>) -> Arc<Self> {
+        Arc::new(OracleRegistry { backend, entries: RwLock::new(HashMap::new()) })
+    }
+
+    /// The shared execution backend the registry builds trees over.
+    pub fn backend(&self) -> &Arc<dyn KernelBackend> {
+        &self.backend
+    }
+
+    /// Register `ds` under `name`, building the multi-level tree once.
+    ///
+    /// Idempotent: if `name` is already registered the existing entry is
+    /// returned untouched (the new build, if any raced in, is discarded).
+    /// Under concurrent registration of the same name, every caller gets
+    /// the same single surviving entry — first writer wins, like the
+    /// tree's memo cache.
+    pub fn register(
+        &self,
+        name: &str,
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+    ) -> Arc<RegisteredDataset> {
+        if let Ok(existing) = self.get(name) {
+            return existing;
+        }
+        // Build outside the lock: tree construction is the expensive part
+        // and must not serialize lookups of other datasets.
+        let counters = KdeCounters::new();
+        let tree = Arc::new(MultiLevelKde::build(
+            ds,
+            kernel,
+            cfg,
+            self.backend.clone(),
+            counters.clone(),
+        ));
+        let entry = Arc::new(RegisteredDataset {
+            name: name.to_string(),
+            sampler: NeighborSampler::new(tree.clone()),
+            tree,
+            counters,
+        });
+        let mut map = self.entries.write().unwrap_or_else(PoisonError::into_inner);
+        map.entry(name.to_string()).or_insert(entry).clone()
+    }
+
+    /// Look up a registered dataset by name; unregistered names fail with
+    /// the typed (permanent) [`BackendError::UnknownDataset`].
+    pub fn get(&self, name: &str) -> Result<Arc<RegisteredDataset>, BackendError> {
+        let map = self.entries.read().unwrap_or_else(PoisonError::into_inner);
+        map.get(name)
+            .cloned()
+            .ok_or_else(|| BackendError::UnknownDataset { name: name.to_string() })
+    }
+
+    /// Registered dataset names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let map = self.entries.read().unwrap_or_else(PoisonError::into_inner);
+        let mut names: Vec<String> = map.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Number of registered datasets.
+    pub fn len(&self) -> usize {
+        self.entries
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    /// Whether the registry has no datasets.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use crate::kernel::dataset::gaussian_mixture;
+    use crate::runtime::backend::CpuBackend;
+    use crate::util::rng::Rng;
+
+    fn small_ds(seed: u64) -> Arc<Dataset> {
+        let mut rng = Rng::new(seed);
+        Arc::new(gaussian_mixture(32, 3, 2, 1.0, 0.5, &mut rng))
+    }
+
+    #[test]
+    fn register_is_idempotent_and_shared() {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        let a = reg.register("web", small_ds(1), Kernel::Laplacian, &KdeConfig::exact());
+        let b = reg.register("web", small_ds(2), Kernel::Gaussian, &KdeConfig::exact());
+        // Second registration under the same name is discarded: both
+        // handles are the SAME entry (shared memo cache).
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(a.name(), "web");
+        assert_eq!(a.len(), 32);
+    }
+
+    #[test]
+    fn unknown_dataset_is_a_typed_permanent_error() {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        match reg.get("nope") {
+            Err(BackendError::UnknownDataset { name }) => {
+                assert_eq!(name, "nope");
+            }
+            other => panic!("want UnknownDataset, got {:?}", other.map(|_| ())),
+        }
+        assert!(!BackendError::UnknownDataset { name: "nope".into() }.transient());
+    }
+
+    #[test]
+    fn names_are_sorted() {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        reg.register("zeta", small_ds(3), Kernel::Laplacian, &KdeConfig::exact());
+        reg.register("alpha", small_ds(4), Kernel::Laplacian, &KdeConfig::exact());
+        assert_eq!(reg.names(), vec!["alpha".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn concurrent_registration_converges_to_one_entry() {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        let handles: Vec<Arc<RegisteredDataset>> = std::thread::scope(|s| {
+            (0..8u64)
+                .map(|t| {
+                    let reg = &reg;
+                    s.spawn(move || {
+                        reg.register(
+                            "shared",
+                            small_ds(100 + t),
+                            Kernel::Laplacian,
+                            &KdeConfig::exact(),
+                        )
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        assert_eq!(reg.len(), 1);
+        let first = &handles[0];
+        for h in &handles[1..] {
+            assert!(Arc::ptr_eq(first, h), "all racers share one surviving build");
+        }
+        // And the survivor answers queries consistently for everyone.
+        let v = first.tree.query_point(first.tree.root(), 3);
+        for h in &handles {
+            assert_eq!(v.to_bits(), h.tree.query_point(h.tree.root(), 3).to_bits());
+        }
+    }
+}

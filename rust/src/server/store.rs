@@ -1,0 +1,223 @@
+//! Cross-request coalescing store: per-dataset pending queues with a
+//! batch-size / age watermark, the buffer between the server's mpsc
+//! ingress and its fused flushes.
+//!
+//! The store is deliberately dumb and fully deterministic: items are kept
+//! **in arrival order** within each key, and keys keep the order of their
+//! *first* arrival across the store's whole lifetime — the stable pack
+//! order that lets a coalesced flush reproduce solo answers bit for bit
+//! (each request's position in the fused submission is a function of the
+//! arrival sequence alone, never of timing). It is generic over the item
+//! type so the flush policy is unit-testable without building trees.
+//!
+//! Flush policy ([`RequestStore::ready`]): flush when any key's pending
+//! count reaches `max_batch` (the artifact's native B = 64 shape is
+//! full), or when the **oldest currently-pending** item of any key has
+//! aged past `max_wait` (the latency watermark; measured from when the
+//! item entered the store, exactly like the coordinator batcher's
+//! `pending_since` — not from client enqueue time, which would degrade a
+//! backlog to singleton flushes). `max_batch` is a *trigger*, not a cap:
+//! a drain hands back everything pending, and the fused evaluation
+//! downstream packs any count into `ceil(count / 64)` submissions.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// One key's pending run.
+struct StoreGroup<T> {
+    key: String,
+    items: Vec<T>,
+    /// When the oldest *currently pending* item entered the store
+    /// (`None` while empty).
+    oldest: Option<Instant>,
+}
+
+/// Per-key coalescing buffer with a size/age flush watermark; see the
+/// module docs.
+pub struct RequestStore<T> {
+    groups: Vec<StoreGroup<T>>,
+    index: HashMap<String, usize>,
+    max_batch: usize,
+    max_wait: Duration,
+}
+
+impl<T> RequestStore<T> {
+    /// Empty store flushing at `max_batch` pending items per key or
+    /// `max_wait` age of the oldest pending item.
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        RequestStore {
+            groups: Vec::new(),
+            index: HashMap::new(),
+            max_batch: max_batch.max(1),
+            max_wait,
+        }
+    }
+
+    /// Append one item under `key` (arriving `now`), preserving arrival
+    /// order within the key and first-arrival order across keys.
+    pub fn push(&mut self, key: &str, item: T, now: Instant) {
+        let gi = match self.index.get(key) {
+            Some(&gi) => gi,
+            None => {
+                let gi = self.groups.len();
+                self.groups.push(StoreGroup {
+                    key: key.to_string(),
+                    items: Vec::new(),
+                    oldest: None,
+                });
+                self.index.insert(key.to_string(), gi);
+                gi
+            }
+        };
+        let g = &mut self.groups[gi];
+        if g.oldest.is_none() {
+            g.oldest = Some(now);
+        }
+        g.items.push(item);
+    }
+
+    /// Total pending items across all keys.
+    pub fn len(&self) -> usize {
+        self.groups.iter().map(|g| g.items.len()).sum()
+    }
+
+    /// Whether nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.groups.iter().all(|g| g.items.is_empty())
+    }
+
+    /// Pending items under `key` (0 for unknown keys).
+    pub fn key_len(&self, key: &str) -> usize {
+        self.index
+            .get(key)
+            .map(|&gi| self.groups[gi].items.len())
+            .unwrap_or(0)
+    }
+
+    /// Whether the watermark has tripped: some key is at `max_batch`, or
+    /// some key's oldest pending item is at least `max_wait` old.
+    pub fn ready(&self, now: Instant) -> bool {
+        self.groups.iter().any(|g| {
+            g.items.len() >= self.max_batch
+                || (!g.items.is_empty()
+                    && g.oldest
+                        .map(|t| now.saturating_duration_since(t) >= self.max_wait)
+                        .unwrap_or(false))
+        })
+    }
+
+    /// Earliest instant at which [`ready`](Self::ready) will trip on age
+    /// alone (`None` while empty). A key already at `max_batch` reports
+    /// its own `oldest` arrival — i.e. a time already in the past.
+    pub fn next_flush_at(&self) -> Option<Instant> {
+        self.groups
+            .iter()
+            .filter(|g| !g.items.is_empty())
+            .filter_map(|g| {
+                g.oldest.map(|t| {
+                    if g.items.len() >= self.max_batch {
+                        t
+                    } else {
+                        t + self.max_wait
+                    }
+                })
+            })
+            .min()
+    }
+
+    /// Take everything pending: one `(key, items)` run per non-empty key,
+    /// keys in first-arrival order, items in arrival order. Keys stay
+    /// known (so the cross-flush pack order never reshuffles) but their
+    /// ages reset.
+    pub fn drain(&mut self) -> Vec<(String, Vec<T>)> {
+        let mut out = Vec::new();
+        for g in &mut self.groups {
+            g.oldest = None;
+            if !g.items.is_empty() {
+                out.push((g.key.clone(), std::mem::take(&mut g.items)));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_order_is_preserved_within_and_across_keys() {
+        let t0 = Instant::now();
+        let mut s: RequestStore<u32> = RequestStore::new(64, Duration::from_millis(1));
+        s.push("b", 1, t0);
+        s.push("a", 2, t0);
+        s.push("b", 3, t0);
+        s.push("a", 4, t0);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.key_len("b"), 2);
+        let drained = s.drain();
+        // Keys in FIRST-arrival order ("b" before "a"), items in arrival
+        // order within each key — the stable pack order.
+        assert_eq!(
+            drained,
+            vec![("b".to_string(), vec![1, 3]), ("a".to_string(), vec![2, 4])]
+        );
+        assert!(s.is_empty());
+        // A later round keeps the same key order even if "a" now fills
+        // first.
+        s.push("a", 5, t0);
+        s.push("b", 6, t0);
+        assert_eq!(
+            s.drain(),
+            vec![("b".to_string(), vec![6]), ("a".to_string(), vec![5])]
+        );
+    }
+
+    #[test]
+    fn batch_watermark_trips_ready_immediately() {
+        let t0 = Instant::now();
+        let mut s: RequestStore<u32> = RequestStore::new(3, Duration::from_secs(3600));
+        s.push("k", 0, t0);
+        s.push("k", 1, t0);
+        assert!(!s.ready(t0), "below both watermarks");
+        s.push("k", 2, t0);
+        assert!(s.ready(t0), "max_batch reached");
+        // next_flush_at reports a non-future instant for a full key.
+        assert!(s.next_flush_at().unwrap() <= t0);
+    }
+
+    #[test]
+    fn age_watermark_trips_ready_after_max_wait() {
+        let t0 = Instant::now();
+        let wait = Duration::from_millis(10);
+        let mut s: RequestStore<u32> = RequestStore::new(64, wait);
+        s.push("k", 0, t0);
+        assert!(!s.ready(t0));
+        assert_eq!(s.next_flush_at().unwrap(), t0 + wait);
+        assert!(s.ready(t0 + wait), "oldest item aged past max_wait");
+        // Draining resets the age: a fresh push starts a fresh clock.
+        s.drain();
+        s.push("k", 1, t0 + wait);
+        assert!(!s.ready(t0 + wait));
+        assert_eq!(s.next_flush_at().unwrap(), t0 + wait + wait);
+    }
+
+    #[test]
+    fn empty_store_never_flushes() {
+        let s: RequestStore<u32> = RequestStore::new(1, Duration::ZERO);
+        assert!(s.is_empty());
+        assert!(!s.ready(Instant::now()));
+        assert_eq!(s.next_flush_at(), None);
+        assert_eq!(s.key_len("missing"), 0);
+    }
+
+    #[test]
+    fn zero_max_wait_flushes_anything_pending() {
+        let t0 = Instant::now();
+        let mut s: RequestStore<u32> = RequestStore::new(64, Duration::ZERO);
+        s.push("k", 7, t0);
+        assert!(s.ready(t0), "zero max_wait: any pending item is flushable");
+        assert_eq!(s.drain(), vec![("k".to_string(), vec![7])]);
+    }
+}

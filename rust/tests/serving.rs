@@ -1,0 +1,276 @@
+//! Serving-layer contract tests: cross-request coalescing must be
+//! invisible in the answers (bit-identical to solo queries) and visible
+//! in the dispatch count (fewer fused submissions than solo queries).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use kde_matrix::kde::KdeConfig;
+use kde_matrix::kernel::dataset::gaussian_mixture;
+use kde_matrix::kernel::{Dataset, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::error::BackendError;
+use kde_matrix::server::{KdeServer, OracleRegistry, RegisteredDataset, ServerConfig, ServerReply};
+use kde_matrix::util::rng::Rng;
+
+const N: usize = 256;
+
+fn dataset(seed: u64) -> Arc<Dataset> {
+    let mut rng = Rng::new(seed);
+    Arc::new(gaussian_mixture(N, 4, 3, 1.5, 0.6, &mut rng))
+}
+
+/// A registry with one dataset named "web" plus its own backend handle
+/// (for dispatch counting). Built from a seed so two calls produce twin
+/// trees with independent memo caches — the solo reference must never
+/// share a cache with the server under test, or dispatch counts (and
+/// cold/warm behavior) contaminate each other.
+fn registry(seed: u64) -> (Arc<OracleRegistry>, Arc<RegisteredDataset>, Arc<CpuBackend>) {
+    let backend = CpuBackend::new();
+    let reg = OracleRegistry::new(backend.clone());
+    let entry = reg.register("web", dataset(seed), Kernel::Laplacian, &KdeConfig::exact());
+    (reg, entry, backend)
+}
+
+#[test]
+fn concurrent_density_replies_are_bit_identical_to_solo() {
+    let (reg, _, _) = registry(11);
+    let (_, solo, _) = registry(11); // twin tree, separate memo cache
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        ..ServerConfig::default()
+    };
+    let srv = KdeServer::start(reg, cfg);
+    // 8 concurrent clients, distinct points: whatever mix of flushes the
+    // timing produces, every reply must equal the solo twin bit for bit.
+    let got: Vec<(usize, f64)> = std::thread::scope(|s| {
+        (0..8usize)
+            .map(|c| {
+                let srv = &srv;
+                s.spawn(move || {
+                    let i = 13 * c + 5;
+                    (i, srv.try_query_density("web", i).unwrap())
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (i, v) in got {
+        let want = solo.tree.query_point(solo.tree.root(), i);
+        assert_eq!(
+            v.to_bits(),
+            want.to_bits(),
+            "coalesced density for point {i} differs from solo"
+        );
+    }
+}
+
+#[test]
+fn concurrent_neighbor_replies_are_bit_identical_to_solo_streams() {
+    let (reg, _, _) = registry(13);
+    let (_, solo, _) = registry(13);
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(20),
+        ..ServerConfig::default()
+    };
+    let srv = KdeServer::start(reg, cfg);
+    let got: Vec<(usize, u64, Option<(usize, f64)>)> = std::thread::scope(|s| {
+        (0..8usize)
+            .map(|c| {
+                let srv = &srv;
+                s.spawn(move || {
+                    let source = 7 * c + 3;
+                    let seed = 0xA11CE + c as u64;
+                    let reply = srv.try_sample_neighbor("web", source, seed).unwrap();
+                    (source, seed, reply.map(|ns| (ns.neighbor, ns.prob)))
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+    for (source, seed, reply) in got {
+        // The request's seed defines its whole stream: a solo sample on
+        // the twin tree with the same stream must agree exactly.
+        let want = solo.sampler.sample(source, &mut Rng::new(seed));
+        match (reply, want) {
+            (Some((n, p)), Some(w)) => {
+                assert_eq!(n, w.neighbor, "neighbor for source {source}");
+                assert_eq!(
+                    p.to_bits(),
+                    w.prob.to_bits(),
+                    "sample probability for source {source}"
+                );
+            }
+            (None, None) => {}
+            (got, want) => panic!("source {source}: got {got:?}, want {want:?}"),
+        }
+    }
+}
+
+#[test]
+fn coalescing_beats_solo_dispatch_count() {
+    // Coalesced: 64 distinct cold points accumulate behind a max_batch=64
+    // watermark (age watermark effectively off), so the router makes ONE
+    // fused submission for all of them.
+    let (reg, _, backend) = registry(17);
+    let cfg = ServerConfig {
+        max_batch: 64,
+        max_wait: Duration::from_secs(600),
+        ..ServerConfig::default()
+    };
+    let srv = KdeServer::start(reg, cfg);
+    let before = backend.calls();
+    let pending: Vec<_> = (0..64usize)
+        .map(|i| srv.try_submit_density("web", i).unwrap())
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        match rx.recv().unwrap().unwrap() {
+            ServerReply::Density(v) => assert!(v.is_finite(), "point {i}"),
+            other => panic!("point {i}: want density, got {other:?}"),
+        }
+    }
+    let coalesced_calls = backend.calls() - before;
+
+    // Solo twin: the same 64 cold points one query at a time — one
+    // dispatch each.
+    let (_, solo, solo_backend) = registry(17);
+    let before = solo_backend.calls();
+    for i in 0..64usize {
+        solo.tree.query_point(solo.tree.root(), i);
+    }
+    let solo_calls = solo_backend.calls() - before;
+
+    assert_eq!(coalesced_calls, 1, "64 cold points must fuse into one dispatch");
+    assert_eq!(solo_calls, 64, "solo cold queries dispatch once each");
+    // The CI serving gate's coalescing floor, pinned here at unit scale.
+    assert!(
+        solo_calls >= 2 * coalesced_calls,
+        "coalescing floor: solo {solo_calls} vs coalesced {coalesced_calls}"
+    );
+}
+
+#[test]
+fn unknown_dataset_is_rejected_with_typed_error() {
+    let (reg, _, _) = registry(19);
+    let srv = KdeServer::start(reg, ServerConfig::default());
+    match srv.try_query_density("not-registered", 0) {
+        Err(BackendError::UnknownDataset { name }) => assert_eq!(name, "not-registered"),
+        other => panic!("want UnknownDataset, got {other:?}"),
+    }
+    match srv.try_sample_neighbor("also-missing", 0, 1) {
+        Err(e) => assert!(!e.transient(), "UnknownDataset is permanent"),
+        Ok(_) => panic!("lookup of an unregistered dataset must fail"),
+    }
+    // A registered name still works on the same server.
+    assert!(srv.try_query_density("web", 0).is_ok());
+}
+
+#[test]
+fn deadline_flush_answers_partial_batch() {
+    // Only 3 requests against a 64-wide batch watermark: the age
+    // watermark alone must flush them, promptly and all together.
+    let (reg, entry, _) = registry(23);
+    let cfg = ServerConfig {
+        max_batch: 64,
+        max_wait: Duration::from_millis(5),
+        ..ServerConfig::default()
+    };
+    let srv = KdeServer::start(reg, cfg);
+    let pending: Vec<_> = [3usize, 9, 27]
+        .into_iter()
+        .map(|i| (i, srv.try_submit_density("web", i).unwrap()))
+        .collect();
+    for (i, rx) in pending {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("age watermark must flush a partial batch");
+        match reply.unwrap() {
+            ServerReply::Density(v) => {
+                let want = entry.tree.query_point(entry.tree.root(), i);
+                assert_eq!(v.to_bits(), want.to_bits());
+            }
+            other => panic!("want density, got {other:?}"),
+        }
+    }
+    let flushes = srv.metrics.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(flushes >= 1, "at least one flush happened");
+    assert!(
+        srv.metrics.mean_batch_occupancy() < 64.0,
+        "partial batch: occupancy must be below the batch watermark"
+    );
+}
+
+#[test]
+fn expired_deadline_gets_timeout_not_late_answer() {
+    let (reg, _, _) = registry(29);
+    // Router flushes ~20ms after arrival; the request expires after 1ms,
+    // so the flush-time deadline check must answer Timeout.
+    let cfg = ServerConfig {
+        max_batch: 64,
+        max_wait: Duration::from_millis(20),
+        ..ServerConfig::default()
+    };
+    let srv = KdeServer::start(reg, cfg);
+    let rx = srv
+        .try_submit_density_deadline("web", 0, Duration::from_millis(1))
+        .unwrap();
+    match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+        Err(BackendError::Timeout) => {}
+        other => panic!("want Timeout, got {other:?}"),
+    }
+    assert_eq!(
+        srv.metrics.timeouts.load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+}
+
+#[test]
+fn mixed_kind_flush_serves_both_densities_and_neighbors() {
+    let (reg, _, _) = registry(31);
+    let (_, solo, _) = registry(31);
+    let cfg = ServerConfig {
+        max_batch: 6,
+        max_wait: Duration::from_millis(50),
+        ..ServerConfig::default()
+    };
+    let srv = KdeServer::start(reg, cfg);
+    // Interleave kinds so one flush carries both; each kind keeps its own
+    // arrival-order pack.
+    let d0 = srv.try_submit_density("web", 40).unwrap();
+    let n0 = srv.try_submit_neighbor("web", 41, 7).unwrap();
+    let d1 = srv.try_submit_density("web", 42).unwrap();
+    let n1 = srv.try_submit_neighbor("web", 43, 8).unwrap();
+    let d2 = srv.try_submit_density("web", 44).unwrap();
+    let n2 = srv.try_submit_neighbor("web", 45, 9).unwrap();
+    for (rx, i) in [(d0, 40usize), (d1, 42), (d2, 44)] {
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap() {
+            ServerReply::Density(v) => {
+                let want = solo.tree.query_point(solo.tree.root(), i);
+                assert_eq!(v.to_bits(), want.to_bits());
+            }
+            other => panic!("want density, got {other:?}"),
+        }
+    }
+    for (rx, src, seed) in [(n0, 41usize, 7u64), (n1, 43, 8), (n2, 45, 9)] {
+        match rx.recv_timeout(Duration::from_secs(10)).unwrap().unwrap() {
+            ServerReply::Neighbor(got) => {
+                let want = solo.sampler.sample(src, &mut Rng::new(seed));
+                match (got, want) {
+                    (Some(g), Some(w)) => {
+                        assert_eq!(g.neighbor, w.neighbor);
+                        assert_eq!(g.prob.to_bits(), w.prob.to_bits());
+                    }
+                    (None, None) => {}
+                    (g, w) => panic!("source {src}: got {g:?}, want {w:?}"),
+                }
+            }
+            other => panic!("want neighbor, got {other:?}"),
+        }
+    }
+}

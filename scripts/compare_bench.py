@@ -44,7 +44,22 @@ committed bootstrap file only matters for the very first run on a fresh
 cache key; committing the uploaded `bench-backend-json` artifact upgrades
 the in-repo baseline to `"measured"`.
 
+Serving mode (`--serving`) gates `BENCH_serving.json` (written by
+`cargo bench --bench bench_serving`) instead:
+
+  * a missing `serving` object — the bench stopped measuring;
+  * the coalescing floor, checked **within the fresh run**: solo
+    dispatches-per-query must beat coalesced dispatches-per-query by at
+    least SERVING_COALESCE_FLOOR (default 2.0) — concurrency that no
+    longer amortizes fused submissions is a serving regression no matter
+    how the wall clock moved;
+  * vs a measured same-ISA baseline: coalesced p99 latency above
+    `(1 + tol)` of baseline, or throughput below `(1 - tol)` of baseline
+    (same BENCH_REGRESSION_TOL, same bootstrap / ISA-mismatch skip rules
+    as the backend series).
+
 Usage: compare_bench.py BASELINE.json FRESH.json
+       compare_bench.py --serving BASELINE.json FRESH.json
 
 Stdlib only — the CI image needs nothing beyond python3.
 """
@@ -69,12 +84,97 @@ def series(doc):
     return out
 
 
+def bootstrap_skip(baseline, fresh_isa, what):
+    """Shared baseline-provenance logic: True when the per-series (or
+    per-metric) comparison against `baseline` must be skipped — schema-only
+    bootstrap files, the legacy `provisional` flag, or a baseline measured
+    on a different ISA (absolute numbers are not comparable across
+    heterogeneous shared runners)."""
+    if baseline.get("provisional") or baseline.get("baseline") == "bootstrap":
+        return True
+    base_isa = baseline.get("isa_detected", "unmeasured")
+    if base_isa != fresh_isa:
+        print(f"baseline ISA ({base_isa}) != fresh ISA ({fresh_isa}): absolute "
+              f"{what} is not comparable across hosts; skipping the "
+              "baseline comparison (within-run gates still enforced).")
+        return True
+    return False
+
+
+def main_serving(baseline, fresh):
+    tol = float(os.environ.get("BENCH_REGRESSION_TOL", "0.15"))
+    floor = float(os.environ.get("SERVING_COALESCE_FLOOR", "2.0"))
+    failures = []
+
+    srv = fresh.get("serving")
+    if not srv:
+        print("FAIL: fresh run is missing the `serving` object")
+        return 1
+
+    dpq = srv["dispatches_per_query"]
+    solo_dpq = srv["solo_dispatches_per_query"]
+    ratio = solo_dpq / dpq if dpq > 0 else float("inf")
+    print(f"serving (n={srv['n']}, {srv['clients']} clients, "
+          f"{srv['requests']} requests over {srv['datasets']} datasets):")
+    print(f"  coalesced: p50 {srv['p50_us']:.1f}us p99 {srv['p99_us']:.1f}us "
+          f"{srv['throughput_qps']:.0f} q/s, {dpq:.4f} dispatches/query "
+          f"(mean flush occupancy {srv['mean_flush_occupancy']:.1f})")
+    print(f"  solo:      p50 {srv['solo_p50_us']:.1f}us p99 {srv['solo_p99_us']:.1f}us "
+          f"{srv['solo_throughput_qps']:.0f} q/s, {solo_dpq:.4f} dispatches/query")
+    print(f"  coalescing ratio: {ratio:.2f}x (floor {floor:.2f}x)")
+
+    # Within-run coalescing floor: independent of host speed, so it is
+    # enforced on every fresh run, baseline or not.
+    if ratio < floor:
+        failures.append(
+            f"coalescing floor: solo/coalesced dispatches-per-query ratio "
+            f"{ratio:.2f}x is below the {floor:.2f}x floor "
+            f"({solo_dpq:.4f} vs {dpq:.4f})")
+
+    # Cross-run latency/throughput gate vs a comparable measured baseline.
+    base_srv = baseline.get("serving")
+    if bootstrap_skip(baseline, fresh.get("isa_detected", "scalar"),
+                      "serving latency/throughput") or not base_srv:
+        print("no comparable measured serving baseline: skipping the "
+              "latency/throughput comparison.")
+    else:
+        p99_ratio = srv["p99_us"] / base_srv["p99_us"]
+        qps_ratio = srv["throughput_qps"] / base_srv["throughput_qps"]
+        print(f"  vs baseline: p99 {base_srv['p99_us']:.1f}us -> "
+              f"{srv['p99_us']:.1f}us ({p99_ratio:.2f}x), throughput "
+              f"{base_srv['throughput_qps']:.0f} -> "
+              f"{srv['throughput_qps']:.0f} q/s ({qps_ratio:.2f}x)")
+        if p99_ratio > 1.0 + tol:
+            failures.append(
+                f"serving regression: coalesced p99 at {p99_ratio:.2f}x "
+                f"baseline ({base_srv['p99_us']:.1f}us -> {srv['p99_us']:.1f}us, "
+                f"tolerance {1.0 + tol:.2f}x)")
+        if qps_ratio < 1.0 - tol:
+            failures.append(
+                f"serving regression: throughput at {qps_ratio:.2f}x baseline "
+                f"({base_srv['throughput_qps']:.0f} -> "
+                f"{srv['throughput_qps']:.0f} q/s, floor {1.0 - tol:.2f}x)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} serving-regression issue(s)")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: serving series present, coalescing floor met, "
+          "no regression beyond tolerance")
+    return 0
+
+
 def main(argv):
+    serving = "--serving" in argv
+    argv = [a for a in argv if a != "--serving"]
     if len(argv) != 3:
         print(__doc__)
         return 2
     baseline = load(argv[1])
     fresh = load(argv[2])
+    if serving:
+        return main_serving(baseline, fresh)
     tol = float(os.environ.get("BENCH_REGRESSION_TOL", "0.15"))
     min_speedup = float(os.environ.get("SIMD_MIN_SPEEDUP", "1.2"))
     base = series(baseline)

@@ -1,0 +1,248 @@
+#!/usr/bin/env python3
+"""Synthetic-JSON self-tests for scripts/compare_bench.py (both the
+backend-series mode and the --serving mode). Run directly:
+
+    python3 scripts/test_compare_bench.py
+
+Stdlib only, no test framework — each case builds baseline/fresh docs in
+a temp dir and asserts on compare_bench.main()'s exit code.
+"""
+
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import compare_bench  # noqa: E402
+
+
+def backend_doc(pairs_per_sec=1.0e9, simd_ratio=1.5, isa="avx2",
+                baseline="measured", drop_series=(), drop_fusion=()):
+    """A complete, passing BENCH_backend.json document."""
+    results = []
+    for kernel in compare_bench.KERNELS:
+        for backend in compare_bench.BACKENDS:
+            if (kernel, backend) in drop_series:
+                continue
+            pps = pairs_per_sec
+            if backend == "tiled_1t":
+                pps = pairs_per_sec * simd_ratio
+            results.append({"kernel": kernel, "backend": backend,
+                            "isa": isa, "mean_ns": 1.0e6,
+                            "pairs_per_sec": pps})
+    doc = {
+        "bench": "backend_sums", "n": 4096, "d": 64,
+        "isa_detected": isa, "baseline": baseline,
+        "fusion": {"n": 4096, "t": 64, "d": 16, "log2_n": 12,
+                   "dispatches_fused": 40, "dispatches_unfused": 4000,
+                   "round_us_fused": 10, "round_us_unfused": 100},
+        "walk_fusion": {"n": 4096, "t": 8, "walkers": 32, "log2_n": 12,
+                        "dispatches_batched": 96,
+                        "dispatches_sequential": 2000,
+                        "walk_us_batched": 10, "walk_us_sequential": 100},
+        "edge_fusion": {"n": 4096, "pool": 64, "reps": 8, "log2_n": 12,
+                        "dispatches_batched": 24,
+                        "dispatches_sequential": 600,
+                        "est_us_batched": 10, "est_us_sequential": 100},
+        "block_fusion": {"n": 4096, "s": 160, "d": 16,
+                         "dispatches_chunked": 3,
+                         "dispatches_monolithic": 1,
+                         "peak_rows_chunked": 64,
+                         "peak_rows_monolithic": 160,
+                         "block_us_chunked": 10, "block_us_monolithic": 10},
+        "results": results,
+    }
+    for key in drop_fusion:
+        del doc[key]
+    return doc
+
+
+def serving_doc(p99_us=900.0, throughput_qps=40000.0, dpq=0.05,
+                solo_dpq=1.0, isa="avx2", baseline="measured",
+                serving_present=True):
+    """A complete, passing BENCH_serving.json document."""
+    doc = {"bench": "serving", "baseline": baseline, "isa_detected": isa}
+    if serving_present:
+        doc["serving"] = {
+            "n": 4096, "d": 16, "datasets": 2, "clients": 8,
+            "requests": 768,
+            "p50_us": p99_us / 3.0, "p99_us": p99_us,
+            "throughput_qps": throughput_qps,
+            "dispatches": int(768 * dpq), "queries": 768,
+            "dispatches_per_query": dpq,
+            "mean_flush_occupancy": 1.0 / dpq if dpq else 0.0,
+            "solo_p50_us": 80.0, "solo_p99_us": 200.0,
+            "solo_throughput_qps": 9000.0,
+            "solo_dispatches_per_query": solo_dpq,
+            "coalescing_ratio": solo_dpq / dpq if dpq else 0.0,
+        }
+    else:
+        doc["serving"] = None
+    return doc
+
+
+def run(baseline, fresh, serving=False, env=None):
+    """Write the two docs to disk and invoke compare_bench.main()."""
+    saved = {}
+    for k, v in (env or {}).items():
+        saved[k] = os.environ.get(k)
+        os.environ[k] = v
+    try:
+        with tempfile.TemporaryDirectory() as td:
+            bp = os.path.join(td, "baseline.json")
+            fp = os.path.join(td, "fresh.json")
+            with open(bp, "w") as f:
+                json.dump(baseline, f)
+            with open(fp, "w") as f:
+                json.dump(fresh, f)
+            argv = ["compare_bench.py"]
+            if serving:
+                argv.append("--serving")
+            argv += [bp, fp]
+            return compare_bench.main(argv)
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+
+
+CASES = []
+
+
+def case(name):
+    def wrap(fn):
+        CASES.append((name, fn))
+        return fn
+    return wrap
+
+
+# ---------------------------------------------------------------- backend
+
+@case("backend: identical measured runs pass")
+def _():
+    assert run(backend_doc(), backend_doc()) == 0
+
+
+@case("backend: bootstrap baseline skips per-series comparison")
+def _():
+    bootstrap = {"bench": "backend_sums", "baseline": "bootstrap",
+                 "isa_detected": "unmeasured", "results": []}
+    assert run(bootstrap, backend_doc()) == 0
+
+
+@case("backend: >15% per-series throughput regression fails")
+def _():
+    assert run(backend_doc(pairs_per_sec=1.0e9),
+               backend_doc(pairs_per_sec=0.8e9)) == 1
+
+
+@case("backend: missing series in the fresh run fails")
+def _():
+    fresh = backend_doc(drop_series={("gaussian", "tiled_mt")})
+    assert run(backend_doc(), fresh) == 1
+
+
+@case("backend: missing fusion object fails")
+def _():
+    assert run(backend_doc(), backend_doc(drop_fusion=("fusion",))) == 1
+
+
+@case("backend: SIMD below the speedup floor fails")
+def _():
+    assert run(backend_doc(), backend_doc(simd_ratio=1.05)) == 1
+
+
+@case("backend: ISA mismatch downgrades baseline to bootstrap")
+def _():
+    # 20% slower than baseline, but measured on a different ISA: the
+    # per-series comparison is skipped, within-run gates still pass.
+    assert run(backend_doc(isa="avx2"),
+               backend_doc(isa="neon", pairs_per_sec=0.8e9)) == 0
+
+
+# ---------------------------------------------------------------- serving
+
+@case("serving: identical measured runs pass")
+def _():
+    assert run(serving_doc(), serving_doc(), serving=True) == 0
+
+
+@case("serving: bootstrap baseline skips the latency comparison")
+def _():
+    bootstrap = {"bench": "serving", "baseline": "bootstrap",
+                 "isa_detected": "unmeasured", "serving": None}
+    assert run(bootstrap, serving_doc(), serving=True) == 0
+
+
+@case("serving: missing serving object in the fresh run fails")
+def _():
+    assert run(serving_doc(), serving_doc(serving_present=False),
+               serving=True) == 1
+
+
+@case("serving: coalescing floor violation fails even on bootstrap")
+def _():
+    bootstrap = {"bench": "serving", "baseline": "bootstrap",
+                 "isa_detected": "unmeasured", "serving": None}
+    # dispatches/query only 1.5x better than solo: below the 2x floor.
+    assert run(bootstrap, serving_doc(dpq=0.67, solo_dpq=1.0),
+               serving=True) == 1
+
+
+@case("serving: >15% p99 latency regression fails")
+def _():
+    assert run(serving_doc(p99_us=900.0),
+               serving_doc(p99_us=1100.0), serving=True) == 1
+
+
+@case("serving: >15% throughput regression fails")
+def _():
+    assert run(serving_doc(throughput_qps=40000.0),
+               serving_doc(throughput_qps=30000.0), serving=True) == 1
+
+
+@case("serving: regressions inside tolerance pass")
+def _():
+    assert run(serving_doc(p99_us=900.0, throughput_qps=40000.0),
+               serving_doc(p99_us=990.0, throughput_qps=37000.0),
+               serving=True) == 0
+
+
+@case("serving: ISA mismatch skips the latency comparison")
+def _():
+    assert run(serving_doc(isa="avx2", p99_us=900.0),
+               serving_doc(isa="neon", p99_us=5000.0), serving=True) == 0
+
+
+@case("serving: floor is tunable via SERVING_COALESCE_FLOOR")
+def _():
+    bootstrap = {"bench": "serving", "baseline": "bootstrap",
+                 "isa_detected": "unmeasured", "serving": None}
+    doc = serving_doc(dpq=0.25, solo_dpq=1.0)  # 4x ratio
+    assert run(bootstrap, doc, serving=True,
+               env={"SERVING_COALESCE_FLOOR": "8.0"}) == 1
+    assert run(bootstrap, doc, serving=True,
+               env={"SERVING_COALESCE_FLOOR": "3.0"}) == 0
+
+
+def main():
+    failures = 0
+    for name, fn in CASES:
+        try:
+            fn()
+            print(f"PASS {name}")
+        except AssertionError:
+            failures += 1
+            print(f"FAIL {name}")
+    if failures:
+        print(f"\n{failures}/{len(CASES)} self-test case(s) failed")
+        return 1
+    print(f"\nall {len(CASES)} compare_bench self-test cases passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
