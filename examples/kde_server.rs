@@ -21,6 +21,9 @@
 //! density + seeded neighbor-sample requests) into fused submissions,
 //! and the dispatches-per-query printout that shows the amortization —
 //! plus a bit-identity spot check against direct solo tree queries.
+//! Phase 3 executes on the persistent sharded worker pool (the tiled
+//! backend's default route), so the report also prints the pool's
+//! busy/queued occupancy next to the latency percentiles.
 //!
 //! Knobs (all optional, for CI smoke runs and experimentation):
 //! `KDE_SERVER_N` (dataset size, default 4096), `KDE_SERVER_CLIENTS`
@@ -37,6 +40,7 @@ use kde_matrix::kernel::{dataset, Kernel};
 use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
 use kde_matrix::runtime::error::BackendError;
 use kde_matrix::runtime::pjrt::PjrtBackend;
+use kde_matrix::runtime::TiledBackend;
 use kde_matrix::server::{KdeServer, OracleRegistry, ServerConfig, ServerReply};
 use kde_matrix::util::rng::Rng;
 
@@ -166,9 +170,11 @@ fn main() {
     // The same two datasets, now registered by NAME: each is built once
     // into a shared multi-level tree, and the KdeServer coalesces all
     // clients' point-index queries per dataset into fused submissions.
-    // A fresh CpuBackend so its dispatch counter cleanly reads
-    // "fused submissions for this phase".
-    let be = CpuBackend::new();
+    // A fresh TiledBackend so (a) its dispatch counter cleanly reads
+    // "fused submissions for this phase" and (b) those dispatches run on
+    // the persistent sharded worker pool, whose occupancy counters are
+    // reported below next to the latency percentiles.
+    let be = TiledBackend::new();
     let registry = OracleRegistry::new(be.clone());
     registry.register("web", shard0.clone(), Kernel::Laplacian, &KdeConfig::exact());
     registry.register("tail", shard1.clone(), Kernel::Gaussian, &KdeConfig::exact());
@@ -251,8 +257,16 @@ fn main() {
         dispatches as f64 / served3 as f64,
         server.metrics.mean_batch_occupancy()
     );
+    // Pool occupancy next to the percentiles: busy/queued are live gauges
+    // (0 once the load drains), busy_max/queued_max/steals show how hard
+    // the pool ran during the phase. The pool is lazy — `None` means every
+    // dispatch ran inline (single worker or single-chunk shapes).
+    let pool = match be.pool_metrics() {
+        Some(m) => format!("pool {}", m.summary()),
+        None => "pool inline (never spun up)".to_string(),
+    };
     println!(
-        "latency: p50={:.0}us p99={:.0}us | metrics: {}",
+        "latency: p50={:.0}us p99={:.0}us | {pool} | metrics: {}",
         server.metrics.latency_percentile_us(50.0),
         server.metrics.latency_percentile_us(99.0),
         server.metrics.summary()

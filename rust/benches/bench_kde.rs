@@ -206,6 +206,59 @@ fn block_fusion_series(rng: &mut Rng) -> String {
     )
 }
 
+/// Executor series: per-dispatch overhead of the persistent sharded
+/// worker pool (`runtime::pool`) vs per-call `std::thread::scope` spawns
+/// at exactly the call shape the batched pipeline produces — many SMALL
+/// fused `sums_ranged` submissions (B = 64 query rows against n = 4096
+/// data rows) where thread startup is pure overhead. Also snapshots the
+/// pool's occupancy/steal counters for the pooled run so the busy /
+/// queued_depth / steals series lands in the perf trajectory. Emitted as
+/// the `executor` object of `BENCH_backend.json`;
+/// `scripts/compare_bench.py` gates the pool-vs-scoped floor
+/// (`EXECUTOR_POOL_FLOOR`, default 1.0: the pool must at least match
+/// per-dispatch spawning).
+fn executor_series(rng: &mut Rng) -> String {
+    let (n, b, d, dispatches) = (4096usize, 64usize, 16usize, 256usize);
+    let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
+    let flat = ds.flat();
+    let queries: Vec<f32> = flat[..b * d].to_vec();
+    let half = n / 2;
+    let ranges: Vec<(usize, usize)> = (0..b)
+        .map(|q| ((q * 13) % half, half + (q * 29) % half))
+        .collect();
+    let threads = TiledBackend::default_threads().clamp(2, 8);
+    let run = |pooled: bool| {
+        let be = TiledBackend::with_threads(threads);
+        be.set_pooled(pooled);
+        // Warm-up dispatch outside the timed loop: spawns the pool
+        // workers (pooled) and pages the buffers in (both).
+        std::hint::black_box(be.sums_ranged(Kernel::Laplacian, &queries, flat, d, &ranges));
+        let start = Instant::now();
+        for _ in 0..dispatches {
+            std::hint::black_box(be.sums_ranged(Kernel::Laplacian, &queries, flat, d, &ranges));
+        }
+        (start.elapsed().as_micros(), be)
+    };
+    let (us_scoped, _) = run(false);
+    let (us_pooled, be) = run(true);
+    let m = be
+        .pool_metrics()
+        .expect("the pooled run must have exercised the pool");
+    let speedup = us_scoped as f64 / us_pooled.max(1) as f64;
+    format!(
+        "{{\"n\": {n}, \"b\": {b}, \"d\": {d}, \"threads\": {threads}, \
+         \"dispatches\": {dispatches}, \"dispatch_us_pooled\": {us_pooled}, \
+         \"dispatch_us_scoped\": {us_scoped}, \"pooled_speedup\": {speedup:.4}, \
+         \"pool_busy_max\": {}, \"pool_queued_max\": {}, \"pool_steals\": {}, \
+         \"pool_submitted\": {}, \"pool_inline_runs\": {}}}",
+        m.busy_max.load(std::sync::atomic::Ordering::Relaxed),
+        m.queued_max.load(std::sync::atomic::Ordering::Relaxed),
+        m.steals(),
+        m.submitted.load(std::sync::atomic::Ordering::Relaxed),
+        m.inline_runs.load(std::sync::atomic::Ordering::Relaxed)
+    )
+}
+
 fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     let (n, d) = (4096usize, 64usize);
     let ds = dataset::gaussian_mixture(n, d, 8, 0.3, 0.35, rng);
@@ -251,12 +304,14 @@ fn bench_backends(suite: &mut BenchSuite, rng: &mut Rng) {
     suite.note(&format!("edge_fusion series: {edge_fusion}"));
     let block_fusion = block_fusion_series(rng);
     suite.note(&format!("block_fusion series: {block_fusion}"));
+    let executor = executor_series(rng);
+    suite.note(&format!("executor series: {executor}"));
     let json = format!(
         "{{\n  \"bench\": \"backend_sums\",\n  \"n\": {n},\n  \"d\": {d},\n  \
          \"threads_available\": {threads},\n  \"isa_detected\": \"{}\",\n  \
          \"baseline\": \"measured\",\n  \"fusion\": {fusion},\n  \
          \"walk_fusion\": {walk_fusion},\n  \"edge_fusion\": {edge_fusion},\n  \
-         \"block_fusion\": {block_fusion},\n  \
+         \"block_fusion\": {block_fusion},\n  \"executor\": {executor},\n  \
          \"results\": [\n{}\n  ]\n}}\n",
         MicroKernel::detect().isa.name(),
         rows.join(",\n")

@@ -39,9 +39,9 @@
 //! per-level row counts far below B) share padded submissions instead of
 //! closing one at every level boundary.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
@@ -278,6 +278,275 @@ where
         Ok(out) => out,
         Err(e) => panic!("overlap pipeline failed: {e}"),
     }
+}
+
+/// Persistent cross-round overlap pipeline: the packer thread behind
+/// [`try_run_double_buffered`], kept alive **across successive**
+/// `query_points_multi` rounds instead of being spawned and joined per
+/// call.
+///
+/// Why: a batched tree descent issues one fused round per level, and the
+/// per-call scoped pipeline pays a packer-thread spawn + join on every
+/// round. A descent over L levels — or a long walk/edge batch issuing
+/// hundreds of rounds — re-pays that startup L times for pipelines that
+/// individually last microseconds. The session keeps ONE warm packer
+/// thread; round r+1's packing starts on it the moment round r's caller
+/// hands over its plan, so packing overlaps execution across round
+/// boundaries, not just within one call.
+///
+/// Execution semantics are *identical* to `try_run_double_buffered` with
+/// `overlap = true`: `pack` runs off-thread feeding a bounded channel of
+/// capacity 1, `execute` runs on the calling thread in plan order, pack
+/// panics surface as `Err(BackendError::Panicked)`, the first execute
+/// error aborts the round, and no path hangs. Same submissions, same
+/// order, same memo commits, same dispatch counts — the session changes
+/// wall-clock only (property-pinned in this module's tests and
+/// `tests/fusion.rs`). The session thread survives pack panics: the
+/// round reports its typed error and the next round reuses the thread.
+///
+/// Concurrency: one round runs on the session thread at a time; a
+/// concurrent caller (two threads querying one `MultiLevelKde`) falls
+/// back to the per-call scoped pipeline — again semantics-identical —
+/// and the `fallbacks` counter records it.
+pub struct OverlapSession {
+    /// Lazily spawned worker; `None` inside means thread spawn failed and
+    /// every round falls back to the per-call pipeline.
+    inner: OnceLock<Option<SessionHandle>>,
+    /// Serializes rounds on the session thread (try-lock; contended
+    /// callers fall back).
+    busy: Mutex<()>,
+    rounds: AtomicU64,
+    epochs: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+struct SessionHandle {
+    tx: SyncSender<SessionJob>,
+    worker: std::thread::JoinHandle<()>,
+}
+
+/// One round's erased pack loop plus the caller-release signal.
+struct SessionJob {
+    payload: Option<Box<dyn FnOnce() + Send>>,
+    done: Option<SyncSender<()>>,
+}
+
+impl SessionJob {
+    fn run(mut self) {
+        if let Some(f) = self.payload.take() {
+            f();
+        }
+        // Drop signals `done` — strictly after the payload (and every
+        // lifetime-erased borrow inside it) has been dropped.
+    }
+}
+
+impl Drop for SessionJob {
+    fn drop(&mut self) {
+        // Order matters for the lifetime-erasure soundness argument:
+        // erased borrows drop FIRST (whether the job ran or not), and
+        // only then is the blocked caller released.
+        self.payload.take();
+        if let Some(done) = self.done.take() {
+            let _ = done.send(());
+        }
+    }
+}
+
+/// Blocks (in `Drop`, so on unwind paths too) until the session thread
+/// has finished with — and dropped — everything borrowed by the round.
+struct DoneGuard(Receiver<()>);
+
+impl Drop for DoneGuard {
+    fn drop(&mut self) {
+        let _ = self.0.recv();
+    }
+}
+
+fn spawn_session_worker() -> Option<SessionHandle> {
+    let (tx, rx) = mpsc::sync_channel::<SessionJob>(1);
+    std::thread::Builder::new()
+        .name("kde-overlap".into())
+        .spawn(move || {
+            while let Ok(job) = rx.recv() {
+                // Pack panics are already caught inside the job; this
+                // outer guard keeps the session thread alive against
+                // anything else, so one bad round never degrades the
+                // session for the rounds after it.
+                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()));
+            }
+        })
+        .ok()
+        .map(|worker| SessionHandle { tx, worker })
+}
+
+impl Default for OverlapSession {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OverlapSession {
+    /// New session; the worker thread spawns lazily on first use.
+    pub fn new() -> Self {
+        OverlapSession {
+            inner: OnceLock::new(),
+            busy: Mutex::new(()),
+            rounds: AtomicU64::new(0),
+            epochs: AtomicU64::new(0),
+            fallbacks: AtomicU64::new(0),
+        }
+    }
+
+    /// Open an epoch: warm the packer thread ahead of a multi-round batch
+    /// (a whole `sample_batch_with_streams` descent, an edge batch) so
+    /// even the first round reuses it. The guard is a scope marker — the
+    /// session outlives it; `epochs()` counts openings.
+    pub fn epoch(&self) -> OverlapEpoch<'_> {
+        self.epochs.fetch_add(1, Ordering::Relaxed);
+        let _ = self.inner.get_or_init(spawn_session_worker);
+        OverlapEpoch { _session: self }
+    }
+
+    /// Rounds run on the persistent packer thread since creation.
+    pub fn rounds(&self) -> u64 {
+        self.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Epoch handles opened via [`OverlapSession::epoch`].
+    pub fn epochs(&self) -> u64 {
+        self.epochs.load(Ordering::Relaxed)
+    }
+
+    /// Rounds that fell back to the per-call scoped pipeline (concurrent
+    /// caller or failed thread spawn). Semantics are identical either
+    /// way; this only records which substrate ran the round.
+    pub fn fallbacks(&self) -> u64 {
+        self.fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Whether the persistent worker thread has been spawned.
+    pub fn started(&self) -> bool {
+        matches!(self.inner.get(), Some(Some(_)))
+    }
+
+    /// Run one round through the persistent pipeline. Single-item (or
+    /// empty) rounds run inline exactly like `try_run_double_buffered`'s
+    /// sequential arm; contended or spawn-failed sessions fall back to
+    /// the per-call scoped pipeline. All routes: identical submissions,
+    /// order, memo commits, and dispatch counts.
+    pub fn try_run<T, P, R, F, G>(
+        &self,
+        items: Vec<T>,
+        pack: F,
+        mut execute: G,
+    ) -> Result<Vec<R>, BackendError>
+    where
+        T: Send,
+        P: Send,
+        F: Fn(T) -> P + Sync,
+        G: FnMut(P) -> Result<R, BackendError>,
+    {
+        if items.len() < 2 {
+            return try_run_double_buffered(items, false, pack, execute);
+        }
+        let _busy = match self.busy.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return try_run_double_buffered(items, true, pack, execute);
+            }
+        };
+        let handle = match self.inner.get_or_init(spawn_session_worker) {
+            Some(h) => h,
+            None => {
+                self.fallbacks.fetch_add(1, Ordering::Relaxed);
+                return try_run_double_buffered(items, true, pack, execute);
+            }
+        };
+        let expected = items.len();
+        // Declaration order is load-bearing: locals drop in reverse, so
+        // `rx_packed` (declared after `_done`) closes BEFORE the guard
+        // blocks — a packer stuck mid-send wakes with a send error, drops
+        // its borrows, and only then is the caller released.
+        let (done_tx, done_rx) = mpsc::sync_channel::<()>(1);
+        let _done = DoneGuard(done_rx);
+        let (tx_packed, rx_packed) = mpsc::sync_channel::<Result<P, BackendError>>(1);
+        let pack_ref = &pack;
+        let body: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let mut it = items.into_iter();
+            for t in &mut it {
+                let packed = catch_panic(|| pack_ref(t));
+                let failed = packed.is_err();
+                // Send error = executor hung up (error abort); after a
+                // pack failure there is nothing sound left to pack.
+                if tx_packed.send(packed).is_err() || failed {
+                    break;
+                }
+            }
+            // Unconsumed items (early abort) drop here, on the session
+            // thread, before SessionJob's Drop releases the caller.
+            drop(it);
+        });
+        // SAFETY: every borrow erased here outlives this call frame, the
+        // session thread drops the payload (executed or not) strictly
+        // before signalling `done` (SessionJob's Drop order), and this
+        // frame cannot return — even unwinding — before `DoneGuard`
+        // receives that signal. No erased borrow is ever reachable after
+        // this function returns.
+        let body: Box<dyn FnOnce() + Send> = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Box<dyn FnOnce() + Send>>(body)
+        };
+        let job = SessionJob {
+            payload: Some(body),
+            done: Some(done_tx),
+        };
+        if let Err(send_failed) = handle.tx.send(job) {
+            // Session thread gone (cannot happen while the session is
+            // alive; defensive). The returned job drops here, on the
+            // caller — erased borrows are still valid — then we report a
+            // retryable fault rather than running a half-consumed plan.
+            drop(send_failed);
+            self.fallbacks.fetch_add(1, Ordering::Relaxed);
+            return Err(BackendError::transient_failure(
+                "overlap session worker unavailable",
+            ));
+        }
+        self.rounds.fetch_add(1, Ordering::Relaxed);
+        let mut out = Vec::with_capacity(expected);
+        let mut failure: Option<BackendError> = None;
+        for packed in rx_packed.iter() {
+            let ran = packed.and_then(|p| catch_panic(|| execute(p)).and_then(|r| r));
+            match ran {
+                Ok(r) => out.push(r),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(rx_packed);
+        match failure {
+            None => Ok(out),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+impl Drop for OverlapSession {
+    fn drop(&mut self) {
+        if let Some(Some(handle)) = self.inner.take() {
+            // Closing the job channel ends the worker loop; join so no
+            // detached thread outlives the session.
+            drop(handle.tx);
+            let _ = handle.worker.join();
+        }
+    }
+}
+
+/// Scope marker returned by [`OverlapSession::epoch`]; see there.
+pub struct OverlapEpoch<'a> {
+    _session: &'a OverlapSession,
 }
 
 /// One KDE query in flight.
@@ -1271,6 +1540,197 @@ mod tests {
             assert!(got.is_err(), "overlap={overlap}");
             assert_eq!(executed, 5, "execution stops at the first error");
         }
+    }
+
+    #[test]
+    fn session_preserves_order_values_and_reuses_one_thread() {
+        // The persistent session must behave exactly like the per-call
+        // pipeline — same pack results, same execute order — while running
+        // every round on ONE warm packer thread.
+        let session = OverlapSession::new();
+        assert!(!session.started(), "worker spawns lazily");
+        for round in 0..20u64 {
+            let items: Vec<usize> = (0..37).collect();
+            let mut seen = Vec::new();
+            let out = session
+                .try_run(
+                    items,
+                    |t| t * 10 + 1,
+                    |p| {
+                        seen.push(p);
+                        Ok::<usize, BackendError>(p + 1)
+                    },
+                )
+                .unwrap();
+            assert_eq!(out, (0..37).map(|t| t * 10 + 2).collect::<Vec<_>>());
+            assert_eq!(seen, (0..37).map(|t| t * 10 + 1).collect::<Vec<_>>());
+            assert_eq!(session.rounds(), round + 1, "every round on the session");
+        }
+        assert!(session.started());
+        assert_eq!(session.fallbacks(), 0);
+    }
+
+    #[test]
+    fn session_executes_on_calling_thread() {
+        // Same contract as the per-call pipeline: execute runs inline on
+        // the caller (MultiLevelKde's memo commits rely on it).
+        let session = OverlapSession::new();
+        let caller = std::thread::current().id();
+        let mut executed_on = Vec::new();
+        let mut packed_on = std::collections::HashSet::new();
+        let packed_on_ref = std::sync::Mutex::new(&mut packed_on);
+        session
+            .try_run(
+                (0..8).collect::<Vec<usize>>(),
+                |t| {
+                    packed_on_ref.lock().unwrap().insert(std::thread::current().id());
+                    t
+                },
+                |p| {
+                    executed_on.push(std::thread::current().id());
+                    Ok::<usize, BackendError>(p)
+                },
+            )
+            .unwrap();
+        assert!(executed_on.iter().all(|&id| id == caller));
+        assert!(
+            !packed_on.contains(&caller),
+            "multi-item rounds pack on the session thread"
+        );
+    }
+
+    #[test]
+    fn session_pack_panic_is_typed_and_session_survives() {
+        let session = OverlapSession::new();
+        let got = session.try_run(
+            (0..32).collect::<Vec<usize>>(),
+            |t| {
+                if t == 3 {
+                    panic!("pack exploded at {t}")
+                }
+                t
+            },
+            |p| Ok::<usize, BackendError>(p),
+        );
+        match got {
+            Err(BackendError::Panicked { message }) => {
+                assert!(message.contains("pack exploded"), "got: {message}")
+            }
+            other => panic!("want Panicked, got {other:?}"),
+        }
+        // The session thread must survive the panicking round.
+        let out = session
+            .try_run(
+                (0..5).collect::<Vec<usize>>(),
+                |t| t,
+                |p| Ok::<usize, BackendError>(p),
+            )
+            .unwrap();
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(session.rounds(), 2, "both rounds ran on the session");
+    }
+
+    #[test]
+    fn session_execute_error_aborts_cleanly() {
+        let session = OverlapSession::new();
+        let mut executed = 0usize;
+        let got = session.try_run(
+            (0..32).collect::<Vec<usize>>(),
+            |t| t,
+            |p| {
+                if p == 5 {
+                    return Err(BackendError::transient_failure("execute refused"));
+                }
+                executed += 1;
+                Ok(p)
+            },
+        );
+        assert!(got.is_err());
+        assert_eq!(executed, 5, "execution stops at the first error");
+        // Next round is healthy.
+        assert!(session
+            .try_run((0..4).collect::<Vec<usize>>(), |t| t, |p| Ok::<
+                usize,
+                BackendError,
+            >(p))
+            .is_ok());
+    }
+
+    #[test]
+    fn session_concurrent_rounds_fall_back_not_deadlock() {
+        // Two threads sharing one session: whichever loses the try-lock
+        // must run the per-call pipeline with identical results.
+        let session = Arc::new(OverlapSession::new());
+        let barrier = Arc::new(std::sync::Barrier::new(2));
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let s = Arc::clone(&session);
+            let b = Arc::clone(&barrier);
+            handles.push(std::thread::spawn(move || {
+                b.wait();
+                let mut outs = Vec::new();
+                for _ in 0..50 {
+                    let out = s
+                        .try_run(
+                            (0..9).collect::<Vec<usize>>(),
+                            |t| t * 3,
+                            |p| Ok::<usize, BackendError>(p + 1),
+                        )
+                        .unwrap();
+                    outs.push(out);
+                }
+                outs
+            }));
+        }
+        for h in handles {
+            for out in h.join().unwrap() {
+                assert_eq!(out, (0..9).map(|t| t * 3 + 1).collect::<Vec<_>>());
+            }
+        }
+        assert_eq!(
+            session.rounds() + session.fallbacks(),
+            100,
+            "every multi-item round accounted for"
+        );
+    }
+
+    #[test]
+    fn property_session_matches_per_call_pipeline_on_random_plans() {
+        // Satellite property: random submission plans produce identical
+        // pack outputs, execute order, and results whether they run on the
+        // persistent session, the per-call overlapped pipeline, or the
+        // sequential fallback — and single-item rounds stay inline.
+        let session = OverlapSession::new();
+        crate::util::prop::forall(24, |rng, _| {
+            let len = rng.below(40);
+            let items: Vec<u64> = (0..len).map(|_| rng.next_u64() >> 32).collect();
+            let mul = 1 + rng.next_u64() % 1000;
+            let run_session = {
+                let mut seen = Vec::new();
+                let out = session
+                    .try_run(items.clone(), |t| t.wrapping_mul(mul), |p| {
+                        seen.push(p);
+                        Ok::<u64, BackendError>(p ^ 0xABCD)
+                    })
+                    .unwrap();
+                (out, seen)
+            };
+            for overlap in [false, true] {
+                let mut seen = Vec::new();
+                let out = try_run_double_buffered(
+                    items.clone(),
+                    overlap,
+                    |t| t.wrapping_mul(mul),
+                    |p| {
+                        seen.push(p);
+                        Ok::<u64, BackendError>(p ^ 0xABCD)
+                    },
+                )
+                .unwrap();
+                assert_eq!(run_session.0, out, "overlap={overlap}");
+                assert_eq!(run_session.1, seen, "overlap={overlap}");
+            }
+        });
     }
 
     #[test]

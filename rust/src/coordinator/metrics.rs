@@ -134,6 +134,85 @@ impl ResilienceMetrics {
     }
 }
 
+/// Occupancy and scheduling counters for the persistent sharded worker
+/// pool (`runtime::pool::WorkerPool`).
+///
+/// `busy`/`queued` are gauges (current in-flight and queued task counts);
+/// `busy_max`/`queued_max` are their high-water marks since pool start.
+/// `steals` counts tasks a worker took LIFO from another worker's shard,
+/// `inline_runs` counts tasks executed on the submitting thread because a
+/// shard queue was at its bound (or the submitter was itself a pool
+/// worker), and `task_panics` counts panics contained at the worker
+/// isolation boundary (the pool thread survives; `run_scoped` re-raises
+/// the payload on the caller so the typed `BackendError::Panicked` path
+/// still fires).
+#[derive(Default)]
+pub struct PoolMetrics {
+    /// Tasks currently executing on pool workers (gauge).
+    pub busy: AtomicU64,
+    /// High-water mark of `busy`.
+    pub busy_max: AtomicU64,
+    /// Tasks currently sitting in shard queues (gauge).
+    pub queued: AtomicU64,
+    /// High-water mark of `queued`.
+    pub queued_max: AtomicU64,
+    /// Tasks taken LIFO from another worker's shard.
+    pub steals: AtomicU64,
+    /// Tasks submitted to the pool (queued + inline).
+    pub submitted: AtomicU64,
+    /// Tasks run on the submitting thread (queue bound hit, or the
+    /// submitter was a pool worker — the nested-submit deadlock guard).
+    pub inline_runs: AtomicU64,
+    /// Tasks that finished (on a worker or inline), panicked or not.
+    pub completed: AtomicU64,
+    /// Panics contained at the worker boundary.
+    pub task_panics: AtomicU64,
+}
+
+impl PoolMetrics {
+    /// Fresh zeroed counters behind an `Arc` (shared with the pool).
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Current in-flight task count.
+    pub fn busy(&self) -> u64 {
+        self.busy.load(Ordering::Relaxed)
+    }
+
+    /// Current queued task count across all shards.
+    pub fn queued_depth(&self) -> u64 {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Tasks stolen LIFO from a sibling shard since pool start.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Bump a gauge and fold its new value into the high-water mark.
+    pub(crate) fn gauge_inc(gauge: &AtomicU64, max: &AtomicU64) {
+        let now = gauge.fetch_add(1, Ordering::Relaxed) + 1;
+        max.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// One-line human-readable snapshot.
+    pub fn summary(&self) -> String {
+        format!(
+            "busy={} queued={} busy_max={} queued_max={} steals={} \
+             submitted={} inline={} panics={}",
+            self.busy.load(Ordering::Relaxed),
+            self.queued.load(Ordering::Relaxed),
+            self.busy_max.load(Ordering::Relaxed),
+            self.queued_max.load(Ordering::Relaxed),
+            self.steals.load(Ordering::Relaxed),
+            self.submitted.load(Ordering::Relaxed),
+            self.inline_runs.load(Ordering::Relaxed),
+            self.task_panics.load(Ordering::Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 #[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {

@@ -41,6 +41,7 @@ pub mod metrics;
 
 pub use batcher::{
     plan_level_fusion, plan_level_fusion_adaptive, run_double_buffered,
-    try_run_double_buffered, BatcherConfig, FuseJob, FuseSubmission, KdeService, QueryRequest,
+    try_run_double_buffered, BatcherConfig, FuseJob, FuseSubmission, KdeService, OverlapEpoch,
+    OverlapSession, QueryRequest,
 };
-pub use metrics::{ResilienceMetrics, ServiceMetrics};
+pub use metrics::{PoolMetrics, ResilienceMetrics, ServiceMetrics};

@@ -42,13 +42,14 @@
 //! [`BackendError`](crate::runtime::BackendError)s; the infallible
 //! entry points are thin panicking wrappers.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::util::fxhash::FxHashMap;
 
 use crate::coordinator::batcher::{
-    plan_level_fusion_adaptive, try_run_double_buffered, FuseJob, FuseSubmission,
+    plan_level_fusion_adaptive, try_run_double_buffered, FuseJob, FuseSubmission, OverlapEpoch,
+    OverlapSession,
 };
 use crate::kde::hbe::HbeKde;
 use crate::kde::{EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
@@ -132,6 +133,15 @@ pub struct MultiLevelKde {
     /// Overlapped pack/execute pipelining of fused submissions (on by
     /// default; off is the strictly sequential fallback).
     overlap: AtomicBool,
+    /// Cross-round reuse of the persistent overlap pipeline (on by
+    /// default; off spawns a fresh per-call packer as before).
+    cross_round: AtomicBool,
+    /// The persistent packer pipeline shared across successive
+    /// `query_points_multi` rounds (lazy; see [`OverlapSession`]).
+    session: OverlapSession,
+    /// `query_points_multi` rounds issued (the samplers' per-batch round
+    /// accounting; probe fusion is measured as a drop in this counter).
+    multi_calls: AtomicU64,
     /// Shared KDE-query accounting (cache misses only).
     pub counters: Arc<KdeCounters>,
 }
@@ -162,6 +172,9 @@ impl MultiLevelKde {
             backend,
             fuse: AtomicBool::new(true),
             overlap: AtomicBool::new(true),
+            cross_round: AtomicBool::new(true),
+            session: OverlapSession::new(),
+            multi_calls: AtomicU64::new(0),
             counters,
         }
     }
@@ -304,6 +317,52 @@ impl MultiLevelKde {
         self.overlap.load(Ordering::Relaxed)
     }
 
+    /// Enable/disable cross-round overlap (on by default; requires
+    /// [`set_overlap`](Self::set_overlap) on to matter). When on, fused
+    /// plans run through a persistent [`OverlapSession`] packer thread
+    /// that is reused across *successive* `query_points_multi` rounds —
+    /// a whole descent's L rounds (or a walk batch's hundreds) share one
+    /// warm pipeline instead of paying a packer spawn + join per round.
+    /// Submissions, execution order, dispatch counts, memo commits and
+    /// every value are identical on/off (property-pinned in
+    /// `tests/fusion.rs`); off is the per-call pipeline for A/Bs.
+    pub fn set_cross_round(&self, enabled: bool) {
+        self.cross_round.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Whether cross-round overlap is enabled.
+    pub fn cross_round(&self) -> bool {
+        self.cross_round.load(Ordering::Relaxed)
+    }
+
+    /// Open a cross-round overlap epoch: warms the session's packer
+    /// thread ahead of a multi-round batch so even its first round reuses
+    /// the pipeline. The samplers hold one epoch per batch descent
+    /// (`NeighborSampler::sample_batch_with_streams`, the probe batches).
+    pub fn overlap_epoch(&self) -> OverlapEpoch<'_> {
+        self.session.epoch()
+    }
+
+    /// `(epochs, rounds, fallbacks)` counters of the persistent overlap
+    /// session — how many batch epochs were opened, how many fused rounds
+    /// ran on the persistent packer thread, and how many fell back to the
+    /// per-call pipeline (contention / spawn failure).
+    pub fn overlap_stats(&self) -> (u64, u64, u64) {
+        (
+            self.session.epochs(),
+            self.session.rounds(),
+            self.session.fallbacks(),
+        )
+    }
+
+    /// Total `query_points_multi` rounds issued against this tree (both
+    /// fused and unfused; one per call). The samplers' per-batch round
+    /// accounting — `EdgeSampler`'s reverse-probe fusion is pinned as a
+    /// >= 1.5x drop in this counter per batch (`tests/fusion.rs`).
+    pub fn multi_calls(&self) -> u64 {
+        self.multi_calls.load(Ordering::Relaxed)
+    }
+
     /// The config's leaf cutoff: ranges of at most this size carry exact
     /// (naive) oracles, which is what lets the samplers finish a descent
     /// categorically once a subtree this small is reached.
@@ -393,6 +452,8 @@ impl MultiLevelKde {
         &self,
         groups: &[(usize, &[usize])],
     ) -> Result<Vec<Vec<f64>>, BackendError> {
+        // One round per call — the samplers' per-batch round accounting.
+        self.multi_calls.fetch_add(1, Ordering::Relaxed);
         // Pass 1: per-group dedup + cache probe. One shard lookup per
         // DISTINCT index; answers resolve through local maps so the final
         // readback is lock-free (and immune to a racing clear_cache
@@ -473,64 +534,68 @@ impl MultiLevelKde {
             let missing_ref = &missing;
             let resolved_ref = &mut resolved;
             let overlap = self.overlap.load(Ordering::Relaxed);
-            try_run_double_buffered(
-                plan,
-                overlap,
-                // Pack stage: gather one submission's query rows and data
-                // segments (each segment once, remembering its row
-                // range). Runs on the packer thread when overlap is on.
-                |sub: FuseSubmission| {
-                    let mut seg_range: FxHashMap<usize, (usize, usize)> = FxHashMap::default();
-                    let data = if sub.segments.len() == 1 {
-                        let fj = sub.segments[0];
+            let cross_round = overlap && self.cross_round.load(Ordering::Relaxed);
+            // Pack stage: gather one submission's query rows and data
+            // segments (each segment once, remembering its row range).
+            // Runs on the packer thread when overlap is on — the per-call
+            // scoped packer, or the persistent session packer when
+            // cross-round reuse is on.
+            let pack = |sub: FuseSubmission| {
+                let mut seg_range: FxHashMap<usize, (usize, usize)> = FxHashMap::default();
+                let data = if sub.segments.len() == 1 {
+                    let fj = sub.segments[0];
+                    let (_, view) = fused_ref[fj];
+                    seg_range.insert(fj, (0, view.data.len() / d));
+                    PackedData::Borrowed(view.data)
+                } else {
+                    let mut packed: Vec<f32> = Vec::new();
+                    for &fj in &sub.segments {
                         let (_, view) = fused_ref[fj];
-                        seg_range.insert(fj, (0, view.data.len() / d));
-                        PackedData::Borrowed(view.data)
-                    } else {
-                        let mut packed: Vec<f32> = Vec::new();
-                        for &fj in &sub.segments {
-                            let (_, view) = fused_ref[fj];
-                            let lo = packed.len() / d;
-                            packed.extend_from_slice(view.data);
-                            seg_range.insert(fj, (lo, packed.len() / d));
-                        }
-                        PackedData::Owned(packed)
-                    };
-                    let mut queries: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
-                    let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(sub.rows.len());
-                    for &(fj, r) in &sub.rows {
-                        let (gi, _) = fused_ref[fj];
-                        queries.extend_from_slice(self.ds.point(missing_ref[gi][r]));
-                        ranges.push(seg_range[&fj]);
+                        let lo = packed.len() / d;
+                        packed.extend_from_slice(view.data);
+                        seg_range.insert(fj, (lo, packed.len() / d));
                     }
-                    PackedSub { rows: sub.rows, queries, ranges, data }
-                },
-                // Execute stage: one backend dispatch + cache commit per
-                // submission, always on the calling thread and in plan
-                // order (so dispatch counting, memoization and answers
-                // are identical with or without overlap).
-                |p| {
-                    let data: &[f32] = match &p.data {
-                        PackedData::Borrowed(b) => *b,
-                        PackedData::Owned(v) => v.as_slice(),
-                    };
-                    let raw = self
-                        .backend
-                        .try_sums_ranged(self.kernel, &p.queries, data, d, &p.ranges)?;
-                    for (&(fj, r), &v) in p.rows.iter().zip(&raw) {
-                        let (gi, view) = fused_ref[fj];
-                        let id = groups[gi].0;
-                        let i = missing_ref[gi][r];
-                        // First writer wins under concurrent misses;
-                        // report what actually ended up cached
-                        // (consistency).
-                        let stored =
-                            self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
-                        resolved_ref[gi].insert(i as u32, Some(stored));
-                    }
-                    Ok(())
-                },
-            )?;
+                    PackedData::Owned(packed)
+                };
+                let mut queries: Vec<f32> = Vec::with_capacity(sub.rows.len() * d);
+                let mut ranges: Vec<(usize, usize)> = Vec::with_capacity(sub.rows.len());
+                for &(fj, r) in &sub.rows {
+                    let (gi, _) = fused_ref[fj];
+                    queries.extend_from_slice(self.ds.point(missing_ref[gi][r]));
+                    ranges.push(seg_range[&fj]);
+                }
+                PackedSub { rows: sub.rows, queries, ranges, data }
+            };
+            // Execute stage: one backend dispatch + cache commit per
+            // submission, always on the calling thread and in plan
+            // order (so dispatch counting, memoization and answers
+            // are identical with or without overlap, per-call or
+            // cross-round).
+            let execute = |p: PackedSub<'_>| {
+                let data: &[f32] = match &p.data {
+                    PackedData::Borrowed(b) => *b,
+                    PackedData::Owned(v) => v.as_slice(),
+                };
+                let raw = self
+                    .backend
+                    .try_sums_ranged(self.kernel, &p.queries, data, d, &p.ranges)?;
+                for (&(fj, r), &v) in p.rows.iter().zip(&raw) {
+                    let (gi, view) = fused_ref[fj];
+                    let id = groups[gi].0;
+                    let i = missing_ref[gi][r];
+                    // First writer wins under concurrent misses;
+                    // report what actually ended up cached
+                    // (consistency).
+                    let stored = self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
+                    resolved_ref[gi].insert(i as u32, Some(stored));
+                }
+                Ok(())
+            };
+            if cross_round {
+                self.session.try_run(plan, pack, execute)?;
+            } else {
+                try_run_double_buffered(plan, overlap, pack, execute)?;
+            }
         }
         // Pass 3: readback in input order.
         Ok(groups

@@ -25,6 +25,7 @@ pub mod backend;
 pub mod error;
 pub mod fault;
 pub mod pjrt;
+pub mod pool;
 pub mod resilient;
 pub mod simd;
 pub mod tiled;
@@ -33,6 +34,7 @@ pub use backend::{CpuBackend, KernelBackend};
 pub use error::{BackendError, BackendResult};
 pub use fault::{FaultInjectingBackend, FaultMode, FaultPlan};
 pub use pjrt::{PjrtBackend, PjrtEngine};
+pub use pool::{PoolConfig, WorkerPool};
 pub use resilient::{ResilientBackend, RetryPolicy};
 pub use simd::{Isa, MicroKernel, SimdMode};
 pub use tiled::TiledBackend;

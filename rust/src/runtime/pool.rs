@@ -1,0 +1,541 @@
+//! Persistent sharded worker pool for tile execution.
+//!
+//! `TiledBackend` historically paid a `std::thread::scope` spawn + join on
+//! every dispatch. The batched tree pipeline makes O(log n) *small* fused
+//! dispatches per descent round (ARCHITECTURE.md §Level fusion), so per-
+//! dispatch thread startup is pure overhead at exactly the call shape the
+//! paper's sub-quadratic bounds produce. This module keeps the workers
+//! alive instead, modeled on the tuwunel database pool (SNIPPETS.md
+//! Snippet 3): long-lived OS threads, one bounded queue shard per worker,
+//! FIFO submit / LIFO steal, and occupancy counters surfaced through
+//! [`PoolMetrics`] in `coordinator::metrics`.
+//!
+//! Scheduling model:
+//!
+//! - **Submit** round-robins tasks across shard queues and rings a
+//!   generation-counter doorbell. Each worker drains its own shard FIFO
+//!   (oldest first — fair across submitters) and, when its shard is
+//!   empty, steals from sibling shards LIFO (newest first — the stolen
+//!   task's inputs are most likely still cache-hot on the thief).
+//! - **Bounded queues**: a shard at its bound runs the task inline on the
+//!   submitting thread instead of queueing unboundedly — overload degrades
+//!   to the caller lending itself as a worker, never to a deadlock or an
+//!   unbounded queue. A submit from *inside* a pool worker also runs
+//!   inline (nested-submit deadlock guard).
+//! - **Scoped batches**: [`WorkerPool::run_scoped`] submits a batch of
+//!   borrowing closures and blocks on a completion latch until every task
+//!   has run, which is what makes the lifetime erasure below sound. A
+//!   panicking task is contained on the worker (the thread survives for
+//!   the next dispatch) and its payload is re-raised on the caller, so the
+//!   existing `try_*` isolation boundary still maps it to
+//!   [`BackendError::Panicked`](crate::runtime::error::BackendError).
+//! - **Shutdown**: `Drop` flags shutdown, rings all workers, and joins
+//!   them; workers drain every queued task before exiting so no submitted
+//!   work is silently discarded.
+//!
+//! Determinism: the pool only changes *where* tasks run, never how output
+//! rows are partitioned — callers hand it the same worker-disjoint chunk
+//! closures the scoped path spawns, so results are `to_bits`-identical to
+//! `std::thread::scope` execution (pinned in `tests/pool.rs`).
+//!
+//! Core pinning: opt-in (`PoolConfig::pin` or env `KDE_POOL_PIN=1`),
+//! best-effort, and currently implemented only on x86_64 Linux via a raw
+//! `sched_setaffinity` syscall (no libc dependency is available offline);
+//! elsewhere it is a no-op. Errors are ignored — pinning is a locality
+//! hint, never a correctness requirement.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::coordinator::metrics::PoolMetrics;
+
+/// A unit of pool work. `'static` at the queue boundary; `run_scoped`
+/// erases shorter borrows because it blocks until the batch completes.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// True on pool worker threads; a submit from a worker runs inline so
+    /// a task that blocks on a nested `run_scoped` latch can never wedge
+    /// the pool against itself.
+    static IS_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Construction knobs for [`WorkerPool`].
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// Worker thread count (>= 1).
+    pub workers: usize,
+    /// Per-shard queue bound; a full shard runs the submit inline.
+    pub queue_limit: usize,
+    /// Best-effort core-affinity pinning (worker i -> core i).
+    pub pin: bool,
+}
+
+impl PoolConfig {
+    /// Defaults: `workers` threads, 256-deep shards, pinning off unless
+    /// env `KDE_POOL_PIN=1`.
+    pub fn with_workers(workers: usize) -> Self {
+        PoolConfig {
+            workers: workers.max(1),
+            queue_limit: 256,
+            pin: std::env::var("KDE_POOL_PIN").map(|v| v == "1").unwrap_or(false),
+        }
+    }
+}
+
+/// Generation-counter doorbell: `ring` bumps the generation and wakes
+/// sleepers; `wait` sleeps only while the generation still equals the one
+/// the worker observed *before* scanning the queues, so a submit that
+/// lands between scan and sleep is never lost.
+struct Doorbell {
+    gen: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Doorbell {
+    fn current(&self) -> u64 {
+        *self.gen.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn ring(&self) {
+        let mut g = self.gen.lock().unwrap_or_else(PoisonError::into_inner);
+        *g = g.wrapping_add(1);
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self, seen: u64) {
+        let mut g = self.gen.lock().unwrap_or_else(PoisonError::into_inner);
+        // 50ms timeout backstop: shutdown and steals stay live even if a
+        // wakeup is missed on an exotic platform.
+        while *g == seen {
+            let (guard, res) = match self.cv.wait_timeout(g, std::time::Duration::from_millis(50)) {
+                Ok(pair) => pair,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            g = guard;
+            if res.timed_out() {
+                break;
+            }
+        }
+    }
+}
+
+/// One bounded FIFO/LIFO deque per worker.
+struct Shard {
+    queue: Mutex<VecDeque<Task>>,
+}
+
+struct PoolShared {
+    shards: Vec<Shard>,
+    doorbell: Doorbell,
+    shutdown: AtomicBool,
+    metrics: Arc<PoolMetrics>,
+}
+
+impl PoolShared {
+    /// Own shard FIFO first, then steal LIFO from siblings.
+    fn next_task(&self, wid: usize) -> Option<Task> {
+        if let Some(t) = self.shards[wid]
+            .queue
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .pop_front()
+        {
+            self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
+            return Some(t);
+        }
+        let n = self.shards.len();
+        for k in 1..n {
+            let victim = (wid + k) % n;
+            if let Some(t) = self.shards[victim]
+                .queue
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .pop_back()
+            {
+                self.metrics.queued.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    fn run_task(&self, task: Task) {
+        PoolMetrics::gauge_inc(&self.metrics.busy, &self.metrics.busy_max);
+        // Contain the panic so the worker thread survives; `run_scoped`
+        // wrappers have already captured the payload for the caller.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)).is_err() {
+            self.metrics.task_panics.fetch_add(1, Ordering::Relaxed);
+        }
+        self.metrics.busy.fetch_sub(1, Ordering::Relaxed);
+        self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn worker_loop(&self, wid: usize) {
+        IS_POOL_WORKER.with(|f| f.set(true));
+        loop {
+            // Observe the doorbell generation BEFORE scanning, so a ring
+            // during the scan makes the later wait return immediately.
+            let gen = self.doorbell.current();
+            if let Some(task) = self.next_task(wid) {
+                self.run_task(task);
+                continue;
+            }
+            if self.shutdown.load(Ordering::Acquire) {
+                // Queues were empty after the shutdown flag: drained.
+                return;
+            }
+            self.doorbell.wait(gen);
+        }
+    }
+}
+
+/// Persistent sharded worker pool; see the module docs.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    cursor: AtomicUsize,
+    queue_limit: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `cfg.workers` long-lived workers.
+    pub fn new(cfg: PoolConfig) -> Self {
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(PoolShared {
+            shards: (0..workers)
+                .map(|_| Shard {
+                    queue: Mutex::new(VecDeque::new()),
+                })
+                .collect(),
+            doorbell: Doorbell {
+                gen: Mutex::new(0),
+                cv: Condvar::new(),
+            },
+            shutdown: AtomicBool::new(false),
+            metrics: PoolMetrics::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for wid in 0..workers {
+            let sh = Arc::clone(&shared);
+            let pin = cfg.pin;
+            let handle = std::thread::Builder::new()
+                .name(format!("kde-pool-{wid}"))
+                .spawn(move || {
+                    if pin {
+                        pin_to_core(wid);
+                    }
+                    sh.worker_loop(wid);
+                });
+            match handle {
+                Ok(h) => handles.push(h),
+                // Spawn failure (resource exhaustion): keep going with the
+                // workers we have; submit's inline fallback covers zero.
+                Err(_) => break,
+            }
+        }
+        WorkerPool {
+            shared,
+            workers: Mutex::new(handles),
+            cursor: AtomicUsize::new(0),
+            queue_limit: cfg.queue_limit.max(1),
+        }
+    }
+
+    /// Live worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.workers
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .len()
+    }
+
+    /// Occupancy/scheduling counters (shared, live).
+    pub fn metrics(&self) -> &Arc<PoolMetrics> {
+        &self.shared.metrics
+    }
+
+    fn enqueue(&self, task: Task) -> Result<(), Task> {
+        let n = self.shared.shards.len();
+        if n == 0 || self.workers() == 0 || IS_POOL_WORKER.with(|f| f.get()) {
+            return Err(task);
+        }
+        let shard = &self.shared.shards[self.cursor.fetch_add(1, Ordering::Relaxed) % n];
+        {
+            let mut q = shard.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            if q.len() >= self.queue_limit {
+                return Err(task);
+            }
+            q.push_back(task);
+        }
+        let m = &self.shared.metrics;
+        PoolMetrics::gauge_inc(&m.queued, &m.queued_max);
+        self.shared.doorbell.ring();
+        Ok(())
+    }
+
+    /// Run a batch of borrowing closures to completion on the pool.
+    ///
+    /// Blocks until every task has finished (or been discarded by an
+    /// unwinding worker — contained panics still count the latch down via
+    /// the wrapper), then re-raises the first captured panic payload on
+    /// the caller. Blocking-until-done is the soundness argument for the
+    /// lifetime erasure: no erased borrow outlives this call.
+    pub fn run_scoped<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        let first_panic: Arc<Mutex<Option<Box<dyn std::any::Any + Send>>>> =
+            Arc::new(Mutex::new(None));
+        for task in tasks {
+            let guard = CountGuard(Arc::clone(&latch));
+            let panic_c = Arc::clone(&first_panic);
+            let wrapped: Box<dyn FnOnce() + Send + 'a> = Box::new(move || {
+                // The guard lives in the closure ENVIRONMENT: it counts the
+                // latch down when the body finishes, when the body unwinds,
+                // and even if the task were dropped unexecuted — the caller
+                // latch can never hang.
+                let _guard = guard;
+                if let Err(p) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)) {
+                    panic_c
+                        .lock()
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .get_or_insert(p);
+                }
+            });
+            // SAFETY: the erased closure only borrows data that outlives
+            // this `run_scoped` call, and `latch.wait()` below does not
+            // return until every wrapped closure has either run or been
+            // dropped — `CountGuard` fires on all paths — so no erased
+            // borrow is ever dereferenced after this frame returns.
+            let wrapped: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send>>(
+                    wrapped,
+                )
+            };
+            self.submit(wrapped);
+        }
+        latch.wait();
+        let payload = first_panic
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Submit one `'static` task. Runs inline when the chosen shard is at
+    /// its bound, when no worker threads exist, or when the caller *is* a
+    /// pool worker (nested-submit deadlock guard).
+    pub fn submit(&self, task: Task) {
+        let m = &self.shared.metrics;
+        m.submitted.fetch_add(1, Ordering::Relaxed);
+        if let Err(task) = self.enqueue(task) {
+            // Queue bound hit, pool-worker caller, or no shards: lend the
+            // submitting thread as the worker.
+            m.inline_runs.fetch_add(1, Ordering::Relaxed);
+            PoolMetrics::gauge_inc(&m.busy, &m.busy_max);
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+            m.busy.fetch_sub(1, Ordering::Relaxed);
+            m.completed.fetch_add(1, Ordering::Relaxed);
+            if let Err(p) = res {
+                // Inline tasks run on the caller already; re-raise so raw
+                // submitters see the panic (run_scoped wrappers never
+                // reach this arm — they catch internally).
+                std::panic::resume_unwind(p);
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.doorbell.ring();
+        let handles = std::mem::take(
+            &mut *self.workers.lock().unwrap_or_else(PoisonError::into_inner),
+        );
+        for h in handles {
+            // A worker that somehow died unwinding has nothing to drain;
+            // ignore its panic payload here (it was already contained or
+            // re-raised at the scoped boundary).
+            let _ = h.join();
+        }
+    }
+}
+
+/// Completion latch: `wait` blocks until `count_down` has run `n` times.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch {
+            remaining: Mutex::new(n),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
+        *r = r.saturating_sub(1);
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
+        while *r > 0 {
+            r = match self.cv.wait(r) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+/// Counts the latch down when dropped — on normal return AND on unwind.
+struct CountGuard(Arc<Latch>);
+
+impl Drop for CountGuard {
+    fn drop(&mut self) {
+        self.0.count_down();
+    }
+}
+
+/// Best-effort affinity pin of the current thread to `core`.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_to_core(core: usize) {
+    // Raw sched_setaffinity(0, sizeof(mask), &mask): syscall 203 on
+    // x86_64 Linux. No libc crate is available offline; the result is
+    // deliberately ignored (locality hint only).
+    let mut mask = [0u64; 16]; // 1024-bit cpu_set_t
+    let idx = core % (mask.len() * 64);
+    mask[idx / 64] |= 1u64 << (idx % 64);
+    unsafe {
+        let mut ret: i64;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret,
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            out("rcx") _,
+            out("r11") _,
+            options(nostack),
+        );
+        let _ = ret;
+    }
+}
+
+/// No-op on platforms without the raw-syscall implementation.
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn pin_to_core(_core: usize) {}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn scoped_batch_runs_all_tasks_and_reuses_threads() {
+        let pool = WorkerPool::new(PoolConfig::with_workers(4));
+        let hits = AtomicU64::new(0);
+        for _ in 0..50 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    let h = &hits;
+                    Box::new(move || {
+                        h.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(tasks);
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 400);
+        let m = pool.metrics();
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 400);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 400);
+        assert_eq!(m.busy(), 0, "gauge returns to zero");
+        assert_eq!(m.queued_depth(), 0, "queues drained");
+    }
+
+    #[test]
+    fn scoped_panic_reraises_on_caller_and_pool_survives() {
+        let pool = WorkerPool::new(PoolConfig::with_workers(2));
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("tile worker exploded")),
+            Box::new(|| {}),
+        ];
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run_scoped(tasks);
+        }));
+        let payload = err.expect_err("panic must re-raise on the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("exploded"), "original payload kept: {msg}");
+        // The pool must still be serviceable afterwards.
+        let ok = AtomicU64::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+            .map(|_| {
+                let o = &ok;
+                Box::new(move || {
+                    o.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(ok.load(Ordering::Relaxed), 4);
+        assert_eq!(pool.metrics().task_panics.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_drains_submitted_tasks() {
+        let done = Arc::new(AtomicU64::new(0));
+        {
+            let pool = WorkerPool::new(PoolConfig::with_workers(2));
+            for _ in 0..64 {
+                let d = Arc::clone(&done);
+                pool.submit(Box::new(move || {
+                    d.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            // Drop joins here.
+        }
+        assert_eq!(done.load(Ordering::Relaxed), 64, "drop drains the shards");
+    }
+
+    #[test]
+    fn overflow_runs_inline_without_deadlock() {
+        // queue_limit 1 with 1 worker: most submits overflow inline on
+        // this thread while the worker drains the rest.
+        let pool = WorkerPool::new(PoolConfig {
+            workers: 1,
+            queue_limit: 1,
+            pin: false,
+        });
+        let hits = AtomicU64::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..32)
+            .map(|_| {
+                let h = &hits;
+                Box::new(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 32);
+        assert!(pool.metrics().inline_runs.load(Ordering::Relaxed) > 0);
+    }
+}

@@ -17,9 +17,15 @@
 //!    `fast_exp_neg` evaluations independent — the scalar backend's
 //!    one-libm-`expf`-per-pair serialization is the single biggest cost
 //!    at moderate `d` (see the §Perf log).
-//! 3. **Threading** — `std::thread::scope` workers split the query rows
-//!    (or, when a call has few queries but much data, the data rows) with
-//!    per-thread eval counts folded into the shared atomic counter.
+//! 3. **Threading** — worker tasks split the query rows (or, when a call
+//!    has few queries but much data, the data rows) with per-thread eval
+//!    counts folded into the shared atomic counter. Tasks run on a lazily
+//!    created persistent [`WorkerPool`] (`runtime::pool`) so the O(log n)
+//!    small fused dispatches per descent round don't re-pay thread
+//!    startup; [`TiledBackend::set_pooled`]`(false)` switches back to
+//!    per-call `std::thread::scope` spawns (the A/B off-switch — both
+//!    routes run the identical chunk closures, so results are
+//!    `to_bits`-equal; pinned in `tests/pool.rs`).
 //! 4. **Explicit SIMD** — the dot/L1 inner loops and the tile-wide kernel
 //!    map dispatch through a [`MicroKernel`] function-pointer vtable
 //!    selected once at construction (AVX2+FMA, NEON, or portable scalar;
@@ -42,11 +48,13 @@
 //! `tests/backend_parity.rs`); negative cancellation residue is clamped to
 //! zero so `k(x, x) = 1` holds for realistic coordinates.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 
+use crate::coordinator::metrics::PoolMetrics;
 use crate::kernel::Kernel;
 use crate::runtime::backend::KernelBackend;
+use crate::runtime::pool::{PoolConfig, WorkerPool};
 use crate::runtime::simd::{MicroKernel, SimdMode};
 
 /// Data rows per cache tile. A tile of f32 coordinates occupies
@@ -63,6 +71,11 @@ pub struct TiledBackend {
     mk: &'static MicroKernel,
     evals: AtomicU64,
     calls: AtomicU64,
+    /// Persistent worker pool, created lazily on the first parallel call
+    /// so single-threaded and short-lived backends never spawn threads.
+    pool: OnceLock<WorkerPool>,
+    /// Pool execution off-switch (A/B vs per-call scoped spawns).
+    pooled: AtomicBool,
 }
 
 impl TiledBackend {
@@ -90,6 +103,8 @@ impl TiledBackend {
             mk,
             evals: AtomicU64::new(0),
             calls: AtomicU64::new(0),
+            pool: OnceLock::new(),
+            pooled: AtomicBool::new(true),
         }))
     }
 
@@ -109,6 +124,60 @@ impl TiledBackend {
     pub fn microkernel(&self) -> &'static MicroKernel {
         self.mk
     }
+
+    /// Route parallel chunks through the persistent pool (`true`, the
+    /// default) or per-call `std::thread::scope` spawns (`false`). Both
+    /// routes run the identical worker-disjoint chunk closures, so this
+    /// switch never changes results — only scheduling.
+    pub fn set_pooled(&self, on: bool) {
+        self.pooled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether parallel chunks currently route through the pool.
+    pub fn pooled(&self) -> bool {
+        self.pooled.load(Ordering::Relaxed)
+    }
+
+    /// Pool occupancy counters, if the pool has been created (it is lazy:
+    /// `None` until the first pooled parallel dispatch).
+    pub fn pool_metrics(&self) -> Option<Arc<PoolMetrics>> {
+        self.pool.get().map(|p| Arc::clone(p.metrics()))
+    }
+
+    /// The lazily created persistent pool, sized to `self.threads`.
+    fn pool(&self) -> &WorkerPool {
+        self.pool
+            .get_or_init(|| WorkerPool::new(PoolConfig::with_workers(self.threads)))
+    }
+
+    /// Run one dispatch's worker-disjoint chunk tasks to completion —
+    /// on the persistent pool, or via scoped spawns when pooling is off.
+    /// Panics propagate to the caller on both routes (the `try_*`
+    /// isolation boundary maps them to `BackendError::Panicked`).
+    fn execute<'a>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'a>>) {
+        if self.pooled.load(Ordering::Relaxed) {
+            self.pool().run_scoped(tasks);
+        } else {
+            run_scoped_threads(tasks);
+        }
+    }
+}
+
+/// Per-call scoped-spawn execution: one OS thread per task, first panic
+/// payload re-raised on the caller (mirrors `WorkerPool::run_scoped`).
+fn run_scoped_threads(tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = tasks.into_iter().map(|t| s.spawn(t)).collect();
+        let mut first_panic = None;
+        for h in handles {
+            if let Err(p) = h.join() {
+                first_panic.get_or_insert(p);
+            }
+        }
+        if let Some(p) = first_panic {
+            std::panic::resume_unwind(p);
+        }
+    })
 }
 
 /// Squared row norms of a `rows x d` buffer.
@@ -242,51 +311,45 @@ impl KernelBackend for TiledBackend {
             // rows, so no reduction is needed and per-row summation order
             // is identical to the single-thread path.
             let chunk_rows = (b + self.threads - 1) / self.threads;
-            std::thread::scope(|s| {
-                for (ci, out_chunk) in out.chunks_mut(chunk_rows).enumerate() {
-                    let lo = ci * chunk_rows;
-                    let rows = out_chunk.len();
-                    let q_chunk = &queries[lo * d..(lo + rows) * d];
-                    let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
-                    s.spawn(move || {
-                        sums_rows(mk, kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk);
-                        evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
-                    });
-                }
-            });
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, out_chunk) in out.chunks_mut(chunk_rows).enumerate() {
+                let lo = ci * chunk_rows;
+                let rows = out_chunk.len();
+                let q_chunk = &queries[lo * d..(lo + rows) * d];
+                let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
+                tasks.push(Box::new(move || {
+                    sums_rows(mk, kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk);
+                    evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
+                }));
+            }
+            self.execute(tasks);
         } else {
             // Few queries, much data (the KDE-sum shape for small batches):
-            // split the data rows, fold per-worker partials in chunk order.
+            // split the data rows, fold per-worker partials in chunk order
+            // AFTER the batch completes — the same grouping the scoped
+            // path's join-in-spawn-order fold produced.
             let workers = self.threads.min((m + DTILE - 1) / DTILE).max(1);
             let mut chunk_rows = (m + workers - 1) / workers;
             chunk_rows = ((chunk_rows + DTILE - 1) / DTILE) * DTILE;
-            std::thread::scope(|s| {
-                let mut handles = Vec::new();
-                let mut lo = 0usize;
-                while lo < m {
-                    let hi = (lo + chunk_rows).min(m);
-                    let d_chunk = &data[lo * d..hi * d];
-                    let xn_chunk: &[f32] = if l2 { &xn_s[lo..hi] } else { &[] };
-                    handles.push(s.spawn(move || {
-                        let mut part = vec![0.0f64; b];
-                        sums_rows(mk, kernel, queries, d_chunk, d, qn_s, xn_chunk, &mut part);
-                        evals.fetch_add((b * (hi - lo)) as u64, Ordering::Relaxed);
-                        part
-                    }));
-                    lo = hi;
+            let nchunks = (m + chunk_rows - 1) / chunk_rows;
+            let mut parts: Vec<Vec<f64>> = (0..nchunks).map(|_| vec![0.0f64; b]).collect();
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, part) in parts.iter_mut().enumerate() {
+                let lo = ci * chunk_rows;
+                let hi = (lo + chunk_rows).min(m);
+                let d_chunk = &data[lo * d..hi * d];
+                let xn_chunk: &[f32] = if l2 { &xn_s[lo..hi] } else { &[] };
+                tasks.push(Box::new(move || {
+                    sums_rows(mk, kernel, queries, d_chunk, d, qn_s, xn_chunk, part);
+                    evals.fetch_add((b * (hi - lo)) as u64, Ordering::Relaxed);
+                }));
+            }
+            self.execute(tasks);
+            for part in &parts {
+                for (o, p) in out.iter_mut().zip(part) {
+                    *o += p;
                 }
-                for h in handles {
-                    // Re-raise a worker panic on the calling thread so the
-                    // try_* isolation boundary sees the original payload.
-                    let part = match h.join() {
-                        Ok(part) => part,
-                        Err(payload) => std::panic::resume_unwind(payload),
-                    };
-                    for (o, p) in out.iter_mut().zip(&part) {
-                        *o += p;
-                    }
-                }
-            });
+            }
         }
         out
     }
@@ -316,18 +379,18 @@ impl KernelBackend for TiledBackend {
             // interleaved columns).
             let workers = self.threads.min(b);
             let chunk_rows = (b + workers - 1) / workers;
-            std::thread::scope(|s| {
-                for (ci, out_chunk) in out.chunks_mut(chunk_rows * m).enumerate() {
-                    let lo = ci * chunk_rows;
-                    let rows = out_chunk.len() / m;
-                    let q_chunk = &queries[lo * d..(lo + rows) * d];
-                    let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
-                    s.spawn(move || {
-                        block_rows(mk, kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk, m);
-                        evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
-                    });
-                }
-            });
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, out_chunk) in out.chunks_mut(chunk_rows * m).enumerate() {
+                let lo = ci * chunk_rows;
+                let rows = out_chunk.len() / m;
+                let q_chunk = &queries[lo * d..(lo + rows) * d];
+                let qn_chunk = if l2 { &qn_s[lo..lo + rows] } else { qn_s };
+                tasks.push(Box::new(move || {
+                    block_rows(mk, kernel, q_chunk, data, d, qn_chunk, xn_s, out_chunk, m);
+                    evals.fetch_add((rows * m) as u64, Ordering::Relaxed);
+                }));
+            }
+            self.execute(tasks);
         }
         out
     }
@@ -405,12 +468,12 @@ impl KernelBackend for TiledBackend {
             run_rows(0, &mut out);
         } else {
             let chunk_rows = (b + self.threads - 1) / self.threads;
-            std::thread::scope(|s| {
-                for (ci, out_chunk) in out.chunks_mut(chunk_rows).enumerate() {
-                    let run = &run_rows;
-                    s.spawn(move || run(ci * chunk_rows, out_chunk));
-                }
-            });
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            for (ci, out_chunk) in out.chunks_mut(chunk_rows).enumerate() {
+                let run = &run_rows;
+                tasks.push(Box::new(move || run(ci * chunk_rows, out_chunk)));
+            }
+            self.execute(tasks);
         }
         out
     }
@@ -483,7 +546,8 @@ impl KernelBackend for TiledBackend {
         } else {
             // Query split over disjoint ragged output chunks.
             let chunk_rows = (b + self.threads - 1) / self.threads;
-            std::thread::scope(|s| {
+            let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+            {
                 let run = &run_rows;
                 let mut rest: &mut [f32] = &mut out;
                 let mut r0 = 0usize;
@@ -492,10 +556,11 @@ impl KernelBackend for TiledBackend {
                     let len = offsets_s[r1] - offsets_s[r0];
                     let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(len);
                     rest = tail;
-                    s.spawn(move || run(r0, r1, chunk));
+                    tasks.push(Box::new(move || run(r0, r1, chunk)));
                     r0 = r1;
                 }
-            });
+            }
+            self.execute(tasks);
         }
         out
     }

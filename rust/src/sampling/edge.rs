@@ -19,6 +19,7 @@
 //! bit-identical to `sample(&mut fork_k)` on the k-th forked stream
 //! (pinned in `tests/fusion.rs`).
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 use crate::sampling::neighbor::NeighborSampler;
@@ -32,6 +33,11 @@ pub struct EdgeSampler {
     pub degrees: Arc<DegreeSampler>,
     /// Weighted neighbor sampler (Algorithm 4.11).
     pub neighbors: Arc<NeighborSampler>,
+    /// Reverse-probe fusion on/off (on by default): resolve a two-sided
+    /// batch's reverse probabilities through the single-round
+    /// [`NeighborSampler::neighbor_prob_batch_fused`] probe instead of a
+    /// second per-level sweep.
+    probe_fuse: AtomicBool,
 }
 
 /// One sampled edge with its exact (memoized-oracle) sampling probability.
@@ -50,7 +56,24 @@ impl EdgeSampler {
     /// Compose a degree sampler and a neighbor sampler into an edge
     /// sampler (they must share the same underlying tree).
     pub fn new(degrees: Arc<DegreeSampler>, neighbors: Arc<NeighborSampler>) -> Self {
-        EdgeSampler { degrees, neighbors }
+        EdgeSampler { degrees, neighbors, probe_fuse: AtomicBool::new(true) }
+    }
+
+    /// Enable/disable reverse-probe fusion (on by default). When on, a
+    /// two-sided batch resolves every edge's reverse probability `q_vu`
+    /// through [`NeighborSampler::neighbor_prob_batch_fused`] — ONE extra
+    /// `query_points_multi` round per batch instead of the per-level
+    /// sweep's O(log n) — so a batch costs `L_forward + 1` rounds rather
+    /// than `L_forward + L_reverse` (the >= 1.5x per-batch round drop
+    /// pinned in `tests/fusion.rs`). Reported edges and probabilities are
+    /// bit-identical on/off; off is the two-sweep shape for A/Bs.
+    pub fn set_probe_fusion(&self, enabled: bool) {
+        self.probe_fuse.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Whether reverse-probe fusion is enabled.
+    pub fn probe_fusion(&self) -> bool {
+        self.probe_fuse.load(Ordering::Relaxed)
     }
 
     /// Algorithm 4.13: vertex by degree, then neighbor by edge weight.
@@ -150,7 +173,11 @@ impl EdgeSampler {
                     keep.push(k);
                 }
             }
-            let q_vu = self.neighbors.neighbor_prob_batch(&pairs);
+            let q_vu = if self.probe_fuse.load(Ordering::Relaxed) {
+                self.neighbors.neighbor_prob_batch_fused(&pairs)
+            } else {
+                self.neighbors.neighbor_prob_batch(&pairs)
+            };
             for (ki, &k) in keep.iter().enumerate() {
                 let (u, p_u) = degree[k];
                 let s = samples[k].expect("kept samples are Some");
@@ -220,6 +247,32 @@ mod tests {
                 assert_eq!(g.prob.to_bits(), want.prob.to_bits(), "edge {k} prob");
             }
         }
+    }
+
+    #[test]
+    fn probe_fusion_is_bit_identical_and_saves_rounds() {
+        // Two-sided batches must report bit-identical edges with the
+        // reverse probe fused (one extra round) or per-level (a second
+        // sweep), and fusion must cut the per-batch round count.
+        let fused = build(48, 217);
+        let sweep = build(48, 217);
+        sweep.set_probe_fusion(false);
+        assert!(fused.probe_fusion() && !sweep.probe_fusion());
+        let base_fused = fused.neighbors.tree.multi_calls();
+        let base_sweep = sweep.neighbors.tree.multi_calls();
+        let a = fused.sample_batch(31, &mut Rng::new(219));
+        let rounds_fused = fused.neighbors.tree.multi_calls() - base_fused;
+        let b = sweep.sample_batch(31, &mut Rng::new(219));
+        let rounds_sweep = sweep.neighbors.tree.multi_calls() - base_sweep;
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            let (x, y) = (x.expect("sampled"), y.expect("sampled"));
+            assert_eq!((x.u, x.v), (y.u, y.v), "edge {k} diverged");
+            assert_eq!(x.prob.to_bits(), y.prob.to_bits(), "edge {k} prob");
+        }
+        assert!(
+            rounds_sweep as f64 >= 1.5 * rounds_fused as f64,
+            "probe fusion should drop rounds >= 1.5x: fused {rounds_fused}, sweep {rounds_sweep}"
+        );
     }
 
     #[test]

@@ -324,6 +324,10 @@ impl NeighborSampler {
         assert_eq!(sources.len(), rngs.len(), "one stream per walker");
         let n = sources.len();
         let mut out: Vec<Option<NeighborSample>> = vec![None; n];
+        // One overlap epoch per batch descent: every level's fused round
+        // reuses the tree's persistent packer pipeline (cross-round
+        // overlap) instead of spawning a packer per round.
+        let _epoch = self.tree.overlap_epoch();
         let root = self.tree.root();
         if self.tree.node(root).hi - self.tree.node(root).lo <= 1 {
             return out;
@@ -419,6 +423,7 @@ impl NeighborSampler {
         if n == 0 {
             return out;
         }
+        let _epoch = self.tree.overlap_epoch();
         let finish = self.finish_size();
         let root = self.tree.root();
         let mut active: Vec<(usize, usize, f64)> = (0..n)
@@ -480,6 +485,130 @@ impl NeighborSampler {
                 }
             }
             active = next;
+        }
+        out
+    }
+
+    /// Single-round [`Self::neighbor_prob_batch`]: because the reverse
+    /// descent's branching is fully determined by the *target* (`goes_left
+    /// = nl.lo <= j && j < nl.hi` does not depend on any KDE answer), every
+    /// pair's root-to-cutoff path is known up front — so ALL (child node,
+    /// source) probe groups across every level of every pair collapse into
+    /// ONE [`MultiLevelKde::query_points_multi`] round (the adaptive
+    /// planner packs the mixed-level segments; [`MultiLevelKde::multi_calls`]
+    /// ticks once instead of once per level). Probes are grouped per level
+    /// in `(node, pair)` order — the same first-query order
+    /// `neighbor_prob_batch` produces — and each pair's factors multiply in
+    /// root-to-leaf order, so returned probabilities are bit-identical to
+    /// the per-level path's on the same tree (shared memo answers) and to a
+    /// twin tree's from the same seed (pinned in `tests/fusion.rs`).
+    pub fn neighbor_prob_batch_fused(&self, pairs: &[(usize, usize)]) -> Vec<f64> {
+        let n = pairs.len();
+        let mut out = vec![0.0f64; n];
+        if n == 0 {
+            return out;
+        }
+        let _epoch = self.tree.overlap_epoch();
+        let finish = self.finish_size();
+        let root = self.tree.root();
+        // Pass 1: walk every pair's (deterministic) path root -> cutoff
+        // node, recording the (left, right, goes_left) probe triple per
+        // internal level and the final cutoff node.
+        let mut paths: Vec<Vec<(usize, usize, bool)>> = Vec::with_capacity(n);
+        let mut leaves: Vec<usize> = Vec::with_capacity(n);
+        for &(i, j) in pairs {
+            assert_ne!(i, j, "a vertex is not its own neighbor");
+            let mut id = root;
+            let mut path: Vec<(usize, usize, bool)> = Vec::new();
+            loop {
+                let node = self.tree.node(id);
+                if node.hi - node.lo <= finish {
+                    break;
+                }
+                let l = node.left.expect("internal node");
+                let r = node.right.expect("internal node");
+                let nl = self.tree.node(l);
+                let goes_left = nl.lo <= j && j < nl.hi;
+                path.push((l, r, goes_left));
+                id = if goes_left { l } else { r };
+            }
+            paths.push(path);
+            leaves.push(id);
+        }
+        // Pass 2: gather every level's probe groups — walkers grouped by
+        // their current node in (node, pair) order, exactly the grouping
+        // `neighbor_prob_batch` would issue level by level — and resolve
+        // them all in ONE fused multi-group round. `slot[w][lvl]` remembers
+        // where pair w's level-`lvl` (left, right) answers landed.
+        let max_depth = paths.iter().map(|p| p.len()).max().unwrap_or(0);
+        let mut qgroups: Vec<(usize, Vec<usize>)> = Vec::new();
+        let mut slot: Vec<Vec<(usize, usize)>> =
+            paths.iter().map(|p| Vec::with_capacity(p.len())).collect();
+        for lvl in 0..max_depth {
+            let mut at: Vec<(usize, usize)> = Vec::new();
+            for (w, path) in paths.iter().enumerate() {
+                if lvl < path.len() {
+                    let parent = if lvl == 0 {
+                        root
+                    } else {
+                        let (pl, pr, pg) = path[lvl - 1];
+                        if pg {
+                            pl
+                        } else {
+                            pr
+                        }
+                    };
+                    at.push((parent, w));
+                }
+            }
+            at.sort_unstable();
+            let mut g0 = 0usize;
+            while g0 < at.len() {
+                let id = at[g0].0;
+                let mut g1 = g0;
+                while g1 < at.len() && at[g1].0 == id {
+                    g1 += 1;
+                }
+                let qi = qgroups.len();
+                for (row, &(_, w)) in at[g0..g1].iter().enumerate() {
+                    slot[w].push((qi, row));
+                }
+                let srcs: Vec<usize> =
+                    at[g0..g1].iter().map(|&(_, w)| pairs[w].0).collect();
+                let (l, r, _) = paths[at[g0].1][lvl];
+                qgroups.push((l, srcs.clone()));
+                qgroups.push((r, srcs));
+                g0 = g1;
+            }
+        }
+        let refs: Vec<(usize, &[usize])> =
+            qgroups.iter().map(|(id, v)| (*id, v.as_slice())).collect();
+        let answers = self.tree.query_points_multi(&refs);
+        // Pass 3: per pair, multiply factors in root-to-leaf order —
+        // the exact operation sequence of `neighbor_prob`.
+        'pairs: for (w, &(i, j)) in pairs.iter().enumerate() {
+            let mut prob = 1.0f64;
+            for (lvl, &(l, r, goes_left)) in paths[w].iter().enumerate() {
+                let (qi, row) = slot[w][lvl];
+                let a = self.side_mass_value(l, i, answers[qi][row]);
+                let b = self.side_mass_value(r, i, answers[qi + 1][row]);
+                let total = a + b;
+                if total <= 0.0 {
+                    let nl = self.tree.node(l);
+                    let nr = self.tree.node(r);
+                    let sl = (nl.hi - nl.lo - usize::from(nl.lo <= i && i < nl.hi)) as f64;
+                    let sr = (nr.hi - nr.lo - usize::from(nr.lo <= i && i < nr.hi)) as f64;
+                    let denom = sl + sr;
+                    if denom <= 0.0 {
+                        out[w] = 0.0;
+                        continue 'pairs;
+                    }
+                    prob *= if goes_left { sl / denom } else { sr / denom };
+                } else {
+                    prob *= if goes_left { a / total } else { b / total };
+                }
+            }
+            out[w] = prob * self.leaf_prob_factor(leaves[w], i, j);
         }
         out
     }
@@ -737,6 +866,26 @@ mod tests {
             let g = got[k].expect("batched walker must sample too");
             assert_eq!(g.neighbor, want.neighbor, "walker {k} diverged");
             assert_eq!(g.prob.to_bits(), want.prob.to_bits(), "walker {k} prob");
+        }
+    }
+
+    #[test]
+    fn prob_batch_fused_matches_per_level_and_sequential() {
+        // The single-round fused probe must report bit-identical
+        // probabilities to the per-level batch and the sequential recompute
+        // on the same tree, while ticking the round counter exactly once.
+        let s = build(48, 123, KdeConfig::exact());
+        let pairs: Vec<(usize, usize)> = (0..48)
+            .flat_map(|i| [(i, (i + 5) % 48), (i, (i + 23) % 48)])
+            .filter(|&(i, j)| i != j)
+            .collect();
+        let before = s.tree.multi_calls();
+        let fused = s.neighbor_prob_batch_fused(&pairs);
+        assert_eq!(s.tree.multi_calls() - before, 1, "fused probe is one round");
+        let per_level = s.neighbor_prob_batch(&pairs);
+        for (w, &(i, j)) in pairs.iter().enumerate() {
+            assert_eq!(fused[w].to_bits(), per_level[w].to_bits(), "pair ({i},{j})");
+            assert_eq!(fused[w].to_bits(), s.neighbor_prob(i, j).to_bits(), "pair ({i},{j}) seq");
         }
     }
 

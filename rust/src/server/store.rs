@@ -213,6 +213,58 @@ mod tests {
     }
 
     #[test]
+    fn property_flush_order_matches_naive_model() {
+        // Random push sequences with interleaved drains: the store's flush
+        // output must equal a naive model that tracks first-arrival key
+        // order and per-key arrival order — for any max_batch/max_wait, so
+        // the coalesced pack order is a pure function of the arrival
+        // sequence (never timing), mirroring the cross-round overlap
+        // planner's determinism contract.
+        crate::util::prop::forall(24, |rng, _| {
+            let t0 = Instant::now();
+            let max_batch = 1 + rng.below(8);
+            let mut s: RequestStore<u64> =
+                RequestStore::new(max_batch, Duration::from_millis(rng.below(20) as u64));
+            // Naive model: keys in first-arrival order over the store's
+            // whole lifetime, per-key items in arrival order.
+            let mut key_order: Vec<String> = Vec::new();
+            let mut pending: std::collections::HashMap<String, Vec<u64>> =
+                std::collections::HashMap::new();
+            for step in 0..2 + rng.below(6) {
+                let pushes = rng.below(30);
+                for p in 0..pushes {
+                    let key = format!("k{}", rng.below(5));
+                    let item = rng.next_u64();
+                    s.push(&key, item, t0 + Duration::from_millis(p as u64));
+                    if !key_order.contains(&key) {
+                        key_order.push(key.clone());
+                    }
+                    pending.entry(key).or_default().push(item);
+                }
+                let keys: Vec<String> = key_order
+                    .iter()
+                    .filter(|k| pending.get(*k).map(|v| !v.is_empty()).unwrap_or(false))
+                    .cloned()
+                    .collect();
+                let want: Vec<(String, Vec<u64>)> = keys
+                    .into_iter()
+                    .map(|k| {
+                        let v = std::mem::take(pending.get_mut(&k).unwrap());
+                        (k, v)
+                    })
+                    .collect();
+                let total: usize = want.iter().map(|(_, v)| v.len()).sum();
+                assert_eq!(s.len(), total, "step {step}: pending count");
+                if want.iter().any(|(_, v)| v.len() >= max_batch) {
+                    assert!(s.ready(t0 + Duration::from_secs(1)), "step {step}");
+                }
+                assert_eq!(s.drain(), want, "step {step}: flush order diverged");
+                assert!(s.is_empty());
+            }
+        });
+    }
+
+    #[test]
     fn zero_max_wait_flushes_anything_pending() {
         let t0 = Instant::now();
         let mut s: RequestStore<u32> = RequestStore::new(64, Duration::ZERO);

@@ -30,6 +30,17 @@
 //!    double-buffered pack/execute changes wall-clock only — dispatch
 //!    counts, samples, probabilities and estimates are bit-identical
 //!    with overlap on (default) or off.
+//! 7. Cross-round pipelining (`MultiLevelKde::set_cross_round`): the
+//!    persistent overlap session that packs round r+1 while round r
+//!    executes — across successive `query_points_multi` calls — is also
+//!    wall-clock-only: dispatch counts and every value bit-identical
+//!    on/off, with the session counters showing real reuse (epochs and
+//!    rounds accumulate, zero fallbacks in single-threaded use).
+//! 8. Reverse-probe fusion (`EdgeSampler::set_probe_fusion`): a
+//!    two-sided edge batch resolves every reverse probability in ONE
+//!    extra `query_points_multi` round instead of a second per-level
+//!    sweep — >= 1.5x fewer rounds per batch, edges and probabilities
+//!    bit-identical on/off.
 
 use std::sync::Arc;
 
@@ -447,6 +458,99 @@ fn overlap_toggle_round_is_bit_identical() {
     let a = triangle_weight_estimate_batched(&ovl, &params, &mut Rng::new(71));
     let b = triangle_weight_estimate_batched(&seq, &params, &mut Rng::new(71));
     assert_eq!(a.estimate.to_bits(), b.estimate.to_bits());
+}
+
+#[test]
+fn cross_round_session_is_bit_identical_and_dispatch_neutral() {
+    // The persistent overlap session threads one warm packer pipeline
+    // through successive query_points_multi rounds. Like the per-call
+    // double buffer it must change wall-clock only: several consecutive
+    // sampling rounds produce bit-identical samples, probabilities and
+    // dispatch counts with cross-round pipelining on (default) or off.
+    let mut rng = Rng::new(3501);
+    let ds = Arc::new(gaussian_mixture(512, 4, 3, 1.2, 0.5, &mut rng));
+    let mk = |cross: bool| {
+        let be = CpuBackend::new();
+        let tree = Arc::new(MultiLevelKde::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            be.clone(),
+            KdeCounters::new(),
+        ));
+        tree.set_cross_round(cross);
+        (NeighborSampler::new(tree), be)
+    };
+    let (s_on, be_on) = mk(true);
+    let (s_off, be_off) = mk(false);
+    assert!(s_on.tree.cross_round() && !s_off.tree.cross_round());
+    let sources: Vec<usize> = (0..96).map(|k| (k * 5) % 512).collect();
+    // Three successive rounds: the second and third are exactly where the
+    // session's cross-call reuse differs from per-call pipelines.
+    for seed in [141u64, 143, 145] {
+        let on = run_round(&s_on, &be_on, &sources, seed);
+        let off = run_round(&s_off, &be_off, &sources, seed);
+        assert_rounds_bit_identical(&on, &off);
+        assert_eq!(on.2, off.2, "cross-round overlap must not change dispatches");
+    }
+    // The session really ran: each round opened batch epochs and pushed
+    // its fused rounds through the persistent packer, never falling back
+    // (a single-threaded caller cannot contend for the session).
+    let (epochs, rounds, fallbacks) = s_on.tree.overlap_stats();
+    assert!(epochs >= 6, "descent + probe epochs over 3 rounds, got {epochs}");
+    assert!(rounds >= 3, "fused rounds ran on the session, got {rounds}");
+    assert_eq!(fallbacks, 0, "uncontended rounds never fall back");
+    let (_, rounds_off, _) = s_off.tree.overlap_stats();
+    assert_eq!(rounds_off, 0, "cross_round(false) never enters the session");
+}
+
+#[test]
+fn probe_fusion_cuts_rounds_per_batch_and_stays_bit_identical() {
+    // Acceptance pin for reverse-probe fusion: a two-sided edge batch at
+    // n = 512 costs >= 1.5x fewer query_points_multi rounds with the
+    // reverse probe fused into one batched round (L_forward + 1) than
+    // with the second per-level sweep (L_forward + L_reverse), while the
+    // reported edges and probabilities stay bit-identical.
+    let mut rng = Rng::new(3601);
+    let ds = Arc::new(gaussian_mixture(512, 4, 3, 1.2, 0.5, &mut rng));
+    let mk = || {
+        let be = CpuBackend::new();
+        Primitives::build(ds.clone(), Kernel::Laplacian, &KdeConfig::exact(), be)
+    };
+    let fused = mk();
+    let sweep = mk();
+    sweep.edges.set_probe_fusion(false);
+    assert!(fused.edges.probe_fusion() && !sweep.edges.probe_fusion());
+
+    // Round counting starts after build (DegreeSampler::build issues its
+    // own tree traffic).
+    let base_fused = fused.tree.multi_calls();
+    let base_sweep = sweep.tree.multi_calls();
+    let a = fused.edges.sample_batch(24, &mut Rng::new(91));
+    let b = sweep.edges.sample_batch(24, &mut Rng::new(91));
+    for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+        match (x, y) {
+            (Some(x), Some(y)) => {
+                assert_eq!((x.u, x.v), (y.u, y.v), "edge {k} diverged");
+                assert_eq!(
+                    x.prob.to_bits(),
+                    y.prob.to_bits(),
+                    "edge {k}: fused prob {} vs sweep {}",
+                    x.prob,
+                    y.prob
+                );
+            }
+            (None, None) => {}
+            (x, y) => panic!("edge {k}: fused {x:?} vs sweep {y:?}"),
+        }
+    }
+    let rounds_fused = fused.tree.multi_calls() - base_fused;
+    let rounds_sweep = sweep.tree.multi_calls() - base_sweep;
+    assert!(rounds_fused > 0, "two-sided batch must issue rounds");
+    assert!(
+        rounds_sweep as f64 >= 1.5 * rounds_fused as f64,
+        "probe fusion saved too little: {rounds_sweep} sweep rounds vs {rounds_fused} fused"
+    );
 }
 
 #[test]

@@ -1,0 +1,373 @@
+//! Concurrency battery for the persistent sharded worker pool
+//! (`runtime::pool::WorkerPool`) and the pooled `TiledBackend` rebased on
+//! it. Contracts pinned here:
+//!
+//! 1. **Soak**: >= 10k mixed `sums_ranged`/`block_ranged` submissions
+//!    issued concurrently from several submitter threads against ONE
+//!    pooled backend reproduce the single-thread tiled reference bit for
+//!    bit (the ranged entries partition output rows worker-disjointly, so
+//!    results are independent of scheduling), and stay within the
+//!    established fast-exp tolerance of the scalar `CpuBackend`.
+//! 2. **Off-switch**: pooled execution vs per-call `std::thread::scope`
+//!    spawns (`TiledBackend::set_pooled(false)`) is `to_bits`-identical
+//!    for every entry point — `sums` (query-split AND data-split shapes),
+//!    `block`, `sums_ranged`, `block_ranged` and their `try_*` forms —
+//!    both routes run the identical chunk closures.
+//! 3. **Chaos**: a task that panics on a pool worker is contained (the
+//!    worker thread survives), re-raised on the caller, and mapped to the
+//!    typed `BackendError::Panicked` at the standard `catch_panic`
+//!    isolation boundary; `FaultInjectingBackend` panic/transient
+//!    schedules over a pooled backend yield typed errors call by call
+//!    while the pool underneath stays serviceable and bit-exact.
+//! 4. **Shutdown**: dropping a pool with queued work drains every task
+//!    before joining (no hang, nothing discarded).
+//! 5. **Metrics sanity**: `busy`/`queued` gauges return to zero at
+//!    quiescence, `submitted == completed`, high-water marks and the
+//!    steal counter move when the load shape forces stealing.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use kde_matrix::kernel::Kernel;
+use kde_matrix::runtime::error::catch_panic;
+use kde_matrix::runtime::{
+    BackendError, CpuBackend, FaultInjectingBackend, FaultMode, FaultPlan, KernelBackend,
+    PoolConfig, TiledBackend, WorkerPool,
+};
+use kde_matrix::util::rng::Rng;
+
+fn rand_buf(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+/// One soak-test call shape: a fused submission's packed queries + ranges.
+struct Case {
+    queries: Vec<f32>,
+    ranges: Vec<(usize, usize)>,
+    want_sums: Vec<f64>,
+    want_block: Vec<f32>,
+}
+
+#[test]
+fn soak_10k_mixed_ranged_submissions_bit_identical() {
+    // 4 submitter threads x 1250 iterations x (1 sums_ranged +
+    // 1 block_ranged) = 10_000 backend dispatches against one shared
+    // pooled backend; every result is checked bit for bit against the
+    // single-thread tiled reference computed up front.
+    let (d, m) = (8usize, 160usize); // data spans two DTILE=128 tiles
+    let mut rng = Rng::new(0x50a1);
+    let data = Arc::new(rand_buf(&mut rng, m * d));
+    let reference = TiledBackend::with_threads(1);
+    let cpu = CpuBackend::new();
+    let cases: Vec<Case> = (0..16)
+        .map(|_| {
+            let b = 4 + rng.below(8); // 4..12 query rows
+            let queries = rand_buf(&mut rng, b * d);
+            let ranges: Vec<(usize, usize)> = (0..b)
+                .map(|_| {
+                    let lo = rng.below(m);
+                    let hi = lo + rng.below(m - lo + 1);
+                    (lo, hi)
+                })
+                .collect();
+            let want_sums = reference.sums_ranged(Kernel::Laplacian, &queries, &data, d, &ranges);
+            let want_block = reference.block_ranged(Kernel::Laplacian, &queries, &data, d, &ranges);
+            // Anchor the reference itself against the scalar CpuBackend
+            // (value-level: the tiled fast-exp map is not bit-equal to
+            // libm, see runtime/tiled.rs `matches_cpu_backend_smoke`).
+            let cpu_sums = cpu.sums_ranged(Kernel::Laplacian, &queries, &data, d, &ranges);
+            for (w, c) in want_sums.iter().zip(&cpu_sums) {
+                assert!((w - c).abs() < 2e-3 * (1.0 + c.abs()), "tiled {w} vs cpu {c}");
+            }
+            Case { queries, ranges, want_sums, want_block }
+        })
+        .collect();
+
+    let pooled = TiledBackend::with_threads(4);
+    assert!(pooled.pooled(), "pool execution is the default");
+    let (threads, iters) = (4usize, 1250usize);
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let pooled = &pooled;
+            let cases = &cases;
+            let data = &data;
+            s.spawn(move || {
+                for it in 0..iters {
+                    let c = &cases[(tid * iters + it) % cases.len()];
+                    let got =
+                        pooled.sums_ranged(Kernel::Laplacian, &c.queries, data, d, &c.ranges);
+                    for (q, (g, w)) in got.iter().zip(&c.want_sums).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "thread {tid} iter {it} row {q}: pooled {g} vs reference {w}"
+                        );
+                    }
+                    let got =
+                        pooled.block_ranged(Kernel::Laplacian, &c.queries, data, d, &c.ranges);
+                    for (j, (g, w)) in got.iter().zip(&c.want_block).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "thread {tid} iter {it} value {j}: pooled {g} vs reference {w}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+
+    assert_eq!(pooled.calls(), (threads * iters * 2) as u64, "10k dispatches issued");
+    let metrics = pooled.pool_metrics().expect("pool was exercised");
+    let submitted = metrics.submitted.load(Ordering::Relaxed);
+    let completed = metrics.completed.load(Ordering::Relaxed);
+    assert!(submitted >= 10_000, "soak submitted {submitted} pool tasks");
+    assert_eq!(submitted, completed, "every submitted task completed");
+    assert_eq!(metrics.busy(), 0, "busy gauge returns to zero at quiescence");
+    assert_eq!(metrics.queued_depth(), 0, "queues drained at quiescence");
+    assert_eq!(metrics.task_panics.load(Ordering::Relaxed), 0);
+    assert!(
+        metrics.busy_max.load(Ordering::Relaxed) >= 2,
+        "concurrent submitters must overlap on the pool"
+    );
+}
+
+#[test]
+fn pooled_matches_scoped_spawns_for_every_entry_point() {
+    // The off-switch contract: set_pooled(false) routes the identical
+    // worker-disjoint chunk closures through per-call scoped spawns, so
+    // every entry point — infallible and try_* — is to_bits-identical.
+    let d = 8usize;
+    let mut rng = Rng::new(0x50a2);
+    let pooled = TiledBackend::with_threads(4);
+    let scoped = TiledBackend::with_threads(4);
+    scoped.set_pooled(false);
+    assert!(pooled.pooled() && !scoped.pooled());
+
+    // Two shapes: b >= threads (query split) and b < threads with much
+    // data (the data-split sums path, whose chunk-order partial fold must
+    // also survive the rebase).
+    for (b, m) in [(16usize, 200usize), (2usize, 600usize)] {
+        let queries = rand_buf(&mut rng, b * d);
+        let data = rand_buf(&mut rng, m * d);
+        let ranges: Vec<(usize, usize)> = (0..b)
+            .map(|q| {
+                let lo = (q * 13) % m;
+                (lo, m - (q * 7) % (m - lo))
+            })
+            .collect();
+        for k in [Kernel::Gaussian, Kernel::Laplacian] {
+            let a = pooled.sums(k, &queries, &data, d);
+            let c = scoped.sums(k, &queries, &data, d);
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?} sums b={b}");
+            }
+            let a = pooled.block(k, &queries, &data, d);
+            let c = scoped.block(k, &queries, &data, d);
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?} block b={b}");
+            }
+            let a = pooled.sums_ranged(k, &queries, &data, d, &ranges);
+            let c = scoped.sums_ranged(k, &queries, &data, d, &ranges);
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?} sums_ranged b={b}");
+            }
+            let a = pooled.block_ranged(k, &queries, &data, d, &ranges);
+            let c = scoped.block_ranged(k, &queries, &data, d, &ranges);
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?} block_ranged b={b}");
+            }
+            // try_* forms ride the same execution paths.
+            let a = pooled.try_sums(k, &queries, &data, d).expect("healthy backend");
+            let c = scoped.try_sums(k, &queries, &data, d).expect("healthy backend");
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?} try_sums b={b}");
+            }
+            let a = pooled
+                .try_sums_ranged(k, &queries, &data, d, &ranges)
+                .expect("healthy backend");
+            let c = scoped
+                .try_sums_ranged(k, &queries, &data, d, &ranges)
+                .expect("healthy backend");
+            for (x, y) in a.iter().zip(&c) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?} try_sums_ranged b={b}");
+            }
+        }
+    }
+
+    // Toggling back re-enters the (still-live) pool with identical output.
+    scoped.set_pooled(true);
+    let queries = rand_buf(&mut rng, 12 * d);
+    let data = rand_buf(&mut rng, 90 * d);
+    let a = pooled.sums(Kernel::Laplacian, &queries, &data, d);
+    let c = scoped.sums(Kernel::Laplacian, &queries, &data, d);
+    for (x, y) in a.iter().zip(&c) {
+        assert_eq!(x.to_bits(), y.to_bits(), "re-pooled toggle");
+    }
+}
+
+#[test]
+fn worker_panic_maps_to_typed_error_and_pool_stays_serviceable() {
+    // A panic inside a pool task crosses run_scoped back onto the caller
+    // and the standard catch_panic isolation boundary (the exact boundary
+    // the KernelBackend try_* defaults use) turns it into the typed
+    // BackendError::Panicked — with the pool fully serviceable after.
+    let pool = WorkerPool::new(PoolConfig::with_workers(3));
+    let before = pool.workers();
+    let err = catch_panic(|| {
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("tile chunk exploded")),
+            Box::new(|| {}),
+        ];
+        pool.run_scoped(tasks);
+    });
+    match err {
+        Err(BackendError::Panicked { message }) => {
+            assert!(message.contains("exploded"), "payload preserved: {message}")
+        }
+        other => panic!("want BackendError::Panicked, got {other:?}"),
+    }
+    // Containment: no worker thread died, the next batch runs clean.
+    assert_eq!(pool.workers(), before, "worker threads survive contained panics");
+    assert_eq!(pool.metrics().task_panics.load(Ordering::Relaxed), 1);
+    let hits = AtomicU64::new(0);
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+        .map(|_| {
+            let h = &hits;
+            Box::new(move || {
+                h.fetch_add(1, Ordering::Relaxed);
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    pool.run_scoped(tasks);
+    assert_eq!(hits.load(Ordering::Relaxed), 8, "pool serviceable after panic");
+    assert_eq!(pool.metrics().busy(), 0);
+}
+
+#[test]
+fn chaos_schedules_over_pooled_backend_yield_typed_errors() {
+    // FaultInjectingBackend panic/transient schedules over a POOLED tiled
+    // backend: scheduled calls surface as typed errors at the try_*
+    // boundary, unscheduled calls stay bit-exact, and the pooled backend
+    // underneath keeps serving across the whole storm.
+    let d = 8usize;
+    let mut rng = Rng::new(0x50a3);
+    let queries = rand_buf(&mut rng, 8 * d);
+    let data = rand_buf(&mut rng, 96 * d);
+    let ranges: Vec<(usize, usize)> = (0..8).map(|q| (q * 4, 96 - q * 3)).collect();
+    let tiled = TiledBackend::with_threads(4);
+    let want = tiled.sums_ranged(Kernel::Laplacian, &queries, &data, d, &ranges);
+
+    for mode in [FaultMode::Transient, FaultMode::Panic] {
+        let plan = FaultPlan::fail_every(3).with_mode(mode);
+        let chaos = FaultInjectingBackend::new(tiled.clone(), plan);
+        let mut failures = 0u64;
+        for call in 0..12u64 {
+            // Panic-mode gate fires on the submitting thread; wrap the
+            // dispatch in the same catch_panic boundary MultiLevelKde's
+            // fallible path uses so both modes land as typed errors.
+            let got = catch_panic(|| {
+                chaos.try_sums_ranged(Kernel::Laplacian, &queries, &data, d, &ranges)
+            })
+            .and_then(|r| r);
+            if (call + 1) % 3 == 0 {
+                match got {
+                    Err(BackendError::Panicked { message }) => {
+                        assert_eq!(mode, FaultMode::Panic, "panic only in panic mode");
+                        assert!(message.contains("injected fault"), "got: {message}");
+                    }
+                    Err(BackendError::ExecutionFailed { transient, .. }) => {
+                        assert_eq!(mode, FaultMode::Transient);
+                        assert!(transient, "transient schedule marks errors retryable");
+                    }
+                    other => panic!("call {call}: want typed error, got {other:?}"),
+                }
+                failures += 1;
+            } else {
+                let got = got.unwrap_or_else(|e| panic!("call {call} should pass: {e}"));
+                for (g, w) in got.iter().zip(&want) {
+                    assert_eq!(g.to_bits(), w.to_bits(), "passing calls stay bit-exact");
+                }
+            }
+        }
+        assert_eq!(failures, 4);
+        assert_eq!(chaos.injected(), 4, "deterministic schedule");
+    }
+
+    // The pool below the storm never saw a fault (the gate fires before
+    // the inner backend) and is still healthy.
+    let metrics = tiled.pool_metrics().expect("pool was exercised");
+    assert_eq!(metrics.task_panics.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.busy(), 0);
+    assert_eq!(metrics.queued_depth(), 0);
+    let again = tiled.sums_ranged(Kernel::Laplacian, &queries, &data, d, &ranges);
+    for (g, w) in again.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits(), "pool healthy after the storm");
+    }
+}
+
+#[test]
+fn drop_with_queued_backlog_drains_every_task() {
+    // Shutdown contract: Drop flags shutdown, rings the doorbell and
+    // joins; workers drain every queued task before exiting. A slow head
+    // task guarantees a real backlog exists at drop time.
+    let done = Arc::new(AtomicU64::new(0));
+    {
+        let pool = WorkerPool::new(PoolConfig::with_workers(2));
+        for i in 0..128u64 {
+            let d = Arc::clone(&done);
+            pool.submit(Box::new(move || {
+                if i < 2 {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                d.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        // Drop joins here with most of the backlog still queued.
+    }
+    assert_eq!(done.load(Ordering::Relaxed), 128, "drop drains the shards");
+}
+
+#[test]
+fn backend_drop_with_live_pool_does_not_hang() {
+    // TiledBackend owns its pool through a OnceLock; dropping the backend
+    // right after a dispatch must join the workers cleanly. The test's
+    // completion IS the assertion (a hang trips the harness timeout).
+    let mut rng = Rng::new(0x50a4);
+    let queries = rand_buf(&mut rng, 8 * 4);
+    let data = rand_buf(&mut rng, 64 * 4);
+    for _ in 0..8 {
+        let be = TiledBackend::with_threads(3);
+        let s = be.sums(Kernel::Gaussian, &queries, &data, 4);
+        assert_eq!(s.len(), 8);
+        drop(be);
+    }
+}
+
+#[test]
+fn steal_counter_moves_under_skewed_load() {
+    // Load shape that forces stealing: the first task (shard 0) sleeps
+    // while 40 quick tasks round-robin onto all shards. Workers 1..3
+    // drain their own shards FIFO, then steal shard 0's backlog LIFO —
+    // the steals counter must move, and the gauges must return to zero.
+    let pool = WorkerPool::new(PoolConfig::with_workers(4));
+    let hits = AtomicU64::new(0);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::new();
+    tasks.push(Box::new(|| std::thread::sleep(std::time::Duration::from_millis(100))));
+    for _ in 0..40 {
+        let h = &hits;
+        tasks.push(Box::new(move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        }));
+    }
+    pool.run_scoped(tasks);
+    assert_eq!(hits.load(Ordering::Relaxed), 40);
+    let m = pool.metrics();
+    assert_eq!(m.submitted.load(Ordering::Relaxed), 41);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 41);
+    assert!(m.steals() >= 1, "skewed load must trigger LIFO steals: {}", m.summary());
+    assert!(m.queued_max.load(Ordering::Relaxed) >= 1, "backlog existed");
+    assert_eq!(m.busy(), 0, "busy gauge zero at quiescence");
+    assert_eq!(m.queued_depth(), 0, "queued gauge zero at quiescence");
+}

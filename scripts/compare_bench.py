@@ -31,7 +31,14 @@ bench_kde`) against the committed baseline and fails on
   * a fused-block regression: the fresh `block_fusion` object (LRA-shaped
     row construction through planner-chunked `block_ranged`) must keep
     `peak_rows_chunked <= 64` (the B-row submission cap) and
-    `dispatches_chunked <= ceil(s / 64)`.
+    `dispatches_chunked <= ceil(s / 64)`;
+  * an executor regression: the fresh `executor` object (256 small fused
+    `sums_ranged` dispatches at n = 4096 on the persistent sharded worker
+    pool vs per-call scoped spawns) must keep `pooled_speedup` at or above
+    EXECUTOR_POOL_FLOOR (default 1.0: the pool must at least match
+    per-dispatch thread spawning — a within-run ratio, so it is enforced
+    on every fresh run regardless of baseline provenance). The object
+    also carries the pool busy/queued/steal counters for the trajectory.
 
 Baseline provenance is the `"baseline"` field: `"measured"` (written by
 every `cargo bench --bench bench_kde` run) arms the full per-series
@@ -280,6 +287,30 @@ def main(argv):
                 f"ceil(s/64) = {chunk_bound}")
     else:
         failures.append("fresh run is missing the `block_fusion` series")
+
+    # 3d. The persistent worker pool must not lose to per-dispatch thread
+    # spawning at the small-fused-dispatch shape. Within-run ratio:
+    # enforced on every fresh run, baseline or not.
+    pool_floor = float(os.environ.get("EXECUTOR_POOL_FLOOR", "1.0"))
+    execu = fresh.get("executor")
+    if execu:
+        speedup = execu["pooled_speedup"]
+        print(f"executor (n={execu['n']}, b={execu['b']}, "
+              f"{execu['dispatches']} dispatches, {execu['threads']} threads): "
+              f"scoped {execu['dispatch_us_scoped']}us -> pooled "
+              f"{execu['dispatch_us_pooled']}us ({speedup:.2f}x, floor "
+              f"{pool_floor:.2f}x); pool busy_max {execu['pool_busy_max']} "
+              f"queued_max {execu['pool_queued_max']} steals "
+              f"{execu['pool_steals']} submitted {execu['pool_submitted']} "
+              f"inline {execu['pool_inline_runs']}")
+        if speedup < pool_floor:
+            failures.append(
+                f"executor regression: pooled execution at {speedup:.2f}x "
+                f"scoped spawns is below the {pool_floor:.2f}x floor "
+                f"({execu['dispatch_us_scoped']}us scoped vs "
+                f"{execu['dispatch_us_pooled']}us pooled)")
+    else:
+        failures.append("fresh run is missing the `executor` series")
 
     # 4. Per-series throughput vs the baseline. Absolute pairs/sec only
     # compares meaningfully between like hosts: shared CI runners are

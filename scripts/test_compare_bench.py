@@ -18,7 +18,8 @@ import compare_bench  # noqa: E402
 
 
 def backend_doc(pairs_per_sec=1.0e9, simd_ratio=1.5, isa="avx2",
-                baseline="measured", drop_series=(), drop_fusion=()):
+                baseline="measured", pooled_speedup=1.4,
+                drop_series=(), drop_fusion=()):
     """A complete, passing BENCH_backend.json document."""
     results = []
     for kernel in compare_bench.KERNELS:
@@ -51,6 +52,14 @@ def backend_doc(pairs_per_sec=1.0e9, simd_ratio=1.5, isa="avx2",
                          "peak_rows_chunked": 64,
                          "peak_rows_monolithic": 160,
                          "block_us_chunked": 10, "block_us_monolithic": 10},
+        "executor": {"n": 4096, "b": 64, "d": 16, "threads": 4,
+                     "dispatches": 256,
+                     "dispatch_us_pooled": int(100 / pooled_speedup),
+                     "dispatch_us_scoped": 100,
+                     "pooled_speedup": pooled_speedup,
+                     "pool_busy_max": 4, "pool_queued_max": 7,
+                     "pool_steals": 12, "pool_submitted": 1024,
+                     "pool_inline_runs": 0},
         "results": results,
     }
     for key in drop_fusion:
@@ -161,6 +170,30 @@ def _():
     # per-series comparison is skipped, within-run gates still pass.
     assert run(backend_doc(isa="avx2"),
                backend_doc(isa="neon", pairs_per_sec=0.8e9)) == 0
+
+
+@case("backend: missing executor object fails")
+def _():
+    assert run(backend_doc(), backend_doc(drop_fusion=("executor",))) == 1
+
+
+@case("backend: pool losing to scoped spawns fails the default floor")
+def _():
+    # pooled_speedup < 1.0: the persistent pool is slower than spawning
+    # threads per dispatch — a within-run gate, so it fails even on a
+    # bootstrap baseline.
+    bootstrap = {"bench": "backend_sums", "baseline": "bootstrap",
+                 "isa_detected": "unmeasured", "results": []}
+    assert run(bootstrap, backend_doc(pooled_speedup=0.85)) == 1
+
+
+@case("backend: executor floor is tunable via EXECUTOR_POOL_FLOOR")
+def _():
+    doc = backend_doc(pooled_speedup=1.4)
+    assert run(backend_doc(), doc,
+               env={"EXECUTOR_POOL_FLOOR": "2.0"}) == 1
+    assert run(backend_doc(), doc,
+               env={"EXECUTOR_POOL_FLOOR": "1.2"}) == 0
 
 
 # ---------------------------------------------------------------- serving
