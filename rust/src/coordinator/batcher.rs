@@ -39,9 +39,7 @@
 //! per-level row counts far below B) share padded submissions instead of
 //! closing one at every level boundary.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, SyncSender};
-use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
@@ -50,6 +48,9 @@ use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
 use crate::runtime::error::{catch_panic, BackendError};
+use crate::runtime::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::runtime::sync::mpsc::{self, Receiver, SyncSender};
+use crate::runtime::sync::{self, Arc, Mutex, PoisonError};
 
 /// One fusable query group handed to [`plan_level_fusion`]: `rows`
 /// cache-miss query rows that all attend to the same `seg_rows`-row data
@@ -322,7 +323,7 @@ pub struct OverlapSession {
 
 struct SessionHandle {
     tx: SyncSender<SessionJob>,
-    worker: std::thread::JoinHandle<()>,
+    worker: sync::thread::JoinHandle<()>,
 }
 
 /// One round's erased pack loop plus the caller-release signal.
@@ -365,19 +366,17 @@ impl Drop for DoneGuard {
 
 fn spawn_session_worker() -> Option<SessionHandle> {
     let (tx, rx) = mpsc::sync_channel::<SessionJob>(1);
-    std::thread::Builder::new()
-        .name("kde-overlap".into())
-        .spawn(move || {
-            while let Ok(job) = rx.recv() {
-                // Pack panics are already caught inside the job; this
-                // outer guard keeps the session thread alive against
-                // anything else, so one bad round never degrades the
-                // session for the rounds after it.
-                let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()));
-            }
-        })
-        .ok()
-        .map(|worker| SessionHandle { tx, worker })
+    sync::thread::spawn_named("kde-overlap", move || {
+        while let Ok(job) = rx.recv() {
+            // Pack panics are already caught inside the job; this
+            // outer guard keeps the session thread alive against
+            // anything else, so one bad round never degrades the
+            // session for the rounds after it.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run()));
+        }
+    })
+    .ok()
+    .map(|worker| SessionHandle { tx, worker })
 }
 
 impl Default for OverlapSession {
@@ -1765,6 +1764,77 @@ mod tests {
                 assert!((got - want).abs() < 1e-6 * (1.0 + want));
             }
             svc.shutdown();
+        });
+    }
+}
+
+// Model-check suite for the overlap-session handoff, run only by the
+// loom CI leg (`RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`).
+// The two properties loom pins exhaustively are exactly the ones the
+// SAFETY comment in `try_run` relies on: the erased payload drops on the
+// session thread strictly BEFORE the caller is released, and a full
+// epoch round-trip (spawn, pack handoff, execute, drop-join) can never
+// deadlock or reorder under any interleaving.
+#[cfg(all(loom, test))]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod loom_tests {
+    use super::*;
+
+    /// SessionJob's Drop-order contract: in every interleaving, by the
+    /// time `done` is observable on the caller the payload (and every
+    /// erased borrow inside it) has already been dropped on the worker.
+    #[test]
+    fn loom_session_job_drops_payload_before_done() {
+        loom::model(|| {
+            let dropped = Arc::new(AtomicBool::new(false));
+            struct SetOnDrop(Arc<AtomicBool>);
+            impl Drop for SetOnDrop {
+                fn drop(&mut self) {
+                    self.0.store(true, Ordering::Release);
+                }
+            }
+            let guard = SetOnDrop(Arc::clone(&dropped));
+            let (done_tx, done_rx) = mpsc::sync_channel::<()>(1);
+            let job = SessionJob {
+                payload: Some(Box::new(move || {
+                    // `guard` drops when this closure is consumed.
+                    let _hold = &guard;
+                })),
+                done: Some(done_tx),
+            };
+            let t = sync::thread::spawn(move || job.run());
+            done_rx.recv().unwrap();
+            assert!(
+                dropped.load(Ordering::Acquire),
+                "payload must drop before the done signal"
+            );
+            t.join().unwrap();
+        });
+    }
+
+    /// Full epoch handoff: lazy worker spawn, pipelined pack/execute over
+    /// the bounded channel, result order, and the Drop join — explored
+    /// across every caller/worker interleaving.
+    #[test]
+    fn loom_session_epoch_handoff() {
+        loom::model(|| {
+            let session = OverlapSession::new();
+            let data = [10u64, 20, 30];
+            let out = {
+                let _epoch = session.epoch();
+                session
+                    .try_run(
+                        vec![0usize, 1, 2],
+                        |i| data[i],
+                        |p| Ok::<u64, BackendError>(p + 1),
+                    )
+                    .unwrap()
+            };
+            assert_eq!(out, vec![11, 21, 31]);
+            assert_eq!(session.rounds(), 1);
+            assert_eq!(session.fallbacks(), 0);
+            // `session` drops here: the model also verifies the
+            // close-channel + join shutdown cannot hang.
         });
     }
 }

@@ -151,6 +151,7 @@ impl Kde for SamplingKde {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;

@@ -17,7 +17,7 @@
 //! (paper Table 1 lists the theoretical tau^0.5 variant).
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
@@ -124,7 +124,9 @@ impl Kde for HbeKde {
             // Lock only for the draw itself; the hash probes and kernel
             // evals (the actual work) run outside the critical section.
             let z = {
-                let mut rng = self.rng.lock().unwrap();
+                // Poison recovery: the RNG state is a plain counter, valid
+                // after any panic elsewhere.
+                let mut rng = self.rng.lock().unwrap_or_else(PoisonError::into_inner);
                 bucket[rng.below(bucket.len())]
             };
             let zx = self.ds.point(z);
@@ -159,6 +161,7 @@ impl Kde for HbeKde {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;

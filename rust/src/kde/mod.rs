@@ -21,6 +21,7 @@
 //! query groups into one fused backend dispatch per level (see
 //! [`MultiLevelKde::query_points_multi`] and `docs/ARCHITECTURE.md`).
 #![warn(missing_docs)]
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod estimators;
 pub mod hbe;
@@ -200,6 +201,7 @@ impl KdeConfig {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

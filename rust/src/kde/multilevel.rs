@@ -43,7 +43,7 @@
 //! entry points are thin panicking wrappers.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::util::fxhash::FxHashMap;
 
@@ -75,6 +75,22 @@ pub struct Node {
     pub right: Option<usize>,
 }
 
+impl Node {
+    /// Both child ids of an internal node.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a single-point leaf. The samplers only descend while
+    /// `hi - lo > 1`, and `build_rec` splits every range of two or more
+    /// points, so on every descent path both children exist.
+    pub fn children(&self) -> (usize, usize) {
+        match (self.left, self.right) {
+            (Some(l), Some(r)) => (l, r),
+            _ => unreachable!("children() called on a single-point leaf"),
+        }
+    }
+}
+
 /// Sharded (node, point) -> answer memo table; safely `Sync`.
 struct ShardedCache {
     shards: Vec<Mutex<FxHashMap<(u32, u32), f64>>>,
@@ -97,19 +113,30 @@ impl ShardedCache {
 
     #[inline]
     fn get(&self, key: (u32, u32)) -> Option<f64> {
-        self.shard(key).lock().unwrap().get(&key).copied()
+        // Poison recovery: a panicked writer leaves at worst a missing
+        // entry, never a torn one (f64 inserts are single-step).
+        self.shard(key)
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(&key)
+            .copied()
     }
 
     /// Insert unless present; returns the value that ended up cached (the
     /// first writer's), which the caller must report for consistency.
     #[inline]
     fn insert_or_get(&self, key: (u32, u32), v: f64) -> f64 {
-        *self.shard(key).lock().unwrap().entry(key).or_insert(v)
+        *self
+            .shard(key)
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .entry(key)
+            .or_insert(v)
     }
 
     fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            s.lock().unwrap_or_else(PoisonError::into_inner).clear();
         }
     }
 }
@@ -410,7 +437,10 @@ impl MultiLevelKde {
     /// assert_eq!(vals[1].to_bits(), tree.query_point(tree.root(), 7).to_bits());
     /// ```
     pub fn query_points(&self, id: usize, idx: &[usize]) -> Vec<f64> {
-        self.query_points_multi(&[(id, idx)]).pop().expect("one group in, one group out")
+        match self.query_points_multi(&[(id, idx)]).pop() {
+            Some(vals) => vals,
+            None => unreachable!("one group in, one group out"),
+        }
     }
 
     /// Level-fused [`query_points`](Self::query_points) over several
@@ -603,7 +633,10 @@ impl MultiLevelKde {
             .enumerate()
             .map(|(gi, &(_, idx))| {
                 idx.iter()
-                    .map(|&i| resolved[gi][&(i as u32)].expect("every index resolved above"))
+                    .map(|&i| match resolved[gi][&(i as u32)] {
+                        Some(v) => v,
+                        None => unreachable!("every index resolved above"),
+                    })
                     .collect()
             })
             .collect())
@@ -636,6 +669,7 @@ impl MultiLevelKde {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;

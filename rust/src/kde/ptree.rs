@@ -106,9 +106,12 @@ impl PartitionTreeKde {
             }
             let mid = (lo + hi) / 2;
             perm[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
+                // Coordinates are finite by construction (dataset
+                // generators never emit NaN); Equal is a safe total-order
+                // fallback that at worst skews one median pick.
                 ds.point(a)[axis]
                     .partial_cmp(&ds.point(b)[axis])
-                    .unwrap()
+                    .unwrap_or(std::cmp::Ordering::Equal)
             });
             let l = Self::build(ds, perm, lo, mid, leaf_size, nodes, depth + 1);
             let r = Self::build(ds, perm, mid, hi, leaf_size, nodes, depth + 1);
@@ -227,6 +230,7 @@ impl Kde for PartitionTreeKde {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;

@@ -29,6 +29,10 @@
 //! | §6.2 spectral clustering | [`apps::cluster_spectral`] |
 //! | Thm 6.15 arboricity | [`apps::arboricity`] |
 //! | Thm 6.17 weighted triangles | [`apps::triangles`] |
+// Every unsafe block in the crate carries a written `// SAFETY:` contract
+// (docs/ARCHITECTURE.md §Verification matrix); the clippy gate below is
+// enforced by CI's `-D warnings` legs.
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 pub mod apps;
 pub mod coordinator;

@@ -28,6 +28,7 @@ pub mod pjrt;
 pub mod pool;
 pub mod resilient;
 pub mod simd;
+pub mod sync;
 pub mod tiled;
 
 pub use backend::{CpuBackend, KernelBackend};

@@ -133,10 +133,18 @@ mod engine {
         pub executions: AtomicU64,
     }
 
-    // xla::PjRtClient wraps a C++ client that is safe to share for our
-    // compile/execute usage; executions are serialized through the Mutex'd
-    // executable map plus PJRT's own synchronization.
+    // SAFETY: `PjrtEngine` is not auto-Send/Sync only because
+    // `xla::PjRtClient` / `PjRtLoadedExecutable` hold raw pointers into
+    // the C++ runtime. The PJRT C API contract makes both client and
+    // loaded-executable handles safe to use from any thread, and our
+    // usage adds its own serialization on top: every executable is
+    // reached exclusively through the `Mutex`'d `exes` map, compilation
+    // happens under that same lock, and `executions` is atomic. No
+    // `&mut` aliasing of the C++ state is ever exposed.
     unsafe impl Send for PjrtEngine {}
+    // SAFETY: see the Send argument above — shared (`&self`) access only
+    // touches the client through thread-safe PJRT entry points or under
+    // the `exes` lock.
     unsafe impl Sync for PjrtEngine {}
 
     impl PjrtEngine {

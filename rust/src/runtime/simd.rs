@@ -139,7 +139,7 @@ static SCALAR: MicroKernel = MicroKernel {
     exp_neg: scalar::exp_neg,
 };
 
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 static AVX2: MicroKernel = MicroKernel {
     isa: Isa::Avx2,
     dot: avx2::dot,
@@ -148,7 +148,7 @@ static AVX2: MicroKernel = MicroKernel {
     exp_neg: avx2::exp_neg,
 };
 
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 static NEON: MicroKernel = MicroKernel {
     isa: Isa::Neon,
     dot: neon::dot,
@@ -158,8 +158,11 @@ static NEON: MicroKernel = MicroKernel {
 };
 
 /// The AVX2 vtable, if this build targets x86_64 AND the host passes
-/// runtime detection (`is_x86_feature_detected!`).
-#[cfg(target_arch = "x86_64")]
+/// runtime detection (`is_x86_feature_detected!`). Under Miri the
+/// vector paths are reported unavailable — the interpreter cannot
+/// execute the intrinsics — so the Miri CI leg checks the scalar
+/// microkernels and the dispatch logic around them.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 fn avx2_kernel() -> Option<&'static MicroKernel> {
     if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
         Some(&AVX2)
@@ -168,19 +171,20 @@ fn avx2_kernel() -> Option<&'static MicroKernel> {
     }
 }
 
-#[cfg(not(target_arch = "x86_64"))]
+#[cfg(any(not(target_arch = "x86_64"), miri))]
 fn avx2_kernel() -> Option<&'static MicroKernel> {
     None
 }
 
 /// The NEON vtable; aarch64 carries NEON in its baseline, so there is
-/// nothing to runtime-detect beyond the target architecture.
-#[cfg(target_arch = "aarch64")]
+/// nothing to runtime-detect beyond the target architecture (and, as
+/// with AVX2 above, Miri reports it unavailable).
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 fn neon_kernel() -> Option<&'static MicroKernel> {
     Some(&NEON)
 }
 
-#[cfg(not(target_arch = "aarch64"))]
+#[cfg(any(not(target_arch = "aarch64"), miri))]
 fn neon_kernel() -> Option<&'static MicroKernel> {
     None
 }
@@ -296,7 +300,7 @@ mod scalar {
 /// `detect` hand out exclusively after `is_x86_feature_detected!("avx2")`
 /// and `("fma")` both pass, so the `#[target_feature]` functions always
 /// run on a supporting CPU.
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 mod avx2 {
     use std::arch::x86_64::*;
 
@@ -484,7 +488,7 @@ mod avx2 {
 /// NEON, 4 f32 lanes. NEON is part of the aarch64 baseline, so there is
 /// nothing to runtime-detect; the `#[target_feature]` functions are always
 /// safe to execute on this architecture.
-#[cfg(target_arch = "aarch64")]
+#[cfg(all(target_arch = "aarch64", not(miri)))]
 mod neon {
     use std::arch::aarch64::*;
 

@@ -1,0 +1,362 @@
+//! Loom-swappable synchronization facade: the single place the
+//! concurrency core imports its primitives from.
+//!
+//! Under a normal build every item here is a zero-cost re-export of the
+//! `std::sync` / `std::thread` original. Under `--cfg loom` (the
+//! model-checking CI leg) the blocking primitives resolve to their
+//! [`loom`](https://docs.rs/loom) twins instead, so the *same* `Doorbell`
+//! / `ScopeLatch` / `OverlapSession` / store code that serves production
+//! traffic is the code the model checker permutes — no shadow
+//! reimplementation that could drift from the real protocol.
+//!
+//! The modules rebased onto this facade — `runtime/pool.rs`,
+//! `coordinator/batcher.rs`, `server/store.rs`, `server/mod.rs` — must
+//! not import `std::sync::Mutex` / `std::sync::Condvar` directly;
+//! `scripts/check_invariants.py` enforces that as a repo invariant. The
+//! `loom_*` unit suites in those modules wrap their scenarios in
+//! `loom::model`, and CI runs them with `RUSTFLAGS="--cfg loom"` and
+//! bounded preemptions (docs/ARCHITECTURE.md §Verification matrix).
+//!
+//! Deliberate deviations, all documented here because they bound what the
+//! model checker can see:
+//!
+//! * [`Arc`] stays `std::sync::Arc` on both paths. Reference counting is
+//!   not part of any modeled protocol (no code branches on strong
+//!   counts), loom threads are real OS threads, and keeping one `Arc`
+//!   type lets untracked shared state (metrics counters) flow through
+//!   unchanged.
+//! * [`wait_with_backstop`] maps to `Condvar::wait_timeout` normally but
+//!   to a plain modeled `wait` under loom: wall-clock timeouts are
+//!   meaningless inside a model, and modeling the backstop as a spurious
+//!   wakeup would mask the lost-wakeup bugs the doorbell suite exists to
+//!   catch — under loom, a missed ring is a *deadlock the checker
+//!   reports*, not a 50ms hiccup.
+//! * [`mpsc`] re-exports `std::sync::mpsc` normally; under loom it is a
+//!   small bounded channel built on the facade's own `Mutex`/`Condvar`
+//!   (std's channel blocks outside the model's knowledge, which would
+//!   wedge the explorer). `recv_timeout` degrades to a plain `recv`
+//!   there — the modeled suites never rely on timeouts firing.
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard};
+
+// Poison plumbing is shared: loom's lock signatures use std's
+// `LockResult`/`PoisonError`, so the repo-wide
+// `.lock().unwrap_or_else(PoisonError::into_inner)` recovery idiom
+// compiles identically on both paths.
+pub use std::sync::{LockResult, PoisonError, TryLockError};
+
+// See the module docs: `Arc` is std on both paths, by design.
+pub use std::sync::Arc;
+
+/// Atomics: std normally, loom-instrumented under the model checker.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{fence, AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Thread spawning: std normally, loom's cooperative threads under the
+/// model checker.
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, JoinHandle};
+
+    /// Spawn a named thread. Thread names are a debugging affordance
+    /// (panic messages, `/proc`, TSan reports); loom has no `Builder`, so
+    /// under the model the name is dropped and the spawn is infallible —
+    /// callers keep one code path and their spawn-failure fallbacks are
+    /// still exercised by the std build.
+    pub fn spawn_named<F, T>(name: &str, f: F) -> std::io::Result<JoinHandle<T>>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        #[cfg(not(loom))]
+        {
+            std::thread::Builder::new().name(name.to_string()).spawn(f)
+        }
+        #[cfg(loom)]
+        {
+            let _ = name;
+            Ok(spawn(f))
+        }
+    }
+}
+
+/// Condvar wait with a wall-clock backstop: `(guard, timed_out)`.
+///
+/// Normal build: `Condvar::wait_timeout`, poison-recovered — the caller's
+/// loop re-checks its predicate either way, so the backstop only bounds
+/// how long a (theoretically impossible) missed wakeup could stall
+/// shutdown or a steal. Under loom: a plain modeled `wait` that never
+/// reports a timeout — if the protocol truly can miss a wakeup, the model
+/// deadlocks and the checker fails the suite with the schedule that did
+/// it, which is the whole point of the leg.
+pub fn wait_with_backstop<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    backstop: std::time::Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    #[cfg(not(loom))]
+    {
+        let (g, res) = match cv.wait_timeout(guard, backstop) {
+            Ok(pair) => pair,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        (g, res.timed_out())
+    }
+    #[cfg(loom)]
+    {
+        let _ = backstop;
+        let g = match cv.wait(guard) {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        (g, false)
+    }
+}
+
+#[cfg(not(loom))]
+pub use std::sync::mpsc;
+
+/// Bounded mpsc channel for the loom build, implemented on the facade's
+/// own (loom-instrumented) `Mutex` + `Condvar` so the model checker can
+/// permute every send/recv interleaving. API-compatible with the
+/// `std::sync::mpsc` subset the rebased modules use; error types are the
+/// std originals so match arms compile unchanged. `recv_timeout` never
+/// times out under the model (see the module docs).
+#[cfg(loom)]
+pub mod mpsc {
+    pub use std::sync::mpsc::{
+        RecvError, RecvTimeoutError, SendError, TryRecvError, TrySendError,
+    };
+
+    use std::collections::VecDeque;
+    use std::time::Duration;
+
+    use super::{Arc, Condvar, Mutex, PoisonError};
+
+    struct State<T> {
+        buf: VecDeque<T>,
+        /// `None` = "unbounded" (`channel()`); `Some(cap)` = rendezvous
+        /// buffer of `sync_channel(cap)`.
+        cap: Option<usize>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Chan<T> {
+        state: Mutex<State<T>>,
+        cv: Condvar,
+    }
+
+    impl<T> Chan<T> {
+        fn locked(&self) -> super::MutexGuard<'_, State<T>> {
+            self.state.lock().unwrap_or_else(PoisonError::into_inner)
+        }
+    }
+
+    /// Sending half; `Clone` to add producers.
+    pub struct SyncSender<T> {
+        chan: Arc<Chan<T>>,
+    }
+
+    /// `channel()`'s sender is the same type under the model; the only
+    /// behavioral difference from std (an unbounded `send` can block on
+    /// the loom buffer bound) is invisible to code that is correct.
+    pub type Sender<T> = SyncSender<T>;
+
+    /// Receiving half (single consumer).
+    pub struct Receiver<T> {
+        chan: Arc<Chan<T>>,
+    }
+
+    /// Unbounded-in-std channel: stays unbounded here too (`cap: None`) —
+    /// loom models push a handful of items, so the buffer is finite in
+    /// practice and sends never block.
+    pub fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        make(None)
+    }
+
+    /// Bounded channel; `sync_channel(0)` is modeled as capacity 1 (a
+    /// true rendezvous adds nothing to the protocols under test, which
+    /// all use cap >= 1).
+    pub fn sync_channel<T>(cap: usize) -> (SyncSender<T>, Receiver<T>) {
+        make(Some(cap.max(1)))
+    }
+
+    fn make<T>(cap: Option<usize>) -> (SyncSender<T>, Receiver<T>) {
+        let chan = Arc::new(Chan {
+            state: Mutex::new(State {
+                buf: VecDeque::new(),
+                cap,
+                senders: 1,
+                rx_alive: true,
+            }),
+            cv: Condvar::new(),
+        });
+        (SyncSender { chan: Arc::clone(&chan) }, Receiver { chan })
+    }
+
+    impl<T> Clone for SyncSender<T> {
+        fn clone(&self) -> Self {
+            self.chan.locked().senders += 1;
+            SyncSender { chan: Arc::clone(&self.chan) }
+        }
+    }
+
+    impl<T> Drop for SyncSender<T> {
+        fn drop(&mut self) {
+            let mut st = self.chan.locked();
+            st.senders -= 1;
+            if st.senders == 0 {
+                drop(st);
+                self.chan.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            self.chan.locked().rx_alive = false;
+            self.chan.cv.notify_all();
+        }
+    }
+
+    impl<T> SyncSender<T> {
+        /// Blocking send; errors once the receiver is gone.
+        pub fn send(&self, t: T) -> Result<(), SendError<T>> {
+            let mut st = self.chan.locked();
+            loop {
+                if !st.rx_alive {
+                    return Err(SendError(t));
+                }
+                let full = st.cap.is_some_and(|c| st.buf.len() >= c);
+                if !full {
+                    st.buf.push_back(t);
+                    drop(st);
+                    self.chan.cv.notify_all();
+                    return Ok(());
+                }
+                let (g, _) = super::wait_with_backstop(
+                    &self.chan.cv,
+                    st,
+                    Duration::from_millis(50),
+                );
+                st = g;
+            }
+        }
+
+        /// Non-blocking send.
+        pub fn try_send(&self, t: T) -> Result<(), TrySendError<T>> {
+            let mut st = self.chan.locked();
+            if !st.rx_alive {
+                return Err(TrySendError::Disconnected(t));
+            }
+            if st.cap.is_some_and(|c| st.buf.len() >= c) {
+                return Err(TrySendError::Full(t));
+            }
+            st.buf.push_back(t);
+            drop(st);
+            self.chan.cv.notify_all();
+            Ok(())
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Blocking receive; errors once every sender is gone and the
+        /// buffer is drained.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut st = self.chan.locked();
+            loop {
+                if let Some(t) = st.buf.pop_front() {
+                    drop(st);
+                    self.chan.cv.notify_all();
+                    return Ok(t);
+                }
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                let (g, _) = super::wait_with_backstop(
+                    &self.chan.cv,
+                    st,
+                    Duration::from_millis(50),
+                );
+                st = g;
+            }
+        }
+
+        /// Non-blocking receive.
+        pub fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut st = self.chan.locked();
+            if let Some(t) = st.buf.pop_front() {
+                drop(st);
+                self.chan.cv.notify_all();
+                return Ok(t);
+            }
+            if st.senders == 0 {
+                return Err(TryRecvError::Disconnected);
+            }
+            Err(TryRecvError::Empty)
+        }
+
+        /// Under the model: a plain [`recv`](Self::recv) — timeouts never
+        /// fire (no modeled suite relies on them; non-modeled code is
+        /// never *run* under loom, only compiled).
+        pub fn recv_timeout(&self, _timeout: Duration) -> Result<T, RecvTimeoutError> {
+            self.recv().map_err(|RecvError| RecvTimeoutError::Disconnected)
+        }
+
+        /// Blocking iterator over received values, ending at disconnect.
+        pub fn iter(&self) -> Iter<'_, T> {
+            Iter { rx: self }
+        }
+    }
+
+    /// Iterator behind [`Receiver::iter`].
+    pub struct Iter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for Iter<'_, T> {
+        type Item = T;
+
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn wait_with_backstop_reports_timeout_on_std() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (_g, timed_out) = wait_with_backstop(&cv, g, Duration::from_millis(1));
+        assert!(timed_out, "nobody notifies: the backstop must fire");
+    }
+
+    #[test]
+    fn spawn_named_names_the_thread() {
+        let h = thread::spawn_named("kde-sync-test", || {
+            std::thread::current().name().map(str::to_string)
+        })
+        .unwrap();
+        assert_eq!(h.join().unwrap().as_deref(), Some("kde-sync-test"));
+    }
+}

@@ -180,7 +180,11 @@ impl EdgeSampler {
             };
             for (ki, &k) in keep.iter().enumerate() {
                 let (u, p_u) = degree[k];
-                let s = samples[k].expect("kept samples are Some");
+                let s = match samples[k] {
+                    Some(s) => s,
+                    // `keep` holds exactly the Some indices collected above.
+                    None => unreachable!("kept samples are Some"),
+                };
                 let v = s.neighbor;
                 let p_v = self.degrees.prob(v);
                 out[k] = Some(EdgeSample { u, v, prob: p_u * s.prob + p_v * q_vu[ki] });
@@ -198,6 +202,7 @@ impl EdgeSampler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kde::multilevel::MultiLevelKde;

@@ -12,6 +12,7 @@
 //! A [`Primitives`] bundle wires them together for the applications.
 
 #![warn(missing_docs)]
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod edge;
 pub mod neighbor;
@@ -86,6 +87,7 @@ impl Primitives {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;

@@ -236,10 +236,7 @@ impl NeighborSampler {
                 let (j, p) = self.leaf_finish(id, i, rng)?;
                 return Some(NeighborSample { neighbor: j, prob: prob * p });
             }
-            let (l, r) = (
-                node.left.expect("internal node"),
-                node.right.expect("internal node"),
-            );
+            let (l, r) = node.children();
             let a = self.side_mass(l, i);
             let b = self.side_mass(r, i);
             let (next, p) = self.branch(l, r, i, a, b, rng)?;
@@ -282,8 +279,7 @@ impl NeighborSampler {
             if node.hi - node.lo > finish {
                 let srcs: Vec<usize> =
                     active[g0..g1].iter().map(|&(w, _, _)| source_of(w)).collect();
-                let l = node.left.expect("internal node");
-                let r = node.right.expect("internal node");
+                let (l, r) = node.children();
                 qgroups.push((l, srcs.clone()));
                 qgroups.push((r, srcs));
             }
@@ -355,8 +351,7 @@ impl NeighborSampler {
                             .map(|(j, p)| NeighborSample { neighbor: j, prob: prob * p });
                     }
                 } else {
-                    let l = node.left.expect("internal node");
-                    let r = node.right.expect("internal node");
+                    let (l, r) = node.children();
                     let (raw_l, raw_r) = (&answers[qi], &answers[qi + 1]);
                     qi += 2;
                     for (gi, &(w, _, prob)) in group.iter().enumerate() {
@@ -388,10 +383,7 @@ impl NeighborSampler {
             if node.hi - node.lo <= finish {
                 return prob * self.leaf_prob_factor(id, i, j);
             }
-            let (l, r) = (
-                node.left.expect("internal node"),
-                node.right.expect("internal node"),
-            );
+            let (l, r) = node.children();
             let a = self.side_mass(l, i);
             let b = self.side_mass(r, i);
             let total = a + b;
@@ -448,8 +440,7 @@ impl NeighborSampler {
                         out[w] = prob * self.leaf_prob_factor(id, i, j);
                     }
                 } else {
-                    let l = node.left.expect("internal node");
-                    let r = node.right.expect("internal node");
+                    let (l, r) = node.children();
                     let (raw_l, raw_r) = (&answers[qi], &answers[qi + 1]);
                     qi += 2;
                     let nl = self.tree.node(l);
@@ -525,8 +516,7 @@ impl NeighborSampler {
                 if node.hi - node.lo <= finish {
                     break;
                 }
-                let l = node.left.expect("internal node");
-                let r = node.right.expect("internal node");
+                let (l, r) = node.children();
                 let nl = self.tree.node(l);
                 let goes_left = nl.lo <= j && j < nl.hi;
                 path.push((l, r, goes_left));
@@ -648,6 +638,7 @@ impl NeighborSampler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kde::{KdeConfig, KdeCounters};

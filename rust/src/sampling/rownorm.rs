@@ -32,9 +32,11 @@ impl RowNormSampler {
         backend: Arc<dyn KernelBackend>,
         counters: Arc<KdeCounters>,
     ) -> Self {
-        let c = kernel
-            .square_scale()
-            .expect("kernel does not satisfy k^2(x,y) = k(cx,cy)");
+        // A real precondition (§5.2 needs the cX trick), not an internal
+        // invariant: fail loudly with the requirement spelled out.
+        let Some(c) = kernel.square_scale() else {
+            panic!("kernel does not satisfy k^2(x,y) = k(cx,cy)");
+        };
         let scaled = Arc::new(ds.scaled(c));
         let tree = MultiLevelKde::build(scaled, kernel, cfg, backend, counters.clone());
         let before = counters.queries();
@@ -72,6 +74,7 @@ impl RowNormSampler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kernel::dataset::gaussian_mixture;

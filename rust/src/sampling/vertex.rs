@@ -36,7 +36,11 @@ impl PrefixSampler {
 
     /// Sum of all weights.
     pub fn total(&self) -> f64 {
-        *self.prefix.last().unwrap()
+        match self.prefix.last() {
+            Some(&t) => t,
+            // `new` always pushes the leading 0.0, so prefix is nonempty.
+            None => unreachable!("prefix always holds the leading 0.0"),
+        }
     }
 
     /// Weight of index `i`.
@@ -132,6 +136,7 @@ impl DegreeSampler {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kde::{KdeConfig, KdeCounters};

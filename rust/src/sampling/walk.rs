@@ -146,7 +146,11 @@ impl RandomWalker {
     pub fn trajectory_batch(&self, starts: &[usize], t: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
         self.run_frontier(starts, t, rng, true)
             .into_iter()
-            .map(|(_, path)| path.expect("recording was requested"))
+            .map(|(_, path)| match path {
+                Some(p) => p,
+                // `record = true` above makes the engine keep every path.
+                None => unreachable!("recording was requested"),
+            })
             .collect()
     }
 
@@ -224,8 +228,7 @@ impl RandomWalker {
                 }
                 let node = tree.node(id);
                 if node.hi - node.lo > finish {
-                    let l = node.left.expect("internal node");
-                    let r = node.right.expect("internal node");
+                    let (l, r) = node.children();
                     qgroups.push((l, srcs.clone()));
                     qgroups.push((r, srcs));
                 }
@@ -255,8 +258,7 @@ impl RandomWalker {
                         }
                     }
                 } else {
-                    let l = node.left.expect("internal node");
-                    let r = node.right.expect("internal node");
+                    let (l, r) = node.children();
                     let (raw_l, raw_r) = (&answers[qi], &answers[qi + 1]);
                     qi += 2;
                     for (gi, &wi) in active[a0..a1].iter().enumerate() {
@@ -349,6 +351,7 @@ impl RandomWalker {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::kde::multilevel::MultiLevelKde;

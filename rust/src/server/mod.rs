@@ -63,13 +63,13 @@ pub use registry::{OracleRegistry, RegisteredDataset};
 pub use store::RequestStore;
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{self, Receiver, SyncSender};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::ServiceMetrics;
 use crate::runtime::error::{catch_panic, BackendError};
+use crate::runtime::sync::atomic::Ordering;
+use crate::runtime::sync::mpsc::{self, Receiver, SyncSender};
+use crate::runtime::sync::Arc;
 use crate::sampling::NeighborSample;
 use crate::util::rng::Rng;
 

@@ -19,6 +19,12 @@
 //! backlog to singleton flushes). `max_batch` is a *trigger*, not a cap:
 //! a drain hands back everything pending, and the fused evaluation
 //! downstream packs any count into `ceil(count / 64)` submissions.
+//!
+//! Concurrency: the store itself holds no sync primitives — the router
+//! owns it single-threaded. The `loom_tests` module below model-checks
+//! the one concurrent shape it participates in (shared behind a facade
+//! `Mutex`, producers racing a drainer) on the loom CI leg; see
+//! `runtime::sync` for the facade.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -271,5 +277,74 @@ mod tests {
         s.push("k", 7, t0);
         assert!(s.ready(t0), "zero max_wait: any pending item is flushable");
         assert_eq!(s.drain(), vec![("k".to_string(), vec![7])]);
+    }
+}
+
+// Model-check suite, run only by the loom CI leg
+// (`RUSTFLAGS="--cfg loom" cargo test --release --lib loom_`). The store
+// is deterministic single-threaded; what loom pins is the flush
+// bookkeeping under the one concurrent shape the server exposes it to —
+// a facade Mutex shared between producer threads and a drainer.
+#[cfg(all(loom, test))]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod loom_tests {
+    use super::*;
+    use crate::runtime::sync::{self, Arc, Mutex, PoisonError};
+
+    /// Racing producers on distinct keys: nothing is lost, per-key
+    /// arrival order survives, and the drain empties the store — in
+    /// every interleaving.
+    #[test]
+    fn loom_concurrent_push_and_drain_loses_nothing() {
+        loom::model(|| {
+            let t0 = Instant::now();
+            let store = Arc::new(Mutex::new(RequestStore::<u32>::new(64, Duration::ZERO)));
+            let s2 = Arc::clone(&store);
+            let t = sync::thread::spawn(move || {
+                let mut g = s2.lock().unwrap_or_else(PoisonError::into_inner);
+                g.push("a", 1, t0);
+                g.push("a", 2, t0);
+            });
+            store
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push("b", 3, t0);
+            t.join().unwrap();
+            let mut g = store.lock().unwrap_or_else(PoisonError::into_inner);
+            let mut drained = g.drain();
+            drained.sort_by(|x, y| x.0.cmp(&y.0));
+            let want = vec![("a".to_string(), vec![1, 2]), ("b".to_string(), vec![3])];
+            assert_eq!(drained, want);
+            assert!(g.is_empty(), "drain empties the store");
+        });
+    }
+
+    /// A drainer racing a producer on ONE key: across any number of
+    /// mid-stream drains, every push is handed out exactly once and the
+    /// key's arrival order is preserved end to end.
+    #[test]
+    fn loom_drain_interleaved_with_push_preserves_order() {
+        loom::model(|| {
+            let t0 = Instant::now();
+            let store = Arc::new(Mutex::new(RequestStore::<u32>::new(1, Duration::ZERO)));
+            let s2 = Arc::clone(&store);
+            let t = sync::thread::spawn(move || {
+                for v in 0..2u32 {
+                    s2.lock().unwrap_or_else(PoisonError::into_inner).push("k", v, t0);
+                }
+            });
+            let mut got = Vec::new();
+            for _ in 0..2 {
+                let drained = store.lock().unwrap_or_else(PoisonError::into_inner).drain();
+                for (_, vs) in drained {
+                    got.extend(vs);
+                }
+            }
+            t.join().unwrap();
+            for (_, vs) in store.lock().unwrap_or_else(PoisonError::into_inner).drain() {
+                got.extend(vs);
+            }
+            assert_eq!(got, vec![0, 1], "each push drains exactly once, in order");
+        });
     }
 }

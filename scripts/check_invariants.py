@@ -1,0 +1,235 @@
+#!/usr/bin/env python3
+"""Repo-invariant lint pass over rust/src (CI-blocking; see
+docs/ARCHITECTURE.md §Verification matrix).
+
+Four invariants that rustc/clippy cannot express, each enforced by
+parsing the source tree (stdlib only, no toolchain needed):
+
+I1  try-twins      Every infallible `KernelBackend` dispatch entry (a
+                   trait method taking `kernel: Kernel`) has a fallible
+                   `try_*` twin in the same trait — the failure model's
+                   contract (ARCHITECTURE.md §Failure model).
+I2  spawn-sites    `thread::spawn` / `thread::scope` / `thread::Builder`
+                   appear only in the sanctioned executor modules; every
+                   other module must go through `WorkerPool` or the
+                   batcher session. Test modules are exempt.
+I3  sync-facade    Modules rebased onto `runtime::sync` (the loom facade)
+                   must not import `std::sync::{Mutex, Condvar}` or
+                   `std::sync::mpsc` directly — a direct import silently
+                   drops the primitive out of the loom model.
+I4  no-unwrap      No new `.unwrap()` / `.expect(` in non-test code under
+                   the gated directories. This backstops the per-module
+                   clippy deny gates at a layer that also catches a
+                   module whose gate line was deleted.
+
+Usage:
+    python3 scripts/check_invariants.py [--root DIR]
+
+Exit code 0 when every invariant holds; 1 with one line per violation
+(`file:line: [ID] message`) otherwise.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+# I2: modules allowed to spawn OS threads directly. Everything else uses
+# the pool (runtime/pool.rs) or the batcher's sanctioned session/scope.
+SPAWN_ALLOWLIST = {
+    "runtime/pool.rs",       # the executor itself
+    "runtime/sync.rs",       # the facade's spawn_named shim
+    "runtime/tiled.rs",      # legacy scoped fallback (run_scoped_threads)
+    "coordinator/batcher.rs",  # double-buffered scope + session worker
+    "server/mod.rs",         # the server router thread
+    "server/registry.rs",    # scoped per-dataset build fan-out
+}
+
+# I3: modules rebased onto the runtime::sync facade (ARCHITECTURE.md
+# §Verification matrix). runtime/sync.rs itself is the one place the
+# std primitives may be named.
+REBASED = {
+    "runtime/pool.rs",
+    "coordinator/batcher.rs",
+    "server/store.rs",
+    "server/mod.rs",
+}
+
+# I4: directories whose non-test code must stay unwrap/expect-free.
+GATED_DIRS = ("runtime/", "coordinator/", "server/", "kde/", "sampling/")
+
+SPAWN_RE = re.compile(r"\bthread::(spawn|scope)\s*\(|\bthread::Builder\b")
+UNWRAP_RE = re.compile(r"\.unwrap\(\)|\.expect\(")
+SYNC_IMPORT_RE = re.compile(r"^\s*(?:pub\s+)?use\s+std::sync\b")
+SYNC_PRIMS_RE = re.compile(r"\b(Mutex|Condvar|mpsc|atomic)\b")
+TEST_CFG_RE = re.compile(r"#\[cfg\((?:all\()?[^)]*\btest\b")
+MOD_RE = re.compile(r"^\s*(?:pub\s+)?mod\s+\w+\s*\{")
+
+
+COMMENT_RE = re.compile(r"(?<!:)//")
+
+
+def strip_comments(line):
+    """Drop `//`-to-EOL (incl. doc comments), leaving `://` (URLs inside
+    string literals) alone. Good enough for lint patterns: none of them
+    can occur inside a string literal in this codebase without also
+    occurring as real code."""
+    m = COMMENT_RE.search(line)
+    return line if m is None else line[:m.start()]
+
+
+def test_regions(lines):
+    """Line-index set covered by `#[cfg(test)] mod ... { }` (or any cfg
+    containing `test`, e.g. `#[cfg(all(loom, test))]`) — tracked by brace
+    balance from the `mod` line."""
+    covered = set()
+    i = 0
+    n = len(lines)
+    while i < n:
+        if TEST_CFG_RE.search(strip_comments(lines[i])):
+            # Attributes (allow, cfg_attr, ...) may sit between the cfg
+            # and the mod line; look a few lines ahead.
+            j = i + 1
+            while j < n and j <= i + 4 and not MOD_RE.search(lines[j]):
+                if not lines[j].lstrip().startswith("#["):
+                    break
+                j += 1
+            if j < n and MOD_RE.search(lines[j]):
+                depth = 0
+                k = j
+                while k < n:
+                    code = strip_comments(lines[k])
+                    depth += code.count("{") - code.count("}")
+                    covered.add(k)
+                    if depth <= 0 and k > j:
+                        break
+                    if depth <= 0 and k == j and code.count("{") > 0 \
+                            and code.count("}") >= code.count("{"):
+                        break
+                    k += 1
+                i = k
+        i += 1
+    return covered
+
+
+def check_try_twins(src_root, violations):
+    backend = os.path.join(src_root, "runtime", "backend.rs")
+    if not os.path.exists(backend):
+        violations.append((backend, 0, "I1", "runtime/backend.rs missing"))
+        return
+    with open(backend, encoding="utf-8") as f:
+        lines = f.read().split("\n")
+    # Find the `pub trait KernelBackend` block by brace balance.
+    start = None
+    for i, l in enumerate(lines):
+        if re.search(r"\btrait\s+KernelBackend\b", strip_comments(l)):
+            start = i
+            break
+    if start is None:
+        violations.append((backend, 0, "I1", "trait KernelBackend not found"))
+        return
+    depth = 0
+    body = []
+    for i in range(start, len(lines)):
+        code = strip_comments(lines[i])
+        depth += code.count("{") - code.count("}")
+        body.append((i + 1, code))
+        if depth <= 0 and i > start:
+            break
+    # Collect method names + full signatures (joined until `)` or `{`).
+    names = set()
+    dispatch = []  # (line, name) for entries taking `kernel: Kernel`
+    for idx, (ln, code) in enumerate(body):
+        m = re.search(r"\bfn\s+(\w+)\s*\(", code)
+        if not m:
+            continue
+        name = m.group(1)
+        names.add(name)
+        sig = code
+        j = idx
+        while "(" in sig and sig.count("(") > sig.count(")") and j + 1 < len(body):
+            j += 1
+            sig += " " + body[j][1]
+        if re.search(r"\bkernel\s*:\s*Kernel\b", sig):
+            dispatch.append((ln, name))
+    for ln, name in dispatch:
+        if name.startswith("try_"):
+            continue
+        if f"try_{name}" not in names:
+            violations.append((
+                backend, ln, "I1",
+                f"KernelBackend::{name} takes `kernel: Kernel` but has no "
+                f"`try_{name}` twin (failure-model contract)",
+            ))
+
+
+def check_file(path, rel, violations):
+    with open(path, encoding="utf-8") as f:
+        lines = f.read().split("\n")
+    tests = test_regions(lines)
+    in_gated = any(rel.startswith(d) for d in GATED_DIRS)
+    for i, raw in enumerate(lines):
+        if i in tests:
+            continue
+        code = strip_comments(raw)
+        if not code.strip():
+            continue
+        if rel not in SPAWN_ALLOWLIST and SPAWN_RE.search(code):
+            violations.append((
+                path, i + 1, "I2",
+                "direct thread spawn/scope outside the sanctioned executor "
+                "modules — route work through WorkerPool or the batcher "
+                "session",
+            ))
+        if rel in REBASED and rel != "runtime/sync.rs" \
+                and SYNC_IMPORT_RE.search(code) and SYNC_PRIMS_RE.search(code):
+            violations.append((
+                path, i + 1, "I3",
+                "rebased module imports std::sync primitives directly — "
+                "use crate::runtime::sync (the loom facade) instead",
+            ))
+        if in_gated and UNWRAP_RE.search(code):
+            violations.append((
+                path, i + 1, "I4",
+                "unwrap()/expect() in non-test code — return a typed error "
+                "or use unwrap_or_else(PoisonError::into_inner) / an "
+                "unreachable!() match with a written invariant",
+            ))
+
+
+def run(root):
+    src_root = os.path.join(root, "rust", "src")
+    violations = []
+    if not os.path.isdir(src_root):
+        print(f"check_invariants: {src_root} not found", file=sys.stderr)
+        return 2
+    check_try_twins(src_root, violations)
+    for dirpath, _, files in sorted(os.walk(src_root)):
+        for fname in sorted(files):
+            if not fname.endswith(".rs"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            check_file(path, rel, violations)
+    for path, line, ident, msg in violations:
+        print(f"{path}:{line}: [{ident}] {msg}")
+    if violations:
+        print(f"check_invariants: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print("check_invariants: all invariants hold")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    default_root = os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))
+    ap.add_argument("--root", default=default_root,
+                    help="repository root (default: this script's parent)")
+    args = ap.parse_args(argv)
+    return run(args.root)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

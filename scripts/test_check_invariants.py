@@ -1,0 +1,244 @@
+#!/usr/bin/env python3
+"""Synthetic-tree self-tests for scripts/check_invariants.py. Run
+directly:
+
+    python3 scripts/test_check_invariants.py
+
+Stdlib only, no test framework — each case writes a tiny rust/src tree
+into a temp dir, seeds (or doesn't seed) one violation, and asserts on
+check_invariants.run()'s exit code and report. The final case runs the
+checker against the real repository tree, which must be clean.
+"""
+
+import os
+import sys
+import tempfile
+from contextlib import redirect_stderr, redirect_stdout
+from io import StringIO
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import check_invariants  # noqa: E402
+
+CLEAN_BACKEND = """
+pub trait KernelBackend: Send + Sync {
+    fn sums(&self, kernel: Kernel, q: &[f32]) -> Vec<f64>;
+    fn try_sums(&self, kernel: Kernel, q: &[f32]) -> BackendResult<Vec<f64>>;
+    fn block(&self, kernel: Kernel, q: &[f32]) -> Vec<f32>;
+    fn try_block(&self, kernel: Kernel, q: &[f32]) -> BackendResult<Vec<f32>>;
+    fn name(&self) -> &'static str;
+    fn calls(&self) -> u64;
+}
+"""
+
+MISSING_TWIN_BACKEND = """
+pub trait KernelBackend: Send + Sync {
+    fn sums(&self, kernel: Kernel, q: &[f32]) -> Vec<f64>;
+    fn try_sums(&self, kernel: Kernel, q: &[f32]) -> BackendResult<Vec<f64>>;
+    fn block(&self, kernel: Kernel, q: &[f32]) -> Vec<f32>;
+    fn name(&self) -> &'static str;
+}
+"""
+
+MULTILINE_SIG_BACKEND = """
+pub trait KernelBackend: Send + Sync {
+    fn sums_ranged(
+        &self,
+        kernel: Kernel,
+        ranges: &[(u32, u32)],
+    ) -> Vec<f64> {
+        Vec::new()
+    }
+    fn name(&self) -> &'static str;
+}
+"""
+
+
+def write_tree(root, files):
+    """files: {relpath under rust/src: contents}; returns the repo root."""
+    for rel, body in files.items():
+        path = os.path.join(root, "rust", "src", rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(body)
+    return root
+
+
+def run_checker(files):
+    """Build the tree, run the checker, return (exit_code, output)."""
+    with tempfile.TemporaryDirectory() as td:
+        write_tree(td, files)
+        out = StringIO()
+        with redirect_stdout(out), redirect_stderr(out):
+            code = check_invariants.run(td)
+        return code, out.getvalue()
+
+
+def base_tree(**extra):
+    files = {"runtime/backend.rs": CLEAN_BACKEND}
+    files.update(extra)
+    return files
+
+
+def expect(code, output, want_code, want_id=None, case=""):
+    assert code == want_code, f"{case}: exit {code} != {want_code}\n{output}"
+    if want_id is not None:
+        assert f"[{want_id}]" in output, f"{case}: no {want_id} in:\n{output}"
+    print(f"PASS {case}")
+
+
+def test_clean_tree_passes():
+    code, out = run_checker(base_tree())
+    expect(code, out, 0, case="clean_tree_passes")
+
+
+def test_missing_try_twin_flagged():
+    code, out = run_checker({"runtime/backend.rs": MISSING_TWIN_BACKEND})
+    expect(code, out, 1, "I1", "missing_try_twin_flagged")
+    assert "try_block" in out, out
+
+
+def test_multiline_signature_twin_flagged():
+    # The `kernel: Kernel` parameter sits on its own line; the checker
+    # must still join the signature and demand a twin.
+    code, out = run_checker({"runtime/backend.rs": MULTILINE_SIG_BACKEND})
+    expect(code, out, 1, "I1", "multiline_signature_twin_flagged")
+    assert "try_sums_ranged" in out, out
+
+
+def test_metadata_entries_need_no_twin():
+    # `name`/`calls` take no `kernel: Kernel`; the clean trait passes
+    # even though they have no try_ siblings (asserted by the clean case,
+    # re-asserted here against a trait with ONLY metadata entries).
+    code, out = run_checker({
+        "runtime/backend.rs":
+            "pub trait KernelBackend {\n"
+            "    fn name(&self) -> &'static str;\n"
+            "    fn kernel_evals(&self) -> u64;\n"
+            "}\n"
+    })
+    expect(code, out, 0, case="metadata_entries_need_no_twin")
+
+
+def test_spawn_outside_allowlist_flagged():
+    code, out = run_checker(base_tree(**{
+        "kde/rogue.rs": "pub fn go() {\n    std::thread::spawn(|| {});\n}\n"
+    }))
+    expect(code, out, 1, "I2", "spawn_outside_allowlist_flagged")
+
+
+def test_spawn_in_sanctioned_module_ok():
+    code, out = run_checker(base_tree(**{
+        "runtime/pool.rs": "pub fn go() {\n    std::thread::spawn(|| {});\n}\n",
+        "coordinator/batcher.rs":
+            "pub fn go() {\n    std::thread::scope(|s| {});\n}\n",
+    }))
+    expect(code, out, 0, case="spawn_in_sanctioned_module_ok")
+
+
+def test_spawn_in_test_module_ok():
+    code, out = run_checker(base_tree(**{
+        "apps/thing.rs":
+            "pub fn go() {}\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            "    fn t() {\n"
+            "        std::thread::spawn(|| {}).join().unwrap();\n"
+            "    }\n"
+            "}\n",
+    }))
+    expect(code, out, 0, case="spawn_in_test_module_ok")
+
+
+def test_std_sync_import_in_rebased_module_flagged():
+    code, out = run_checker(base_tree(**{
+        "server/store.rs": "use std::sync::{Arc, Mutex};\npub fn f() {}\n",
+    }))
+    expect(code, out, 1, "I3", "std_sync_import_in_rebased_module_flagged")
+
+
+def test_std_sync_import_elsewhere_ok():
+    # Non-rebased modules may use std::sync directly (they are not part
+    # of the loom model).
+    code, out = run_checker(base_tree(**{
+        "apps/thing.rs": "use std::sync::Mutex;\npub fn f() {}\n",
+        "coordinator/batcher.rs": "use std::sync::OnceLock;\npub fn f() {}\n",
+    }))
+    expect(code, out, 0, case="std_sync_import_elsewhere_ok")
+
+
+def test_unwrap_in_gated_dir_flagged():
+    code, out = run_checker(base_tree(**{
+        "sampling/thing.rs":
+            "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+    }))
+    expect(code, out, 1, "I4", "unwrap_in_gated_dir_flagged")
+
+
+def test_expect_in_gated_dir_flagged():
+    code, out = run_checker(base_tree(**{
+        "kde/thing.rs":
+            'pub fn f(v: Option<u32>) -> u32 {\n    v.expect("always")\n}\n',
+    }))
+    expect(code, out, 1, "I4", "expect_in_gated_dir_flagged")
+
+
+def test_unwrap_variants_and_tests_ok():
+    # unwrap_or* / expect_err / doc comments / loom+test modules are all
+    # exempt.
+    code, out = run_checker(base_tree(**{
+        "kde/thing.rs":
+            "//! module docs with `v.unwrap()` in them\n"
+            "pub fn f(v: Option<u32>) -> u32 {\n"
+            "    // an inline comment saying .unwrap() is fine\n"
+            "    v.unwrap_or_else(|| 3).max(v.unwrap_or(2))\n"
+            "}\n"
+            "pub fn g(r: Result<u32, u32>) -> u32 {\n"
+            "    r.expect_err(\"want err\")\n"
+            "}\n"
+            "#[cfg(test)]\n"
+            "#[allow(clippy::unwrap_used, clippy::expect_used)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            "    fn t() {\n"
+            "        Some(1).unwrap();\n"
+            "    }\n"
+            "}\n"
+            "#[cfg(all(loom, test))]\n"
+            "mod loom_tests {\n"
+            "    #[test]\n"
+            "    fn l() {\n"
+            "        Some(1).unwrap();\n"
+            "    }\n"
+            "}\n",
+    }))
+    expect(code, out, 0, case="unwrap_variants_and_tests_ok")
+
+
+def test_unwrap_outside_gated_dirs_ok():
+    code, out = run_checker(base_tree(**{
+        "util/thing.rs":
+            "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+    }))
+    expect(code, out, 0, case="unwrap_outside_gated_dirs_ok")
+
+
+def test_real_repo_is_clean():
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = StringIO()
+    with redirect_stdout(out), redirect_stderr(out):
+        code = check_invariants.run(repo)
+    expect(code, out.getvalue(), 0, case="real_repo_is_clean")
+
+
+def main():
+    cases = [v for k, v in sorted(globals().items())
+             if k.startswith("test_") and callable(v)]
+    for case in cases:
+        case()
+    print(f"all {len(cases)} check_invariants self-tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
