@@ -1,0 +1,161 @@
+//! Million-point scale-regime bench: dispatches-per-query of the
+//! neighbor-sampling descent as n grows (the paper's sub-quadratic
+//! claim, read as a per-query execution-count slope).
+//!
+//! For each n in the series the bench builds a static multi-level tree
+//! (Sampling estimators, s = 80 rows per node) over a fresh Gaussian
+//! mixture, then
+//!
+//! * counts backend dispatches over `WALKERS` solo cold descents —
+//!   distinct sources, so every (node, source) memo key misses and the
+//!   count cleanly reads "fused submissions per cold query". A descent
+//!   issues two child queries per internal level and finishes leaves
+//!   categorically, so the expected cost is `~2 log2(n / leaf_cutoff)`
+//!   dispatches — the ~log n contract `scripts/compare_bench.py --scale`
+//!   gates (factor budget `DISPATCH_FACTOR_BUDGET x log2 n` per point,
+//!   plus a sub-log growth cap between the two n's);
+//! * times the fused batched descent (`sample_batch`) over rotating
+//!   distinct-source windows for the latency series.
+//!
+//! n = 1e5 always runs; the 1e6 point is opt-in via
+//! `BENCH_SCALE_MILLION=1` (CI runs it on the nightly leg only — the
+//! tree holds ~2n nodes and the build dominates wall time). Emits
+//! `BENCH_scale.json` for the CI scale leg.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use kde_matrix::kde::{EstimatorKind, KdeConfig, KdeCounters, MultiLevelKde};
+use kde_matrix::kernel::{dataset, Kernel};
+use kde_matrix::runtime::backend::{CpuBackend, KernelBackend};
+use kde_matrix::runtime::simd::MicroKernel;
+use kde_matrix::sampling::NeighborSampler;
+use kde_matrix::util::bench::BenchSuite;
+use kde_matrix::util::rng::Rng;
+
+const D: usize = 4;
+const WALKERS: usize = 64;
+const LEAF_CUTOFF: usize = 16;
+/// Per-point within-run gate: dispatches_per_query <= this factor times
+/// log2(n). Mirrored by `SCALE_DISPATCH_FACTOR` in compare_bench.py.
+const DISPATCH_FACTOR_BUDGET: f64 = 4.0;
+
+struct ScalePoint {
+    n: usize,
+    log2_n: f64,
+    build_ms: f64,
+    dispatches: u64,
+    dispatches_per_query: f64,
+    batch_mean_ns: f64,
+}
+
+fn run_scale(n: usize, suite: &mut BenchSuite) -> ScalePoint {
+    let be = CpuBackend::new();
+    let mut rng = Rng::new(0x5CA1E ^ n as u64);
+    let t0 = Instant::now();
+    let ds = Arc::new(dataset::gaussian_mixture(n, D, 8, 1.0, 0.5, &mut rng));
+    let cfg = KdeConfig {
+        kind: EstimatorKind::Sampling { eps: 0.5, tau: 0.2 },
+        leaf_cutoff: LEAF_CUTOFF,
+        seed: 0x5EED,
+    };
+    let tree = Arc::new(MultiLevelKde::build(
+        ds,
+        Kernel::Laplacian,
+        &cfg,
+        be.clone(),
+        KdeCounters::new(),
+    ));
+    let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    suite.note(&format!(
+        "n = {n}: built {} nodes in {build_ms:.0} ms",
+        tree.num_nodes()
+    ));
+    let sampler = NeighborSampler::new(tree);
+
+    // Cold dispatch count: WALKERS solo descents from sources spread over
+    // [0, n) — all distinct, every memo key cold.
+    let stride = n / WALKERS;
+    let base = be.calls();
+    let mut srng = Rng::new(0xC01D ^ n as u64);
+    for w in 0..WALKERS {
+        let src = w * stride + stride / 2;
+        let _ = sampler.sample(src, &mut srng);
+    }
+    let dispatches = be.calls() - base;
+    let dispatches_per_query = dispatches as f64 / WALKERS as f64;
+    let log2_n = (n as f64).log2();
+    suite.note(&format!(
+        "n = {n}: {dispatches} dispatches / {WALKERS} cold descents = {dispatches_per_query:.2} \
+         d/q (budget {:.1} = {DISPATCH_FACTOR_BUDGET} x log2 n)",
+        DISPATCH_FACTOR_BUDGET * log2_n
+    ));
+    assert!(
+        dispatches_per_query <= DISPATCH_FACTOR_BUDGET * log2_n,
+        "scale regression: {dispatches_per_query:.2} dispatches/query exceeds \
+         {DISPATCH_FACTOR_BUDGET} x log2({n})"
+    );
+
+    // Latency of the fused batched descent, rotating distinct-source
+    // windows so each round mixes warm structure with fresh sources.
+    let mut round = 0usize;
+    let batch_mean_ns = suite.bench(&format!("neighbor_sample_batch/n={n}/W={WALKERS}"), || {
+        let sources: Vec<usize> = (0..WALKERS)
+            .map(|k| (round * WALKERS + k * 31 + 1) % n)
+            .collect();
+        round += 1;
+        let mut r = Rng::new(round as u64);
+        let _ = sampler.sample_batch(&sources, &mut r);
+    });
+
+    ScalePoint { n, log2_n, build_ms, dispatches, dispatches_per_query, batch_mean_ns }
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("bench_scale (n-scaling of the sampling descent)");
+    let mut ns = vec![100_000usize];
+    let million = std::env::var("BENCH_SCALE_MILLION").is_ok_and(|v| v == "1");
+    if million {
+        ns.push(1_000_000);
+    } else {
+        suite.note("n = 1e6 point skipped (set BENCH_SCALE_MILLION=1 to run it)");
+    }
+    let points: Vec<ScalePoint> = ns.iter().map(|&n| run_scale(n, &mut suite)).collect();
+
+    if let [a, b] = points.as_slice() {
+        let growth = b.dispatches_per_query / a.dispatches_per_query;
+        let log_growth = b.log2_n / a.log2_n;
+        suite.note(&format!(
+            "growth {}k -> {}k: d/q x{growth:.2} vs log-budget x{:.2}",
+            a.n / 1000,
+            b.n / 1000,
+            log_growth * 1.5
+        ));
+    }
+
+    let series: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                "    {{ \"n\": {}, \"log2_n\": {:.3}, \"walkers\": {WALKERS}, \
+                 \"dispatches\": {}, \"dispatches_per_query\": {:.4}, \
+                 \"build_ms\": {:.1}, \"batch_mean_ns\": {:.0} }}",
+                p.n, p.log2_n, p.dispatches, p.dispatches_per_query, p.build_ms, p.batch_mean_ns
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"scale\",\n  \"baseline\": \"measured\",\n  \
+         \"isa_detected\": \"{}\",\n  \"scale\": {{\n    \
+         \"d\": {D}, \"leaf_cutoff\": {LEAF_CUTOFF}, \"eps\": 0.5, \"tau\": 0.2,\n    \
+         \"dispatch_factor_budget\": {DISPATCH_FACTOR_BUDGET},\n    \
+         \"series\": [\n{}\n    ]\n  }}\n}}\n",
+        MicroKernel::detect().isa.name(),
+        series.join(",\n")
+    );
+    match std::fs::write("BENCH_scale.json", &json) {
+        Ok(()) => suite.note("wrote BENCH_scale.json"),
+        Err(e) => suite.note(&format!("could not write BENCH_scale.json: {e}")),
+    }
+    suite.finish();
+}

@@ -9,7 +9,10 @@
 //! obtained from one Laplacian CG solve, then sample edges proportional
 //! to `w_e * R_e` (their leverage scores).
 
+use std::sync::Arc;
+
 use crate::graph::{LaplacianOp, WGraph};
+use crate::kernel::{Dataset, Kernel};
 use crate::linalg::cg::cg;
 use crate::sampling::vertex::PrefixSampler;
 use crate::util::rng::Rng;
@@ -86,6 +89,229 @@ pub fn resparsify(g: &WGraph, t: usize, jl_dims: usize, rng: &mut Rng) -> WGraph
         raw.push((u as usize, v as usize, w / (t as f64 * p)));
     }
     WGraph::from_edges(g.n, raw)
+}
+
+/// One event of a dynamic point stream consumed by
+/// [`MaintainedSparsifier::apply`]. Indices name fixed slots of the
+/// underlying dataset; the event stream toggles their liveness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PointEvent {
+    /// The named slot becomes live (no-op if it already is).
+    Insert(usize),
+    /// The named slot becomes dead (no-op if it already is).
+    Delete(usize),
+}
+
+/// Tuning knobs for [`MaintainedSparsifier`].
+#[derive(Clone, Copy, Debug)]
+pub struct MaintainedConfig {
+    /// Uniform attachment degree: how many live neighbors each live point
+    /// samples when it (re)enters the graph.
+    pub degree: usize,
+    /// Run the periodic cleanup/resparsify pass every this many events.
+    pub resparsify_every: usize,
+    /// Resparsify (effective-resistance resample) whenever the live edge
+    /// count exceeds this after a cleanup pass.
+    pub target_edges: usize,
+    /// JL sketch dimensions handed to [`resparsify`].
+    pub jl_dims: usize,
+    /// Seed for the per-point attachment streams and the resparsify RNG.
+    pub seed: u64,
+}
+
+impl Default for MaintainedConfig {
+    fn default() -> Self {
+        MaintainedConfig {
+            degree: 4,
+            resparsify_every: 256,
+            target_edges: 1 << 16,
+            jl_dims: 8,
+            seed: 0x5EED_600D,
+        }
+    }
+}
+
+/// Incrementally maintained kernel-graph sparsifier over a dynamic point
+/// set (the dynamic counterpart of the two-stage §5.1 pipeline).
+///
+/// The dataset's slots are fixed; a seeded [`PointEvent`] stream toggles
+/// their liveness. Each live point `u` contributes `degree` uniformly
+/// sampled edges to other live points, weighted
+/// `k(u, v) * (live - 1) / degree` — an unbiased estimate of `u`'s kernel
+/// row mass. Edge sampling for `u` uses a **per-point RNG stream**
+/// (`seed ^ hash(u)`), so a point's attachment depends only on its own
+/// slot and the live set at attachment time, never on how many events
+/// other points generated. Deletions are lazy (dead endpoints are
+/// filtered, not eagerly removed); every `resparsify_every` events a
+/// cleanup pass drops dead edges and — when the live edge count exceeds
+/// `target_edges` — resamples by effective resistance through
+/// [`resparsify`], restoring the edge budget at bounded spectral cost.
+///
+/// `tests/dynamic.rs` pins the acceptance contract: after a long seeded
+/// event script, the maintained graph's Laplacian quadratic forms match a
+/// from-scratch build over the same final live set within the repo's
+/// resparsify margins.
+pub struct MaintainedSparsifier {
+    ds: Arc<Dataset>,
+    kernel: Kernel,
+    cfg: MaintainedConfig,
+    live: Vec<bool>,
+    live_count: usize,
+    edges: Vec<(u32, u32, f64)>,
+    events: u64,
+    resparsify_runs: u64,
+    rng: Rng,
+}
+
+impl MaintainedSparsifier {
+    /// Build over `ds` with slots `initial_live` live, attaching each
+    /// live point through its own seeded stream.
+    pub fn new(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        initial_live: &[usize],
+        cfg: MaintainedConfig,
+    ) -> Self {
+        let mut live = vec![false; ds.n];
+        let mut live_count = 0usize;
+        for &u in initial_live {
+            assert!(u < ds.n, "initial live slot {u} out of range (n = {})", ds.n);
+            if !live[u] {
+                live[u] = true;
+                live_count += 1;
+            }
+        }
+        let mut s = MaintainedSparsifier {
+            ds,
+            kernel,
+            rng: Rng::new(cfg.seed ^ 0xD15C_0B91),
+            cfg,
+            live,
+            live_count,
+            edges: Vec::new(),
+            events: 0,
+            resparsify_runs: 0,
+        };
+        // Flags first, then attach: every initial point samples neighbors
+        // from the full initial live set, independent of slot order.
+        for u in 0..s.ds.n {
+            if s.live[u] {
+                s.attach(u);
+            }
+        }
+        s
+    }
+
+    /// The per-point attachment stream for slot `u` (see the type docs).
+    fn point_stream(&self, u: usize) -> Rng {
+        Rng::new(self.cfg.seed ^ (u as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Sample `degree` live neighbors of `u` and push the weighted edges.
+    fn attach(&mut self, u: usize) {
+        let others = self.live_count.saturating_sub(1);
+        if others == 0 {
+            return;
+        }
+        let mut stream = self.point_stream(u);
+        let deg = self.cfg.degree.min(others);
+        let scale = others as f64 / deg as f64;
+        for _ in 0..deg {
+            // Rejection over slots: cheap because live points dominate
+            // whenever the structure is worth maintaining.
+            let v = loop {
+                let c = stream.below(self.ds.n);
+                if c != u && self.live[c] {
+                    break c;
+                }
+            };
+            let w = self.kernel.eval(self.ds.point(u), self.ds.point(v)) as f64 * scale;
+            if w > 0.0 {
+                self.edges.push((u as u32, v as u32, w));
+            }
+        }
+    }
+
+    /// Apply one event; returns whether it changed the live set.
+    pub fn apply(&mut self, ev: PointEvent) -> bool {
+        self.events += 1;
+        let changed = match ev {
+            PointEvent::Insert(u) => {
+                assert!(u < self.ds.n, "insert slot {u} out of range");
+                if self.live[u] {
+                    false
+                } else {
+                    self.live[u] = true;
+                    self.live_count += 1;
+                    self.attach(u);
+                    true
+                }
+            }
+            PointEvent::Delete(u) => {
+                assert!(u < self.ds.n, "delete slot {u} out of range");
+                if self.live[u] {
+                    self.live[u] = false;
+                    self.live_count -= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+        };
+        if self.cfg.resparsify_every > 0 && self.events % self.cfg.resparsify_every as u64 == 0 {
+            self.cleanup();
+        }
+        changed
+    }
+
+    /// Drop dead-endpoint edges; resparsify if still over budget.
+    fn cleanup(&mut self) {
+        self.edges
+            .retain(|&(u, v, _)| self.live[u as usize] && self.live[v as usize]);
+        if self.edges.len() > self.cfg.target_edges && self.live_count >= 2 {
+            let g = WGraph::from_edges(
+                self.ds.n,
+                self.edges
+                    .iter()
+                    .map(|&(u, v, w)| (u as usize, v as usize, w)),
+            );
+            let h = resparsify(&g, self.cfg.target_edges, self.cfg.jl_dims, &mut self.rng);
+            self.edges = h.edges.clone();
+            self.resparsify_runs += 1;
+        }
+    }
+
+    /// Current sparsifier as a graph over the dataset's slot space (dead
+    /// endpoints filtered; parallel samples merged by `WGraph`).
+    pub fn graph(&self) -> WGraph {
+        WGraph::from_edges(
+            self.ds.n,
+            self.edges
+                .iter()
+                .filter(|&&(u, v, _)| self.live[u as usize] && self.live[v as usize])
+                .map(|&(u, v, w)| (u as usize, v as usize, w)),
+        )
+    }
+
+    /// Number of live slots.
+    pub fn live_len(&self) -> usize {
+        self.live_count
+    }
+
+    /// Whether slot `u` is currently live.
+    pub fn is_live(&self, u: usize) -> bool {
+        self.live[u]
+    }
+
+    /// Live slot indices, ascending (the from-scratch comparator's input).
+    pub fn live_slots(&self) -> Vec<usize> {
+        (0..self.ds.n).filter(|&u| self.live[u]).collect()
+    }
+
+    /// `(events applied, resparsify passes run)`.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.events, self.resparsify_runs)
+    }
 }
 
 #[cfg(test)]
@@ -171,6 +397,60 @@ mod tests {
         }
         assert!(worst < 0.5, "resparsified quadratic-form error {worst}");
         assert!(h.num_edges() <= m0, "must not densify");
+    }
+
+    #[test]
+    fn maintained_sparsifier_tracks_the_live_set() {
+        let mut rng = Rng::new(1207);
+        let ds = std::sync::Arc::new(crate::kernel::dataset::gaussian_mixture(
+            256, 3, 2, 1.0, 0.5, &mut rng,
+        ));
+        let cfg = MaintainedConfig {
+            degree: 4,
+            resparsify_every: 64,
+            target_edges: 4096,
+            jl_dims: 8,
+            seed: 0xA11CE,
+        };
+        let initial: Vec<usize> = (0..192).collect();
+        let mut m = MaintainedSparsifier::new(ds.clone(), Kernel::Laplacian, &initial, cfg);
+        assert_eq!(m.live_len(), 192);
+
+        // Event script: bring in the tail, delete every 5th original slot.
+        for u in 192..256 {
+            assert!(m.apply(PointEvent::Insert(u)));
+        }
+        for u in (0..192).step_by(5) {
+            assert!(m.apply(PointEvent::Delete(u)));
+        }
+        // Idempotence: re-inserting a live slot / re-deleting a dead one
+        // are no-ops that still count as events.
+        assert!(!m.apply(PointEvent::Insert(200)));
+        assert!(!m.apply(PointEvent::Delete(0)));
+        let want_live = 192 + 64 - 39;
+        assert_eq!(m.live_len(), want_live);
+        assert_eq!(m.live_slots().len(), want_live);
+
+        // The exported graph touches only live slots, has no self-loops,
+        // and its total weight is in the same ballpark as a from-scratch
+        // build over the identical final live set (both are unbiased
+        // degree-4 estimates of the same kernel-row masses).
+        let g = m.graph();
+        assert!(g.num_edges() > 0);
+        for &(u, v, w) in &g.edges {
+            assert!(m.is_live(u as usize) && m.is_live(v as usize));
+            assert!(u != v && w > 0.0);
+        }
+        let fresh = MaintainedSparsifier::new(ds, Kernel::Laplacian, &m.live_slots(), cfg);
+        let gf = fresh.graph();
+        let mass = |g: &WGraph| g.edges.iter().map(|&(_, _, w)| w).sum::<f64>();
+        let ratio = mass(&g) / mass(&gf);
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "maintained vs fresh total edge mass ratio {ratio}"
+        );
+        let (events, _) = m.stats();
+        assert_eq!(events, 64 + 39 + 2);
     }
 
     #[test]

@@ -70,6 +70,69 @@ impl Kde for NaiveKde {
     }
 }
 
+/// Exact KDE over an *owned* copy of `ds[lo..hi)`, gathered once at
+/// construction.
+///
+/// Numerically identical to [`NaiveKde`] over the same range (both issue
+/// one backend `sums` scan over the same bytes with scale 1), but it holds
+/// no `Arc<Dataset>` — which is what the dynamic tree needs: after a
+/// copy-on-write dataset edit (`Arc::make_mut`), borrowing oracles would
+/// silently keep reading the pre-edit buffer their own `Arc` pins alive,
+/// while owned-buffer oracles are explicitly rebuilt along the edited
+/// slot's ancestor path and nowhere else.
+pub struct BufferKde {
+    kernel: Kernel,
+    d: usize,
+    /// Gathered range coordinates, row-major `(hi - lo) x d`.
+    data: Vec<f32>,
+    backend: Arc<dyn KernelBackend>,
+    counters: Arc<KdeCounters>,
+}
+
+impl BufferKde {
+    /// Copy `ds[lo..hi)` into an owned buffer; queries scan only the copy.
+    pub fn gather(
+        ds: &Dataset,
+        kernel: Kernel,
+        lo: usize,
+        hi: usize,
+        backend: Arc<dyn KernelBackend>,
+        counters: Arc<KdeCounters>,
+    ) -> Self {
+        assert!(lo < hi && hi <= ds.n);
+        let d = ds.d;
+        let data = ds.flat()[lo * d..hi * d].to_vec();
+        BufferKde { kernel, d, data, backend, counters }
+    }
+}
+
+impl Kde for BufferKde {
+    fn query(&self, y: &[f32]) -> f64 {
+        self.counters.record_query();
+        self.backend.sums(self.kernel, y, &self.data, self.d)[0]
+    }
+
+    /// Native batch: one backend `sums` dispatch over the owned buffer.
+    fn query_batch(&self, ys: &[f32]) -> Vec<f64> {
+        assert!(ys.len() % self.d == 0);
+        self.counters.record_queries((ys.len() / self.d) as u64);
+        self.backend.sums(self.kernel, ys, &self.data, self.d)
+    }
+
+    /// Fusable: one backend scan over the owned buffer, scale 1.
+    fn fused_view(&self) -> Option<FusedView<'_>> {
+        Some(FusedView { data: &self.data, scale: 1.0 })
+    }
+
+    fn subset_len(&self) -> usize {
+        self.data.len() / self.d
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+}
+
 /// Uniform-sampling KDE (§3.1): a fixed random subsample `R` of the range,
 /// drawn once at construction; `query(y) = |S|/|R| * sum_{x in R} k(x, y)`.
 ///
@@ -235,6 +298,33 @@ mod tests {
             let rel = (got - want).abs() / want;
             assert!(rel < 0.25, "case {case}: rel err {rel}");
         });
+    }
+
+    #[test]
+    fn buffer_kde_is_bit_identical_to_naive() {
+        let (ds, be, ctr, mut rng) = setup(80, 49);
+        for k in [Kernel::Laplacian, Kernel::Gaussian] {
+            let naive = NaiveKde::new(ds.clone(), k, 8, 72, be.clone(), ctr.clone());
+            let buf = BufferKde::gather(&ds, k, 8, 72, be.clone(), ctr.clone());
+            assert_eq!(buf.subset_len(), naive.subset_len());
+            assert_eq!(buf.dim(), naive.dim());
+            let mut ys = Vec::new();
+            for _ in 0..5 {
+                ys.extend_from_slice(ds.point(rng.below(ds.n)));
+            }
+            let a = naive.query_batch(&ys);
+            let b = buf.query_batch(&ys);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{k:?}");
+            }
+            assert_eq!(
+                naive.query(ds.point(0)).to_bits(),
+                buf.query(ds.point(0)).to_bits()
+            );
+            let (fa, fb) = (naive.fused_view().unwrap(), buf.fused_view().unwrap());
+            assert_eq!(fa.data, fb.data);
+            assert_eq!(fa.scale.to_bits(), fb.scale.to_bits());
+        }
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod hbe;
 pub mod multilevel;
 pub mod ptree;
 
-pub use estimators::{NaiveKde, SamplingKde};
+pub use estimators::{BufferKde, NaiveKde, SamplingKde};
 pub use hbe::HbeKde;
 pub use multilevel::MultiLevelKde;
 pub use ptree::PartitionTreeKde;

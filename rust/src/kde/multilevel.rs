@@ -52,7 +52,9 @@ use crate::coordinator::batcher::{
     OverlapSession,
 };
 use crate::kde::hbe::HbeKde;
-use crate::kde::{EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde};
+use crate::kde::{
+    BufferKde, EstimatorKind, FusedView, Kde, KdeConfig, KdeCounters, NaiveKde, SamplingKde,
+};
 use crate::kernel::{Dataset, Kernel};
 use crate::runtime::backend::KernelBackend;
 use crate::runtime::error::{catch_panic, BackendError};
@@ -91,9 +93,18 @@ impl Node {
     }
 }
 
-/// Sharded (node, point) -> answer memo table; safely `Sync`.
+/// Sharded (node, point) -> (stamp, answer) memo table; safely `Sync`.
+///
+/// Each entry is stamped with the edit version it was computed under
+/// (`MultiLevelKde::stamp`: the node's version plus the query point's
+/// version; always 0 for statically built trees). A lookup only hits when
+/// the stored stamp equals the current one, so entries invalidated by a
+/// dynamic edit — everything keyed by a node on the edited slot's ancestor
+/// path, plus everything queried *by* the edited point — simply stop
+/// matching and are lazily overwritten on the next miss. Versions only
+/// grow, so a stale entry can never validate again.
 struct ShardedCache {
-    shards: Vec<Mutex<FxHashMap<(u32, u32), f64>>>,
+    shards: Vec<Mutex<FxHashMap<(u32, u32), (u64, f64)>>>,
 }
 
 impl ShardedCache {
@@ -106,32 +117,38 @@ impl ShardedCache {
     }
 
     #[inline]
-    fn shard(&self, key: (u32, u32)) -> &Mutex<FxHashMap<(u32, u32), f64>> {
+    fn shard(&self, key: (u32, u32)) -> &Mutex<FxHashMap<(u32, u32), (u64, f64)>> {
         let h = key.0 as usize ^ (key.1 as usize).wrapping_mul(0x9E37_79B9);
         &self.shards[h % CACHE_SHARDS]
     }
 
     #[inline]
-    fn get(&self, key: (u32, u32)) -> Option<f64> {
+    fn get(&self, key: (u32, u32), stamp: u64) -> Option<f64> {
         // Poison recovery: a panicked writer leaves at worst a missing
-        // entry, never a torn one (f64 inserts are single-step).
+        // entry, never a torn one ((u64, f64) inserts are single-step).
         self.shard(key)
             .lock()
             .unwrap_or_else(PoisonError::into_inner)
             .get(&key)
-            .copied()
+            .and_then(|&(s, v)| if s == stamp { Some(v) } else { None })
     }
 
-    /// Insert unless present; returns the value that ended up cached (the
-    /// first writer's), which the caller must report for consistency.
+    /// Insert unless a same-stamp entry is present; returns the value that
+    /// ended up cached (the first same-stamp writer's), which the caller
+    /// must report for consistency. A staler-stamp entry is overwritten.
     #[inline]
-    fn insert_or_get(&self, key: (u32, u32), v: f64) -> f64 {
-        *self
+    fn insert_or_get(&self, key: (u32, u32), stamp: u64, v: f64) -> f64 {
+        let mut shard = self
             .shard(key)
             .lock()
-            .unwrap_or_else(PoisonError::into_inner)
-            .entry(key)
-            .or_insert(v)
+            .unwrap_or_else(PoisonError::into_inner);
+        match shard.get(&key) {
+            Some(&(s, cached)) if s == stamp => cached,
+            _ => {
+                shard.insert(key, (stamp, v));
+                v
+            }
+        }
     }
 
     fn clear(&self) {
@@ -171,6 +188,28 @@ pub struct MultiLevelKde {
     multi_calls: AtomicU64,
     /// Shared KDE-query accounting (cache misses only).
     pub counters: Arc<KdeCounters>,
+    /// Per-node RNG snapshots recorded at [`build_dynamic`]
+    /// (`Self::build_dynamic`) time, *before* the node's oracle consumed
+    /// any draws. A path rebuild replays the snapshot so the rebuilt
+    /// oracle's sample indices are exactly what a fresh same-seed build
+    /// over the current dataset would draw — the bit-identity contract
+    /// `tests/dynamic.rs` pins. Empty for statically built trees.
+    rng_snaps: Vec<Rng>,
+    /// Per-node edit versions (bumped along the edited slot's ancestor
+    /// path). Empty for static trees (stamp 0 everywhere).
+    node_versions: Vec<u64>,
+    /// Per-slot edit versions (bumped for the edited slot itself, whose
+    /// coordinates changed for *every* node it queries). Empty for static
+    /// trees.
+    point_versions: Vec<u64>,
+    /// The build config, retained so path rebuilds can reconstruct
+    /// oracles. `None` marks a statically built tree (no edits allowed).
+    dyn_cfg: Option<KdeConfig>,
+    /// Edits applied (`insert` + `delete`).
+    edit_count: u64,
+    /// Node oracles rebuilt across all edits — the dispatch-count contract
+    /// pins this at O(log n) per edit.
+    edit_rebuilds: u64,
 }
 
 impl MultiLevelKde {
@@ -203,6 +242,75 @@ impl MultiLevelKde {
             session: OverlapSession::new(),
             multi_calls: AtomicU64::new(0),
             counters,
+            rng_snaps: Vec::new(),
+            node_versions: Vec::new(),
+            point_versions: Vec::new(),
+            dyn_cfg: None,
+            edit_count: 0,
+            edit_rebuilds: 0,
+        }
+    }
+
+    /// Build a *dynamic* tree: same shape and semantics as
+    /// [`build`](Self::build), but every oracle owns its scan buffer
+    /// (gathered copies, never borrows of the shared dataset) and the
+    /// tree records a per-node RNG snapshot, so
+    /// [`insert`](Self::insert) / [`delete`](Self::delete) can rebuild
+    /// exactly the O(log n) oracles on an edited slot's ancestor path
+    /// while leaving every other node's cached sums and samples intact.
+    ///
+    /// Restrictions (asserted):
+    /// * `kind` must be `Naive` or `Sampling` — the estimator families
+    ///   whose construction draws depend only on the range *shape*, which
+    ///   is what makes a path rebuild reproduce a fresh build bit for bit.
+    /// * `kernel` must not be `RationalQuadratic`: deletes rely on the
+    ///   far-sentinel tombstone ([`Dataset::TOMBSTONE_COORD`]) carrying
+    ///   exactly zero kernel mass, and `1/(1+d^2)` never underflows.
+    pub fn build_dynamic(
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: Arc<dyn KernelBackend>,
+        counters: Arc<KdeCounters>,
+    ) -> Self {
+        assert!(
+            kernel != Kernel::RationalQuadratic,
+            "dynamic trees need a kernel that underflows at the tombstone sentinel"
+        );
+        assert!(
+            matches!(cfg.kind, EstimatorKind::Naive | EstimatorKind::Sampling { .. }),
+            "dynamic trees support Naive and Sampling estimators only"
+        );
+        let mut rng = Rng::new(cfg.seed);
+        let mut nodes = Vec::new();
+        let mut oracles: Vec<Box<dyn Kde>> = Vec::new();
+        let mut snaps: Vec<Rng> = Vec::new();
+        Self::build_dyn_rec(
+            &ds, kernel, cfg, &backend, &counters, &mut rng, 0, ds.n, &mut nodes, &mut oracles,
+            &mut snaps,
+        );
+        let n_nodes = nodes.len();
+        let n_points = ds.n;
+        MultiLevelKde {
+            ds,
+            kernel,
+            nodes,
+            oracles,
+            cache: ShardedCache::new(),
+            leaf_cutoff: cfg.leaf_cutoff,
+            backend,
+            fuse: AtomicBool::new(true),
+            overlap: AtomicBool::new(true),
+            cross_round: AtomicBool::new(true),
+            session: OverlapSession::new(),
+            multi_calls: AtomicU64::new(0),
+            counters,
+            rng_snaps: snaps,
+            node_versions: vec![0; n_nodes],
+            point_versions: vec![0; n_points],
+            dyn_cfg: Some(*cfg),
+            edit_count: 0,
+            edit_rebuilds: 0,
         }
     }
 
@@ -286,6 +394,180 @@ impl MultiLevelKde {
             nodes[id].right = Some(r);
         }
         id
+    }
+
+    /// Dynamic-tree oracle factory: leaves and `Naive` nodes get an
+    /// owned-buffer exact scan ([`BufferKde`] — numerically identical to
+    /// the static tree's [`NaiveKde`], but holding no dataset `Arc`);
+    /// `Sampling` nodes gather their subsample into an owned buffer as
+    /// before. Shared by the initial build and every path rebuild.
+    fn dyn_oracle(
+        ds: &Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: &Arc<dyn KernelBackend>,
+        counters: &Arc<KdeCounters>,
+        rng: &mut Rng,
+        lo: usize,
+        hi: usize,
+    ) -> Box<dyn Kde> {
+        let len = hi - lo;
+        if len <= cfg.leaf_cutoff || matches!(cfg.kind, EstimatorKind::Naive) {
+            Box::new(BufferKde::gather(
+                ds,
+                kernel,
+                lo,
+                hi,
+                backend.clone(),
+                counters.clone(),
+            ))
+        } else {
+            Box::new(SamplingKde::new(
+                ds.clone(),
+                kernel,
+                lo,
+                hi,
+                cfg,
+                backend.clone(),
+                counters.clone(),
+                rng,
+            ))
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build_dyn_rec(
+        ds: &Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        backend: &Arc<dyn KernelBackend>,
+        counters: &Arc<KdeCounters>,
+        rng: &mut Rng,
+        lo: usize,
+        hi: usize,
+        nodes: &mut Vec<Node>,
+        oracles: &mut Vec<Box<dyn Kde>>,
+        snaps: &mut Vec<Rng>,
+    ) -> usize {
+        let id = nodes.len();
+        nodes.push(Node { lo, hi, left: None, right: None });
+        // Snapshot BEFORE the oracle consumes draws: a rebuild replays
+        // exactly the draw stream a fresh build would see at this node
+        // (construction draw counts depend only on the range shape, never
+        // on coordinates, so the stream stays aligned across edits).
+        snaps.push(rng.clone());
+        oracles.push(Self::dyn_oracle(ds, kernel, cfg, backend, counters, rng, lo, hi));
+        let len = hi - lo;
+        if len > 1 {
+            let mid = lo + len / 2;
+            let l = Self::build_dyn_rec(
+                ds, kernel, cfg, backend, counters, rng, lo, mid, nodes, oracles, snaps,
+            );
+            let r = Self::build_dyn_rec(
+                ds, kernel, cfg, backend, counters, rng, mid, hi, nodes, oracles, snaps,
+            );
+            nodes[id].left = Some(l);
+            nodes[id].right = Some(r);
+        }
+        id
+    }
+
+    /// Whether this tree was built with [`build_dynamic`]
+    /// (`Self::build_dynamic`) and accepts edits.
+    pub fn is_dynamic(&self) -> bool {
+        self.dyn_cfg.is_some()
+    }
+
+    /// `(edits, oracle_rebuilds)`: edits applied so far and the total
+    /// node-oracle rebuilds they cost. The dispatch-count contract pinned
+    /// by `tests/dynamic.rs`: `oracle_rebuilds <= edits * (log2(n) + 1)`.
+    pub fn edit_stats(&self) -> (u64, u64) {
+        (self.edit_count, self.edit_rebuilds)
+    }
+
+    /// Insert a point into a tombstoned slot (copy-on-write on the shared
+    /// dataset), rebuilding only the slot's ancestor-path oracles. Returns
+    /// the slot written, or `None` when no free slot exists — dynamic
+    /// trees index a fixed `[0, n)` slot space, so grow by building over a
+    /// dataset with spare (deleted) capacity.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a statically built tree.
+    pub fn insert(&mut self, row: &[f32]) -> Option<usize> {
+        assert!(self.is_dynamic(), "insert on a static tree: use build_dynamic");
+        let slot = Arc::make_mut(&mut self.ds).insert_reuse(row)?;
+        self.rebuild_path(slot);
+        Some(slot)
+    }
+
+    /// Tombstone-delete `slot` (copy-on-write on the shared dataset),
+    /// rebuilding only the slot's ancestor-path oracles. Returns `false`
+    /// if the slot was already dead.
+    ///
+    /// # Panics
+    ///
+    /// Panics on a statically built tree.
+    pub fn delete(&mut self, slot: usize) -> bool {
+        assert!(self.is_dynamic(), "delete on a static tree: use build_dynamic");
+        if !Arc::make_mut(&mut self.ds).delete(slot) {
+            return false;
+        }
+        self.rebuild_path(slot);
+        true
+    }
+
+    /// Rebuild the oracles on `slot`'s root-to-leaf ancestor path from
+    /// their recorded RNG snapshots and bump the stamps that invalidate
+    /// exactly the affected memo entries: the path nodes' versions (their
+    /// subset data changed for every query point) and the slot's point
+    /// version (its coordinates changed for every node).
+    fn rebuild_path(&mut self, slot: usize) {
+        let cfg = match self.dyn_cfg {
+            Some(c) => c,
+            None => return,
+        };
+        let mut id = 0usize;
+        loop {
+            let node = self.nodes[id];
+            let mut rng = self.rng_snaps[id].clone();
+            self.oracles[id] = Self::dyn_oracle(
+                &self.ds,
+                self.kernel,
+                &cfg,
+                &self.backend,
+                &self.counters,
+                &mut rng,
+                node.lo,
+                node.hi,
+            );
+            self.node_versions[id] += 1;
+            self.edit_rebuilds += 1;
+            if node.hi - node.lo <= 1 {
+                break;
+            }
+            let mid = node.lo + (node.hi - node.lo) / 2;
+            let next = if slot < mid { node.left } else { node.right };
+            match next {
+                Some(c) => id = c,
+                None => break,
+            }
+        }
+        self.point_versions[slot] += 1;
+        self.edit_count += 1;
+    }
+
+    /// The stamp a (node, point) memo entry must carry to be valid now.
+    /// Versions only grow, so any edit touching either coordinate of the
+    /// key strictly increases the stamp and the stale entry never hits
+    /// again. Statically built trees have empty version vectors: stamp 0
+    /// everywhere, the pre-dynamic behavior unchanged.
+    #[inline]
+    fn stamp(&self, id: usize, i: usize) -> u64 {
+        if self.node_versions.is_empty() {
+            return 0;
+        }
+        self.node_versions[id] + self.point_versions[i]
     }
 
     /// Id of the root node (covers the whole dataset).
@@ -402,11 +684,12 @@ impl MultiLevelKde {
     /// callers subtract 1.0 in that case (Alg 4.3 / 4.11).
     pub fn query_point(&self, id: usize, i: usize) -> f64 {
         let key = (id as u32, i as u32);
-        if let Some(v) = self.cache.get(key) {
+        let stamp = self.stamp(id, i);
+        if let Some(v) = self.cache.get(key, stamp) {
             return v;
         }
         let v = self.oracles[id].query(self.ds.point(i));
-        self.cache.insert_or_get(key, v)
+        self.cache.insert_or_get(key, stamp, v)
     }
 
     /// Batched [`query_point`](Self::query_point): answers for every index
@@ -496,7 +779,7 @@ impl MultiLevelKde {
             for &i in idx {
                 let k = i as u32;
                 res.entry(k).or_insert_with(|| {
-                    let cached = self.cache.get((id as u32, k));
+                    let cached = self.cache.get((id as u32, k), self.stamp(id, i));
                     if cached.is_none() {
                         miss.push(i);
                     }
@@ -616,7 +899,11 @@ impl MultiLevelKde {
                     // First writer wins under concurrent misses;
                     // report what actually ended up cached
                     // (consistency).
-                    let stored = self.cache.insert_or_get((id as u32, i as u32), v * view.scale);
+                    let stored = self.cache.insert_or_get(
+                        (id as u32, i as u32),
+                        self.stamp(id, i),
+                        v * view.scale,
+                    );
                     resolved_ref[gi].insert(i as u32, Some(stored));
                 }
                 Ok(())
@@ -652,7 +939,7 @@ impl MultiLevelKde {
         resolved: &mut FxHashMap<u32, Option<f64>>,
     ) {
         for (&i, &v) in miss.iter().zip(vals) {
-            let stored = self.cache.insert_or_get((id as u32, i as u32), v);
+            let stored = self.cache.insert_or_get((id as u32, i as u32), self.stamp(id, i), v);
             resolved.insert(i as u32, Some(stored));
         }
     }
@@ -926,6 +1213,107 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "group {gi} pos {pos}: {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn dynamic_build_matches_static_build_bit_for_bit() {
+        // BufferKde owns copies of the same bytes NaiveKde borrows, so on
+        // an all-live dataset the dynamic tree is the static tree.
+        let mut rng = Rng::new(87);
+        let ds = Arc::new(gaussian_mixture(48, 4, 2, 1.0, 0.5, &mut rng));
+        let stat = MultiLevelKde::build(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        let dynm = MultiLevelKde::build_dynamic(
+            ds,
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        assert!(dynm.is_dynamic() && !stat.is_dynamic());
+        assert_eq!(stat.num_nodes(), dynm.num_nodes());
+        let idx: Vec<usize> = (0..48).collect();
+        for id in [0usize, 1, 2, 5, 40] {
+            let a = stat.query_points(id, &idx);
+            let b = dynm.query_points(id, &idx);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "node {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn edits_invalidate_the_path_and_only_the_path() {
+        let mut rng = Rng::new(89);
+        let ds = Arc::new(gaussian_mixture(64, 4, 2, 1.0, 0.5, &mut rng));
+        let mut tree = MultiLevelKde::build_dynamic(
+            ds.clone(),
+            Kernel::Laplacian,
+            &KdeConfig::exact(),
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        let root = tree.root();
+        let (l, r) = tree.node(root).children();
+        // Slot 60 lives under the right child; query point 3 lives on the
+        // left. Warm both subtree answers for point 3.
+        let before_l = tree.query_point(l, 3);
+        let before_r = tree.query_point(r, 3);
+        let before_root = tree.query_point(root, 3);
+        let warm = tree.counters.queries();
+        let victim = ds.point(60).to_vec();
+        assert!(tree.delete(60));
+        // Left subtree untouched: still a cache hit (no new KDE query).
+        assert_eq!(tree.query_point(l, 3).to_bits(), before_l.to_bits());
+        assert_eq!(tree.counters.queries(), warm, "off-path entry must stay cached");
+        // Right subtree and root were on the path: recomputed, and the
+        // deleted point's mass is gone (exact oracles).
+        let after_r = tree.query_point(r, 3);
+        let after_root = tree.query_point(root, 3);
+        assert!(tree.counters.queries() > warm);
+        let k = Kernel::Laplacian.eval(&victim, ds.point(3)) as f64;
+        assert!((before_r - after_r - k).abs() < 1e-9 * (1.0 + k), "{before_r} -> {after_r}");
+        assert!((before_root - after_root - k).abs() < 1e-9 * (1.0 + k));
+        // Re-inserting different coordinates into the freed slot shifts
+        // the answers again and reuses slot 60.
+        assert_eq!(tree.insert(&[0.5, 0.5, 0.5, 0.5]), Some(60));
+        assert_eq!(tree.insert(&[0.5; 4]), None, "no second free slot");
+        let (edits, rebuilds) = tree.edit_stats();
+        assert_eq!(edits, 2);
+        // Path length for n = 64 is log2(64) + 1 = 7 nodes.
+        assert_eq!(rebuilds, 2 * 7, "each edit rebuilds exactly the ancestor path");
+    }
+
+    #[test]
+    fn dynamic_edits_rebuild_o_log_n_oracles() {
+        let mut rng = Rng::new(91);
+        let n = 200; // non-power-of-two
+        let ds = Arc::new(gaussian_mixture(n, 3, 2, 1.0, 0.5, &mut rng));
+        let cfg = KdeConfig {
+            kind: EstimatorKind::Sampling { eps: 0.5, tau: 0.2 },
+            leaf_cutoff: 8,
+            seed: 0xD1,
+        };
+        let mut tree = MultiLevelKde::build_dynamic(
+            ds,
+            Kernel::Gaussian,
+            &cfg,
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        for s in 0..40usize {
+            assert!(tree.delete((s * 37) % n));
+        }
+        let (edits, rebuilds) = tree.edit_stats();
+        assert_eq!(edits, 40);
+        // Unbalanced splits round up, so allow ceil(log2 n) + 1 per edit.
+        let bound = edits * ((n as f64).log2().ceil() as u64 + 1);
+        assert!(rebuilds <= bound, "rebuilds {rebuilds} > O(log n) bound {bound}");
     }
 
     #[test]

@@ -18,6 +18,7 @@ use std::sync::Arc;
 
 use crate::kde::{Kde, KdeCounters};
 use crate::kernel::{Dataset, Kernel};
+use crate::util::fxhash::FxHashMap;
 
 struct PNode {
     lo: usize,
@@ -29,6 +30,15 @@ struct PNode {
 }
 
 /// Deterministic space-partition-tree estimator; see the module docs.
+///
+/// The tree is *dynamic*: [`insert_point`](Self::insert_point) attaches a
+/// staged dataset slot by descending to the least-expanding leaf (growing
+/// the ancestor bounding boxes on the way down, so every pruning bound
+/// stays conservative), and [`delete_point`](Self::delete_point)
+/// tombstones a point and decrements the live counts up its leaf-to-root
+/// path. Either edit touches exactly one root-to-leaf path — O(log n)
+/// nodes, pinned by the [`edit_stats`](Self::edit_stats) contract — and
+/// queries certify their error against live counts, skipping dead mass.
 pub struct PartitionTreeKde {
     ds: Arc<Dataset>,
     kernel: Kernel,
@@ -40,7 +50,20 @@ pub struct PartitionTreeKde {
     leaf_size: usize,
     counters: Arc<KdeCounters>,
     evals: std::sync::atomic::AtomicU64,
-    range_len: usize,
+    /// Parent of each node (`None` for the root) — the upward path edits
+    /// walk when adjusting live counts.
+    parents: Vec<Option<usize>>,
+    /// Leaf currently holding each tracked dataset index (build residents
+    /// and inserted points alike).
+    leaf_of: FxHashMap<usize, usize>,
+    /// Live points under each node (range residents + spill − tombstones).
+    live_count: Vec<usize>,
+    /// Dataset indices attached after construction, per leaf.
+    spill: Vec<Vec<usize>>,
+    /// Tree-local tombstones, indexed by dataset slot.
+    dead: Vec<bool>,
+    edits: u64,
+    edit_touched: u64,
 }
 
 impl PartitionTreeKde {
@@ -60,6 +83,26 @@ impl PartitionTreeKde {
         let leaf_size = 16;
         let len = hi - lo;
         Self::build(&ds, &mut perm, 0, len, leaf_size, &mut nodes, 0);
+        let mut parents = vec![None; nodes.len()];
+        for (id, n) in nodes.iter().enumerate() {
+            if let Some(l) = n.left {
+                parents[l] = Some(id);
+            }
+            if let Some(r) = n.right {
+                parents[r] = Some(id);
+            }
+        }
+        let mut leaf_of = FxHashMap::default();
+        for (id, n) in nodes.iter().enumerate() {
+            if n.left.is_none() {
+                for &i in &perm[n.lo..n.hi] {
+                    leaf_of.insert(i, id);
+                }
+            }
+        }
+        let live_count: Vec<usize> = nodes.iter().map(|n| n.hi - n.lo).collect();
+        let spill = vec![Vec::new(); nodes.len()];
+        let dead = vec![false; ds.n];
         PartitionTreeKde {
             ds,
             kernel,
@@ -69,8 +112,108 @@ impl PartitionTreeKde {
             leaf_size,
             counters,
             evals: std::sync::atomic::AtomicU64::new(0),
-            range_len: len,
+            parents,
+            leaf_of,
+            live_count,
+            spill,
+            dead,
+            edits: 0,
+            edit_touched: 0,
         }
+    }
+
+    /// Attach dataset slot `i` (already staged in the shared dataset) to
+    /// the tree. An untracked index descends to the leaf whose bounding
+    /// box expands least (L1 expansion, ties left), growing every ancestor
+    /// box on the way down; a tombstoned tracked index is revived in place
+    /// along its recorded leaf-to-root path. Touches O(log n) nodes either
+    /// way. Returns `false` (no-op) if `i` is already live.
+    pub fn insert_point(&mut self, i: usize) -> bool {
+        assert!(i < self.ds.n);
+        if let Some(&leaf) = self.leaf_of.get(&i) {
+            if !self.dead[i] {
+                return false;
+            }
+            // Revive: boxes never shrank, so they still contain the point.
+            self.dead[i] = false;
+            self.bump_path(leaf, 1);
+            return true;
+        }
+        let y = self.ds.point(i).to_vec();
+        let mut id = 0usize;
+        let mut touched = 0u64;
+        loop {
+            let node = &mut self.nodes[id];
+            for c in 0..y.len() {
+                node.bbox_min[c] = node.bbox_min[c].min(y[c]);
+                node.bbox_max[c] = node.bbox_max[c].max(y[c]);
+            }
+            self.live_count[id] += 1;
+            touched += 1;
+            let (l, r) = match (self.nodes[id].left, self.nodes[id].right) {
+                (Some(l), Some(r)) => (l, r),
+                _ => break,
+            };
+            id = if self.expansion(l, &y) <= self.expansion(r, &y) { l } else { r };
+        }
+        self.spill[id].push(i);
+        self.leaf_of.insert(i, id);
+        self.edits += 1;
+        self.edit_touched += touched;
+        true
+    }
+
+    /// Tombstone tracked point `i`, decrementing live counts up its
+    /// leaf-to-root path (O(log n) nodes). Bounding boxes are left as-is —
+    /// stale-large boxes only widen the certified interval, never break
+    /// it. Returns `false` if `i` is untracked or already dead.
+    pub fn delete_point(&mut self, i: usize) -> bool {
+        let leaf = match self.leaf_of.get(&i) {
+            Some(&l) => l,
+            None => return false,
+        };
+        if self.dead[i] {
+            return false;
+        }
+        self.dead[i] = true;
+        self.bump_path(leaf, -1);
+        true
+    }
+
+    /// Walk `leaf` up to the root adjusting live counts by `delta`,
+    /// charging the touched-node contract.
+    fn bump_path(&mut self, leaf: usize, delta: isize) {
+        let mut id = Some(leaf);
+        let mut touched = 0u64;
+        while let Some(cur) = id {
+            self.live_count[cur] = (self.live_count[cur] as isize + delta) as usize;
+            touched += 1;
+            id = self.parents[cur];
+        }
+        self.edits += 1;
+        self.edit_touched += touched;
+    }
+
+    /// L1 bounding-box expansion adding `y` to node `id` would cost.
+    fn expansion(&self, id: usize, y: &[f32]) -> f64 {
+        let n = &self.nodes[id];
+        let mut e = 0.0f64;
+        for c in 0..y.len() {
+            e += (n.bbox_min[c] - y[c]).max(0.0) as f64 + (y[c] - n.bbox_max[c]).max(0.0) as f64;
+        }
+        e
+    }
+
+    /// `(edits, nodes_touched)`: point edits applied and the total tree
+    /// nodes they adjusted — the per-edit O(log n) contract (each edit
+    /// touches exactly one root-to-leaf path).
+    pub fn edit_stats(&self) -> (u64, u64) {
+        (self.edits, self.edit_touched)
+    }
+
+    /// Live (non-tombstoned) points currently tracked.
+    pub fn live_len(&self) -> usize {
+        self.live_count[0]
     }
 
     fn build(
@@ -155,7 +298,13 @@ impl PartitionTreeKde {
 
     fn query_rec(&self, id: usize, y: &[f32], budget_per_point: f64) -> f64 {
         let node = &self.nodes[id];
-        let size = (node.hi - node.lo) as f64;
+        // Live count, not range length: dead mass is skipped and inserted
+        // (spill) mass counted, so the certified interval brackets the
+        // true live sum.
+        let size = self.live_count[id] as f64;
+        if size == 0.0 {
+            return 0.0;
+        }
         let (dmin, dmax) = self.box_dists(node, y);
         let hi = self.kernel_of_dist(dmin);
         let lo = self.kernel_of_dist(dmax);
@@ -167,13 +316,15 @@ impl PartitionTreeKde {
                 self.query_rec(l, y, budget_per_point) + self.query_rec(r, y, budget_per_point)
             }
             _ => {
-                // Exact leaf evaluation.
+                // Exact leaf evaluation over live residents + live spill.
                 self.evals.fetch_add(
-                    (node.hi - node.lo) as u64,
+                    self.live_count[id] as u64,
                     std::sync::atomic::Ordering::Relaxed,
                 );
                 self.perm[node.lo..node.hi]
                     .iter()
+                    .chain(self.spill[id].iter())
+                    .filter(|&&i| !self.dead[i])
                     .map(|&i| self.kernel.eval(self.ds.point(i), y) as f64)
                     .sum()
             }
@@ -194,6 +345,9 @@ impl PartitionTreeKde {
 impl Kde for PartitionTreeKde {
     fn query(&self, y: &[f32]) -> f64 {
         self.counters.record_query();
+        if self.live_count[0] == 0 {
+            return 0.0;
+        }
         if self.eps <= 0.0 {
             return self.query_rec(0, y, 0.0);
         }
@@ -202,12 +356,12 @@ impl Kde for PartitionTreeKde {
         // unknown upfront. Pass 1 uses a crude root-bound budget to get a
         // first estimate Z1; pass 2 re-runs with the properly calibrated
         // budget eps * Z1 / (2 |X|), making the total error certified
-        // <= ~eps * Z.
+        // <= ~eps * Z. |X| is the current live count.
         let root = &self.nodes[0];
         let (dmin, dmax) = self.box_dists(root, y);
         let crude = 0.5 * (self.kernel_of_dist(dmin) + self.kernel_of_dist(dmax));
         let z1 = self.query_rec(0, y, self.eps * crude.max(1e-12));
-        let budget = self.eps * (z1 / self.range_len as f64).max(1e-12) * 0.5;
+        let budget = self.eps * (z1 / self.live_count[0] as f64).max(1e-12) * 0.5;
         self.query_rec(0, y, budget)
     }
 
@@ -221,7 +375,7 @@ impl Kde for PartitionTreeKde {
     }
 
     fn subset_len(&self) -> usize {
-        self.range_len
+        self.live_count[0]
     }
 
     fn dim(&self) -> usize {
@@ -308,6 +462,81 @@ mod tests {
                 "eps=0 must be exact: {got} vs {want}"
             );
         }
+    }
+
+    #[test]
+    fn dynamic_edits_match_exact_live_sum() {
+        let mut rng = Rng::new(1309);
+        // Build over the first 512 slots; the remaining 88 are staged in
+        // the dataset and attached afterwards through insert_point.
+        let ds = Arc::new(gaussian_mixture(600, 4, 2, 1.5, 0.5, &mut rng));
+        let mut tree = PartitionTreeKde::new(
+            ds.clone(),
+            Kernel::Gaussian,
+            0,
+            512,
+            0.05,
+            KdeCounters::new(),
+        );
+        for i in 512..600 {
+            assert!(tree.insert_point(i), "attach staged slot {i}");
+        }
+        for i in (0..600).step_by(7) {
+            assert!(tree.delete_point(i), "delete {i}");
+        }
+        let live: Vec<usize> = (0..600).filter(|i| i % 7 != 0).collect();
+        assert_eq!(tree.live_len(), live.len());
+        assert_eq!(tree.subset_len(), live.len());
+        let mut worst: f64 = 0.0;
+        for &q in &[1usize, 52, 299, 599] {
+            let got = tree.query(ds.point(q));
+            let want: f64 = live
+                .iter()
+                .map(|&j| Kernel::Gaussian.eval(ds.point(j), ds.point(q)) as f64)
+                .sum();
+            worst = worst.max((got - want).abs() / want);
+        }
+        assert!(worst < 0.15, "dynamic ptree worst rel err {worst}");
+        // Touched-node contract: each edit walks one root-to-leaf path.
+        let (edits, touched) = tree.edit_stats();
+        assert_eq!(edits, 88 + 86);
+        let height = (512f64 / 16.0).log2().ceil() as u64 + 2; // splits + root/leaf
+        assert!(
+            touched <= edits * height,
+            "touched {touched} > O(log n) bound {}",
+            edits * height
+        );
+    }
+
+    #[test]
+    fn dynamic_delete_then_revive_is_idempotent() {
+        let mut rng = Rng::new(1311);
+        let ds = Arc::new(gaussian_mixture(128, 3, 2, 1.0, 0.5, &mut rng));
+        let mut tree = PartitionTreeKde::new(
+            ds.clone(),
+            Kernel::Laplacian,
+            0,
+            128,
+            0.0,
+            KdeCounters::new(),
+        );
+        let before = tree.query(ds.point(5));
+        assert!(tree.delete_point(9));
+        assert!(!tree.delete_point(9), "double delete is a no-op");
+        assert!(tree.insert_point(9), "revive in place");
+        assert!(!tree.insert_point(9), "already live");
+        assert_eq!(tree.live_len(), 128);
+        let after = tree.query(ds.point(5));
+        assert!(
+            (before - after).abs() < 1e-9 * (1.0 + before),
+            "revive must restore the exact answer: {before} vs {after}"
+        );
+        // Deleting everything yields exactly zero mass.
+        for i in 0..128 {
+            tree.delete_point(i);
+        }
+        assert_eq!(tree.live_len(), 0);
+        assert_eq!(tree.query(ds.point(5)), 0.0);
     }
 
     #[test]

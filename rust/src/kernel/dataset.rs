@@ -15,6 +15,13 @@ use crate::util::rng::Rng;
 
 /// A dataset of `n` points in `R^d`, stored row-major, already scaled by
 /// `1/sigma` (bandwidth folded into the coordinates).
+///
+/// Storage is mutable: rows can be appended ([`Dataset::push_row`] /
+/// [`Dataset::insert`]) and tombstone-deleted ([`Dataset::delete`]) in
+/// place, with [`Dataset::compact`] reclaiming dead rows. The f32-rows /
+/// f64-accumulation contract is unchanged: mutation only rewrites rows,
+/// never the scan layout, so every backend path keeps streaming the same
+/// contiguous `n x d` buffer.
 #[derive(Clone, Debug)]
 pub struct Dataset {
     pub n: usize,
@@ -22,9 +29,29 @@ pub struct Dataset {
     data: Vec<f32>,
     /// Optional ground-truth labels (for clustering experiments).
     pub labels: Option<Vec<usize>>,
+    /// Tombstone flags, one per slot (`true` = dead).
+    dead: Vec<bool>,
+    /// Dead slots available for reuse (LIFO).
+    free: Vec<usize>,
+    /// Number of `true` entries in `dead`.
+    dead_count: usize,
 }
 
 impl Dataset {
+    /// Every coordinate of a tombstoned row is overwritten with this
+    /// far-sentinel value. All live points in this repo's workloads sit at
+    /// O(10) coordinates, so a tombstone is at L1/L2 distance >= ~3e4 from
+    /// any live point or query — far past the f32 exp underflow threshold —
+    /// and the Laplacian / Gaussian / Exponential kernels evaluate to
+    /// *exactly* +0.0 against it. Dead rows therefore contribute exactly
+    /// zero mass to any backend scan that still covers their slot.
+    ///
+    /// The RationalQuadratic kernel (`1/(1+d^2)`) never underflows, so the
+    /// dynamic layers that rely on this sentinel reject it up front.
+    pub const TOMBSTONE_COORD: f32 = 3.0e4;
+
+    /// Build from per-point rows. Panics if `rows` is empty or the rows
+    /// have unequal lengths.
     pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
         assert!(!rows.is_empty());
         let d = rows[0].len();
@@ -34,12 +61,22 @@ impl Dataset {
         for r in &rows {
             data.extend_from_slice(r);
         }
-        Dataset { n, d, data, labels: None }
+        Self::from_flat(n, d, data)
     }
 
+    /// Build from a row-major flat buffer. Panics unless
+    /// `data.len() == n * d`.
     pub fn from_flat(n: usize, d: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), n * d);
-        Dataset { n, d, data, labels: None }
+        Dataset {
+            n,
+            d,
+            data,
+            labels: None,
+            dead: vec![false; n],
+            free: Vec::new(),
+            dead_count: 0,
+        }
     }
 
     #[inline]
@@ -83,30 +120,142 @@ impl Dataset {
 
     /// Scale all coordinates by `c` (returns a new dataset). Used for the
     /// squared-kernel row-norm trick (§5.2) and for bandwidth folding.
+    /// Defined on compacted datasets: the result is fully live (scaling a
+    /// tombstone row would shrink the far sentinel).
     pub fn scaled(&self, c: f32) -> Dataset {
-        Dataset {
-            n: self.n,
-            d: self.d,
-            data: self.data.iter().map(|v| v * c).collect(),
-            labels: self.labels.clone(),
-        }
+        let mut ds = Dataset::from_flat(
+            self.n,
+            self.d,
+            self.data.iter().map(|v| v * c).collect(),
+        );
+        ds.labels = self.labels.clone();
+        ds
     }
 
     /// Restrict to a subset of indices (Alg 5.18's principal submatrix).
+    /// The result is fully live; pick live indices (or [`Dataset::compact`]
+    /// first) when subsetting a mutated dataset.
     pub fn subset(&self, idx: &[usize]) -> Dataset {
         let mut data = Vec::with_capacity(idx.len() * self.d);
         for &i in idx {
             data.extend_from_slice(self.point(i));
         }
-        Dataset {
-            n: idx.len(),
-            d: self.d,
-            data,
-            labels: self
-                .labels
-                .as_ref()
-                .map(|l| idx.iter().map(|&i| l[i]).collect()),
+        let mut ds = Dataset::from_flat(idx.len(), self.d, data);
+        ds.labels = self
+            .labels
+            .as_ref()
+            .map(|l| idx.iter().map(|&i| l[i]).collect());
+        ds
+    }
+
+    // -- Mutable storage (append / tombstone-delete / compaction) ----------
+
+    /// Whether slot `i` holds a live point (`false` once tombstoned).
+    #[inline]
+    pub fn live(&self, i: usize) -> bool {
+        !self.dead[i]
+    }
+
+    /// Number of live (non-tombstoned) points; `n` counts slots.
+    #[inline]
+    pub fn live_len(&self) -> usize {
+        self.n - self.dead_count
+    }
+
+    /// Append a new row at slot `n`, growing the buffer. Returns the new
+    /// slot index. Ground-truth labels (a static-experiment artifact) are
+    /// dropped on append since the new point has none.
+    pub fn push_row(&mut self, row: &[f32]) -> usize {
+        assert_eq!(row.len(), self.d);
+        let slot = self.n;
+        self.data.extend_from_slice(row);
+        self.dead.push(false);
+        self.n += 1;
+        self.labels = None;
+        slot
+    }
+
+    /// Tombstone-delete slot `i`: the row is overwritten with
+    /// [`Dataset::TOMBSTONE_COORD`] so backend scans that still cover the
+    /// slot see exactly zero kernel mass, and the slot is queued for reuse.
+    /// Returns `false` (and does nothing) if the slot was already dead.
+    pub fn delete(&mut self, i: usize) -> bool {
+        assert!(i < self.n);
+        if self.dead[i] {
+            return false;
         }
+        self.dead[i] = true;
+        self.dead_count += 1;
+        for c in &mut self.data[i * self.d..(i + 1) * self.d] {
+            *c = Self::TOMBSTONE_COORD;
+        }
+        self.free.push(i);
+        true
+    }
+
+    /// Insert a point, reusing the most recently tombstoned slot if one
+    /// exists, else appending. Returns the slot written.
+    ///
+    /// ```
+    /// use kde_matrix::kernel::Dataset;
+    /// let mut ds = Dataset::from_rows(vec![vec![0.0, 0.0], vec![1.0, 1.0]]);
+    /// assert!(ds.delete(0));
+    /// assert_eq!(ds.live_len(), 1);
+    /// let slot = ds.insert(&[2.0, 2.0]);
+    /// assert_eq!(slot, 0); // the tombstoned slot is reused in place
+    /// assert_eq!(ds.point(0), &[2.0, 2.0]);
+    /// assert_eq!((ds.n, ds.live_len()), (2, 2));
+    /// assert_eq!(ds.insert(&[3.0, 3.0]), 2); // no free slot -> append
+    /// ```
+    pub fn insert(&mut self, row: &[f32]) -> usize {
+        assert_eq!(row.len(), self.d);
+        match self.free.pop() {
+            Some(slot) => {
+                self.revive_slot(slot, row);
+                slot
+            }
+            None => self.push_row(row),
+        }
+    }
+
+    /// Insert only if a tombstoned slot can be reused (no buffer growth, so
+    /// index trees built over `[0, n)` stay valid). Returns `None` when no
+    /// free slot exists.
+    pub fn insert_reuse(&mut self, row: &[f32]) -> Option<usize> {
+        assert_eq!(row.len(), self.d);
+        let slot = self.free.pop()?;
+        self.revive_slot(slot, row);
+        Some(slot)
+    }
+
+    fn revive_slot(&mut self, slot: usize, row: &[f32]) {
+        self.data[slot * self.d..(slot + 1) * self.d].copy_from_slice(row);
+        self.dead[slot] = false;
+        self.dead_count -= 1;
+    }
+
+    /// Drop all tombstoned rows, renumbering the survivors to `[0,
+    /// live_len)` in original order. Labels are filtered alongside. Returns
+    /// the *old* slot index of each survivor (`ret[new] = old`).
+    pub fn compact(&mut self) -> Vec<usize> {
+        let mut survivors = Vec::with_capacity(self.live_len());
+        let mut data = Vec::with_capacity(self.live_len() * self.d);
+        for i in 0..self.n {
+            if !self.dead[i] {
+                survivors.push(i);
+                data.extend_from_slice(self.point(i));
+            }
+        }
+        self.labels = self
+            .labels
+            .take()
+            .map(|l| survivors.iter().map(|&i| l[i]).collect());
+        self.n = survivors.len();
+        self.data = data;
+        self.dead = vec![false; self.n];
+        self.free.clear();
+        self.dead_count = 0;
+        survivors
     }
 
     /// Median-rule bandwidth (§3.1): median pairwise distance over a sample
@@ -370,6 +519,89 @@ mod tests {
                 k
             );
         }
+    }
+
+    #[test]
+    fn mutation_edge_cases_table() {
+        // (name, d, n, duplicate_rows): built, deleted down to empty, then
+        // refilled — the shapes the scale regime exposes (d=1, n=1,
+        // duplicate points, empty-after-deletes).
+        let cases: [(&str, usize, usize, bool); 4] = [
+            ("n1_d1", 1, 1, false),
+            ("n1_d3", 3, 1, false),
+            ("d1", 1, 5, false),
+            ("duplicates", 2, 4, true),
+        ];
+        for (name, d, n, dup) in cases {
+            let rows: Vec<Vec<f32>> = (0..n)
+                .map(|i| vec![if dup { 1.0 } else { i as f32 }; d])
+                .collect();
+            let mut ds = Dataset::from_rows(rows.clone());
+            assert_eq!((ds.n, ds.d, ds.live_len()), (n, d, n), "{name}");
+            // Delete everything; a second delete of the same slot is a
+            // no-op returning false.
+            for i in 0..n {
+                assert!(ds.delete(i), "{name}: delete({i})");
+                assert!(!ds.delete(i), "{name}: double delete({i})");
+            }
+            assert_eq!(ds.live_len(), 0, "{name}: empty after deletes");
+            assert_eq!(ds.n, n, "{name}: slots retained");
+            // Tombstones carry exactly zero kernel mass for the decaying
+            // kernels (the far-sentinel contract).
+            for i in 0..n {
+                for k in [Kernel::Laplacian, Kernel::Gaussian, Kernel::Exponential] {
+                    assert_eq!(
+                        k.eval(ds.point(i), &rows[0]),
+                        0.0,
+                        "{name}: tombstone {i} leaks mass under {k:?}"
+                    );
+                }
+            }
+            // Refill: every insert reuses a tombstoned slot (no growth).
+            for r in &rows {
+                let s = ds.insert(r);
+                assert!(s < n, "{name}: insert grew instead of reusing");
+            }
+            assert_eq!((ds.n, ds.live_len()), (n, n), "{name}");
+            // Compact on a fully-live dataset is the identity renumbering.
+            assert_eq!(ds.compact(), (0..n).collect::<Vec<_>>(), "{name}");
+        }
+    }
+
+    #[test]
+    fn compact_renumbers_and_filters_labels() {
+        let mut rng = Rng::new(11);
+        let mut ds = gaussian_mixture(10, 3, 2, 1.0, 0.3, &mut rng);
+        let labels_before = ds.labels.clone().unwrap();
+        let keep3 = ds.point(3).to_vec();
+        ds.delete(0);
+        ds.delete(7);
+        ds.delete(9);
+        let survivors = ds.compact();
+        assert_eq!(survivors, vec![1, 2, 3, 4, 5, 6, 8]);
+        assert_eq!((ds.n, ds.live_len()), (7, 7));
+        assert_eq!(ds.point(2), &keep3[..]);
+        assert_eq!(ds.labels.as_ref().unwrap()[2], labels_before[3]);
+        assert_eq!(ds.labels.as_ref().unwrap().len(), 7);
+    }
+
+    #[test]
+    fn insert_reuse_never_grows() {
+        let mut ds = Dataset::from_rows(vec![vec![0.0], vec![1.0]]);
+        assert_eq!(ds.insert_reuse(&[5.0]), None, "no free slot yet");
+        ds.delete(1);
+        assert_eq!(ds.insert_reuse(&[5.0]), Some(1));
+        assert_eq!(ds.point(1), &[5.0]);
+        assert_eq!(ds.n, 2);
+        // push_row appends past the original capacity.
+        assert_eq!(ds.push_row(&[7.0]), 2);
+        assert_eq!((ds.n, ds.live_len()), (3, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_flat_length_mismatch_panics() {
+        let _ = Dataset::from_flat(3, 2, vec![0.0; 5]);
     }
 
     #[test]

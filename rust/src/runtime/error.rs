@@ -65,6 +65,16 @@ pub enum BackendError {
         /// The dataset name the caller asked for.
         name: String,
     },
+    /// A `try_register` named a dataset that is already registered
+    /// (permanent). Re-registering a name would either be silently
+    /// dropped (the idempotent `register` path) or — worse — leave
+    /// clients coalescing against a stale tree; callers that mean to
+    /// replace a dataset must say so through the registry's version-
+    /// bumping `update`.
+    AlreadyRegistered {
+        /// The dataset name that was already taken.
+        name: String,
+    },
 }
 
 impl BackendError {
@@ -74,8 +84,8 @@ impl BackendError {
     ///   structural failures are not).
     /// * `Timeout` / `Overloaded` — transient: load subsides.
     /// * `ArtifactMissing` / `Panicked` / `UnknownShard` /
-    ///   `UnknownDataset` — permanent: retrying the identical call
-    ///   deterministically fails again.
+    ///   `UnknownDataset` / `AlreadyRegistered` — permanent: retrying the
+    ///   identical call deterministically fails again.
     pub fn transient(&self) -> bool {
         match self {
             BackendError::ExecutionFailed { transient, .. } => *transient,
@@ -83,7 +93,8 @@ impl BackendError {
             BackendError::ArtifactMissing { .. }
             | BackendError::Panicked { .. }
             | BackendError::UnknownShard { .. }
-            | BackendError::UnknownDataset { .. } => false,
+            | BackendError::UnknownDataset { .. }
+            | BackendError::AlreadyRegistered { .. } => false,
         }
     }
 
@@ -122,6 +133,12 @@ impl fmt::Display for BackendError {
             }
             BackendError::UnknownDataset { name } => {
                 write!(f, "unknown dataset {name:?} (not registered)")
+            }
+            BackendError::AlreadyRegistered { name } => {
+                write!(
+                    f,
+                    "dataset {name:?} already registered (use update to version-bump)"
+                )
             }
         }
     }
@@ -170,6 +187,7 @@ mod tests {
         assert!(!BackendError::Panicked { message: "p".into() }.transient());
         assert!(!BackendError::UnknownShard { shard: 3, shards: 1 }.transient());
         assert!(!BackendError::UnknownDataset { name: "web".into() }.transient());
+        assert!(!BackendError::AlreadyRegistered { name: "web".into() }.transient());
     }
 
     #[test]
@@ -194,5 +212,7 @@ mod tests {
         assert!(format!("{}", BackendError::transient_failure("x")).contains("transient"));
         let d = format!("{}", BackendError::UnknownDataset { name: "web".into() });
         assert!(d.contains("unknown dataset") && d.contains("web"), "got: {d}");
+        let a = format!("{}", BackendError::AlreadyRegistered { name: "web".into() });
+        assert!(a.contains("already registered") && a.contains("web"), "got: {a}");
     }
 }

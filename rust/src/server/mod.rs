@@ -28,6 +28,13 @@
 //!   (B = 64 rows). Dispatches per query fall from 1 (solo cold query)
 //!   to `ceil(misses / 64) / flushed` — the coalescing win the serving
 //!   bench gates in CI.
+//! * **Versioned runs**: the router keys pending runs by
+//!   `(name, version)` — the version [`RegisteredDataset::version`]
+//!   carries and [`OracleRegistry::update`] bumps — so a dataset
+//!   replacement mid-flight never mixes requests across builds: requests
+//!   that resolved version `v` flush as their own batch against version
+//!   `v`'s tree, and new requests flush against the fresh build instead
+//!   of a stale first-writer entry.
 //! * **Determinism**: the store keeps a stable pack order (arrival
 //!   order within a dataset, first-arrival order across datasets), each
 //!   row of a fused submission accumulates its own segment range
@@ -347,14 +354,20 @@ fn absorb(
 ) {
     match ctl {
         Control::Request(ing) => {
-            let name = ing.dataset.name().to_string();
-            if store.key_len(&name) >= queue_cap {
+            // Key the run by (name, version), not name alone: a registry
+            // `update` mid-flight must not reroute requests that resolved
+            // the old entry (they flush as their own batch against their
+            // own tree), and — the converse hazard — requests resolving
+            // the NEW entry must not be flushed against a stale tree a
+            // first-writer-wins `or_insert` pinned under the bare name.
+            let key = format!("{}@{}", ing.dataset.name(), ing.dataset.version());
+            if store.key_len(&key) >= queue_cap {
                 metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 let _ = ing.req.respond.send(Err(BackendError::Overloaded));
                 return;
             }
-            datasets.entry(name.clone()).or_insert_with(|| ing.dataset.clone());
-            store.push(&name, ing.req, Instant::now());
+            datasets.insert(key.clone(), ing.dataset);
+            store.push(&key, ing.req, Instant::now());
         }
         Control::Shutdown => *running = false,
     }
@@ -512,6 +525,30 @@ mod tests {
             other => panic!("want UnknownDataset, got {:?}", other.map(|_| ())),
         }
         assert!(srv.try_submit_density("web", 48).is_err(), "out-of-range index");
+    }
+
+    #[test]
+    fn update_routes_new_requests_to_the_fresh_tree() {
+        let cfg = ServerConfig { max_wait: Duration::ZERO, ..ServerConfig::default() };
+        let (srv, v0) = serve(29, cfg);
+        assert_eq!(
+            srv.try_query_density("web", 3).unwrap().to_bits(),
+            v0.tree.query_point(v0.tree.root(), 3).to_bits()
+        );
+        // Replace the dataset through the registry's version bump. Without
+        // (name, version) run keys the router's first-writer dataset map
+        // would keep flushing "web" against the retired v0 tree.
+        let mut rng = Rng::new(31);
+        let fresh = Arc::new(gaussian_mixture(48, 3, 2, 1.0, 0.5, &mut rng));
+        let v1 = srv
+            .registry()
+            .update("web", fresh, Kernel::Laplacian, &KdeConfig::exact());
+        assert_eq!(v1.version(), 1);
+        let got = srv.try_query_density("web", 3).unwrap();
+        let want = v1.tree.query_point(v1.tree.root(), 3);
+        assert_eq!(got.to_bits(), want.to_bits());
+        assert!(got != v0.tree.query_point(v0.tree.root(), 3), "stale tree answered");
+        srv.shutdown();
     }
 
     #[test]

@@ -30,6 +30,12 @@ use crate::sampling::NeighborSampler;
 /// one estimator build).
 pub struct RegisteredDataset {
     name: String,
+    /// Monotone dataset version: 0 at first registration, bumped by each
+    /// [`OracleRegistry::update`]. The server keys its coalescing store by
+    /// `(name, version)`, so requests that resolved an older entry flush
+    /// against *that* entry's tree — never a newer build they did not ask
+    /// for.
+    version: u64,
     /// The multi-level KDE tree built once over the dataset.
     pub tree: Arc<MultiLevelKde>,
     /// Neighbor sampler (Algorithm 4.11) over [`tree`](Self::tree) —
@@ -43,6 +49,11 @@ impl RegisteredDataset {
     /// The name this dataset was registered under.
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The entry's dataset version (see the field docs).
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Number of points in the registered dataset.
@@ -95,6 +106,54 @@ impl OracleRegistry {
         }
         // Build outside the lock: tree construction is the expensive part
         // and must not serialize lookups of other datasets.
+        let entry = self.build_entry(name, ds, kernel, cfg, 0);
+        let mut map = self.entries.write().unwrap_or_else(PoisonError::into_inner);
+        map.entry(name.to_string()).or_insert(entry).clone()
+    }
+
+    /// Strict [`register`](Self::register): fails with the typed permanent
+    /// [`BackendError::AlreadyRegistered`] when `name` is taken, instead
+    /// of silently handing back the existing (possibly different) build.
+    /// This is the entry point for callers that would otherwise mutate a
+    /// served dataset in place — the registry makes replacement explicit
+    /// ([`update`](Self::update)) so in-flight coalesced requests can
+    /// never be flushed against a tree they did not resolve.
+    pub fn try_register(
+        &self,
+        name: &str,
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+    ) -> Result<Arc<RegisteredDataset>, BackendError> {
+        let already = || BackendError::AlreadyRegistered { name: name.to_string() };
+        if self.get(name).is_ok() {
+            return Err(already());
+        }
+        let entry = self.build_entry(name, ds, kernel, cfg, 0);
+        let mut map = self.entries.write().unwrap_or_else(PoisonError::into_inner);
+        if map.contains_key(name) {
+            return Err(already());
+        }
+        map.insert(name.to_string(), entry.clone());
+        Ok(entry)
+    }
+
+    /// Replace (or create) the entry under `name` with a fresh build over
+    /// `ds`, bumping the dataset version. Existing handles to the old
+    /// entry stay fully usable — their tree is immutable and their
+    /// version identifies them — while new lookups resolve the fresh
+    /// build. The server's request store keys by `(name, version)`, so a
+    /// request coalesced against version `v` is flushed against version
+    /// `v`'s tree even if an update lands mid-flight.
+    pub fn update(
+        &self,
+        name: &str,
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+    ) -> Arc<RegisteredDataset> {
+        // Build outside the lock; stamp the version under it so racing
+        // updates serialize into distinct versions.
         let counters = KdeCounters::new();
         let tree = Arc::new(MultiLevelKde::build(
             ds,
@@ -103,14 +162,43 @@ impl OracleRegistry {
             self.backend.clone(),
             counters.clone(),
         ));
+        let mut map = self.entries.write().unwrap_or_else(PoisonError::into_inner);
+        let version = map.get(name).map(|e| e.version + 1).unwrap_or(0);
         let entry = Arc::new(RegisteredDataset {
             name: name.to_string(),
+            version,
             sampler: NeighborSampler::new(tree.clone()),
             tree,
             counters,
         });
-        let mut map = self.entries.write().unwrap_or_else(PoisonError::into_inner);
-        map.entry(name.to_string()).or_insert(entry).clone()
+        map.insert(name.to_string(), entry.clone());
+        entry
+    }
+
+    /// Build a complete entry (tree + sampler + counters) for `name`.
+    fn build_entry(
+        &self,
+        name: &str,
+        ds: Arc<Dataset>,
+        kernel: Kernel,
+        cfg: &KdeConfig,
+        version: u64,
+    ) -> Arc<RegisteredDataset> {
+        let counters = KdeCounters::new();
+        let tree = Arc::new(MultiLevelKde::build(
+            ds,
+            kernel,
+            cfg,
+            self.backend.clone(),
+            counters.clone(),
+        ));
+        Arc::new(RegisteredDataset {
+            name: name.to_string(),
+            version,
+            sampler: NeighborSampler::new(tree.clone()),
+            tree,
+            counters,
+        })
     }
 
     /// Look up a registered dataset by name; unregistered names fail with
@@ -180,6 +268,51 @@ mod tests {
             other => panic!("want UnknownDataset, got {:?}", other.map(|_| ())),
         }
         assert!(!BackendError::UnknownDataset { name: "nope".into() }.transient());
+    }
+
+    #[test]
+    fn try_register_conflicts_are_typed_and_permanent() {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        let a = reg
+            .try_register("web", small_ds(21), Kernel::Laplacian, &KdeConfig::exact())
+            .unwrap();
+        assert_eq!(a.version(), 0);
+        match reg.try_register("web", small_ds(22), Kernel::Gaussian, &KdeConfig::exact()) {
+            Err(BackendError::AlreadyRegistered { name }) => {
+                assert_eq!(name, "web");
+                assert!(!BackendError::AlreadyRegistered { name }.transient());
+            }
+            other => panic!("want AlreadyRegistered, got {:?}", other.map(|_| ())),
+        }
+        // The original entry is untouched by the failed attempt.
+        assert!(Arc::ptr_eq(&a, &reg.get("web").unwrap()));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn update_version_bumps_and_serves_the_fresh_tree() {
+        let reg = OracleRegistry::new(CpuBackend::new());
+        let v0 = reg.register("web", small_ds(31), Kernel::Laplacian, &KdeConfig::exact());
+        assert_eq!(v0.version(), 0);
+        let old_answer = v0.tree.query_point(v0.tree.root(), 3);
+        let v1 = reg.update("web", small_ds(32), Kernel::Laplacian, &KdeConfig::exact());
+        assert_eq!(v1.version(), 1);
+        assert!(!Arc::ptr_eq(&v0, &v1), "update must replace, not alias");
+        // New lookups resolve the fresh build ...
+        assert!(Arc::ptr_eq(&v1, &reg.get("web").unwrap()));
+        assert_eq!(reg.len(), 1, "still one name");
+        // ... while the old handle keeps answering from its own tree.
+        assert_eq!(
+            old_answer.to_bits(),
+            v0.tree.query_point(v0.tree.root(), 3).to_bits()
+        );
+        // Different dataset -> different answers (seeds 31 vs 32).
+        let new_answer = v1.tree.query_point(v1.tree.root(), 3);
+        assert!(old_answer != new_answer, "fresh dataset must serve fresh values");
+        // update on an unregistered name creates version 0.
+        let fresh = reg.update("logs", small_ds(33), Kernel::Laplacian, &KdeConfig::exact());
+        assert_eq!(fresh.version(), 0);
+        assert_eq!(reg.len(), 2);
     }
 
     #[test]

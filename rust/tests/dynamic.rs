@@ -1,0 +1,276 @@
+//! Rebuild-equivalence property suite for the dynamic kernel-graph layer.
+//!
+//! The contract every test here pins: a **maintained** structure (edited
+//! in place through tombstone deletes + slot-reusing inserts) must be
+//! indistinguishable from a **fresh** structure built from scratch over
+//! the same final point set —
+//!
+//! * `MultiLevelKde`: bit-identical memoized sums at every node and
+//!   bit-identical neighbor samples from forked twin RNG streams, because
+//!   path rebuilds replay each node's recorded RNG snapshot;
+//! * edit cost: O(log n) oracle rebuilds per edit (the dispatch-count
+//!   contract `edit_stats` exposes);
+//! * `MaintainedSparsifier`: after a long seeded event script the
+//!   maintained graph's Laplacian quadratic forms match a from-scratch
+//!   build + resparsify over the identical live set within the repo's
+//!   existing spectral margins.
+//!
+//! Failures reproduce with `PROP_SEED=<printed seed>`.
+
+use std::sync::Arc;
+
+use kde_matrix::apps::resparsify::{
+    resparsify, MaintainedConfig, MaintainedSparsifier, PointEvent,
+};
+use kde_matrix::graph::WGraph;
+use kde_matrix::kde::{EstimatorKind, KdeConfig, KdeCounters, MultiLevelKde};
+use kde_matrix::kernel::dataset::gaussian_mixture;
+use kde_matrix::kernel::{Dataset, Kernel};
+use kde_matrix::runtime::backend::CpuBackend;
+use kde_matrix::sampling::NeighborSampler;
+use kde_matrix::util::prop::{default_cases, forall};
+use kde_matrix::util::rng::Rng;
+
+fn build_dyn(ds: Arc<Dataset>, kernel: Kernel, cfg: &KdeConfig) -> MultiLevelKde {
+    MultiLevelKde::build_dynamic(ds, kernel, cfg, CpuBackend::new(), KdeCounters::new())
+}
+
+/// The tentpole property: random dataset, random seeded edit script, then
+/// the maintained tree must match a fresh `build_dynamic` over its own
+/// final dataset bit for bit — sums at the root and at random internal
+/// nodes, and neighbor samples drawn from twin RNG streams — while
+/// staying inside the O(log n) rebuilds-per-edit budget.
+#[test]
+fn maintained_tree_matches_fresh_rebuild_bit_for_bit() {
+    // Each case builds two trees and applies up to ~32 edits; cap the
+    // case count so the suite stays test-tier cheap.
+    let cases = default_cases().min(24);
+    forall(cases, |rng, case| {
+        let n = 64 + rng.below(192);
+        let d = 2 + rng.below(3);
+        let mut drng = rng.fork();
+        let ds = Arc::new(gaussian_mixture(n, d, 2, 1.0, 0.5, &mut drng));
+        let kernel = if case % 2 == 0 { Kernel::Laplacian } else { Kernel::Gaussian };
+        let cfg = KdeConfig {
+            kind: if case % 3 == 0 {
+                EstimatorKind::Naive
+            } else {
+                EstimatorKind::Sampling { eps: 0.5, tau: 0.2 }
+            },
+            leaf_cutoff: 8,
+            seed: 0x5EED ^ case as u64,
+        };
+        let mut tree = build_dyn(ds, kernel, &cfg);
+        let mut live: Vec<usize> = (0..n).collect();
+        let edits = 8 + rng.below(24);
+        let mut applied = 0u64;
+        for _ in 0..edits {
+            if live.len() > 2 && rng.bernoulli(0.5) {
+                let k = rng.below(live.len());
+                let slot = live.swap_remove(k);
+                assert!(tree.delete(slot), "live slot must delete");
+                applied += 1;
+            } else {
+                let row: Vec<f32> = (0..d).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+                // None only while the slot space is full (no prior delete).
+                if let Some(slot) = tree.insert(&row) {
+                    live.push(slot);
+                    applied += 1;
+                }
+            }
+            // Warm the memo mid-script so stale entries exist for the
+            // stamp invalidation to retire.
+            let p = live[rng.below(live.len())];
+            let _ = tree.query_point(tree.root(), p);
+        }
+        live.sort_unstable();
+
+        // Dispatch-count contract: O(log n) oracle rebuilds per edit.
+        let (edit_count, rebuilds) = tree.edit_stats();
+        assert_eq!(edit_count, applied);
+        let depth = (n as f64).log2().ceil() as u64 + 2;
+        assert!(
+            rebuilds <= applied * depth,
+            "rebuilds {rebuilds} > edits {applied} x depth {depth}"
+        );
+
+        // Fresh build over the SAME final dataset (tombstones included).
+        let fresh = build_dyn(tree.ds.clone(), kernel, &cfg);
+        let got = tree.query_points(tree.root(), &live);
+        let want = fresh.query_points(fresh.root(), &live);
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "root sum diverged at live point {k}");
+        }
+        for _ in 0..4 {
+            let id = rng.below(tree.num_nodes());
+            let got = tree.query_points(id, &live);
+            let want = fresh.query_points(id, &live);
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "node {id} sum diverged at point {k}");
+            }
+        }
+
+        // Neighbor samples from forked twin streams must agree exactly.
+        let a = NeighborSampler::new(Arc::new(tree));
+        let b = NeighborSampler::new(Arc::new(fresh));
+        let mut sa = Rng::new(0xBEEF ^ case as u64);
+        let mut sb = sa.clone();
+        for _ in 0..8 {
+            let src = live[sa.below(live.len())];
+            let _ = sb.below(live.len()); // keep the twin streams aligned
+            match (a.sample(src, &mut sa), b.sample(src, &mut sb)) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.neighbor, y.neighbor, "sample diverged for source {src}");
+                    assert_eq!(x.prob.to_bits(), y.prob.to_bits(), "prob diverged for {src}");
+                }
+                (None, None) => {}
+                other => panic!("one tree sampled, the other refused: {other:?}"),
+            }
+        }
+    });
+}
+
+/// Before any edit, a dynamic build answers bit-identically to the static
+/// build of the same config — owned-buffer oracles change the memory
+/// shape, never the numbers.
+#[test]
+fn dynamic_build_is_bit_identical_to_static_before_any_edit() {
+    forall(12, |rng, case| {
+        let n = 32 + rng.below(128);
+        let d = 2 + rng.below(2);
+        let mut drng = rng.fork();
+        let ds = Arc::new(gaussian_mixture(n, d, 2, 1.2, 0.5, &mut drng));
+        let kernel = if case % 2 == 0 { Kernel::Laplacian } else { Kernel::Gaussian };
+        let cfg = KdeConfig {
+            kind: if case % 2 == 0 {
+                EstimatorKind::Sampling { eps: 0.5, tau: 0.2 }
+            } else {
+                EstimatorKind::Naive
+            },
+            leaf_cutoff: 8,
+            seed: 0xD00D ^ case as u64,
+        };
+        let stat = MultiLevelKde::build(
+            ds.clone(),
+            kernel,
+            &cfg,
+            CpuBackend::new(),
+            KdeCounters::new(),
+        );
+        let dynm = build_dyn(ds, kernel, &cfg);
+        let pts: Vec<usize> = (0..n).collect();
+        let mut ids = vec![stat.root()];
+        for _ in 0..3 {
+            ids.push(rng.below(stat.num_nodes()));
+        }
+        for id in ids {
+            let s = stat.query_points(id, &pts);
+            let y = dynm.query_points(id, &pts);
+            for (k, (a, b)) in s.iter().zip(&y).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "node {id}, point {k}");
+            }
+        }
+    });
+}
+
+/// Slot-space edge cases at the tree level: a capacity-1 tree, deleting
+/// down to a single live point, and refilling every tombstone.
+#[test]
+fn dynamic_tree_edge_cases() {
+    // n = 1: no neighbors to sample, delete/insert round-trips the slot.
+    let ds = Arc::new(Dataset::from_flat(1, 2, vec![0.5, -0.25]));
+    let mut tree = build_dyn(ds, Kernel::Laplacian, &KdeConfig::exact());
+    assert!(tree.delete(0));
+    assert!(!tree.delete(0), "double delete is a no-op");
+    assert_eq!(tree.insert(&[1.0, 1.0]), Some(0));
+    assert_eq!(tree.insert(&[2.0, 2.0]), None, "slot space is fixed");
+    let sampler = NeighborSampler::new(Arc::new(tree));
+    assert!(sampler.sample(0, &mut Rng::new(7)).is_none(), "n = 1 has no neighbor");
+
+    // Delete all but one, then refill: answers match a fresh build.
+    let mut rng = Rng::new(0x1CE);
+    let ds = Arc::new(gaussian_mixture(32, 3, 2, 1.0, 0.5, &mut rng));
+    let mut tree = build_dyn(ds, Kernel::Gaussian, &KdeConfig::exact());
+    for slot in 1..32 {
+        assert!(tree.delete(slot));
+    }
+    assert_eq!(tree.ds.live_len(), 1);
+    // The sole survivor's root answer is exactly its self-term.
+    let solo = tree.query_point(tree.root(), 0);
+    assert!((solo - 1.0).abs() < 1e-9, "self-term only, got {solo}");
+    for _ in 1..32 {
+        let row: Vec<f32> = (0..3).map(|_| (rng.f64() - 0.5) as f32).collect();
+        assert!(tree.insert(&row).is_some());
+    }
+    assert_eq!(tree.ds.live_len(), 32);
+    let fresh = build_dyn(tree.ds.clone(), Kernel::Gaussian, &KdeConfig::exact());
+    let pts: Vec<usize> = (0..32).collect();
+    let got = tree.query_points(tree.root(), &pts);
+    let want = fresh.query_points(fresh.root(), &pts);
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+}
+
+/// Satellite acceptance: at n = 16384, a `MaintainedSparsifier` driven
+/// through a 1000-event seeded script (with one resparsify pass) matches
+/// a from-scratch attach + resparsify over the identical final live set
+/// on Laplacian quadratic forms, within the margin the existing
+/// `resparsify_preserves_quadratic_forms` test already grants.
+#[test]
+fn maintained_sparsifier_matches_scratch_rebuild_spectrally() {
+    let n = 16384usize;
+    let mut rng = Rng::new(0xD1A5);
+    let ds = Arc::new(gaussian_mixture(n, 3, 2, 1.0, 0.5, &mut rng));
+    let cfg = MaintainedConfig {
+        degree: 4,
+        // Exactly one cleanup/resparsify pass, at event 1000.
+        resparsify_every: 1000,
+        target_edges: 16_000,
+        jl_dims: 6,
+        seed: 0xF1D0,
+    };
+    let initial: Vec<usize> = (0..8192).collect();
+    let mut maintained = MaintainedSparsifier::new(ds.clone(), Kernel::Laplacian, &initial, cfg);
+
+    // Seeded script: 500 inserts from the spare tail, 500 deletes spread
+    // over the initial range, interleaved deterministically.
+    let mut script = Vec::with_capacity(1000);
+    for k in 0..500usize {
+        script.push(PointEvent::Insert(8192 + k));
+        script.push(PointEvent::Delete((k * 13) % 8192));
+    }
+    for &ev in &script {
+        maintained.apply(ev);
+    }
+    let (events, resparsifies) = maintained.stats();
+    assert_eq!(events, 1000);
+    assert_eq!(resparsifies, 1, "script must trigger exactly one resparsify");
+    let live = maintained.live_slots();
+    assert_eq!(live.len(), 8192 + 500 - 500);
+
+    // From-scratch comparator over the identical live set: fresh uniform
+    // attach, then the same public resparsify with a pinned stream.
+    let fresh = MaintainedSparsifier::new(ds, Kernel::Laplacian, &live, cfg);
+    let fresh_raw = fresh.graph();
+    let fresh_sparse = resparsify(&fresh_raw, cfg.target_edges, cfg.jl_dims, &mut Rng::new(0xACE));
+
+    let g = maintained.graph();
+    assert!(g.num_edges() <= fresh_raw.num_edges(), "resparsify must not densify");
+    let quad = |g: &WGraph, x: &[f64]| g.laplacian_quadratic(x);
+    let mut probe_rng = Rng::new(0xB0B);
+    let mut worst_vs_sparse = 0.0f64;
+    let mut worst_vs_raw = 0.0f64;
+    for _ in 0..8 {
+        let mut x: Vec<f64> = (0..n).map(|_| probe_rng.normal()).collect();
+        let mean = x.iter().sum::<f64>() / n as f64;
+        for v in x.iter_mut() {
+            *v -= mean;
+        }
+        let qm = quad(&g, &x);
+        worst_vs_sparse = worst_vs_sparse.max((qm / quad(&fresh_sparse, &x) - 1.0).abs());
+        worst_vs_raw = worst_vs_raw.max((qm / quad(&fresh_raw, &x) - 1.0).abs());
+    }
+    assert!(worst_vs_sparse < 0.5, "maintained vs scratch-resparsified: {worst_vs_sparse}");
+    assert!(worst_vs_raw < 0.5, "maintained vs scratch raw attach: {worst_vs_raw}");
+}

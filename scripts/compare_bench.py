@@ -65,8 +65,28 @@ Serving mode (`--serving`) gates `BENCH_serving.json` (written by
     (same BENCH_REGRESSION_TOL, same bootstrap / ISA-mismatch skip rules
     as the backend series).
 
+Scale mode (`--scale`) gates `BENCH_scale.json` (written by
+`cargo bench --bench bench_scale`) instead:
+
+  * a missing or empty `scale.series` — the bench stopped measuring;
+  * the ~log n dispatch contract, checked **within the fresh run** at
+    every series point: dispatches_per_query of a cold neighbor-sampling
+    descent must stay at or under `SCALE_DISPATCH_FACTOR x log2(n)`
+    (default factor 4.0 — a solo descent issues two child queries per
+    internal level, so ~2 log2(n/leaf_cutoff) is the expected value and
+    4 log2(n) the regression ceiling);
+  * sub-log growth, when the series has >= 2 points: dispatches-per-query
+    growth between the smallest and largest n must stay within
+    `SCALE_GROWTH_SLACK` (default 1.5) times the log2(n) growth — a
+    super-logarithmic slope means the descent stopped scaling;
+  * vs a measured same-ISA baseline: per matching n, dispatches-per-query
+    above `SCALE_DPQ_DRIFT` (default 1.25x) of baseline, or batched
+    sample latency above `(1 + tol)` of baseline (same
+    BENCH_REGRESSION_TOL, same bootstrap / ISA-mismatch skip rules).
+
 Usage: compare_bench.py BASELINE.json FRESH.json
        compare_bench.py --serving BASELINE.json FRESH.json
+       compare_bench.py --scale BASELINE.json FRESH.json
 
 Stdlib only — the CI image needs nothing beyond python3.
 """
@@ -172,9 +192,90 @@ def main_serving(baseline, fresh):
     return 0
 
 
+def main_scale(baseline, fresh):
+    import math
+
+    tol = float(os.environ.get("BENCH_REGRESSION_TOL", "0.15"))
+    factor = float(os.environ.get("SCALE_DISPATCH_FACTOR", "4.0"))
+    growth_slack = float(os.environ.get("SCALE_GROWTH_SLACK", "1.5"))
+    dpq_drift = float(os.environ.get("SCALE_DPQ_DRIFT", "1.25"))
+    failures = []
+
+    scale = fresh.get("scale") or {}
+    points = scale.get("series") or []
+    if not points:
+        print("FAIL: fresh run is missing the `scale.series` points")
+        return 1
+    points = sorted(points, key=lambda p: p["n"])
+
+    # Within-run gates: host-speed independent, enforced on every fresh
+    # run regardless of baseline provenance.
+    for p in points:
+        log2_n = p.get("log2_n") or math.log2(p["n"])
+        bound = factor * log2_n
+        dpq = p["dispatches_per_query"]
+        print(f"scale n={p['n']}: {dpq:.2f} dispatches/query over "
+              f"{p['walkers']} cold descents (bound {bound:.1f} = "
+              f"{factor} x log2 n), batch mean {p['batch_mean_ns']:.0f} ns")
+        if dpq > bound:
+            failures.append(
+                f"scale regression: n={p['n']} at {dpq:.2f} dispatches/query "
+                f"exceeds the ~log n bound {bound:.1f}")
+    if len(points) >= 2:
+        lo, hi = points[0], points[-1]
+        growth = hi["dispatches_per_query"] / lo["dispatches_per_query"]
+        log_growth = math.log2(hi["n"]) / math.log2(lo["n"])
+        budget = log_growth * growth_slack
+        print(f"scale growth n={lo['n']} -> n={hi['n']}: dispatches/query "
+              f"x{growth:.2f} (log budget x{budget:.2f})")
+        if growth > budget:
+            failures.append(
+                f"scale regression: dispatches/query grew {growth:.2f}x from "
+                f"n={lo['n']} to n={hi['n']}, exceeding the sub-log budget "
+                f"{budget:.2f}x")
+
+    # Cross-run drift vs a comparable measured baseline, per matching n.
+    base_points = (baseline.get("scale") or {}).get("series") or []
+    if bootstrap_skip(baseline, fresh.get("isa_detected", "scalar"),
+                      "scale latency/dispatch drift") or not base_points:
+        print("no comparable measured scale baseline: skipping the "
+              "per-n comparison.")
+    else:
+        base_by_n = {p["n"]: p for p in base_points}
+        for p in points:
+            b = base_by_n.get(p["n"])
+            if b is None:
+                print(f"new scale point (no baseline yet): n={p['n']}")
+                continue
+            drift = p["dispatches_per_query"] / b["dispatches_per_query"]
+            lat = p["batch_mean_ns"] / b["batch_mean_ns"]
+            print(f"  vs baseline n={p['n']}: dispatches/query "
+                  f"{b['dispatches_per_query']:.2f} -> "
+                  f"{p['dispatches_per_query']:.2f} ({drift:.2f}x), "
+                  f"batch latency {lat:.2f}x")
+            if drift > dpq_drift:
+                failures.append(
+                    f"scale regression: n={p['n']} dispatches/query at "
+                    f"{drift:.2f}x baseline (limit {dpq_drift:.2f}x)")
+            if lat > 1.0 + tol:
+                failures.append(
+                    f"scale regression: n={p['n']} batched sample latency at "
+                    f"{lat:.2f}x baseline (tolerance {1.0 + tol:.2f}x)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} scale-regression issue(s)")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: scale series present, ~log n dispatch contract met, "
+          "no drift beyond tolerance")
+    return 0
+
+
 def main(argv):
     serving = "--serving" in argv
-    argv = [a for a in argv if a != "--serving"]
+    scale = "--scale" in argv
+    argv = [a for a in argv if a not in ("--serving", "--scale")]
     if len(argv) != 3:
         print(__doc__)
         return 2
@@ -182,6 +283,8 @@ def main(argv):
     fresh = load(argv[2])
     if serving:
         return main_serving(baseline, fresh)
+    if scale:
+        return main_scale(baseline, fresh)
     tol = float(os.environ.get("BENCH_REGRESSION_TOL", "0.15"))
     min_speedup = float(os.environ.get("SIMD_MIN_SPEEDUP", "1.2"))
     base = series(baseline)

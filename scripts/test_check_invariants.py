@@ -215,6 +215,20 @@ def test_unwrap_variants_and_tests_ok():
     expect(code, out, 0, case="unwrap_variants_and_tests_ok")
 
 
+def test_unwrap_in_gated_file_flagged():
+    # apps/ as a whole is not gated, but the dynamic-mutation files
+    # (GATED_FILES) carry the same unwrap-free bar as the gated dirs.
+    code, out = run_checker(base_tree(**{
+        "apps/resparsify.rs":
+            "pub fn f(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+        "apps/other.rs":
+            "pub fn g(v: Option<u32>) -> u32 {\n    v.unwrap()\n}\n",
+    }))
+    expect(code, out, 1, "I4", "unwrap_in_gated_file_flagged")
+    assert "resparsify.rs" in out, out
+    assert "other.rs" not in out, out
+
+
 def test_unwrap_outside_gated_dirs_ok():
     code, out = run_checker(base_tree(**{
         "util/thing.rs":

@@ -91,7 +91,28 @@ def serving_doc(p99_us=900.0, throughput_qps=40000.0, dpq=0.05,
     return doc
 
 
-def run(baseline, fresh, serving=False, env=None):
+def scale_doc(dpq_100k=25.0, dpq_1m=32.0, batch_ns=2.0e6, isa="avx2",
+              baseline="measured", million=True, series_present=True):
+    """A complete, passing BENCH_scale.json document."""
+    doc = {"bench": "scale", "baseline": baseline, "isa_detected": isa}
+    if not series_present:
+        doc["scale"] = None
+        return doc
+    series = [{"n": 100_000, "log2_n": 16.610, "walkers": 64,
+               "dispatches": int(64 * dpq_100k),
+               "dispatches_per_query": dpq_100k,
+               "build_ms": 900.0, "batch_mean_ns": batch_ns}]
+    if million:
+        series.append({"n": 1_000_000, "log2_n": 19.932, "walkers": 64,
+                       "dispatches": int(64 * dpq_1m),
+                       "dispatches_per_query": dpq_1m,
+                       "build_ms": 11000.0, "batch_mean_ns": batch_ns * 1.3})
+    doc["scale"] = {"d": 4, "leaf_cutoff": 16, "eps": 0.5, "tau": 0.2,
+                    "dispatch_factor_budget": 4.0, "series": series}
+    return doc
+
+
+def run(baseline, fresh, serving=False, scale=False, env=None):
     """Write the two docs to disk and invoke compare_bench.main()."""
     saved = {}
     for k, v in (env or {}).items():
@@ -108,6 +129,8 @@ def run(baseline, fresh, serving=False, env=None):
             argv = ["compare_bench.py"]
             if serving:
                 argv.append("--serving")
+            if scale:
+                argv.append("--scale")
             argv += [bp, fp]
             return compare_bench.main(argv)
     finally:
@@ -259,6 +282,80 @@ def _():
                env={"SERVING_COALESCE_FLOOR": "8.0"}) == 1
     assert run(bootstrap, doc, serving=True,
                env={"SERVING_COALESCE_FLOOR": "3.0"}) == 0
+
+
+# ------------------------------------------------------------------ scale
+
+SCALE_BOOTSTRAP = {"bench": "scale", "baseline": "bootstrap",
+                   "isa_detected": "unmeasured", "scale": None}
+
+
+@case("scale: identical measured runs pass")
+def _():
+    assert run(scale_doc(), scale_doc(), scale=True) == 0
+
+
+@case("scale: bootstrap baseline skips the per-n comparison")
+def _():
+    assert run(SCALE_BOOTSTRAP, scale_doc(), scale=True) == 0
+
+
+@case("scale: missing series in the fresh run fails")
+def _():
+    assert run(scale_doc(), scale_doc(series_present=False), scale=True) == 1
+
+
+@case("scale: dispatches/query above 4 x log2(n) fails even on bootstrap")
+def _():
+    # 80 > 4 * log2(1e5) = 66.4 — a within-run gate.
+    assert run(SCALE_BOOTSTRAP, scale_doc(dpq_100k=80.0, million=False),
+               scale=True) == 1
+
+
+@case("scale: log-like growth between n points passes")
+def _():
+    # 25 -> 32 is x1.28, within the x1.80 log budget.
+    assert run(SCALE_BOOTSTRAP, scale_doc(dpq_100k=25.0, dpq_1m=32.0),
+               scale=True) == 0
+
+
+@case("scale: super-logarithmic growth fails even on bootstrap")
+def _():
+    # 25 -> 60 is x2.4, past log2 growth (x1.2) times the 1.5 slack.
+    assert run(SCALE_BOOTSTRAP, scale_doc(dpq_100k=25.0, dpq_1m=60.0),
+               scale=True) == 1
+
+
+@case("scale: single-point series skips the growth gate")
+def _():
+    assert run(SCALE_BOOTSTRAP, scale_doc(million=False), scale=True) == 0
+
+
+@case("scale: dispatch drift beyond 1.25x of measured baseline fails")
+def _():
+    assert run(scale_doc(dpq_100k=25.0, dpq_1m=32.0),
+               scale_doc(dpq_100k=33.0, dpq_1m=42.0), scale=True) == 1
+
+
+@case("scale: >15% batched-sample latency regression fails")
+def _():
+    assert run(scale_doc(batch_ns=2.0e6),
+               scale_doc(batch_ns=2.4e6), scale=True) == 1
+
+
+@case("scale: ISA mismatch skips the per-n comparison")
+def _():
+    assert run(scale_doc(isa="avx2", batch_ns=2.0e6),
+               scale_doc(isa="neon", batch_ns=9.0e6), scale=True) == 0
+
+
+@case("scale: factor budget is tunable via SCALE_DISPATCH_FACTOR")
+def _():
+    doc = scale_doc(dpq_100k=25.0, million=False)
+    assert run(SCALE_BOOTSTRAP, doc, scale=True,
+               env={"SCALE_DISPATCH_FACTOR": "1.0"}) == 1
+    assert run(SCALE_BOOTSTRAP, doc, scale=True,
+               env={"SCALE_DISPATCH_FACTOR": "2.0"}) == 0
 
 
 def main():
